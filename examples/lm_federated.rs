@@ -1,0 +1,80 @@
+//! End-to-end driver (DESIGN.md §Experiment-index): federated training of a
+//! Pythia-14M-scale transformer (paper §4.4) across serverless async nodes,
+//! on the synthetic byte-level corpus, logging the full loss curve.
+//!
+//! This is the repo's full-stack proof: L1 Pallas kernels (tiled matmul +
+//! fused AdamW) inside the L2 JAX train step, AOT-compiled to HLO, executed
+//! by the L3 rust coordinator across federated node threads with
+//! client-side aggregation through the weight store — Python nowhere at
+//! runtime.
+//!
+//! ```sh
+//! cargo run --release --example lm_federated [model] [nodes] [steps_per_epoch]
+//! # model defaults to lm14m (≈ Pythia-14M parameter budget);
+//! # use lm_medium / lm for faster runs.
+//! ```
+
+use std::path::PathBuf;
+
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::runtime::Manifest;
+use fedless::sim::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "lm14m".to_string());
+    let n_nodes: usize = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(2);
+    let steps: usize = std::env::args().nth(3).map(|s| s.parse().unwrap()).unwrap_or(60);
+
+    let manifest = Manifest::discover()?;
+    let info = manifest.model(&model)?;
+    println!(
+        "model {model}: {:.1}M params, batch {}, seq {}",
+        info.param_count as f64 / 1e6,
+        info.batch_size,
+        info.input_shape[0] - 1
+    );
+
+    let cfg = ExperimentConfig {
+        model: model.clone(),
+        n_nodes,
+        mode: FederationMode::Async,
+        epochs: 3,
+        steps_per_epoch: steps,
+        train_size: 6_000,
+        test_size: 300,
+        log_dir: Some(PathBuf::from("runs")),
+        verbose: true,
+        ..Default::default()
+    };
+
+    println!(
+        "federated AdamW training: {n_nodes} async nodes x {} epochs x {steps} steps\n",
+        cfg.epochs
+    );
+    let res = run_experiment(&cfg)?;
+
+    println!("\n=== results ===");
+    println!("next-token accuracy: {:.4} (paper Table 7 band: .22-.26)", res.final_accuracy);
+    println!("test loss          : {:.4}", res.final_loss);
+    println!("wall clock         : {:.1}s", res.wall_clock_s);
+    println!("\nper-node loss curves (mean loss per epoch):");
+    for r in &res.reports {
+        let curve: Vec<String> = r.epoch_losses.iter().map(|l| format!("{l:.3}")).collect();
+        println!("  node {}: {}", r.node_id, curve.join(" -> "));
+    }
+    let run_dir = format!("runs/{}", cfg.run_name());
+    println!("\nfull step-level metrics: {run_dir}/metrics.csv");
+    println!("events log           : {run_dir}/events.jsonl");
+
+    // the loss must actually decrease over training
+    for r in &res.reports {
+        anyhow::ensure!(
+            r.epoch_losses.last().unwrap() < r.epoch_losses.first().unwrap(),
+            "node {} loss did not improve: {:?}",
+            r.node_id,
+            r.epoch_losses
+        );
+    }
+    println!("\nloss decreased on every node — end-to-end stack verified.");
+    Ok(())
+}

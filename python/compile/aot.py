@@ -1,0 +1,128 @@
+"""AOT compiler: lower every model's init/train/eval step and the chunked
+aggregation kernels to `artifacts/*.hlo.txt` + `manifest.json`.
+
+This is the ONLY python entrypoint in the build (`make artifacts`); the rust
+coordinator is self-contained afterwards. Python never runs on the request
+path.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--models mnist,cifar,lm]
+                          [--agg-k 2,3,5] [--no-pallas] [--chunk 262144]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import train as T
+from .hlo import lower_fn
+from .kernels import fedavg_aggregate
+from .models import get_model
+
+# Chunk width for aggregation artifacts: one artifact serves every model;
+# rust pads the last chunk. 262144 f32 = 1 MiB per client row.
+DEFAULT_CHUNK = 262144
+DEFAULT_AGG_K = (2, 3, 5)
+
+
+def _write(out_dir: pathlib.Path, name: str, text: str) -> dict:
+    path = out_dir / name
+    path.write_text(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"  wrote {name:28s} {len(text):>10,} chars  sha256:{digest}")
+    return {"file": name, "sha256_16": digest}
+
+
+def build_model_artifacts(out_dir, name, spec, use_pallas: bool) -> dict:
+    p = T.param_count(spec)
+    print(f"[{name}] param_count={p:,} batch={spec.batch_size}")
+    x, y = T.example_batch(spec)
+    fp = jax.ShapeDtypeStruct((p,), jnp.float32)
+    seed = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+
+    arts = {}
+    t0 = time.time()
+    arts["init"] = _write(
+        out_dir, f"{name}_init.hlo.txt", lower_fn(T.make_init_step(spec), seed)
+    )
+    arts["train"] = _write(
+        out_dir,
+        f"{name}_train.hlo.txt",
+        lower_fn(T.make_train_step(spec, use_pallas), fp, fp, fp, step, x, y),
+    )
+    arts["eval"] = _write(
+        out_dir,
+        f"{name}_eval.hlo.txt",
+        lower_fn(T.make_eval_step(spec, use_pallas), fp, x, y),
+    )
+    print(f"[{name}] lowered in {time.time() - t0:.1f}s")
+
+    return {
+        "param_count": p,
+        "batch_size": spec.batch_size,
+        "input_shape": list(spec.input_shape),
+        "input_dtype": spec.input_dtype,
+        "num_classes": spec.num_classes,
+        "lr": spec.lr,
+        "weight_decay": spec.weight_decay,
+        "extra": spec.extra,
+        "artifacts": arts,
+    }
+
+
+def build_agg_artifacts(out_dir, ks, chunk) -> dict:
+    out = {}
+    for k in ks:
+        stack = jax.ShapeDtypeStruct((k, chunk), jnp.float32)
+        w = jax.ShapeDtypeStruct((k,), jnp.float32)
+        fn = lambda s, ww: (fedavg_aggregate(s, ww),)
+        out[str(k)] = _write(out_dir, f"agg_k{k}.hlo.txt", lower_fn(fn, stack, w))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mnist,cifar,lm")
+    ap.add_argument("--agg-k", default="2,3,5")
+    ap.add_argument("--chunk", type=int, default=DEFAULT_CHUNK)
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="route Dense/Adam through jnp oracles instead of Pallas kernels",
+    )
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    manifest = {
+        "version": 1,
+        "use_pallas": use_pallas,
+        "chunk": args.chunk,
+        "models": {},
+        "agg": {},
+    }
+    for name in filter(None, args.models.split(",")):
+        spec = get_model(name)
+        manifest["models"][name] = build_model_artifacts(
+            out_dir, name, spec, use_pallas
+        )
+    ks = [int(k) for k in filter(None, args.agg_k.split(","))]
+    manifest["agg"] = {"chunk": args.chunk, "k": build_agg_artifacts(out_dir, ks, args.chunk)}
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Lowered-jax -> HLO *text* conversion (the AOT interchange format).
+
+HLO text, NOT `.serialize()`: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`). The text parser on the rust side reassigns ids,
+so text round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a `jax.jit(fn).lower(...)` result to XLA HLO text.
+
+    Lowers via stablehlo then converts with ``return_tuple=True`` so the rust
+    side always unwraps a tuple (xla::Literal::to_tuple*), regardless of the
+    function's arity.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, *arg_specs) -> str:
+    """jit + lower `fn` at the given ShapeDtypeStructs and return HLO text.
+
+    `keep_unused=True` pins the artifact signature: without it jit prunes
+    unused args (e.g. the LM's dummy `y`) and the rust caller's argument
+    count no longer matches the compiled program.
+    """
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*arg_specs))

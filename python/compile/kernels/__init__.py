@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered with interpret=True).
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest checks parity across a
+shape/dtype sweep. On a real TPU these BlockSpecs map HBM<->VMEM tiles; on
+this image interpret=True lowers them to plain HLO so the CPU PJRT client in
+rust can execute the surrounding computation.
+"""
+
+from .fedavg_agg import fedavg_aggregate
+from .adam_step import fused_adam_step
+from .matmul import tiled_matmul
+
+__all__ = ["fedavg_aggregate", "fused_adam_step", "tiled_matmul"]

@@ -1,0 +1,91 @@
+"""Pallas kernel: fused Adam/AdamW update on the flat parameter vector.
+
+One pass over (p, m, v, g) per tile instead of the ~10 elementwise HLO ops an
+unfused Adam emits — on TPU this is the difference between one HBM round trip
+per tensor and several. Bias correction is folded into a scalar ``lr_t``
+computed *outside* the kernel (it depends only on the step counter), so the
+kernel body is pure elementwise VPU work.
+
+update:  m' = b1*m + (1-b1)*g
+         v' = b2*v + (1-b2)*g^2
+         p' = p - lr_t * m' / (sqrt(v') + eps) - lr * wd * p
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 65536
+
+
+def _adam_kernel(b1, b2, eps, lr, wd, p_ref, m_ref, v_ref, g_ref, s_ref,
+                 po_ref, mo_ref, vo_ref):
+    p = p_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    lr_t = s_ref[0]  # bias-corrected step size, precomputed
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    upd = lr_t * m_new / (jnp.sqrt(v_new) + eps)
+    if wd != 0.0:
+        upd = upd + lr * wd * p
+    po_ref[...] = p - upd
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "b1", "b2", "eps", "weight_decay", "block_p"),
+)
+def fused_adam_step(
+    params: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    grads: jax.Array,
+    step: jax.Array,
+    *,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    block_p: int = BLOCK_P,
+):
+    """Fused Adam(W) update over flat f32 vectors.
+
+    Args:
+      params, m, v, grads: f32[P] flat vectors.
+      step: i32[] or f32[] — 1-based step counter *after* this update.
+
+    Returns:
+      (params', m', v') — each f32[P].
+    """
+    (p_len,) = params.shape
+    pad = (-p_len) % block_p
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        grads = jnp.pad(grads, (0, pad))
+    pp = p_len + pad
+
+    t = step.astype(jnp.float32)
+    lr_t = lr * jnp.sqrt(1.0 - b2**t) / (1.0 - b1**t)
+    lr_t = lr_t.reshape(1)
+
+    kern = functools.partial(_adam_kernel, b1, b2, eps, lr, weight_decay)
+    vec = pl.BlockSpec((block_p,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    p2, m2, v2 = pl.pallas_call(
+        kern,
+        grid=(pp // block_p,),
+        in_specs=[vec, vec, vec, vec, scalar],
+        out_specs=[vec, vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((pp,), jnp.float32)] * 3,
+        interpret=True,
+    )(params, m, v, grads, lr_t)
+    return p2[:p_len], m2[:p_len], v2[:p_len]

@@ -1,0 +1,87 @@
+"""Pallas kernel: MXU-tiled matmul used by the LM's dense layers.
+
+Grid is (M/BM, N/BN, K/BK) with fp32 accumulation into the output tile —
+the classic TPU schedule: each (i, j) output tile stays resident in VMEM
+while the k axis streams through, which is what a CUDA kernel would do with
+threadblock tiles in shared memory (DESIGN.md §Hardware-Adaptation). Tiles
+are 128-aligned for the 128x128 MXU systolic array.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # fp32 accumulate on the MXU (bf16 inputs would use preferred_element_type)
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tiled_matmul_impl(x: jax.Array, y: jax.Array, bm: int, bn: int, bk: int):
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        y = jnp.pad(y, ((0, pk), (0, pn)))
+    mm, kk, nn = m + pm, k + pk, n + pn
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mm // bm, nn // bn, kk // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _tiled_matmul_vjp(x, y, bm, bn, bk):
+    return _tiled_matmul_impl(x, y, bm, bn, bk)
+
+
+def _tiled_matmul_fwd(x, y, bm, bn, bk):
+    return _tiled_matmul_impl(x, y, bm, bn, bk), (x, y)
+
+
+def _tiled_matmul_bwd(bm, bn, bk, res, g):
+    # dX = g @ Y^T, dY = X^T @ g — both through the same MXU-tiled kernel so
+    # the backward pass of the lowered train artifact also exercises L1.
+    x, y = res
+    dx = _tiled_matmul_impl(g, y.T, bm, bn, bk)
+    dy = _tiled_matmul_impl(x.T, g, bm, bn, bk)
+    return dx, dy
+
+
+_tiled_matmul_vjp.defvjp(_tiled_matmul_fwd, _tiled_matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def tiled_matmul(x: jax.Array, y: jax.Array, bm: int = BM, bn: int = BN, bk: int = BK):
+    """x @ y with MXU-shaped tiling; shapes may be un-padded; differentiable
+    via a custom VJP whose backward matmuls reuse the same kernel.
+
+    Args:
+      x: f32[M, K]; y: f32[K, N].
+
+    Returns:
+      f32[M, N].
+    """
+    return _tiled_matmul_vjp(x, y, bm, bn, bk)

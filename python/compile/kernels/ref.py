@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes and asserts
+allclose between each kernel and its oracle here. The rust side additionally
+parity-tests its native aggregation against the lowered kernel artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_aggregate_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """out[c] = sum_k weights[k] * stack[k, c] (Eq. 1, client-side)."""
+    return jnp.einsum(
+        "k,kc->c", weights.astype(jnp.float32), stack.astype(jnp.float32)
+    )
+
+
+def adam_step_ref(params, m, v, grads, step, *, lr=1e-3, b1=0.9, b2=0.999,
+                  eps=1e-8, weight_decay=0.0):
+    """Adam(W), "efficient version" of Kingma & Ba §2: bias correction is
+    folded into the step size ``lr_t = lr * sqrt(1-b2^t) / (1-b1^t)`` so the
+    update is ``lr_t * m' / (sqrt(v') + eps)``. This is the exact math the
+    fused kernel implements (eps sits next to the *uncorrected* sqrt(v'))."""
+    t = step.astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * grads
+    v_new = b2 * v + (1.0 - b2) * grads * grads
+    lr_t = lr * jnp.sqrt(1.0 - b2**t) / (1.0 - b1**t)
+    upd = lr_t * m_new / (jnp.sqrt(v_new) + eps)
+    if weight_decay != 0.0:
+        upd = upd + lr * weight_decay * params
+    return params - upd, m_new, v_new
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -1,0 +1,17 @@
+"""Layer-2 model zoo: pure-jnp models with flat-parameter train/eval steps.
+
+Three families mirroring the paper's experiments (§4):
+  * ``mnist_cnn``    — 2x conv + maxpool + ReLU + dense   (paper §4.2)
+  * ``cifar_resnet`` — ResNet-lite with residual stages   (paper §4.3)
+  * ``lm_transformer`` — pre-LN GPT (Pythia-style)        (paper §4.4)
+
+Every model exposes:
+  init(rng) -> params pytree
+  apply(params, x, train) -> logits
+and `registry.get(name)` returns a ModelSpec with static shape/config info
+used by aot.py to build artifacts and by the manifest consumed in rust.
+"""
+
+from .registry import MODELS, ModelSpec, get_model
+
+__all__ = ["MODELS", "ModelSpec", "get_model"]

@@ -1,0 +1,82 @@
+"""CIFAR-10 ResNet-lite (paper §4.3 used ResNet-18).
+
+A 3-stage pre-activation residual network (16/32/64 channels, one residual
+block per stage) — the same architectural family as ResNet-18, scaled so an
+AOT-compiled CPU train step stays fast enough for repeated federated trials.
+BatchNorm is replaced by per-channel LayerNorm-style normalization, which is
+stateless and therefore federates cleanly (no running statistics to merge —
+a known practical issue when averaging BN models; see DESIGN.md
+§Substitutions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as c
+
+NUM_CLASSES = 10
+INPUT_SHAPE = (32, 32, 3)
+STAGES = (16, 32, 64)
+
+
+def _norm_init(ch):
+    return {"g": jnp.ones((ch,), jnp.float32), "b": jnp.zeros((ch,), jnp.float32)}
+
+
+def _norm(p, x, eps=1e-5):
+    # normalize over H, W per (batch, channel): stateless "instance norm"
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def _block_init(key, cin, cout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "n1": _norm_init(cin),
+        "c1": c.conv_init(k1, 3, 3, cin, cout),
+        "n2": _norm_init(cout),
+        "c2": c.conv_init(k2, 3, 3, cout, cout),
+    }
+    if cin != cout:
+        p["proj"] = c.conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def _block(p, x, stride):
+    h = jax.nn.relu(_norm(p["n1"], x))
+    h = c.conv2d(p["c1"], h, stride=stride)
+    h = jax.nn.relu(_norm(p["n2"], h))
+    h = c.conv2d(p["c2"], h)
+    if "proj" in p:
+        x = c.conv2d(p["proj"], x, stride=stride)
+    return x + h
+
+
+def init(key):
+    keys = jax.random.split(key, len(STAGES) + 2)
+    params = {"stem": c.conv_init(keys[0], 3, 3, 3, STAGES[0])}
+    cin = STAGES[0]
+    for i, cout in enumerate(STAGES):
+        params[f"stage{i}"] = _block_init(keys[i + 1], cin, cout)
+        cin = cout
+    params["head"] = c.dense_init(keys[-1], STAGES[-1], NUM_CLASSES)
+    return params
+
+
+def apply(params, x, train=False):
+    """x: f32[B, 32, 32, 3] -> logits f32[B, 10]."""
+    del train
+    h = c.conv2d(params["stem"], x)
+    for i in range(len(STAGES)):
+        stride = 1 if i == 0 else 2  # 32 -> 32 -> 16 -> 8
+        h = _block(params[f"stage{i}"], h, stride)
+    h = jax.nn.relu(h)
+    h = c.avg_pool_global(h)
+    return c.dense(params["head"], h)
+
+
+def loss_and_metrics(params, batch, train=False):
+    x, y = batch
+    logits = apply(params, x, train)
+    return c.softmax_xent(logits, y), c.accuracy_count(logits, y)

@@ -1,0 +1,125 @@
+"""Shared layer primitives for the model zoo (pure jnp, no framework).
+
+Parameters are plain pytrees (nested dicts); initializers take an explicit
+PRNG key. Dense layers optionally route through the L1 Pallas tiled matmul
+so the kernel sits on the real train path of the lowered artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import tiled_matmul
+
+# Toggled by aot.py / tests: when True, Dense goes through the Pallas kernel.
+_USE_PALLAS = {"dense": False}
+
+
+def set_pallas_dense(enabled: bool) -> None:
+    """Route Dense matmuls through the L1 Pallas kernel (artifact default)."""
+    _USE_PALLAS["dense"] = bool(enabled)
+
+
+def _matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    if _USE_PALLAS["dense"]:
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        out = tiled_matmul(x2, w)
+        return out.reshape(*shape[:-1], w.shape[1])
+    return jnp.matmul(x, w)
+
+
+# ----------------------------------------------------------------------------
+# initializers
+
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    if len(shape) == 4:  # HWIO conv
+        rf = shape[0] * shape[1]
+        fan_in, fan_out = rf * shape[2], rf * shape[3]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def normal(key, shape, stddev=0.02):
+    return stddev * jax.random.normal(key, shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# layers
+
+
+def dense_init(key, in_dim, out_dim, bias=True):
+    kw, _ = jax.random.split(key)
+    p = {"w": glorot(kw, (in_dim, out_dim))}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def dense(p, x):
+    y = _matmul(x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv_init(key, kh, kw, cin, cout):
+    return {
+        "w": glorot(key, (kh, kw, cin, cout)),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    """NHWC conv; weights HWIO."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def avg_pool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def layernorm_init(dim):
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+# ----------------------------------------------------------------------------
+# losses / metrics
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy; logits [..., C], integer labels [...]."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def accuracy_count(logits, labels):
+    """Number of correct argmax predictions (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == labels).astype(jnp.float32))

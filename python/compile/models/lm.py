@@ -1,0 +1,120 @@
+"""Decoder-only transformer LM (paper §4.4 used Pythia-14M on WikiText).
+
+Pre-LN GPT architecture (the Pythia family's layout): token + learned
+positional embeddings, L blocks of causal MHA + GELU MLP, final LayerNorm,
+untied unembedding. Size is configurable; `lm` (~1.9M) keeps federated
+trials fast on CPU, `lm14m` matches Pythia-14M's parameter budget for the
+end-to-end example. Dense projections route through the L1 Pallas tiled
+matmul when enabled (artifact builds).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import common as c
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 256  # byte-level tokenizer (rust side)
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    mlp_mult: int = 4
+
+
+CONFIGS = {
+    "lm": LMConfig(),
+    "lm_medium": LMConfig(d_model=256, n_layers=4, n_heads=8, seq_len=128),
+    "lm14m": LMConfig(d_model=512, n_layers=6, n_heads=8, seq_len=128),
+}
+
+
+def _block_init(key, cfg: LMConfig):
+    d, h = cfg.d_model, cfg.mlp_mult * cfg.d_model
+    k = jax.random.split(key, 6)
+    return {
+        "ln1": c.layernorm_init(d),
+        "attn": {
+            "wqkv": c.dense_init(k[0], d, 3 * d),
+            "wo": c.dense_init(k[1], d, d),
+        },
+        "ln2": c.layernorm_init(d),
+        "mlp": {
+            "w1": c.dense_init(k[2], d, h),
+            "w2": c.dense_init(k[3], h, d),
+        },
+    }
+
+
+def _attn(p, x, cfg: LMConfig):
+    b, t, d = x.shape
+    nh, hd = cfg.n_heads, d // cfg.n_heads
+    qkv = c.dense(p["wqkv"], x)  # [B, T, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return c.dense(p["wo"], out)
+
+
+def _block(p, x, cfg: LMConfig):
+    x = x + _attn(p["attn"], c.layernorm(p["ln1"], x), cfg)
+    h = c.dense(p["mlp"]["w1"], c.layernorm(p["ln2"], x))
+    h = jax.nn.gelu(h)
+    return x + c.dense(p["mlp"]["w2"], h)
+
+
+def make_init(cfg: LMConfig):
+    def init(key):
+        keys = jax.random.split(key, cfg.n_layers + 3)
+        params = {
+            "wte": c.normal(keys[0], (cfg.vocab, cfg.d_model)),
+            "wpe": c.normal(keys[1], (cfg.seq_len, cfg.d_model)),
+            "ln_f": c.layernorm_init(cfg.d_model),
+            "unembed": c.dense_init(keys[2], cfg.d_model, cfg.vocab, bias=False),
+        }
+        for i in range(cfg.n_layers):
+            params[f"block{i}"] = _block_init(keys[i + 3], cfg)
+        return params
+
+    return init
+
+
+def make_apply(cfg: LMConfig):
+    def apply(params, tokens, train=False):
+        """tokens: i32[B, T] -> logits f32[B, T, V]."""
+        del train
+        b, t = tokens.shape
+        x = params["wte"][tokens] + params["wpe"][:t]
+        for i in range(cfg.n_layers):
+            x = _block(params[f"block{i}"], x, cfg)
+        x = c.layernorm(params["ln_f"], x)
+        return c.dense(params["unembed"], x)
+
+    return apply
+
+
+def make_loss(cfg: LMConfig):
+    apply = make_apply(cfg)
+
+    def loss_and_metrics(params, batch, train=False):
+        """batch = (tokens i32[B, T+1], _ignored). Next-token prediction:
+        loss over positions 0..T-1 predicting 1..T; returns (mean loss,
+        count of correct next-token predictions)."""
+        tokens, _ = batch
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits = apply(params, inp, train)
+        return c.softmax_xent(logits, tgt), c.accuracy_count(logits, tgt)
+
+    return loss_and_metrics

@@ -1,0 +1,96 @@
+"""Model registry: name -> ModelSpec with everything aot.py and the rust
+manifest need (init/apply/loss fns + static shape and batch config).
+
+Batch sizes / hyperparameters default to the paper's (§4.2-4.4) but are
+overridable from the aot.py CLI so scaled-down artifact sets can be built
+for CI.
+"""
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+from . import cifar, lm, mnist
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    init: Callable[..., Any]
+    loss_and_metrics: Callable[..., Tuple[Any, Any]]
+    # static data config consumed by rust via manifest.json
+    input_shape: Tuple[int, ...]  # per-example feature shape (no batch dim)
+    input_dtype: str  # "f32" | "i32"
+    num_classes: int
+    batch_size: int
+    # paper hyperparameters
+    lr: float
+    weight_decay: float
+    extra: Dict[str, Any]
+
+
+def _mnist_spec(batch_size=32):
+    return ModelSpec(
+        name="mnist",
+        init=mnist.init,
+        loss_and_metrics=mnist.loss_and_metrics,
+        input_shape=mnist.INPUT_SHAPE,
+        input_dtype="f32",
+        num_classes=mnist.NUM_CLASSES,
+        batch_size=batch_size,
+        lr=1e-3,  # paper §4.2
+        weight_decay=0.0,
+        extra={},
+    )
+
+
+def _cifar_spec(batch_size=32):
+    return ModelSpec(
+        name="cifar",
+        init=cifar.init,
+        loss_and_metrics=cifar.loss_and_metrics,
+        input_shape=cifar.INPUT_SHAPE,
+        input_dtype="f32",
+        num_classes=cifar.NUM_CLASSES,
+        batch_size=batch_size,
+        lr=5e-4,  # paper §4.3
+        weight_decay=0.0,
+        extra={"paper_batch_size": 128},
+    )
+
+
+def _lm_spec(config_name="lm", batch_size=8):
+    cfg = lm.CONFIGS[config_name]
+    return ModelSpec(
+        name=config_name,
+        init=lm.make_init(cfg),
+        loss_and_metrics=lm.make_loss(cfg),
+        # one training example = seq_len + 1 tokens (input + shifted target)
+        input_shape=(cfg.seq_len + 1,),
+        input_dtype="i32",
+        num_classes=cfg.vocab,
+        batch_size=batch_size,
+        lr=2e-5,  # paper §4.4 (AdamW)
+        weight_decay=0.01,
+        extra={
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+        },
+    )
+
+
+MODELS: Dict[str, Callable[..., ModelSpec]] = {
+    "mnist": _mnist_spec,
+    "cifar": _cifar_spec,
+    "lm": lambda batch_size=8: _lm_spec("lm", batch_size),
+    "lm_medium": lambda batch_size=8: _lm_spec("lm_medium", batch_size),
+    "lm14m": lambda batch_size=4: _lm_spec("lm14m", batch_size),
+}
+
+
+def get_model(name: str, **kw) -> ModelSpec:
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+    return MODELS[name](**kw)

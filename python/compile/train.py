@@ -1,0 +1,107 @@
+"""Flat-parameter train/eval/init step builders (the L2 <-> L3 boundary).
+
+Every artifact exchanges model state as flat f32 vectors so the rust
+coordinator can treat all models uniformly and client-side aggregation
+(the paper's core mechanism) is architecture-independent:
+
+  init_step(seed u32[2])                          -> params f32[P]
+  train_step(params, m, v, step i32[], x, y)      -> (params', m', v',
+                                                      step', loss, acc_count)
+  eval_step(params, x, y)                         -> (loss_sum, acc_count)
+
+The pytree <-> flat mapping comes from `ravel_pytree` at trace time; the
+Adam update runs on the flat vector through the fused L1 Pallas kernel
+(or the jnp oracle when `use_pallas=False`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import fused_adam_step
+from .kernels.ref import adam_step_ref
+from .models import ModelSpec
+from .models import common as model_common
+
+
+def param_count(spec: ModelSpec) -> int:
+    def flat_init(key):
+        flat, _ = ravel_pytree(spec.init(key))
+        return flat
+
+    out = jax.eval_shape(flat_init, jax.random.PRNGKey(0))
+    return int(out.size)
+
+
+def _unravel_fn(spec: ModelSpec):
+    """Build the static flat->pytree function (shapes only, no compute)."""
+    shapes = jax.eval_shape(spec.init, jax.random.PRNGKey(0))
+    zeros = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    _, unravel = ravel_pytree(zeros)
+    return unravel
+
+
+def make_init_step(spec: ModelSpec):
+    def init_step(seed):
+        """seed: u32[2] raw PRNG key data -> flat params f32[P]."""
+        key = jax.random.wrap_key_data(seed.astype(jnp.uint32))
+        params = spec.init(key)
+        flat, _ = ravel_pytree(params)
+        return (flat.astype(jnp.float32),)
+
+    return init_step
+
+
+def make_train_step(spec: ModelSpec, use_pallas: bool = True):
+    unravel = _unravel_fn(spec)
+    adam = (
+        functools.partial(
+            fused_adam_step, lr=spec.lr, weight_decay=spec.weight_decay
+        )
+        if use_pallas
+        else functools.partial(
+            adam_step_ref, lr=spec.lr, weight_decay=spec.weight_decay
+        )
+    )
+
+    def train_step(flat, m, v, step, x, y):
+        """One SGD step with Adam(W). step is the 0-based counter *before*
+        this update; loss is the pre-update minibatch loss."""
+        model_common.set_pallas_dense(use_pallas)
+
+        def loss_fn(fp):
+            loss, acc = spec.loss_and_metrics(unravel(fp), (x, y), train=True)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        new_step = step + 1
+        flat2, m2, v2 = adam(flat, m, v, grads, new_step)
+        return flat2, m2, v2, new_step, loss, acc
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec, use_pallas: bool = True):
+    unravel = _unravel_fn(spec)
+
+    def eval_step(flat, x, y):
+        """Returns (sum of per-batch mean loss, correct-prediction count) so
+        rust can accumulate over an un-partitioned held-out set."""
+        model_common.set_pallas_dense(use_pallas)
+        loss, acc = spec.loss_and_metrics(unravel(flat), (x, y), train=False)
+        return loss, acc
+
+    return eval_step
+
+
+def example_batch(spec: ModelSpec):
+    """ShapeDtypeStructs for (x, y) used to lower the jitted steps."""
+    b = spec.batch_size
+    if spec.input_dtype == "i32":
+        x = jax.ShapeDtypeStruct((b, *spec.input_shape), jnp.int32)
+    else:
+        x = jax.ShapeDtypeStruct((b, *spec.input_shape), jnp.float32)
+    y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return x, y

@@ -1,0 +1,99 @@
+"""AOT pipeline: manifest structure, HLO text validity, and the
+build-products contract the rust Manifest parser depends on."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import train as T
+from compile.hlo import lower_fn
+from compile.models import get_model
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_lower_fn_produces_parseable_hlo_text():
+    spec = get_model("mnist")
+    seed = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    text = lower_fn(T.make_init_step(spec), seed)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_lower_fn_keeps_unused_args():
+    # the LM's train step ignores y; the artifact must still take it
+    def f(a, b):
+        return (a * 2.0,)
+
+    a = jax.ShapeDtypeStruct((4,), jnp.float32)
+    b = jax.ShapeDtypeStruct((4,), jnp.float32)
+    text = lower_fn(f, a, b)
+    # both parameters present in the entry computation
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(0)") == 1
+    assert entry.count("parameter(1)") == 1
+
+
+def test_train_step_artifact_is_tuple_of_six():
+    spec = get_model("mnist")
+    p = T.param_count(spec)
+    fp = jax.ShapeDtypeStruct((p,), jnp.float32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    x, y = T.example_batch(spec)
+    text = lower_fn(T.make_train_step(spec, use_pallas=False), fp, fp, fp, step, x, y)
+    # 6 results: params', m', v', step', loss, acc
+    assert f"f32[{p}]" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts`")
+class TestBuiltManifest:
+    def setup_method(self):
+        self.manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+
+    def test_has_required_models(self):
+        assert {"mnist", "cifar", "lm"} <= set(self.manifest["models"])
+
+    def test_all_artifact_files_exist_and_are_hlo(self):
+        for name, m in self.manifest["models"].items():
+            for kind, art in m["artifacts"].items():
+                path = ARTIFACTS / art["file"]
+                assert path.exists(), f"{name}/{kind} missing"
+                head = path.read_text()[:200]
+                assert head.startswith("HloModule"), f"{name}/{kind} not HLO text"
+
+    def test_agg_artifacts_cover_paper_node_counts(self):
+        ks = {int(k) for k in self.manifest["agg"]["k"]}
+        assert {2, 3, 5} <= ks  # the paper's node counts
+
+    def test_param_counts_match_registry(self):
+        for name in ("mnist", "cifar", "lm"):
+            spec = get_model(name)
+            assert self.manifest["models"][name]["param_count"] == T.param_count(spec)
+
+    def test_lm14m_is_pythia_scale(self):
+        if "lm14m" in self.manifest["models"]:
+            p = self.manifest["models"]["lm14m"]["param_count"]
+            assert 10_000_000 < p < 30_000_000
+
+
+def test_aot_cli_smoke(tmp_path):
+    """The aot CLI builds a single tiny artifact set end to end."""
+    out = tmp_path / "arts"
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--models", "mnist", "--agg-k", "2", "--no-pallas"],
+        cwd=pathlib.Path(__file__).resolve().parents[1],
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["use_pallas"] is False
+    assert (out / "mnist_train.hlo.txt").exists()

@@ -1,0 +1,133 @@
+"""L2 model zoo: shapes, determinism, gradient flow, and pallas/jnp parity
+of the full forward pass for every registered model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as T
+from compile.models import common as mc
+from compile.models import get_model
+
+SMALL_MODELS = ["mnist", "cifar", "lm"]
+
+
+@pytest.fixture(autouse=True)
+def _reset_pallas_flag():
+    yield
+    mc.set_pallas_dense(False)
+
+
+def _batch(spec, seed=0):
+    r = np.random.default_rng(seed)
+    b = spec.batch_size
+    if spec.input_dtype == "i32":
+        x = r.integers(0, spec.num_classes, (b, *spec.input_shape)).astype(np.int32)
+    else:
+        x = r.standard_normal((b, *spec.input_shape)).astype(np.float32)
+    y = r.integers(0, spec.num_classes, (b,)).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_init_is_deterministic(name):
+    spec = get_model(name)
+    init = T.make_init_step(spec)
+    seed = jnp.asarray([0, 42], jnp.uint32)
+    (a,) = init(seed)
+    (b,) = init(seed)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    (c,) = init(jnp.asarray([0, 43], jnp.uint32))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_param_count_positive_and_stable(name):
+    spec = get_model(name)
+    p = T.param_count(spec)
+    assert p > 1000
+    (flat,) = T.make_init_step(spec)(jnp.asarray([0, 1], jnp.uint32))
+    assert flat.shape == (p,)
+    assert bool(jnp.all(jnp.isfinite(flat)))
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_train_step_shapes_and_finiteness(name):
+    spec = get_model(name)
+    p = T.param_count(spec)
+    (flat,) = T.make_init_step(spec)(jnp.asarray([0, 1], jnp.uint32))
+    m = jnp.zeros((p,), jnp.float32)
+    v = jnp.zeros((p,), jnp.float32)
+    x, y = _batch(spec)
+    step = T.make_train_step(spec, use_pallas=False)
+    f2, m2, v2, s2, loss, acc = step(flat, m, v, jnp.asarray(0, jnp.int32), x, y)
+    assert f2.shape == (p,) and m2.shape == (p,) and v2.shape == (p,)
+    assert int(s2) == 1
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    assert 0 <= float(acc) <= y.size if name != "lm" else True
+    assert bool(jnp.all(jnp.isfinite(f2)))
+    # parameters must actually move
+    assert float(jnp.max(jnp.abs(f2 - flat))) > 0
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_loss_decreases_over_repeated_steps(name):
+    """Overfit a single batch for a few steps: loss must drop."""
+    spec = get_model(name)
+    p = T.param_count(spec)
+    (flat,) = T.make_init_step(spec)(jnp.asarray([0, 7], jnp.uint32))
+    m = jnp.zeros((p,), jnp.float32)
+    v = jnp.zeros((p,), jnp.float32)
+    s = jnp.asarray(0, jnp.int32)
+    x, y = _batch(spec, seed=5)
+    step = jax.jit(T.make_train_step(spec, use_pallas=False))
+    losses = []
+    for _ in range(8):
+        flat, m, v, s, loss, _ = step(flat, m, v, s, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_eval_step_counts(name):
+    spec = get_model(name)
+    (flat,) = T.make_init_step(spec)(jnp.asarray([0, 1], jnp.uint32))
+    x, y = _batch(spec)
+    loss, correct = T.make_eval_step(spec, use_pallas=False)(flat, x, y)
+    n_preds = y.size if spec.input_dtype == "f32" else y.size * (spec.input_shape[0] - 1)
+    assert 0 <= float(correct) <= n_preds
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("name", ["mnist", "lm"])
+def test_pallas_vs_jnp_train_step_parity(name):
+    """The full train step must agree between kernel and oracle paths."""
+    spec = get_model(name)
+    p = T.param_count(spec)
+    (flat,) = T.make_init_step(spec)(jnp.asarray([0, 3], jnp.uint32))
+    m = jnp.zeros((p,), jnp.float32)
+    v = jnp.zeros((p,), jnp.float32)
+    s = jnp.asarray(0, jnp.int32)
+    x, y = _batch(spec, seed=9)
+    ref = T.make_train_step(spec, use_pallas=False)(flat, m, v, s, x, y)
+    pal = T.make_train_step(spec, use_pallas=True)(flat, m, v, s, x, y)
+    for a, b in zip(pal, ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_lm_config_registry():
+    from compile.models.lm import CONFIGS
+
+    assert set(CONFIGS) >= {"lm", "lm_medium", "lm14m"}
+    spec14 = get_model("lm14m")
+    # Pythia-14M budget: d=512 L=6 -> ~19-20M with embeddings at vocab=256
+    p = T.param_count(spec14)
+    assert 10_000_000 < p < 30_000_000
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        get_model("nope")

@@ -1,0 +1,47 @@
+//! Minimal bench harness (the image vendors no criterion): warmup + N
+//! timed iterations, reporting mean / p50 / p95 and derived throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:44} {:>5} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway calls and `iters` measured calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let p50 = samples[iters / 2];
+    let p95 = samples[(iters * 95 / 100).min(iters - 1)];
+    let r = BenchResult { name: name.to_string(), iters, mean, p50, p95 };
+    println!("{}", r.row());
+    r
+}
+
+/// GB/s for an operation that touches `bytes` per call.
+#[allow(dead_code)] // used by microbench, not tables
+pub fn gbps(bytes: usize, d: Duration) -> f64 {
+    bytes as f64 / d.as_secs_f64() / 1e9
+}

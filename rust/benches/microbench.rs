@@ -1,0 +1,208 @@
+//! Microbenchmarks of the coordinator hot paths (EXPERIMENTS.md §Perf):
+//!
+//! * client-side aggregation: pure-rust FMA loop vs the lowered L1 Pallas
+//!   kernel via PJRT (per model size, K = 2/5)
+//! * train-step latency per model artifact (the inner loop of every node)
+//! * weight-store ops: memory vs fs push/pull at model sizes
+//! * blob codec encode/decode
+//!
+//! Run: `cargo bench --offline` (or `cargo bench -- agg` etc. — the filter
+//! is matched against bench names).
+
+mod common;
+
+use std::sync::Arc;
+
+use common::{bench, gbps};
+use fedless::data::{BatchLoader, DataSource, DatasetKind, Split, SynthDataset};
+use fedless::runtime::{AggExecutor, Engine, Manifest, ModelBundle, TrainState};
+use fedless::store::{FsStore, MemoryStore, PushRequest, WeightStore};
+use fedless::tensor::codec::{decode_blob, encode_blob, BlobMeta};
+use fedless::tensor::flat::weighted_average;
+use fedless::tensor::FlatParams;
+use fedless::util::Rng;
+
+fn filter() -> Option<String> {
+    // `cargo bench -- foo` puts "foo" in argv; also skip `--bench` flag.
+    std::env::args().skip(1).find(|a| !a.starts_with("--"))
+}
+
+fn enabled(name: &str) -> bool {
+    filter().map(|f| name.contains(&f)).unwrap_or(true)
+}
+
+fn random_params(rng: &mut Rng, n: usize) -> FlatParams {
+    FlatParams((0..n).map(|_| rng.normal_f32()).collect())
+}
+
+fn bench_aggregation(manifest: &Manifest) {
+    if !enabled("agg") {
+        return;
+    }
+    println!("\n--- aggregation: rust FMA vs Pallas artifact (PJRT) ---");
+    let engine = Engine::new().unwrap();
+    let mut rng = Rng::new(1);
+    for &(label, n) in
+        &[("mnist-20k", 20_490usize), ("cifar-78k", 78_058), ("lm-470k", 470_528), ("14M", 14_000_000)]
+    {
+        for &k in &[2usize, 5] {
+            let params: Vec<FlatParams> = (0..k).map(|_| random_params(&mut rng, n)).collect();
+            let refs: Vec<&FlatParams> = params.iter().collect();
+            let w = vec![1.0 / k as f32; k];
+            let bytes = n * 4 * k;
+            let iters = if n > 1_000_000 { 5 } else { 30 };
+
+            let r = bench(&format!("agg/rust/{label}/k{k}"), 2, iters, || {
+                std::hint::black_box(weighted_average(&refs, &w));
+            });
+            println!("{:>60}  ({:.2} GB/s read)", "", gbps(bytes, r.mean));
+
+            if n <= 1_000_000 {
+                let agg = AggExecutor::load(&engine, manifest, k).unwrap();
+                let r = bench(&format!("agg/pallas-pjrt/{label}/k{k}"), 2, iters, || {
+                    std::hint::black_box(agg.aggregate(&refs, &w).unwrap());
+                });
+                println!("{:>60}  ({:.2} GB/s read)", "", gbps(bytes, r.mean));
+            }
+        }
+    }
+}
+
+fn bench_train_steps(manifest: &Manifest) {
+    if !enabled("train") {
+        return;
+    }
+    println!("\n--- train-step latency per artifact (batch in literal form) ---");
+    let engine = Engine::new().unwrap();
+    for model in ["mnist", "cifar", "lm"] {
+        let Ok(info) = manifest.model(model) else { continue };
+        let bundle = ModelBundle::load(&engine, info).unwrap();
+        let mut state = TrainState::new(bundle.init_params(1).unwrap());
+        let mut loader = match model {
+            "lm" => {
+                let corpus = Arc::new(fedless::data::TextCorpus::generate(3, 100_000));
+                let seq = info.input_shape[0] - 1;
+                let n = corpus.num_windows(seq);
+                BatchLoader::new(DataSource::Text { corpus, seq_len: seq }, (0..n).collect(), info.batch_size, 7)
+            }
+            _ => {
+                let kind = DatasetKind::parse(model).unwrap();
+                let ds = Arc::new(SynthDataset::new(kind, 2, 2000, 100));
+                BatchLoader::new(
+                    DataSource::Image { ds, split: Split::Train },
+                    (0..2000).collect(),
+                    info.batch_size,
+                    7,
+                )
+            }
+        };
+        let iters = if model == "cifar" { 10 } else { 20 };
+        bench(&format!("train/{model}/step"), 3, iters, || {
+            bundle.run_steps(&mut state, &mut loader, 1, |_, _| {}).unwrap();
+        });
+    }
+}
+
+fn bench_store() {
+    if !enabled("store") {
+        return;
+    }
+    println!("\n--- weight store ops (mnist-sized blobs, 20k f32) ---");
+    let mut rng = Rng::new(3);
+    let params = Arc::new(random_params(&mut rng, 20_490));
+    let req = |node: usize| PushRequest {
+        node_id: node,
+        round: 0,
+        epoch: 0,
+        n_examples: 1,
+        params: Arc::clone(&params),
+    };
+
+    let mem = MemoryStore::new();
+    bench("store/memory/push", 10, 200, || {
+        mem.push(req(0)).unwrap();
+    });
+    for n in 0..5 {
+        mem.push(req(n)).unwrap();
+    }
+    bench("store/memory/latest_per_node(5)", 10, 200, || {
+        std::hint::black_box(mem.latest_per_node().unwrap());
+    });
+    bench("store/memory/state_hash", 10, 200, || {
+        std::hint::black_box(mem.state_hash().unwrap());
+    });
+
+    let dir = std::env::temp_dir().join(format!("fedless_bench_fs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fs = FsStore::open(&dir).unwrap();
+    bench("store/fs/push", 5, 50, || {
+        fs.push(req(0)).unwrap();
+    });
+    fs.clear().unwrap();
+    for n in 0..5 {
+        fs.push(req(n)).unwrap();
+    }
+    bench("store/fs/latest_per_node(5)", 5, 30, || {
+        std::hint::black_box(fs.latest_per_node().unwrap());
+    });
+    bench("store/fs/state_hash", 5, 100, || {
+        std::hint::black_box(fs.state_hash().unwrap());
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn bench_data() {
+    if !enabled("data") {
+        return;
+    }
+    println!("\n--- data pipeline: batch materialization (feeds every train step) ---");
+    for (label, kind) in [("mnist", DatasetKind::Mnist), ("cifar", DatasetKind::Cifar)] {
+        let ds = Arc::new(SynthDataset::new(kind, 2, 4000, 100));
+        let mut loader = BatchLoader::new(
+            DataSource::Image { ds, split: Split::Train },
+            (0..4000).collect(),
+            32,
+            7,
+        );
+        bench(&format!("data/{label}/batch32"), 5, 50, || {
+            std::hint::black_box(loader.next_batch());
+        });
+    }
+    let corpus = Arc::new(fedless::data::TextCorpus::generate(3, 500_000));
+    let n = corpus.num_windows(64);
+    let mut loader =
+        BatchLoader::new(DataSource::Text { corpus, seq_len: 64 }, (0..n).collect(), 8, 7);
+    bench("data/lm/batch8", 5, 100, || {
+        std::hint::black_box(loader.next_batch());
+    });
+}
+
+fn bench_codec() {
+    if !enabled("codec") {
+        return;
+    }
+    println!("\n--- blob codec (470k f32 = lm-sized) ---");
+    let mut rng = Rng::new(4);
+    let params = random_params(&mut rng, 470_528);
+    let meta = BlobMeta { node_id: 0, round: 0, epoch: 0, n_examples: 1 };
+    let bytes = params.len() * 4;
+    let r = bench("codec/encode/470k", 3, 50, || {
+        std::hint::black_box(encode_blob(&meta, &params));
+    });
+    println!("{:>60}  ({:.2} GB/s)", "", gbps(bytes, r.mean));
+    let blob = encode_blob(&meta, &params);
+    let r = bench("codec/decode/470k", 3, 50, || {
+        std::hint::black_box(decode_blob(&blob).unwrap());
+    });
+    println!("{:>60}  ({:.2} GB/s)", "", gbps(bytes, r.mean));
+}
+
+fn main() {
+    let manifest = Manifest::discover().expect("run `make artifacts` first");
+    println!("fedless microbench — hot paths (see EXPERIMENTS.md §Perf)");
+    bench_aggregation(&manifest);
+    bench_train_steps(&manifest);
+    bench_store();
+    bench_data();
+    bench_codec();
+}

@@ -1,0 +1,117 @@
+//! Per-table end-to-end benches: one representative cell of every paper
+//! table (1–7) plus the Figure-1 sync-vs-async wall-clock comparison, run
+//! at smoke scale and timed. These measure the *system* cost of each
+//! experiment family (full federated run: data synthesis, node threads,
+//! PJRT training, store traffic, aggregation, evaluation); accuracy
+//! regeneration at real scale is `fedbench`'s job.
+//!
+//! Run: `cargo bench --offline --bench tables`
+
+mod common;
+
+use common::bench;
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::sim::run_experiment;
+use fedless::strategy::StrategyKind;
+
+fn smoke(model: &str) -> ExperimentConfig {
+    let (steps, train) = match model {
+        "cifar" => (8, 800),
+        m if m.starts_with("lm") => (10, 400),
+        _ => (12, 1200),
+    };
+    ExperimentConfig {
+        model: model.into(),
+        epochs: 2,
+        steps_per_epoch: steps,
+        train_size: train,
+        test_size: 160,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: &ExperimentConfig) -> f64 {
+    run_experiment(cfg).expect("experiment").final_accuracy
+}
+
+fn main() {
+    println!("fedless table benches — one representative cell per paper table\n");
+    let mut accs: Vec<(String, f64)> = Vec::new();
+    let mut acc = |name: &str, cfg: ExperimentConfig| {
+        let mut last = 0.0;
+        bench(name, 0, 3, || last = run(&cfg));
+        accs.push((name.to_string(), last));
+    };
+
+    // Table 1: mnist sync vs async at skew 0.9 (2 nodes)
+    let mut c = smoke("mnist");
+    c.mode = FederationMode::Sync;
+    c.skew = 0.9;
+    acc("table1/mnist-sync-skew0.9-n2", c);
+    let mut c = smoke("mnist");
+    c.mode = FederationMode::Async;
+    c.skew = 0.9;
+    acc("table1/mnist-async-skew0.9-n2", c);
+
+    // Table 2: mnist FedAvgM async, 3 nodes, skew 0.9
+    let mut c = smoke("mnist");
+    c.mode = FederationMode::Async;
+    c.strategy = StrategyKind::FedAvgM;
+    c.n_nodes = 3;
+    c.skew = 0.9;
+    acc("table2/mnist-fedavgm-async-n3", c);
+
+    // Table 3: mnist FedAdam sync, 5 nodes, skew 0.99
+    let mut c = smoke("mnist");
+    c.mode = FederationMode::Sync;
+    c.strategy = StrategyKind::FedAdam;
+    c.n_nodes = 5;
+    c.skew = 0.99;
+    acc("table3/mnist-fedadam-sync-n5", c);
+
+    // Table 4: cifar async at skew 1 (2 nodes)
+    let mut c = smoke("cifar");
+    c.mode = FederationMode::Async;
+    c.skew = 1.0;
+    acc("table4/cifar-async-skew1-n2", c);
+
+    // Table 5: cifar FedAvg sync, 3 nodes, skew 0.9
+    let mut c = smoke("cifar");
+    c.mode = FederationMode::Sync;
+    c.n_nodes = 3;
+    c.skew = 0.9;
+    acc("table5/cifar-fedavg-sync-n3", c);
+
+    // Table 6: cifar FedAvgM async, 2 nodes, skew 0.99
+    let mut c = smoke("cifar");
+    c.mode = FederationMode::Async;
+    c.strategy = StrategyKind::FedAvgM;
+    c.skew = 0.99;
+    acc("table6/cifar-fedavgm-async-n2", c);
+
+    // Table 7: lm sync vs async (2 nodes)
+    let mut c = smoke("lm");
+    c.mode = FederationMode::Sync;
+    acc("table7/lm-sync-n2", c);
+    let mut c = smoke("lm");
+    c.mode = FederationMode::Async;
+    acc("table7/lm-async-n2", c);
+
+    // Figure 1: straggler wall-clock, sync vs async
+    println!("\n--- fig1: straggler wall-clock (node 2 delayed 15ms/step) ---");
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let mut c = smoke("mnist");
+        c.mode = mode;
+        c.n_nodes = 3;
+        c.node_delays_ms = vec![0.0, 0.0, 15.0];
+        bench(&format!("fig1/{}-straggler-n3", mode.name()), 0, 3, || {
+            run(&c);
+        });
+    }
+
+    println!("\naccuracies at smoke scale (sanity only):");
+    for (name, a) in accs {
+        println!("  {name:40} {a:.3}");
+    }
+}

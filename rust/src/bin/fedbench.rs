@@ -1,0 +1,395 @@
+//! `fedbench` — regenerates every table and figure of the paper's
+//! evaluation (§4) on the synthetic substrate, at a configurable scale.
+//!
+//! ```text
+//! fedbench table1 [--scale smoke|small|paper] [--trials N] [--out FILE]
+//! fedbench table2|table3|table4|table5|table6|table7
+//! fedbench fig1          straggler timelines + sync/async wall-clock
+//! fedbench robustness    crash injection: async survives, sync stalls
+//! fedbench all           every table at the chosen scale
+//! ```
+//!
+//! Each cell reports `mean ± 95% CI` over repeated trials next to the
+//! paper's value. Absolute numbers differ (synthetic data, scaled steps —
+//! DESIGN.md §Substitutions); the comparisons that matter are the *shapes*:
+//! sync ≈ async at low skew, degradation at high skew, FedAvg ≈ FedAvgM >
+//! FedAdam, accuracy falling with node count, async < sync wall-clock under
+//! stragglers.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use fedless::config::{CrashSpec, ExperimentConfig, FederationMode, Scale};
+use fedless::sim::{run_experiment, run_trials};
+use fedless::strategy::StrategyKind;
+
+// ---------------------------------------------------------------------------
+// scale presets
+
+#[derive(Clone, Copy)]
+struct Preset {
+    epochs: usize,
+    steps: usize,
+    trials: usize,
+    train_size: usize,
+    test_size: usize,
+}
+
+fn preset(scale: Scale, model: &str) -> Preset {
+    // Paper: MNIST 3 epochs x 1200 steps b32; CIFAR 20 x 1200 b128 (we use
+    // b32); LM 3 epochs over 100k examples. Small/smoke shrink steps but
+    // keep the *relative* structure (federation at every epoch end).
+    match (scale, model) {
+        (Scale::Smoke, "cifar") => Preset { epochs: 2, steps: 12, trials: 1, train_size: 1200, test_size: 320 },
+        (Scale::Smoke, m) if m.starts_with("lm") => Preset { epochs: 2, steps: 20, trials: 1, train_size: 800, test_size: 160 },
+        (Scale::Smoke, _) => Preset { epochs: 2, steps: 25, trials: 1, train_size: 2000, test_size: 320 },
+        (Scale::Small, "cifar") => Preset { epochs: 4, steps: 60, trials: 2, train_size: 6000, test_size: 960 },
+        (Scale::Small, m) if m.starts_with("lm") => Preset { epochs: 3, steps: 120, trials: 3, train_size: 4000, test_size: 400 },
+        (Scale::Small, _) => Preset { epochs: 3, steps: 150, trials: 3, train_size: 8000, test_size: 1600 },
+        (Scale::Paper, "cifar") => Preset { epochs: 20, steps: 1200, trials: 3, train_size: 50_000, test_size: 10_000 },
+        (Scale::Paper, m) if m.starts_with("lm") => Preset { epochs: 3, steps: 780, trials: 3, train_size: 100_000, test_size: 1000 },
+        (Scale::Paper, _) => Preset { epochs: 3, steps: 1200, trials: 3, train_size: 38_400, test_size: 10_000 },
+    }
+}
+
+fn base_cfg(model: &str, scale: Scale) -> ExperimentConfig {
+    let p = preset(scale, model);
+    ExperimentConfig {
+        model: model.into(),
+        epochs: p.epochs,
+        steps_per_epoch: p.steps,
+        train_size: p.train_size,
+        test_size: p.test_size,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// table runner helpers
+
+struct Opts {
+    scale: Scale,
+    trials: Option<usize>,
+    out: Option<String>,
+    seed: u64,
+}
+
+struct TableOut {
+    text: String,
+}
+
+impl TableOut {
+    fn new(title: &str) -> Self {
+        let mut t = TableOut { text: String::new() };
+        let _ = writeln!(t.text, "\n## {title}\n");
+        println!("\n## {title}\n");
+        t
+    }
+    fn line(&mut self, s: &str) {
+        println!("{s}");
+        self.text.push_str(s);
+        self.text.push('\n');
+    }
+}
+
+fn cell(cfg: &ExperimentConfig, trials: usize) -> String {
+    match run_trials(cfg, trials) {
+        Ok(set) => set.accuracy.fmt_paper(),
+        Err(e) => format!("ERR({e})"),
+    }
+}
+
+fn trials_for(o: &Opts, model: &str) -> usize {
+    o.trials.unwrap_or(preset(o.scale, model).trials)
+}
+
+// ---------------------------------------------------------------------------
+// tables
+
+/// Tables 1 (mnist) and 4 (cifar): sync vs async FedAvg across skew,
+/// plus the centralized reference the captions quote.
+fn table_sync_vs_async(model: &str, o: &Opts, paper: &[[&str; 3]; 2], centralized: &str) -> TableOut {
+    let n = if model == "mnist" { 1 } else { 4 };
+    let mut t = TableOut::new(&format!(
+        "Table {n}: {model} sync vs async FedAvg across skew (2 nodes), scale={}",
+        o.scale.name()
+    ));
+    let trials = trials_for(o, model);
+    let skews = [0.0, 0.9, 1.0];
+
+    // centralized reference
+    let mut c = base_cfg(model, o.scale);
+    c.mode = FederationMode::Local;
+    c.n_nodes = 1;
+    c.seed = o.seed;
+    let cen = cell(&c, trials);
+    t.line(&format!("centralized reference: {cen}   (paper: {centralized})"));
+    t.line("");
+    t.line("| strategy | skew 0 | skew 0.9 | skew 1 |");
+    t.line("|----------|--------|----------|--------|");
+    for (row, mode) in [FederationMode::Sync, FederationMode::Async].iter().enumerate() {
+        let mut cells = Vec::new();
+        for (col, &skew) in skews.iter().enumerate() {
+            let mut cfg = base_cfg(model, o.scale);
+            cfg.mode = *mode;
+            cfg.n_nodes = 2;
+            cfg.skew = skew;
+            cfg.seed = o.seed;
+            cells.push(format!("{} (paper {})", cell(&cfg, trials), paper[row][col]));
+        }
+        t.line(&format!("| {} | {} |", mode.name(), cells.join(" | ")));
+    }
+    t
+}
+
+/// Tables 2/3 (mnist) and 5/6 (cifar): strategies x node counts at a fixed
+/// skew, sync and async variants.
+fn table_strategies(
+    model: &str,
+    skew: f64,
+    table_no: usize,
+    o: &Opts,
+    rows: &[(StrategyKind, FederationMode, [&str; 3])],
+) -> TableOut {
+    let mut t = TableOut::new(&format!(
+        "Table {table_no}: {model} strategies x nodes, skew={skew}, scale={}",
+        o.scale.name()
+    ));
+    let trials = trials_for(o, model);
+    t.line("| strategy | 2 nodes | 3 nodes | 5 nodes |");
+    t.line("|----------|---------|---------|---------|");
+    for (kind, mode, paper) in rows {
+        let mut cells = Vec::new();
+        for (col, n_nodes) in [2usize, 3, 5].iter().enumerate() {
+            let mut cfg = base_cfg(model, o.scale);
+            cfg.strategy = *kind;
+            cfg.mode = *mode;
+            cfg.n_nodes = *n_nodes;
+            cfg.skew = skew;
+            cfg.seed = o.seed;
+            cells.push(format!("{} (paper {})", cell(&cfg, trials), paper[col]));
+        }
+        let label = match mode {
+            FederationMode::Async => format!("{} (async)", kind.name()),
+            _ => kind.name().to_string(),
+        };
+        t.line(&format!("| {label} | {} |", cells.join(" | ")));
+    }
+    t
+}
+
+/// Table 7: LM sync vs async FedAvg across node counts.
+fn table7(o: &Opts) -> TableOut {
+    let model = "lm";
+    let mut t = TableOut::new(&format!(
+        "Table 7: language model sync vs async FedAvg across nodes, scale={}",
+        o.scale.name()
+    ));
+    let trials = trials_for(o, model);
+
+    let mut c = base_cfg(model, o.scale);
+    c.mode = FederationMode::Local;
+    c.n_nodes = 1;
+    c.seed = o.seed;
+    t.line(&format!("centralized reference: {}   (paper: 0.279)", cell(&c, trials)));
+    t.line("");
+    t.line("| strategy | 2 nodes | 3 nodes | 5 nodes |");
+    t.line("|----------|---------|---------|---------|");
+    let paper = [[".26 ± .002", ".237 ± .004", ".227 ± .008"],
+                 [".251 ± .005", ".239 ± .006", ".221 ± .006"]];
+    for (row, mode) in [FederationMode::Sync, FederationMode::Async].iter().enumerate() {
+        let mut cells = Vec::new();
+        for (col, n_nodes) in [2usize, 3, 5].iter().enumerate() {
+            let mut cfg = base_cfg(model, o.scale);
+            cfg.mode = *mode;
+            cfg.n_nodes = *n_nodes;
+            cfg.seed = o.seed;
+            cells.push(format!("{} (paper {})", cell(&cfg, trials), paper[row][col]));
+        }
+        let label = if *mode == FederationMode::Async { "FedAvg (async)" } else { "FedAvg" };
+        t.line(&format!("| {label} | {} |", cells.join(" | ")));
+    }
+    t
+}
+
+/// Figure 1 (shape): straggler idle time under sync vs async + wall-clock.
+fn fig1(o: &Opts) -> TableOut {
+    let mut t = TableOut::new(&format!(
+        "Figure 1: straggler idle time, sync vs async (scale={})",
+        o.scale.name()
+    ));
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let mut cfg = base_cfg("mnist", o.scale);
+        cfg.mode = mode;
+        cfg.n_nodes = 3;
+        cfg.seed = o.seed;
+        // heterogeneous speeds: node 2 is much slower per step
+        cfg.node_delays_ms = vec![0.0, 4.0, 16.0];
+        match run_experiment(&cfg) {
+            Ok(res) => {
+                t.line(&format!(
+                    "\n### {} — wall clock {:.2}s, mean idle {:.1}%",
+                    mode.name(),
+                    res.wall_clock_s,
+                    100.0 * res.mean_idle_fraction
+                ));
+                for line in res.render_timelines(72).lines() {
+                    t.line(line);
+                }
+            }
+            Err(e) => t.line(&format!("{}: ERR {e}", mode.name())),
+        }
+    }
+    t.line("\nAsync removes the '.' (wait) spans: fast nodes keep training while");
+    t.line("the straggler finishes — the paper's Figure 1 phenomenon.");
+    t
+}
+
+/// §4.2.1 robustness: a node crashes mid-training; async finishes, sync
+/// stalls at the barrier.
+fn robustness(o: &Opts) -> TableOut {
+    let mut t = TableOut::new("Robustness: node crash at epoch 1 (paper §4.2.1)");
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let mut cfg = base_cfg("mnist", o.scale);
+        cfg.mode = mode;
+        cfg.n_nodes = 3;
+        cfg.seed = o.seed;
+        cfg.crash = Some(CrashSpec { node: 1, at_epoch: 1 });
+        cfg.sync_timeout = Duration::from_secs(5);
+        match run_experiment(&cfg) {
+            Ok(res) => {
+                let statuses: Vec<String> =
+                    res.reports.iter().map(|r| format!("{:?}", r.status)).collect();
+                t.line(&format!(
+                    "{:5} -> completed={} acc={:.3} wall={:.1}s statuses={:?}",
+                    mode.name(),
+                    res.all_completed,
+                    res.final_accuracy,
+                    res.wall_clock_s,
+                    statuses
+                ));
+            }
+            Err(e) => t.line(&format!("{}: ERR {e}", mode.name())),
+        }
+    }
+    t.line("\nExpected: async nodes 0/2 complete all epochs; sync nodes stall at");
+    t.line("the round-1 barrier waiting for the crashed node (bounded by the");
+    t.line("sync_timeout instead of hanging forever).");
+    t
+}
+
+// ---------------------------------------------------------------------------
+
+const T2_ROWS: &[(StrategyKind, FederationMode, [&str; 3])] = &[
+    (StrategyKind::FedAvg, FederationMode::Sync, [".983 ± .002", ".983 ± .001", ".979 ± .001"]),
+    (StrategyKind::FedAvgM, FederationMode::Sync, [".983 ± .001", ".983 ± .001", ".979 ± .001"]),
+    (StrategyKind::FedAdam, FederationMode::Sync, [".976 ± .002", ".97 ± .007", ".962 ± .007"]),
+    (StrategyKind::FedAvg, FederationMode::Async, [".976 ± .003", ".979 ± .002", ".97 ± .007"]),
+    (StrategyKind::FedAvgM, FederationMode::Async, [".981 ± .002", ".979 ± .001", ".971 ± .003"]),
+    (StrategyKind::FedAdam, FederationMode::Async, [".97 ± .005", ".928 ± .058", ".95 ± .012"]),
+];
+
+const T3_ROWS: &[(StrategyKind, FederationMode, [&str; 3])] = &[
+    (StrategyKind::FedAvg, FederationMode::Sync, [".975 ± .003", ".965 ± .002", ".949 ± .002"]),
+    (StrategyKind::FedAvgM, FederationMode::Sync, [".976 ± .002", ".965 ± .002", ".947 ± .001"]),
+    (StrategyKind::FedAdam, FederationMode::Sync, [".967 ± .003", ".95 ± .005", ".926 ± .006"]),
+    (StrategyKind::FedAvg, FederationMode::Async, [".971 ± .003", ".948 ± .005", ".928 ± .003"]),
+    (StrategyKind::FedAvgM, FederationMode::Async, [".967 ± .005", ".953 ± .009", ".925 ± .013"]),
+    (StrategyKind::FedAdam, FederationMode::Async, [".956 ± .014", ".91 ± .021", ".903 ± .015"]),
+];
+
+const T5_ROWS: &[(StrategyKind, FederationMode, [&str; 3])] = &[
+    (StrategyKind::FedAvg, FederationMode::Sync, [".744 ± .01", ".717 ± .005", ".69 ± .002"]),
+    (StrategyKind::FedAvgM, FederationMode::Sync, [".749 ± .002", ".715 ± .01", ".689 ± .004"]),
+    (StrategyKind::FedAvg, FederationMode::Async, [".753 ± .018", ".728 ± .003", ".692 ± .003"]),
+    (StrategyKind::FedAvgM, FederationMode::Async, [".733 ± .012", ".733 ± .006", ".689 ± .004"]),
+];
+
+const T6_ROWS: &[(StrategyKind, FederationMode, [&str; 3])] = &[
+    (StrategyKind::FedAvg, FederationMode::Sync, [".552 ± .019", ".545 ± .021", ".43 ± .026"]),
+    (StrategyKind::FedAvgM, FederationMode::Sync, [".566 ± .014", ".458 ± .006", ".441 ± .022"]),
+    (StrategyKind::FedAvg, FederationMode::Async, [".615 ± .044", ".577 ± .024", ".418 ± .03"]),
+    (StrategyKind::FedAvgM, FederationMode::Async, [".651 ± .011", ".564 ± .012", ".433 ± .028"]),
+];
+
+fn run_one(name: &str, o: &Opts) -> Option<TableOut> {
+    let t1_paper = [[".987 ± .001", ".983 ± .002", ".894 ± .02"],
+                    [".985 ± .001", ".976 ± .003", ".734 ± .114"]];
+    let t4_paper = [[".804 ± .003", ".744 ± .01", ".477 ± .014"],
+                    [".802 ± .004", ".753 ± .018", ".505 ± .048"]];
+    match name {
+        "table1" => Some(table_sync_vs_async("mnist", o, &t1_paper, "0.987")),
+        "table2" => Some(table_strategies("mnist", 0.9, 2, o, T2_ROWS)),
+        // Table 3 is the same grid at skew 0.99 (paper §4.2.2).
+        "table3" => Some(table_strategies("mnist", 0.99, 3, o, T3_ROWS)),
+        "table4" => Some(table_sync_vs_async("cifar", o, &t4_paper, "0.803")),
+        "table5" => Some(table_strategies("cifar", 0.9, 5, o, T5_ROWS)),
+        "table6" => Some(table_strategies("cifar", 0.99, 6, o, T6_ROWS)),
+        "table7" => Some(table7(o)),
+        "fig1" => Some(fig1(o)),
+        "robustness" => Some(robustness(o)),
+        _ => None,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        eprintln!(
+            "usage: fedbench <table1..table7|fig1|robustness|all> \
+             [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE]"
+        );
+        std::process::exit(2);
+    };
+    let mut o = Opts { scale: Scale::Small, trials: None, out: None, seed: 42 };
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                i += 1;
+                o.scale = Scale::parse(&args[i]).unwrap_or_else(|| {
+                    eprintln!("bad scale {:?}", args[i]);
+                    std::process::exit(2);
+                });
+            }
+            "--trials" => {
+                i += 1;
+                o.trials = Some(args[i].parse().expect("bad trials"));
+            }
+            "--seed" => {
+                i += 1;
+                o.seed = args[i].parse().expect("bad seed");
+            }
+            "--out" => {
+                i += 1;
+                o.out = Some(args[i].clone());
+            }
+            other => {
+                eprintln!("unknown flag {other}");
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+
+    let names: Vec<&str> = if cmd == "all" {
+        vec!["table1", "table2", "table3", "table4", "table5", "table6", "table7", "fig1", "robustness"]
+    } else {
+        vec![cmd.as_str()]
+    };
+
+    let mut all_text = String::new();
+    for name in names {
+        match run_one(name, &o) {
+            Some(t) => all_text.push_str(&t.text),
+            None => {
+                eprintln!("unknown experiment {name:?}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(path) = &o.out {
+        std::fs::write(path, &all_text).expect("write --out file");
+        eprintln!("wrote {path}");
+    }
+}

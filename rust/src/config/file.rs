@@ -1,0 +1,190 @@
+//! `key = value` config files for the `fedless` CLI (a TOML-subset; the
+//! image carries no serde, and experiments only need flat scalar keys).
+//!
+//! ```text
+//! # mnist async experiment
+//! model = mnist
+//! n_nodes = 2
+//! mode = async            # sync | async | local
+//! strategy = fedavg       # fedavg | fedavgm | fedadam | fedasync | fedbuff
+//! skew = 0.9
+//! epochs = 3
+//! steps_per_epoch = 120
+//! store = memory          # memory | fs:/path/to/dir
+//! node_delays_ms = 0,40   # per-node straggler delays
+//! crash = 1@2             # crash node 1 at epoch 2
+//! ```
+
+use std::fmt;
+use std::time::Duration;
+
+use super::{CrashSpec, ExperimentConfig, FederationMode, StoreKind};
+use crate::store::LatencyConfig;
+use crate::strategy::StrategyKind;
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err(line: usize, msg: impl Into<String>) -> ConfigError {
+    ConfigError { line, msg: msg.into() }
+}
+
+/// Parse config text into an [`ExperimentConfig`] (starting from defaults).
+pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
+    let mut cfg = ExperimentConfig::default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line_no = ln + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(line_no, "expected `key = value`"))?;
+        let key = key.trim();
+        let value = value.trim();
+        let parse_f64 = |v: &str| {
+            v.parse::<f64>().map_err(|_| err(line_no, format!("bad number {v:?}")))
+        };
+        let parse_usize = |v: &str| {
+            v.parse::<usize>().map_err(|_| err(line_no, format!("bad integer {v:?}")))
+        };
+        match key {
+            "model" => cfg.model = value.to_string(),
+            "n_nodes" => cfg.n_nodes = parse_usize(value)?,
+            "mode" => {
+                cfg.mode = FederationMode::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown mode {value:?}")))?
+            }
+            "strategy" => {
+                cfg.strategy = StrategyKind::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown strategy {value:?}")))?
+            }
+            "skew" => cfg.skew = parse_f64(value)?,
+            "epochs" => cfg.epochs = parse_usize(value)?,
+            "steps_per_epoch" => cfg.steps_per_epoch = parse_usize(value)?,
+            "sample_prob" => cfg.sample_prob = parse_f64(value)?,
+            "train_size" => cfg.train_size = parse_usize(value)?,
+            "test_size" => cfg.test_size = parse_usize(value)?,
+            "seed" => {
+                cfg.seed = value
+                    .parse::<u64>()
+                    .map_err(|_| err(line_no, format!("bad seed {value:?}")))?
+            }
+            "store" => {
+                cfg.store = if value == "memory" {
+                    StoreKind::Memory
+                } else if let Some(path) = value.strip_prefix("fs:") {
+                    StoreKind::Fs(path.into())
+                } else {
+                    return Err(err(line_no, format!("unknown store {value:?}")));
+                }
+            }
+            "latency" => {
+                cfg.latency = match value {
+                    "none" => None,
+                    "s3" => Some(LatencyConfig::s3_like()),
+                    ms => {
+                        let v = parse_f64(ms)?;
+                        Some(LatencyConfig {
+                            base: Duration::from_secs_f64(v / 1000.0),
+                            jitter: Duration::from_secs_f64(v / 2000.0),
+                            bytes_per_sec: 200_000_000,
+                        })
+                    }
+                }
+            }
+            "node_delays_ms" => {
+                cfg.node_delays_ms = value
+                    .split(',')
+                    .map(|v| parse_f64(v.trim()))
+                    .collect::<Result<_, _>>()?;
+            }
+            "crash" => {
+                let (node, at) = value
+                    .split_once('@')
+                    .ok_or_else(|| err(line_no, "crash must be `node@epoch`"))?;
+                cfg.crash = Some(CrashSpec {
+                    node: parse_usize(node.trim())?,
+                    at_epoch: parse_usize(at.trim())?,
+                });
+            }
+            "sync_timeout_s" => {
+                cfg.sync_timeout = Duration::from_secs_f64(parse_f64(value)?)
+            }
+            "log_dir" => cfg.log_dir = Some(value.into()),
+            "verbose" => cfg.verbose = value == "true" || value == "1",
+            _ => return Err(err(line_no, format!("unknown key {key:?}"))),
+        }
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_example() {
+        let cfg = parse_config_text(
+            "# comment\n\
+             model = cifar\n\
+             n_nodes = 5\n\
+             mode = sync\n\
+             strategy = fedavgm\n\
+             skew = 0.99   # trailing comment\n\
+             epochs = 20\n\
+             steps_per_epoch = 50\n\
+             store = fs:/tmp/ws\n\
+             node_delays_ms = 0, 40, 80\n\
+             crash = 1@2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "cifar");
+        assert_eq!(cfg.n_nodes, 5);
+        assert_eq!(cfg.mode, FederationMode::Sync);
+        assert_eq!(cfg.strategy, StrategyKind::FedAvgM);
+        assert_eq!(cfg.skew, 0.99);
+        assert_eq!(cfg.store, StoreKind::Fs("/tmp/ws".into()));
+        assert_eq!(cfg.node_delays_ms, vec![0.0, 40.0, 80.0]);
+        assert_eq!(cfg.crash, Some(CrashSpec { node: 1, at_epoch: 2 }));
+    }
+
+    #[test]
+    fn empty_text_gives_defaults() {
+        let cfg = parse_config_text("").unwrap();
+        assert_eq!(cfg.model, "mnist");
+        assert_eq!(cfg.n_nodes, 2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_config_text("model = mnist\nbogus_key = 3\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_config_text("n_nodes = x\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse_config_text("just a line\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn latency_presets() {
+        let cfg = parse_config_text("latency = s3\n").unwrap();
+        assert!(cfg.latency.is_some());
+        let cfg = parse_config_text("latency = 50\n").unwrap();
+        assert_eq!(cfg.latency.unwrap().base, Duration::from_millis(50));
+        let cfg = parse_config_text("latency = none\n").unwrap();
+        assert!(cfg.latency.is_none());
+    }
+}

@@ -1,0 +1,231 @@
+//! Experiment configuration: the programmatic [`ExperimentConfig`] plus a
+//! small `key = value` config-file format for the `fedless` CLI.
+
+mod file;
+
+pub use file::{parse_config_text, ConfigError};
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::store::LatencyConfig;
+use crate::strategy::StrategyKind;
+
+/// How nodes federate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FederationMode {
+    /// Serverless synchronous: barrier on the weight store each round.
+    Sync,
+    /// Serverless asynchronous: FedAvgAsync, paper Algorithm 1.
+    Async,
+    /// No federation (centralized baseline rows of the paper's tables).
+    Local,
+}
+
+impl FederationMode {
+    pub fn parse(s: &str) -> Option<FederationMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sync" => Some(FederationMode::Sync),
+            "async" => Some(FederationMode::Async),
+            "local" | "centralized" => Some(FederationMode::Local),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FederationMode::Sync => "sync",
+            FederationMode::Async => "async",
+            FederationMode::Local => "local",
+        }
+    }
+}
+
+/// Experiment scale preset (used by `fedbench --scale`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds per cell; CI smoke.
+    Smoke,
+    /// Minutes per table; the EXPERIMENTS.md default.
+    Small,
+    /// Paper-sized steps/epochs/trials (hours on CPU).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s.to_ascii_lowercase().as_str() {
+            "smoke" => Some(Scale::Smoke),
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Smoke => "smoke",
+            Scale::Small => "small",
+            Scale::Paper => "paper",
+        }
+    }
+}
+
+/// Where weights are exchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreKind {
+    Memory,
+    Fs(PathBuf),
+}
+
+/// Failure injection: crash a node partway through training (§4.2.1
+/// robustness experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub node: usize,
+    /// Crash at the start of this 0-based epoch.
+    pub at_epoch: usize,
+}
+
+/// Full description of one federated training experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model/dataset family: "mnist", "cifar", "lm" (+ lm_medium/lm14m).
+    pub model: String,
+    pub n_nodes: usize,
+    pub mode: FederationMode,
+    pub strategy: StrategyKind,
+    /// Label skew s ∈ [0, 1] (paper §4.1). Ignored for LM (random split).
+    pub skew: f64,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    /// Client-sampling probability C (Algorithm 1). 1.0 = every epoch.
+    pub sample_prob: f64,
+    /// Training examples across all nodes.
+    pub train_size: usize,
+    /// Held-out (un-partitioned) eval examples.
+    pub test_size: usize,
+    pub seed: u64,
+    pub store: StoreKind,
+    /// Simulated store latency (None = instantaneous in-memory).
+    pub latency: Option<LatencyConfig>,
+    /// Per-node artificial per-step delay in ms (straggler simulation);
+    /// empty = all nodes run at natural speed.
+    pub node_delays_ms: Vec<f64>,
+    /// Crash injection.
+    pub crash: Option<CrashSpec>,
+    /// Sync-barrier poll timeout before a node gives up on the round.
+    pub sync_timeout: Duration,
+    /// Write metrics.csv / events.jsonl here.
+    pub log_dir: Option<PathBuf>,
+    /// Print per-epoch progress.
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "mnist".into(),
+            n_nodes: 2,
+            mode: FederationMode::Async,
+            strategy: StrategyKind::FedAvg,
+            skew: 0.0,
+            epochs: 3,
+            steps_per_epoch: 120,
+            sample_prob: 1.0,
+            train_size: 8_000,
+            test_size: 1_600,
+            seed: 42,
+            store: StoreKind::Memory,
+            latency: None,
+            node_delays_ms: Vec::new(),
+            crash: None,
+            sync_timeout: Duration::from_secs(120),
+            log_dir: None,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Validate invariants early with readable errors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_nodes >= 1, "n_nodes must be >= 1");
+        anyhow::ensure!((0.0..=1.0).contains(&self.skew), "skew in [0,1]");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.sample_prob),
+            "sample_prob in [0,1]"
+        );
+        anyhow::ensure!(self.epochs >= 1, "epochs must be >= 1");
+        anyhow::ensure!(self.steps_per_epoch >= 1, "steps_per_epoch >= 1");
+        anyhow::ensure!(
+            self.train_size >= self.n_nodes,
+            "train_size must cover all nodes"
+        );
+        if let Some(c) = &self.crash {
+            anyhow::ensure!(c.node < self.n_nodes, "crash.node out of range");
+        }
+        anyhow::ensure!(
+            !(self.mode == FederationMode::Local && self.n_nodes > 1),
+            "local (centralized) mode implies n_nodes = 1"
+        );
+        Ok(())
+    }
+
+    /// Short run identifier, e.g. `mnist_async_fedavg_n2_s0.9_seed42`.
+    pub fn run_name(&self) -> String {
+        format!(
+            "{}_{}_{}_n{}_s{}_seed{}",
+            self.model,
+            self.mode.name(),
+            self.strategy.name(),
+            self.n_nodes,
+            self.skew,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.n_nodes = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.skew = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.crash = Some(CrashSpec { node: 5, at_epoch: 0 });
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.mode = FederationMode::Local;
+        c.n_nodes = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mode_and_scale_parse() {
+        assert_eq!(FederationMode::parse("SYNC"), Some(FederationMode::Sync));
+        assert_eq!(FederationMode::parse("centralized"), Some(FederationMode::Local));
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("x"), None);
+    }
+
+    #[test]
+    fn run_name_is_stable() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
+    }
+}

@@ -1,0 +1,195 @@
+//! Batch loading: shuffled, cycling iteration over a node's local shard.
+//!
+//! A [`BatchLoader`] owns a list of example indices (produced by the
+//! [`crate::data::Partitioner`]) plus a data source, and materializes fixed-size
+//! batches in the exact layout the AOT train artifact expects
+//! (`x: f32[B, ...]` or `i32[B, T+1]`, `y: i32[B]`).
+
+use std::sync::Arc;
+
+use super::synth::{Split, SynthDataset};
+use super::text::TextCorpus;
+use crate::util::Rng;
+
+/// Batch feature data — images are f32, LM token windows are i32.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// One training/eval batch in artifact layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: BatchData,
+    /// Class labels (images) or all-zeros dummy (LM — targets come from the
+    /// token window itself).
+    pub y: Vec<i32>,
+    /// Leading x dims including batch, e.g. `[32, 28, 28, 1]` or `[8, 65]`.
+    pub x_dims: Vec<i64>,
+}
+
+/// Where a loader's examples come from.
+#[derive(Clone)]
+pub enum DataSource {
+    Image { ds: Arc<SynthDataset>, split: Split },
+    Text { corpus: Arc<TextCorpus>, seq_len: usize },
+}
+
+/// Shuffled cycling batch iterator over a shard (list of example indices).
+pub struct BatchLoader {
+    source: DataSource,
+    indices: Vec<usize>,
+    batch_size: usize,
+    cursor: usize,
+    rng: Rng,
+    /// Completed passes over the shard.
+    pub passes: usize,
+}
+
+impl BatchLoader {
+    pub fn new(source: DataSource, mut indices: Vec<usize>, batch_size: usize, seed: u64) -> Self {
+        assert!(!indices.is_empty(), "empty shard");
+        assert!(batch_size > 0);
+        let mut rng = Rng::new(seed ^ 0x10AD_E7);
+        rng.shuffle(&mut indices);
+        BatchLoader { source, indices, batch_size, cursor: 0, rng, passes: 0 }
+    }
+
+    /// Number of examples in this shard.
+    pub fn shard_len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Produce the next batch, reshuffling at each epoch boundary over the
+    /// shard (sampling with cycling, like `tf.data.repeat + shuffle`).
+    pub fn next_batch(&mut self) -> Batch {
+        let idxs: Vec<usize> = (0..self.batch_size)
+            .map(|_| {
+                if self.cursor >= self.indices.len() {
+                    self.cursor = 0;
+                    self.passes += 1;
+                    self.rng.shuffle(&mut self.indices);
+                }
+                let i = self.indices[self.cursor];
+                self.cursor += 1;
+                i
+            })
+            .collect();
+        self.materialize(&idxs)
+    }
+
+    /// Materialize a specific set of example indices (used by eval).
+    pub fn materialize(&self, idxs: &[usize]) -> Batch {
+        match &self.source {
+            DataSource::Image { ds, split } => {
+                let elen = ds.kind.example_len();
+                let (h, w, c) = ds.kind.dims();
+                let mut x = vec![0.0f32; idxs.len() * elen];
+                let mut y = Vec::with_capacity(idxs.len());
+                for (bi, &i) in idxs.iter().enumerate() {
+                    let label = ds.example_into(*split, i, &mut x[bi * elen..(bi + 1) * elen]);
+                    y.push(label as i32);
+                }
+                Batch {
+                    x: BatchData::F32(x),
+                    y,
+                    x_dims: vec![idxs.len() as i64, h as i64, w as i64, c as i64],
+                }
+            }
+            DataSource::Text { corpus, seq_len } => {
+                let mut x = Vec::with_capacity(idxs.len() * (seq_len + 1));
+                for &i in idxs {
+                    x.extend_from_slice(&corpus.window(i, *seq_len));
+                }
+                Batch {
+                    x: BatchData::I32(x),
+                    y: vec![0; idxs.len()],
+                    x_dims: vec![idxs.len() as i64, (*seq_len + 1) as i64],
+                }
+            }
+        }
+    }
+
+    /// Iterate the shard once in fixed order as full batches (dropping the
+    /// ragged tail) — used for evaluation.
+    pub fn full_batches(&self) -> Vec<Batch> {
+        self.indices
+            .chunks_exact(self.batch_size)
+            .map(|c| self.materialize(c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::DatasetKind;
+
+    fn image_loader(n: usize, b: usize) -> BatchLoader {
+        let ds = Arc::new(SynthDataset::new(DatasetKind::Mnist, 1, n, 10));
+        BatchLoader::new(
+            DataSource::Image { ds, split: Split::Train },
+            (0..n).collect(),
+            b,
+            9,
+        )
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut l = image_loader(100, 32);
+        let b = l.next_batch();
+        assert_eq!(b.x_dims, vec![32, 28, 28, 1]);
+        assert_eq!(b.y.len(), 32);
+        match &b.x {
+            BatchData::F32(v) => assert_eq!(v.len(), 32 * 28 * 28),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn cycles_and_counts_passes() {
+        let mut l = image_loader(50, 32);
+        assert_eq!(l.passes, 0);
+        let _ = l.next_batch();
+        let _ = l.next_batch(); // 64 > 50 -> must have wrapped
+        assert_eq!(l.passes, 1);
+    }
+
+    #[test]
+    fn text_batches() {
+        let corpus = Arc::new(TextCorpus::generate(3, 10_000));
+        let n = corpus.num_windows(64);
+        let mut l = BatchLoader::new(
+            DataSource::Text { corpus, seq_len: 64 },
+            (0..n).collect(),
+            8,
+            4,
+        );
+        let b = l.next_batch();
+        assert_eq!(b.x_dims, vec![8, 65]);
+        assert_eq!(b.y, vec![0; 8]);
+        match &b.x {
+            BatchData::I32(v) => assert_eq!(v.len(), 8 * 65),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn full_batches_cover_shard_once() {
+        let l = image_loader(100, 32);
+        let bs = l.full_batches();
+        assert_eq!(bs.len(), 3); // 96 of 100 examples, tail dropped
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = image_loader(100, 16);
+        let mut b = image_loader(100, 16);
+        let ba = a.next_batch();
+        let bb = b.next_batch();
+        assert_eq!(ba.y, bb.y);
+        assert_eq!(ba.x, bb.x);
+    }
+}

@@ -1,0 +1,18 @@
+//! Datasets, label-skew partitioning (paper §4.1), and batch loading.
+//!
+//! The paper trains on MNIST, CIFAR-10 and WikiText-103. This image is
+//! offline, so we substitute *deterministic synthetic* datasets with the
+//! same shapes and class structure (DESIGN.md §Substitutions): the
+//! experiments measure *relative* effects (sync vs async, skew, node
+//! count, strategy), which require class-structured data and controllable
+//! label skew — not the original pixels.
+
+pub mod loader;
+pub mod partition;
+pub mod synth;
+pub mod text;
+
+pub use loader::{Batch, BatchData, BatchLoader, DataSource};
+pub use partition::Partitioner;
+pub use synth::{DatasetKind, Split, SynthDataset};
+pub use text::TextCorpus;

@@ -1,0 +1,178 @@
+//! Label-skew partitioning — the paper's §4.1 sampling procedure, verbatim:
+//!
+//! 1. "The training examples are first partitioned into n mutually
+//!    exclusive subsets based on the label" (e.g. n=2 on MNIST: digits 0-4
+//!    -> partition 0, digits 5-9 -> partition 1).
+//! 2. "to simulate a skew of s (0 < s < 1), with probability s each
+//!    training example is assigned to a node based on the partition; with
+//!    probability 1-s, the training example is assigned to a random node."
+//!
+//! `s = 0` is a uniform random split, `s = 1` gives fully disjoint label
+//! sets (the paper's "full skew").
+
+use crate::util::Rng;
+
+/// Assigns example indices to federated nodes with controllable label skew.
+#[derive(Clone, Debug)]
+pub struct Partitioner {
+    pub n_nodes: usize,
+    pub skew: f64,
+    pub num_classes: usize,
+}
+
+impl Partitioner {
+    pub fn new(n_nodes: usize, skew: f64, num_classes: usize) -> Self {
+        assert!(n_nodes >= 1, "need at least one node");
+        assert!((0.0..=1.0).contains(&skew), "skew must be in [0,1]");
+        Partitioner { n_nodes, skew, num_classes }
+    }
+
+    /// The "home" node of a label: classes are split into n contiguous
+    /// groups (paper step 1).
+    pub fn home_node(&self, label: usize) -> usize {
+        assert!(label < self.num_classes);
+        // contiguous ranges, e.g. 10 classes / 3 nodes -> sizes 4,3,3
+        let base = self.num_classes / self.n_nodes;
+        let extra = self.num_classes % self.n_nodes;
+        let mut start = 0;
+        for node in 0..self.n_nodes {
+            let size = base + usize::from(node < extra);
+            if label < start + size {
+                return node;
+            }
+            start += size;
+        }
+        self.n_nodes - 1
+    }
+
+    /// Assign every example to a node (paper step 2). Deterministic in
+    /// `seed`.
+    pub fn assign(&self, labels: &[usize], seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed ^ 0x5045_5254);
+        let mut shards: Vec<Vec<usize>> = vec![Vec::new(); self.n_nodes];
+        for (idx, &label) in labels.iter().enumerate() {
+            let node = if rng.chance(self.skew) {
+                self.home_node(label)
+            } else {
+                rng.below(self.n_nodes)
+            };
+            shards[node].push(idx);
+        }
+        // Guarantee no node is empty (can only happen at tiny dataset
+        // sizes); move one example from the largest shard.
+        for i in 0..self.n_nodes {
+            if shards[i].is_empty() {
+                let donor = (0..self.n_nodes).max_by_key(|&j| shards[j].len()).unwrap();
+                if shards[donor].len() > 1 {
+                    let ex = shards[donor].pop().unwrap();
+                    shards[i].push(ex);
+                }
+            }
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn labels(n: usize, classes: usize, seed: u64) -> Vec<usize> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.below(classes)).collect()
+    }
+
+    #[test]
+    fn home_node_splits_mnist_digits_like_paper() {
+        // n=2 on 10 classes: digits 0-4 -> node 0, 5-9 -> node 1 (paper)
+        let p = Partitioner::new(2, 1.0, 10);
+        for l in 0..5 {
+            assert_eq!(p.home_node(l), 0);
+        }
+        for l in 5..10 {
+            assert_eq!(p.home_node(l), 1);
+        }
+    }
+
+    #[test]
+    fn home_node_covers_all_nodes() {
+        for n in 1..=5 {
+            let p = Partitioner::new(n, 1.0, 10);
+            let mut seen = vec![false; n];
+            for l in 0..10 {
+                seen[p.home_node(l)] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "n={n}");
+        }
+    }
+
+    #[test]
+    fn assign_is_a_partition() {
+        let ls = labels(10_000, 10, 3);
+        let p = Partitioner::new(3, 0.7, 10);
+        let shards = p.assign(&ls, 42);
+        let total: usize = shards.iter().map(Vec::len).sum();
+        assert_eq!(total, ls.len());
+        let mut seen = vec![false; ls.len()];
+        for shard in &shards {
+            for &i in shard {
+                assert!(!seen[i], "example {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn skew_zero_is_roughly_uniform() {
+        let ls = labels(30_000, 10, 5);
+        let p = Partitioner::new(3, 0.0, 10);
+        let shards = p.assign(&ls, 7);
+        for s in &shards {
+            let frac = s.len() as f64 / ls.len() as f64;
+            assert!((frac - 1.0 / 3.0).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn skew_one_is_fully_disjoint() {
+        let ls = labels(5_000, 10, 9);
+        let p = Partitioner::new(2, 1.0, 10);
+        let shards = p.assign(&ls, 7);
+        for (node, shard) in shards.iter().enumerate() {
+            for &i in shard {
+                assert_eq!(p.home_node(ls[i]), node);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_skew_mixes_labels() {
+        // paper's 0.9 skew: each node mostly home labels + some others
+        let ls = labels(20_000, 10, 13);
+        let p = Partitioner::new(2, 0.9, 10);
+        let shards = p.assign(&ls, 21);
+        for (node, shard) in shards.iter().enumerate() {
+            let home = shard.iter().filter(|&&i| p.home_node(ls[i]) == node).count();
+            let frac = home as f64 / shard.len() as f64;
+            // expect ~ s + (1-s)/2 = 0.95 of examples to be home-labelled
+            assert!((frac - 0.95).abs() < 0.02, "node {node} home frac {frac}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let ls = labels(1000, 10, 1);
+        let p = Partitioner::new(5, 0.5, 10);
+        assert_eq!(p.assign(&ls, 5), p.assign(&ls, 5));
+        assert_ne!(p.assign(&ls, 5), p.assign(&ls, 6));
+    }
+
+    #[test]
+    fn no_empty_shards_small_data() {
+        let ls = vec![0, 0, 0, 0, 0]; // all one class, 3 nodes, full skew
+        let p = Partitioner::new(3, 1.0, 10);
+        let shards = p.assign(&ls, 1);
+        assert!(shards.iter().all(|s| !s.is_empty()), "{shards:?}");
+    }
+}

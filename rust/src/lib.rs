@@ -1,0 +1,60 @@
+//! # fedless — serverless federated learning
+//!
+//! A reproduction of *"Serverless Federated Learning with flwr-serverless"*
+//! (Namjoshi et al., 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: federated
+//!   nodes that train locally and aggregate weights **client-side** from a
+//!   shared [`store::WeightStore`], with both the synchronous barrier
+//!   protocol and the asynchronous `FedAvgAsync` protocol (paper
+//!   Algorithm 1). No central server exists anywhere in the system.
+//! * **L2 (JAX, build time)** — model fwd/bwd + Adam as flat-parameter
+//!   train/eval steps, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L1 (Pallas, build time)** — weighted-aggregation, fused-Adam and
+//!   MXU-tiled matmul kernels inside those artifacts.
+//!
+//! The [`runtime`] module loads the artifacts through the PJRT C API (`xla`
+//! crate) — Python never runs on the training path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fedless::prelude::*;
+//!
+//! let exp = ExperimentConfig {
+//!     model: "mnist".into(),
+//!     n_nodes: 2,
+//!     mode: FederationMode::Async,
+//!     strategy: StrategyKind::FedAvg,
+//!     skew: 0.9,
+//!     epochs: 3,
+//!     steps_per_epoch: 120,
+//!     ..Default::default()
+//! };
+//! let result = run_experiment(&exp).unwrap();
+//! println!("test accuracy = {:.3}", result.final_accuracy);
+//! ```
+
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod node;
+pub mod runtime;
+pub mod sim;
+pub mod store;
+pub mod strategy;
+pub mod tensor;
+pub mod util;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::config::{ExperimentConfig, FederationMode, Scale};
+    pub use crate::data::{DatasetKind, Partitioner};
+    pub use crate::metrics::stats::Summary;
+    pub use crate::node::{NodeHandle, NodeReport};
+    pub use crate::runtime::{Engine, ModelBundle};
+    pub use crate::sim::{run_experiment, run_trials, ExperimentResult};
+    pub use crate::store::{FsStore, LatencyStore, MemoryStore, WeightStore};
+    pub use crate::strategy::StrategyKind;
+    pub use crate::tensor::FlatParams;
+}

@@ -1,0 +1,104 @@
+//! `fedless` — the serverless federated learning launcher.
+//!
+//! ```text
+//! fedless run --config exp.cfg [--set key=value ...] [--trials N]
+//! fedless run --set model=mnist --set mode=async ...   config-less run
+//! fedless info                                         show artifact manifest
+//! ```
+
+use std::process::ExitCode;
+
+use fedless::config::parse_config_text;
+use fedless::runtime::Manifest;
+use fedless::sim::run_experiment;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage:\n  fedless run [--config FILE] [--set key=value ...] [--trials N]\n  fedless info\n\
+         \nconfig keys: model n_nodes mode strategy skew epochs steps_per_epoch\n\
+         sample_prob train_size test_size seed store latency node_delays_ms\n\
+         crash sync_timeout_s log_dir verbose"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let m = Manifest::discover()?;
+    println!("artifacts dir : {}", m.dir.display());
+    println!("pallas kernels: {}", m.use_pallas);
+    println!("agg chunk     : {}", m.chunk);
+    println!("agg K         : {:?}", m.agg.keys().collect::<Vec<_>>());
+    for (name, info) in &m.models {
+        println!(
+            "model {name:10} params={:>10} batch={:<4} input={:?} {} lr={}",
+            info.param_count, info.batch_size, info.input_shape, info.input_dtype, info.lr
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let mut config_text = String::new();
+    let mut overrides: Vec<String> = Vec::new();
+    let mut trials = 1usize;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                let path = args.get(i).unwrap_or_else(|| usage());
+                config_text = std::fs::read_to_string(path)?;
+            }
+            "--set" => {
+                i += 1;
+                overrides.push(args.get(i).unwrap_or_else(|| usage()).clone());
+            }
+            "--trials" => {
+                i += 1;
+                trials = args.get(i).unwrap_or_else(|| usage()).parse()?;
+            }
+            _ => usage(),
+        }
+        i += 1;
+    }
+    for ov in &overrides {
+        let kv = ov.replacen('=', " = ", 1);
+        config_text.push('\n');
+        config_text.push_str(&kv);
+    }
+    let cfg = parse_config_text(&config_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    eprintln!("running {} ({} trial(s))...", cfg.run_name(), trials);
+
+    if trials == 1 {
+        let res = run_experiment(&cfg)?;
+        println!("accuracy     : {:.4}", res.final_accuracy);
+        println!("test loss    : {:.4}", res.final_loss);
+        println!("wall clock   : {:.2}s", res.wall_clock_s);
+        println!("store pushes : {}", res.store_pushes);
+        println!("mean idle    : {:.1}%", 100.0 * res.mean_idle_fraction);
+        println!("all completed: {}", res.all_completed);
+        println!("{}", res.render_timelines(72));
+    } else {
+        let set = fedless::sim::run_trials(&cfg, trials)?;
+        println!("accuracy  : {}", set.accuracy.fmt_paper());
+        println!("test loss : {}", set.loss.fmt_paper());
+        println!("wall clock: {}", set.wall_clock.fmt_paper());
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("info") => cmd_info(),
+        _ => usage(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

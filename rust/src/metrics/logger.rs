@@ -1,0 +1,132 @@
+//! Run logging: CSV (step metrics) + JSONL (events) under `runs/<name>/`.
+//! This is the substitution for the paper's Weights & Biases tracking
+//! (DESIGN.md §Substitutions) — every experiment leaves a reproducible
+//! on-disk record.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// Thread-safe append-only logger for one run.
+pub struct RunLogger {
+    dir: PathBuf,
+    csv: Mutex<BufWriter<File>>,
+    events: Mutex<BufWriter<File>>,
+    csv_header: Mutex<Option<Vec<String>>>,
+}
+
+impl RunLogger {
+    /// Create `runs/<name>/{metrics.csv,events.jsonl}` (truncating).
+    pub fn create<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let csv = BufWriter::new(File::create(dir.join("metrics.csv"))?);
+        let events = BufWriter::new(File::create(dir.join("events.jsonl"))?);
+        Ok(RunLogger {
+            dir,
+            csv: Mutex::new(csv),
+            events: Mutex::new(events),
+            csv_header: Mutex::new(None),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Log one row of named metric values; the first call fixes the column
+    /// set and writes the header.
+    pub fn log_metrics(&self, fields: &[(&str, f64)]) -> Result<()> {
+        let mut header = self.csv_header.lock().unwrap();
+        let mut csv = self.csv.lock().unwrap();
+        match header.as_ref() {
+            None => {
+                let cols: Vec<String> = fields.iter().map(|(k, _)| k.to_string()).collect();
+                writeln!(csv, "{}", cols.join(","))?;
+                *header = Some(cols);
+            }
+            Some(cols) => {
+                let now: Vec<&str> = fields.iter().map(|(k, _)| *k).collect();
+                anyhow::ensure!(
+                    cols.iter().map(String::as_str).eq(now.iter().copied()),
+                    "metric columns changed mid-run: {:?} vs {:?}",
+                    cols,
+                    now
+                );
+            }
+        }
+        let row: Vec<String> = fields.iter().map(|(_, v)| format!("{v}")).collect();
+        writeln!(csv, "{}", row.join(","))?;
+        csv.flush()?;
+        Ok(())
+    }
+
+    /// Log a structured event as one JSON line.
+    pub fn log_event(&self, kind: &str, fields: &[(&str, String)]) -> Result<()> {
+        let mut ev = self.events.lock().unwrap();
+        let mut line = format!("{{\"event\":\"{}\"", escape(kind));
+        for (k, v) in fields {
+            line.push_str(&format!(",\"{}\":\"{}\"", escape(k), escape(v)));
+        }
+        line.push('}');
+        writeln!(ev, "{line}")?;
+        ev.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "fedless_logger_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_csv_with_header() {
+        let dir = tmpdir("csv");
+        let lg = RunLogger::create(&dir).unwrap();
+        lg.log_metrics(&[("step", 1.0), ("loss", 2.5)]).unwrap();
+        lg.log_metrics(&[("step", 2.0), ("loss", 2.0)]).unwrap();
+        let text = fs::read_to_string(dir.join("metrics.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,loss");
+        assert_eq!(lines.len(), 3);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_changed_columns() {
+        let dir = tmpdir("cols");
+        let lg = RunLogger::create(&dir).unwrap();
+        lg.log_metrics(&[("a", 1.0)]).unwrap();
+        assert!(lg.log_metrics(&[("b", 1.0)]).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn events_are_valid_jsonl() {
+        let dir = tmpdir("ev");
+        let lg = RunLogger::create(&dir).unwrap();
+        lg.log_event("node_crash", &[("node", "3".into()), ("msg", "a\"b".into())])
+            .unwrap();
+        let text = fs::read_to_string(dir.join("events.jsonl")).unwrap();
+        let parsed = crate::util::json::Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("event").unwrap().as_str(), Some("node_crash"));
+        assert_eq!(parsed.get("msg").unwrap().as_str(), Some("a\"b"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

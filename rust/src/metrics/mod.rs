@@ -1,0 +1,11 @@
+//! Metrics: summary statistics (mean ± 95% CI, as the paper's tables
+//! report), run logging (CSV/JSONL — the W&B substitute), and per-node
+//! timelines used to regenerate the Figure-1 straggler-idle picture.
+
+pub mod logger;
+pub mod stats;
+pub mod timeline;
+
+pub use logger::RunLogger;
+pub use stats::Summary;
+pub use timeline::{SpanKind, Timeline};

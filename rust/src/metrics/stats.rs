@@ -1,0 +1,121 @@
+//! Summary statistics for repeated trials: mean and 95% confidence
+//! interval, matching the paper's table format ("Mean and 95% confidence
+//! intervals are reported for repeated trials").
+
+/// Two-sided 95% critical values of Student's t distribution, indexed by
+/// degrees of freedom (1-based; df > 30 uses the normal approximation).
+const T95: [f64; 31] = [
+    f64::NAN, 12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+    2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093,
+    2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045,
+    2.042,
+];
+
+fn t95(df: usize) -> f64 {
+    if df == 0 {
+        f64::NAN
+    } else if df < T95.len() {
+        T95[df]
+    } else {
+        1.96
+    }
+}
+
+/// Mean ± half-width of the 95% CI over a set of trial results.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Half-width of the 95% confidence interval (0 when n == 1).
+    pub ci95: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        let n = xs.len();
+        assert!(n > 0, "summary of empty sample");
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        if n == 1 {
+            return Summary { n, mean, std: 0.0, ci95: 0.0 };
+        }
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+        let std = var.sqrt();
+        let ci95 = t95(n - 1) * std / (n as f64).sqrt();
+        Summary { n, mean, std, ci95 }
+    }
+
+    /// Paper-table formatting: `.983 ± .002`.
+    pub fn fmt_paper(&self) -> String {
+        if self.n == 1 {
+            format!("{:.3}", self.mean)
+        } else {
+            format!("{:.3} ± {:.3}", self.mean, self.ci95)
+        }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.fmt_paper())
+    }
+}
+
+/// Percentile of a sample (nearest-rank); used by the bench harness.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[0.5]);
+        assert_eq!(s.mean, 0.5);
+        assert_eq!(s.ci95, 0.0);
+        assert_eq!(s.fmt_paper(), "0.500");
+    }
+
+    #[test]
+    fn known_ci() {
+        // n=2: mean 1.0, std = sqrt(2)*0.5.. check against hand computation
+        let s = Summary::of(&[0.9, 1.1]);
+        assert!((s.mean - 1.0).abs() < 1e-12);
+        // std = sqrt(((0.1)^2 + (0.1)^2)/1) = 0.1414..; ci = 12.706 * std / sqrt(2)
+        let expect = 12.706 * (0.02f64).sqrt() / (2f64).sqrt();
+        assert!((s.ci95 - expect).abs() < 1e-9, "{} vs {}", s.ci95, expect);
+    }
+
+    #[test]
+    fn large_n_uses_normal_approx() {
+        let xs: Vec<f64> = (0..100).map(|i| (i % 2) as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.mean - 0.5).abs() < 1e-12);
+        assert!(s.ci95 > 0.09 && s.ci95 < 0.11, "{}", s.ci95);
+    }
+
+    #[test]
+    fn zero_variance() {
+        let s = Summary::of(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 99.0), 10.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+}

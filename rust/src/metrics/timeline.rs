@@ -1,0 +1,160 @@
+//! Per-node activity timelines — the data behind the paper's Figure 1
+//! (sync stragglers force idle waiting; async nodes keep training).
+//!
+//! Each node records `(kind, start, end)` spans; `render_ascii` draws the
+//! figure in the terminal and `idle_fraction` quantifies the efficiency
+//! loss that asynchronous federation removes.
+
+use std::time::{Duration, Instant};
+
+/// What a node was doing during a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Train,
+    Wait,
+    Aggregate,
+    Crashed,
+}
+
+impl SpanKind {
+    pub fn glyph(self) -> char {
+        match self {
+            SpanKind::Train => '#',
+            SpanKind::Wait => '.',
+            SpanKind::Aggregate => 'A',
+            SpanKind::Crashed => 'x',
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub start: Duration,
+    pub end: Duration,
+}
+
+/// Spans for one node, measured against a shared epoch origin.
+#[derive(Debug)]
+pub struct Timeline {
+    origin: Instant,
+    pub node_id: usize,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn new(node_id: usize, origin: Instant) -> Self {
+        Timeline { origin, node_id, spans: Vec::new() }
+    }
+
+    /// Record a span that started at `start` and ends now.
+    pub fn record(&mut self, kind: SpanKind, start: Instant) {
+        self.spans.push(Span {
+            kind,
+            start: start.duration_since(self.origin),
+            end: self.origin.elapsed(),
+        });
+    }
+
+    pub fn total(&self, kind: SpanKind) -> Duration {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.end.saturating_sub(s.start))
+            .sum()
+    }
+
+    /// Fraction of wall-clock spent waiting (the Figure-1 quantity).
+    pub fn idle_fraction(&self) -> f64 {
+        let end = self
+            .spans
+            .iter()
+            .map(|s| s.end)
+            .max()
+            .unwrap_or(Duration::ZERO);
+        if end.is_zero() {
+            return 0.0;
+        }
+        self.total(SpanKind::Wait).as_secs_f64() / end.as_secs_f64()
+    }
+}
+
+/// ASCII rendering of a set of node timelines (Figure-1 style). The common
+/// setup prefix (engine construction + artifact compilation, before any
+/// span starts) is trimmed so the picture shows the federation dynamics.
+pub fn render_ascii(timelines: &[Timeline], width: usize) -> String {
+    let t0 = timelines
+        .iter()
+        .flat_map(|t| t.spans.iter().map(|s| s.start))
+        .min()
+        .unwrap_or(Duration::ZERO);
+    let end = timelines
+        .iter()
+        .flat_map(|t| t.spans.iter().map(|s| s.end))
+        .max()
+        .unwrap_or(Duration::ZERO)
+        .saturating_sub(t0);
+    if end.is_zero() {
+        return String::new();
+    }
+    let scale = width as f64 / end.as_secs_f64();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time ->  total {:.2}s   ('#'=train '.'=wait 'A'=aggregate 'x'=crashed)\n",
+        end.as_secs_f64()
+    ));
+    for t in timelines {
+        let mut row = vec![' '; width];
+        for s in &t.spans {
+            let a = (s.start.saturating_sub(t0).as_secs_f64() * scale) as usize;
+            let b = ((s.end.saturating_sub(t0).as_secs_f64() * scale) as usize).min(width);
+            for cell in row.iter_mut().take(b).skip(a) {
+                *cell = s.kind.glyph();
+            }
+        }
+        out.push_str(&format!("node {:>2} |{}|\n", t.node_id, row.iter().collect::<String>()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let origin = Instant::now();
+        let mut t = Timeline::new(0, origin);
+        let s = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        t.record(SpanKind::Train, s);
+        assert!(t.total(SpanKind::Train) >= Duration::from_millis(4));
+        assert_eq!(t.total(SpanKind::Wait), Duration::ZERO);
+    }
+
+    #[test]
+    fn idle_fraction_zero_without_waits() {
+        let origin = Instant::now();
+        let mut t = Timeline::new(0, origin);
+        let s = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        t.record(SpanKind::Train, s);
+        assert_eq!(t.idle_fraction(), 0.0);
+    }
+
+    #[test]
+    fn ascii_render_has_one_row_per_node() {
+        let origin = Instant::now();
+        let mut a = Timeline::new(0, origin);
+        let mut b = Timeline::new(1, origin);
+        let s = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        a.record(SpanKind::Train, s);
+        b.record(SpanKind::Wait, s);
+        let art = render_ascii(&[a, b], 40);
+        assert_eq!(art.lines().count(), 3); // header + 2 rows
+        assert!(art.contains("node  0"));
+        assert!(art.contains('#'));
+        assert!(art.contains('.'));
+    }
+}

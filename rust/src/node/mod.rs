@@ -1,0 +1,87 @@
+//! Federated nodes — the serverless clients.
+//!
+//! Each node runs on its own OS thread with an isolated PJRT engine (the
+//! paper simulated clients with Python threads; real threads + isolated
+//! runtimes are strictly closer to independent processes, §5). A node:
+//!
+//! 1. trains `steps_per_epoch` local steps via the AOT train artifact,
+//! 2. federates through the weight store according to the configured
+//!    protocol — the synchronous barrier or asynchronous Algorithm 1 —
+//!    aggregating **client-side** with its own [`crate::strategy::Strategy`]
+//!    instance,
+//! 3. repeats for `epochs`, then reports its final weights.
+
+mod worker;
+
+pub use worker::{spawn_node, NodeCtx};
+
+use std::time::Duration;
+
+use crate::metrics::timeline::Timeline;
+use crate::tensor::FlatParams;
+
+/// Why a node finished.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    /// Ran all epochs.
+    Completed,
+    /// Injected crash (failure experiments).
+    Crashed { at_epoch: usize },
+    /// Sync barrier timed out waiting for peers (e.g. a peer crashed —
+    /// the paper's "in synchronous training, the other nodes are stuck").
+    Stalled { at_round: u64 },
+    /// Runtime error.
+    Failed(String),
+}
+
+/// Everything a node thread reports back to the experiment driver.
+#[derive(Debug)]
+pub struct NodeReport {
+    pub node_id: usize,
+    pub status: NodeStatus,
+    pub epochs_done: usize,
+    /// Final local weights (after the last client-side aggregation).
+    pub final_params: Option<FlatParams>,
+    /// Examples this node trained on per epoch (n_k).
+    pub n_examples_per_epoch: u64,
+    /// Mean train loss per completed epoch.
+    pub epoch_losses: Vec<f64>,
+    /// Mean train accuracy per completed epoch.
+    pub epoch_accs: Vec<f64>,
+    /// Number of federated aggregations actually applied.
+    pub aggregations: u64,
+    /// Number of pushes to the weight store.
+    pub pushes: u64,
+    /// Wall-clock the node spent in each phase.
+    pub timeline: Timeline,
+    pub train_time: Duration,
+    pub wait_time: Duration,
+}
+
+/// Join handle + node id for a spawned node.
+pub struct NodeHandle {
+    pub node_id: usize,
+    pub join: std::thread::JoinHandle<NodeReport>,
+}
+
+impl NodeHandle {
+    pub fn wait(self) -> NodeReport {
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => NodeReport {
+                node_id: self.node_id,
+                status: NodeStatus::Failed("node thread panicked".into()),
+                epochs_done: 0,
+                final_params: None,
+                n_examples_per_epoch: 0,
+                epoch_losses: vec![],
+                epoch_accs: vec![],
+                aggregations: 0,
+                pushes: 0,
+                timeline: Timeline::new(self.node_id, std::time::Instant::now()),
+                train_time: Duration::ZERO,
+                wait_time: Duration::ZERO,
+            },
+        }
+    }
+}

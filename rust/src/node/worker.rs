@@ -1,0 +1,323 @@
+//! The node thread body: local training + the two serverless federation
+//! protocols.
+//!
+//! **Sync** (§3 "Synchronous serverless federated learning"): after each
+//! epoch a node pushes `(round, weights, n_k)` and polls the store until
+//! *all* K nodes' round-`r` entries are present, then every node aggregates
+//! the same set client-side (so all nodes compute identical weights —
+//! checked by `rust/tests/protocol_invariants.rs`).
+//!
+//! **Async** (Algorithm 1, FedAvgAsync): after each epoch, with probability
+//! `C` the node pushes its weights, then compares the store's state hash
+//! with the one it saw last; if the store changed, it pulls the latest
+//! entry per peer, inserts its own weights as `ω[k]`, and aggregates with
+//! its strategy. No global round and no waiting — a straggler never blocks
+//! anyone.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{ExperimentConfig, FederationMode};
+use crate::data::BatchLoader;
+use crate::metrics::timeline::{SpanKind, Timeline};
+use crate::metrics::RunLogger;
+use crate::runtime::{Engine, Manifest, ModelBundle, TrainState};
+use crate::store::{PushRequest, WeightStore};
+use crate::strategy::{Contribution, Strategy};
+
+use crate::util::Rng;
+
+use super::{NodeHandle, NodeReport, NodeStatus};
+
+/// Everything a node thread needs (moved into the thread).
+pub struct NodeCtx {
+    pub node_id: usize,
+    pub cfg: Arc<ExperimentConfig>,
+    pub manifest: Arc<Manifest>,
+    pub store: Arc<dyn WeightStore>,
+    pub strategy: Box<dyn Strategy>,
+    pub loader: BatchLoader,
+    /// Shared wall-clock origin for timelines.
+    pub origin: Instant,
+    /// Shared start barrier so all nodes begin epoch 0 together.
+    pub start: Arc<std::sync::Barrier>,
+    pub logger: Option<Arc<RunLogger>>,
+}
+
+/// Spawn the node thread.
+pub fn spawn_node(ctx: NodeCtx) -> NodeHandle {
+    let node_id = ctx.node_id;
+    let join = std::thread::Builder::new()
+        .name(format!("fed-node-{node_id}"))
+        .spawn(move || run_node(ctx))
+        .expect("spawn node thread");
+    NodeHandle { node_id, join }
+}
+
+fn run_node(mut ctx: NodeCtx) -> NodeReport {
+    let mut timeline = Timeline::new(ctx.node_id, ctx.origin);
+    let mut report = NodeReport {
+        node_id: ctx.node_id,
+        status: NodeStatus::Completed,
+        epochs_done: 0,
+        final_params: None,
+        n_examples_per_epoch: (ctx.cfg.steps_per_epoch
+            * batch_size_of(&ctx.manifest, &ctx.cfg.model)) as u64,
+        epoch_losses: vec![],
+        epoch_accs: vec![],
+        aggregations: 0,
+        pushes: 0,
+        timeline: Timeline::new(ctx.node_id, ctx.origin),
+        train_time: Duration::ZERO,
+        wait_time: Duration::ZERO,
+    };
+
+    match run_node_inner(&mut ctx, &mut report, &mut timeline) {
+        Ok(()) => {}
+        Err(e) => {
+            if report.status == NodeStatus::Completed {
+                report.status = NodeStatus::Failed(format!("{e:#}"));
+            }
+        }
+    }
+    report.train_time = timeline.total(SpanKind::Train);
+    report.wait_time = timeline.total(SpanKind::Wait);
+    report.timeline = timeline;
+    report
+}
+
+fn batch_size_of(manifest: &Manifest, model: &str) -> usize {
+    manifest.model(model).map(|m| m.batch_size).unwrap_or(32)
+}
+
+fn run_node_inner(
+    ctx: &mut NodeCtx,
+    report: &mut NodeReport,
+    timeline: &mut Timeline,
+) -> anyhow::Result<()> {
+    let cfg = Arc::clone(&ctx.cfg);
+    let info = ctx.manifest.model(&cfg.model)?.clone();
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, &info)?;
+
+    // Same seed on every node -> identical w_0 ("initialize w_0",
+    // Algorithm 1).
+    let params = bundle.init_params(cfg.seed)?;
+    let mut state = TrainState::new(params);
+    let mut rng = Rng::new(cfg.seed ^ ((ctx.node_id as u64 + 1) << 20));
+
+    let step_delay = cfg
+        .node_delays_ms
+        .get(ctx.node_id)
+        .copied()
+        .map(|ms| Duration::from_secs_f64(ms / 1000.0))
+        .unwrap_or(Duration::ZERO);
+
+    // async change detection: last store state hash we aggregated against
+    let mut last_seen_hash: Option<u64> = None;
+
+    ctx.start.wait();
+
+    for epoch in 0..cfg.epochs {
+        if let Some(crash) = &cfg.crash {
+            if crash.node == ctx.node_id && crash.at_epoch == epoch {
+                report.status = NodeStatus::Crashed { at_epoch: epoch };
+                if let Some(lg) = &ctx.logger {
+                    let _ = lg.log_event(
+                        "node_crash",
+                        &[("node", ctx.node_id.to_string()), ("epoch", epoch.to_string())],
+                    );
+                }
+                let t = Instant::now();
+                timeline.record(SpanKind::Crashed, t);
+                return Ok(());
+            }
+        }
+
+        // ---- local training -------------------------------------------
+        let t_train = Instant::now();
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        bundle.run_steps(&mut state, &mut ctx.loader, cfg.steps_per_epoch, |_i, m| {
+            loss_sum += m.loss as f64;
+            acc_sum += m.acc_count as f64 / m.n_preds as f64;
+            if !step_delay.is_zero() {
+                std::thread::sleep(step_delay);
+            }
+        })?;
+        timeline.record(SpanKind::Train, t_train);
+        let mean_loss = loss_sum / cfg.steps_per_epoch as f64;
+        let mean_acc = acc_sum / cfg.steps_per_epoch as f64;
+        report.epoch_losses.push(mean_loss);
+        report.epoch_accs.push(mean_acc);
+        report.epochs_done = epoch + 1;
+        if let Some(lg) = &ctx.logger {
+            let _ = lg.log_metrics(&[
+                ("node", ctx.node_id as f64),
+                ("epoch", epoch as f64),
+                ("train_loss", mean_loss),
+                ("train_acc", mean_acc),
+                ("elapsed_s", ctx.origin.elapsed().as_secs_f64()),
+            ]);
+        }
+        if cfg.verbose {
+            eprintln!(
+                "[node {} epoch {}] loss={mean_loss:.4} acc={mean_acc:.4}",
+                ctx.node_id, epoch
+            );
+        }
+
+        // ---- federation ------------------------------------------------
+        match cfg.mode {
+            FederationMode::Local => {} // centralized baseline: no store
+            FederationMode::Sync => {
+                let round = epoch as u64;
+                sync_federate(ctx, report, timeline, &mut state, round)?;
+                if matches!(report.status, NodeStatus::Stalled { .. }) {
+                    // The node is stuck at the barrier, not dead: its
+                    // current weights still exist (and were pushed), so
+                    // report them — the driver can evaluate what training
+                    // achieved before the stall.
+                    report.final_params = Some(state.params.clone());
+                    return Ok(());
+                }
+            }
+            FederationMode::Async => {
+                // Algorithm 1: sampling gates the WeightUpdate step; a
+                // non-sampled client keeps training on its own weights.
+                if rng.chance(cfg.sample_prob) {
+                    async_federate(ctx, report, timeline, &mut state, epoch, &mut last_seen_hash)?;
+                }
+            }
+        }
+    }
+
+    report.final_params = Some(state.params.clone());
+    Ok(())
+}
+
+/// Synchronous serverless federation: push for `round`, barrier-poll until
+/// all peers' entries for `round` exist, aggregate client-side.
+fn sync_federate(
+    ctx: &mut NodeCtx,
+    report: &mut NodeReport,
+    timeline: &mut Timeline,
+    state: &mut TrainState,
+    round: u64,
+) -> anyhow::Result<()> {
+    let cfg = &ctx.cfg;
+    ctx.store.push(PushRequest {
+        node_id: ctx.node_id,
+        round,
+        epoch: round,
+        n_examples: report.n_examples_per_epoch,
+        params: Arc::new(state.params.clone()),
+    })?;
+    report.pushes += 1;
+
+    // barrier: wait for all K entries of this round
+    let t_wait = Instant::now();
+    let entries = loop {
+        let entries = ctx.store.entries_for_round(round)?;
+        if entries.len() >= cfg.n_nodes {
+            break entries;
+        }
+        if t_wait.elapsed() > cfg.sync_timeout {
+            timeline.record(SpanKind::Wait, t_wait);
+            report.status = NodeStatus::Stalled { at_round: round };
+            if let Some(lg) = &ctx.logger {
+                let _ = lg.log_event(
+                    "sync_stall",
+                    &[("node", ctx.node_id.to_string()), ("round", round.to_string())],
+                );
+            }
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    };
+    timeline.record(SpanKind::Wait, t_wait);
+
+    let t_agg = Instant::now();
+    let contribs: Vec<Contribution> = entries
+        .iter()
+        .map(|e| Contribution {
+            node_id: e.node_id,
+            n_examples: e.n_examples,
+            is_self: e.node_id == ctx.node_id,
+            seq: e.seq,
+            params: Arc::clone(&e.params),
+        })
+        .collect();
+    if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+        state.set_params(new_params);
+        report.aggregations += 1;
+    }
+    timeline.record(SpanKind::Aggregate, t_agg);
+    Ok(())
+}
+
+/// Asynchronous federation — Algorithm 1's WeightUpdate: push w^k, detect
+/// store change by hash, pull ω, set ω[k] = w^k, aggregate client-side.
+fn async_federate(
+    ctx: &mut NodeCtx,
+    report: &mut NodeReport,
+    timeline: &mut Timeline,
+    state: &mut TrainState,
+    epoch: usize,
+    last_seen_hash: &mut Option<u64>,
+) -> anyhow::Result<()> {
+    let t_agg = Instant::now();
+    ctx.store.push(PushRequest {
+        node_id: ctx.node_id,
+        round: epoch as u64,
+        epoch: epoch as u64,
+        n_examples: report.n_examples_per_epoch,
+        params: Arc::new(state.params.clone()),
+    })?;
+    report.pushes += 1;
+
+    // "performs a check to see if the remote server has changed state"
+    let hash = ctx.store.state_hash()?;
+    let changed = last_seen_hash.map(|h| h != hash).unwrap_or(true);
+    if changed {
+        let entries = ctx.store.latest_per_node()?;
+        // ω[k] <- w^k : own current weights replace our stored entry
+        // (we keep the store-assigned seq so staleness-aware strategies
+        // see honest sequence numbers).
+        let mut contribs: Vec<Contribution> = entries
+            .iter()
+            .map(|e| Contribution {
+                node_id: e.node_id,
+                n_examples: e.n_examples,
+                is_self: e.node_id == ctx.node_id,
+                seq: e.seq,
+                params: if e.node_id == ctx.node_id {
+                    Arc::new(state.params.clone())
+                } else {
+                    Arc::clone(&e.params)
+                },
+            })
+            .collect();
+        if !contribs.iter().any(|c| c.is_self) {
+            // our push raced a clear() or failed partially; contribute
+            // locally anyway
+            let max_seq = contribs.iter().map(|c| c.seq).max().unwrap_or(0);
+            contribs.push(Contribution {
+                node_id: ctx.node_id,
+                n_examples: report.n_examples_per_epoch,
+                is_self: true,
+                seq: max_seq,
+                params: Arc::new(state.params.clone()),
+            });
+        }
+        if contribs.len() > 1 {
+            if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+                state.set_params(new_params);
+                report.aggregations += 1;
+            }
+        }
+        *last_seen_hash = Some(ctx.store.state_hash()?);
+    }
+    timeline.record(SpanKind::Aggregate, t_agg);
+    Ok(())
+}

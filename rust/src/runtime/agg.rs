@@ -1,0 +1,75 @@
+//! Aggregation through the lowered L1 Pallas kernel (`agg_k{K}.hlo.txt`).
+//!
+//! The kernel computes `out[c] = sum_k w[k] * stack[k, c]` over fixed-size
+//! chunks (`manifest.chunk` wide), so one artifact serves every model: the
+//! executor tiles the flat parameter vectors into chunks and pads the tail.
+//!
+//! The strategies use the pure-rust [`crate::tensor::flat::weighted_average`]
+//! on the hot path (it is allocation-light and avoids PJRT dispatch for an
+//! element-wise op); this executor exists to (a) validate the L1 kernel
+//! end-to-end from rust (`rust/tests/artifact_parity.rs`) and (b) benchmark
+//! the two paths against each other (`rust/benches/microbench.rs`).
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::manifest::Manifest;
+use crate::tensor::FlatParams;
+
+/// Chunked FedAvg aggregation via the compiled Pallas kernel.
+pub struct AggExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    pub k: usize,
+    pub chunk: usize,
+}
+
+impl AggExecutor {
+    /// Load the K-way aggregation artifact (K must be one of the built
+    /// `--agg-k` values, default 2/3/5).
+    pub fn load(engine: &Engine, manifest: &Manifest, k: usize) -> Result<AggExecutor> {
+        let path = manifest
+            .agg
+            .get(&k)
+            .ok_or_else(|| anyhow!("no agg artifact for k={k} (built: {:?})", manifest.agg.keys()))?;
+        Ok(AggExecutor {
+            exe: engine.compile_hlo_file(path)?,
+            k,
+            chunk: manifest.chunk,
+        })
+    }
+
+    /// `sum_k weights[k] * params[k]` through the kernel artifact.
+    pub fn aggregate(&self, params: &[&FlatParams], weights: &[f32]) -> Result<FlatParams> {
+        anyhow::ensure!(params.len() == self.k, "expected {} clients, got {}", self.k, params.len());
+        anyhow::ensure!(weights.len() == self.k, "weights arity");
+        let p = params[0].len();
+        for x in params {
+            anyhow::ensure!(x.len() == p, "client param length mismatch");
+        }
+        let w_lit = xla::Literal::vec1(weights);
+
+        let mut out = Vec::with_capacity(p);
+        let mut stack = vec![0.0f32; self.k * self.chunk];
+        let n_chunks = p.div_ceil(self.chunk);
+        for ci in 0..n_chunks {
+            let start = ci * self.chunk;
+            let end = (start + self.chunk).min(p);
+            let width = end - start;
+            // build the (K, chunk) stack, zero-padding the tail chunk
+            for (kk, x) in params.iter().enumerate() {
+                let row = &mut stack[kk * self.chunk..kk * self.chunk + width];
+                row.copy_from_slice(&x.as_slice()[start..end]);
+                if width < self.chunk {
+                    stack[kk * self.chunk + width..(kk + 1) * self.chunk].fill(0.0);
+                }
+            }
+            let stack_lit =
+                xla::Literal::vec1(&stack).reshape(&[self.k as i64, self.chunk as i64])?;
+            let res = self.exe.execute(&[&stack_lit, &w_lit])?[0][0]
+                .to_literal_sync()?;
+            let chunk_out = res.to_tuple1()?.to_vec::<f32>()?;
+            out.extend_from_slice(&chunk_out[..width]);
+        }
+        Ok(FlatParams(out))
+    }
+}

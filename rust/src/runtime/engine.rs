@@ -1,0 +1,241 @@
+//! [`Engine`] (per-thread PJRT CPU client) and [`ModelBundle`] (one model's
+//! compiled init/train/eval executables + typed call wrappers).
+//!
+//! Artifact calling conventions (fixed by `python/compile/train.py`):
+//! ```text
+//!   init : (seed u32[2])                          -> (params f32[P],)
+//!   train: (params, m, v f32[P], step i32[], x, y) ->
+//!          (params', m', v', step', loss f32[], acc_count f32[])
+//!   eval : (params f32[P], x, y)                  -> (loss f32[], acc_count f32[])
+//! ```
+//! All results come back as a single tuple (lowered with
+//! `return_tuple=True`). Within an epoch the train loop keeps the model
+//! state as device-side `Literal`s to avoid host conversions per step
+//! (`run_steps`); host `FlatParams` are materialized only at federation
+//! boundaries.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ModelInfo;
+use crate::data::{Batch, BatchData, BatchLoader};
+use crate::tensor::FlatParams;
+
+/// A PJRT CPU client. NOT `Send` (the xla crate is `Rc`-based): create one
+/// per node thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact file.
+    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e}"))
+    }
+
+    /// Compile HLO text from a string (tests).
+    pub fn compile_hlo_text(&self, text: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())
+            .map_err(|e| anyhow!("parse hlo text: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compile hlo text: {e}"))
+    }
+}
+
+/// Host-side training state (params + Adam moments + step counter).
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: FlatParams,
+    pub m: FlatParams,
+    pub v: FlatParams,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh state around initialized parameters.
+    pub fn new(params: FlatParams) -> TrainState {
+        let n = params.len();
+        TrainState { params, m: FlatParams::zeros(n), v: FlatParams::zeros(n), step: 0 }
+    }
+
+    /// Replace the parameters (after a federated aggregation), keeping the
+    /// local Adam moments — matching the paper's design where only weights
+    /// travel through the weight store.
+    pub fn set_params(&mut self, params: FlatParams) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+}
+
+/// Per-step metrics from the train artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    /// Correct predictions in the batch (count, not rate).
+    pub acc_count: f32,
+    /// Predictions per batch (for normalizing acc_count).
+    pub n_preds: usize,
+}
+
+/// One model's compiled executables.
+pub struct ModelBundle {
+    pub info: ModelInfo,
+    init_exe: xla::PjRtLoadedExecutable,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+fn batch_literals(batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+    let x = match &batch.x {
+        BatchData::F32(v) => xla::Literal::vec1(v).reshape(&batch.x_dims)?,
+        BatchData::I32(v) => xla::Literal::vec1(v).reshape(&batch.x_dims)?,
+    };
+    let y = xla::Literal::vec1(&batch.y);
+    Ok((x, y))
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+impl ModelBundle {
+    /// Compile the model's three artifacts on this engine.
+    pub fn load(engine: &Engine, info: &ModelInfo) -> Result<ModelBundle> {
+        Ok(ModelBundle {
+            info: info.clone(),
+            init_exe: engine.compile_hlo_file(&info.init_file).context("init artifact")?,
+            train_exe: engine.compile_hlo_file(&info.train_file).context("train artifact")?,
+            eval_exe: engine.compile_hlo_file(&info.eval_file).context("eval artifact")?,
+        })
+    }
+
+    /// Run the init artifact: deterministic parameters from a seed.
+    pub fn init_params(&self, seed: u64) -> Result<FlatParams> {
+        let seed_lit = xla::Literal::vec1(&[(seed >> 32) as u32, seed as u32]);
+        let out = self.init_exe.execute::<xla::Literal>(&[seed_lit])?[0][0]
+            .to_literal_sync()?;
+        let params = out.to_tuple1()?;
+        let v = params.to_vec::<f32>()?;
+        anyhow::ensure!(
+            v.len() == self.info.param_count,
+            "init returned {} params, manifest says {}",
+            v.len(),
+            self.info.param_count
+        );
+        Ok(FlatParams(v))
+    }
+
+    /// One train step with host-side state (simple path; used by tests and
+    /// single-step callers). For epochs use [`ModelBundle::run_steps`].
+    pub fn train_step(&self, state: &mut TrainState, batch: &Batch) -> Result<StepMetrics> {
+        let (x, y) = batch_literals(batch)?;
+        let args = [
+            xla::Literal::vec1(state.params.as_slice()),
+            xla::Literal::vec1(state.m.as_slice()),
+            xla::Literal::vec1(state.v.as_slice()),
+            xla::Literal::scalar(state.step),
+            x,
+            y,
+        ];
+        let out = self.train_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        anyhow::ensure!(parts.len() == 6, "train artifact returned {} outputs", parts.len());
+        let mut it = parts.into_iter();
+        state.params = FlatParams(it.next().unwrap().to_vec::<f32>()?);
+        state.m = FlatParams(it.next().unwrap().to_vec::<f32>()?);
+        state.v = FlatParams(it.next().unwrap().to_vec::<f32>()?);
+        state.step = it.next().unwrap().get_first_element::<i32>()?;
+        let loss = scalar_f32(&it.next().unwrap())?;
+        let acc_count = scalar_f32(&it.next().unwrap())?;
+        Ok(StepMetrics { loss, acc_count, n_preds: self.info.preds_per_batch() })
+    }
+
+    /// Run `n_steps` train steps, keeping model state device-side between
+    /// steps (no per-step host materialization of the P-sized vectors —
+    /// the training hot path; see EXPERIMENTS.md §Perf).
+    pub fn run_steps(
+        &self,
+        state: &mut TrainState,
+        loader: &mut BatchLoader,
+        n_steps: usize,
+        mut on_step: impl FnMut(usize, StepMetrics),
+    ) -> Result<()> {
+        if n_steps == 0 {
+            return Ok(());
+        }
+        let mut params_l = xla::Literal::vec1(state.params.as_slice());
+        let mut m_l = xla::Literal::vec1(state.m.as_slice());
+        let mut v_l = xla::Literal::vec1(state.v.as_slice());
+        let mut step_l = xla::Literal::scalar(state.step);
+        for i in 0..n_steps {
+            let batch = loader.next_batch();
+            let (x, y) = batch_literals(&batch)?;
+            let out = self
+                .train_exe
+                .execute::<xla::Literal>(&[params_l, m_l, v_l, step_l, x, y])?[0][0]
+                .to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            anyhow::ensure!(parts.len() == 6, "train artifact returned {}", parts.len());
+            let mut it = parts.into_iter();
+            params_l = it.next().unwrap();
+            m_l = it.next().unwrap();
+            v_l = it.next().unwrap();
+            step_l = it.next().unwrap();
+            let loss = scalar_f32(&it.next().unwrap())?;
+            let acc_count = scalar_f32(&it.next().unwrap())?;
+            on_step(i, StepMetrics { loss, acc_count, n_preds: self.info.preds_per_batch() });
+        }
+        state.params = FlatParams(params_l.to_vec::<f32>()?);
+        state.m = FlatParams(m_l.to_vec::<f32>()?);
+        state.v = FlatParams(v_l.to_vec::<f32>()?);
+        state.step = step_l.get_first_element::<i32>()?;
+        Ok(())
+    }
+
+    /// Evaluate on one batch: returns (mean loss, correct count).
+    pub fn eval_batch(&self, params: &FlatParams, batch: &Batch) -> Result<(f32, f32)> {
+        let (x, y) = batch_literals(batch)?;
+        let args = [xla::Literal::vec1(params.as_slice()), x, y];
+        let out = self.eval_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (loss, acc) = out.to_tuple2()?;
+        Ok((scalar_f32(&loss)?, scalar_f32(&acc)?))
+    }
+
+    /// Evaluate over a full set of batches: returns (mean loss, accuracy).
+    pub fn evaluate(&self, params: &FlatParams, batches: &[Batch]) -> Result<(f64, f64)> {
+        anyhow::ensure!(!batches.is_empty(), "no eval batches");
+        // Keep params device-side across the eval batches.
+        let params_l = xla::Literal::vec1(params.as_slice());
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut preds = 0usize;
+        for b in batches {
+            let (x, y) = batch_literals(b)?;
+            let out = self.eval_exe.execute(&[&params_l, &x, &y])?[0][0]
+                .to_literal_sync()?;
+            let (loss, acc) = out.to_tuple2()?;
+            loss_sum += scalar_f32(&loss)? as f64;
+            correct += scalar_f32(&acc)? as f64;
+            preds += self.info.preds_per_batch();
+        }
+        Ok((loss_sum / batches.len() as f64, correct / preds as f64))
+    }
+}
+
+/// Typed aliases kept for API clarity in downstream code.
+pub type InitStep = ModelBundle;
+pub type TrainStep = ModelBundle;
+pub type EvalStep = ModelBundle;

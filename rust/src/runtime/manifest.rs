@@ -1,0 +1,240 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: which HLO files exist, each model's parameter
+//! count, batch size, input layout and hyperparameters.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-model artifact info.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub param_count: usize,
+    pub batch_size: usize,
+    /// Per-example feature shape (no batch dim), e.g. `[28, 28, 1]` or `[65]`.
+    pub input_shape: Vec<usize>,
+    /// "f32" for images, "i32" for token windows.
+    pub input_dtype: String,
+    pub num_classes: usize,
+    pub lr: f64,
+    pub init_file: PathBuf,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+}
+
+impl ModelInfo {
+    /// Predictions per eval batch (LM models predict seq_len next tokens
+    /// per example; classifiers predict one label per example).
+    pub fn preds_per_batch(&self) -> usize {
+        if self.input_dtype == "i32" {
+            self.batch_size * (self.input_shape[0] - 1)
+        } else {
+            self.batch_size
+        }
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub use_pallas: bool,
+    pub chunk: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    /// Aggregation artifacts: K -> file.
+    pub agg: BTreeMap<usize, PathBuf>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Locate the artifacts directory: `$FEDLESS_ARTIFACTS` or `artifacts/`
+    /// relative to cwd or the crate root.
+    pub fn discover() -> Result<Manifest> {
+        if let Ok(dir) = std::env::var("FEDLESS_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::load(cand);
+            }
+        }
+        Err(anyhow!(
+            "artifacts/manifest.json not found — run `make artifacts` \
+             (or set FEDLESS_ARTIFACTS)"
+        ))
+    }
+
+    fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let req = |v: Option<&Json>, what: &str| {
+            v.cloned().ok_or_else(|| anyhow!("manifest missing {what}"))
+        };
+
+        let mut models = BTreeMap::new();
+        for (name, m) in req(j.get("models"), "models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let file = |kind: &str| -> Result<PathBuf> {
+                let f = m
+                    .get("artifacts")
+                    .and_then(|a| a.get(kind))
+                    .and_then(|e| e.get("file"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name}: missing artifact {kind}"))?;
+                Ok(dir.join(f))
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    param_count: req(m.get("param_count"), "param_count")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("param_count not a number"))?,
+                    batch_size: req(m.get("batch_size"), "batch_size")?
+                        .as_usize()
+                        .unwrap_or(32),
+                    input_shape: req(m.get("input_shape"), "input_shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("input_shape not an array"))?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect(),
+                    input_dtype: req(m.get("input_dtype"), "input_dtype")?
+                        .as_str()
+                        .unwrap_or("f32")
+                        .to_string(),
+                    num_classes: m
+                        .get("num_classes")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(10),
+                    lr: m.get("lr").and_then(Json::as_f64).unwrap_or(1e-3),
+                    init_file: file("init")?,
+                    train_file: file("train")?,
+                    eval_file: file("eval")?,
+                },
+            );
+        }
+
+        let mut agg = BTreeMap::new();
+        let mut chunk = 262_144;
+        if let Some(a) = j.get("agg") {
+            if let Some(c) = a.get("chunk").and_then(Json::as_usize) {
+                chunk = c;
+            }
+            if let Some(ks) = a.get("k").and_then(Json::as_obj) {
+                for (k, v) in ks {
+                    if let (Ok(k), Some(f)) =
+                        (k.parse::<usize>(), v.get("file").and_then(Json::as_str))
+                    {
+                        agg.insert(k, dir.join(f));
+                    }
+                }
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(true),
+            chunk,
+            models,
+            agg,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?}) — rebuild artifacts",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "use_pallas": true, "chunk": 262144,
+      "models": {
+        "mnist": {
+          "param_count": 20490, "batch_size": 32,
+          "input_shape": [28, 28, 1], "input_dtype": "f32",
+          "num_classes": 10, "lr": 0.001, "weight_decay": 0.0,
+          "extra": {},
+          "artifacts": {
+            "init": {"file": "mnist_init.hlo.txt", "sha256_16": "x"},
+            "train": {"file": "mnist_train.hlo.txt", "sha256_16": "x"},
+            "eval": {"file": "mnist_eval.hlo.txt", "sha256_16": "x"}
+          }
+        }
+      },
+      "agg": {"chunk": 262144, "k": {"2": {"file": "agg_k2.hlo.txt", "sha256_16": "x"}}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let mi = m.model("mnist").unwrap();
+        assert_eq!(mi.param_count, 20490);
+        assert_eq!(mi.input_shape, vec![28, 28, 1]);
+        assert_eq!(mi.train_file, PathBuf::from("/tmp/a/mnist_train.hlo.txt"));
+        assert_eq!(m.agg[&2], PathBuf::from("/tmp/a/agg_k2.hlo.txt"));
+        assert_eq!(m.chunk, 262144);
+        assert_eq!(mi.preds_per_batch(), 32);
+    }
+
+    #[test]
+    fn lm_preds_per_batch() {
+        let mi = ModelInfo {
+            name: "lm".into(),
+            param_count: 1,
+            batch_size: 8,
+            input_shape: vec![65],
+            input_dtype: "i32".into(),
+            num_classes: 256,
+            lr: 2e-5,
+            init_file: "i".into(),
+            train_file: "t".into(),
+            eval_file: "e".into(),
+        };
+        assert_eq!(mi.preds_per_batch(), 8 * 64);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"models": {"x": {}}}"#, PathBuf::from("/")).is_err());
+        assert!(Manifest::parse("[]", PathBuf::from("/")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Validate against the actual artifacts when they exist.
+        if let Ok(m) = Manifest::discover() {
+            assert!(m.models.contains_key("mnist"));
+            let mi = m.model("mnist").unwrap();
+            assert!(mi.train_file.exists());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and executes them from the rust hot path.
+//!
+//! The `xla` crate's handles are `Rc`-based (not `Send`), so each node
+//! thread owns its own [`Engine`] (PJRT CPU client) and compiles its own
+//! executables from the shared HLO text — which also mirrors real federated
+//! clients, each with an isolated runtime. HLO *text* is the interchange
+//! format (see `python/compile/hlo.py` for why not serialized protos).
+
+pub mod agg;
+pub mod engine;
+pub mod manifest;
+
+pub use agg::AggExecutor;
+pub use engine::{Engine, EvalStep, InitStep, ModelBundle, StepMetrics, TrainState, TrainStep};
+pub use manifest::{Manifest, ModelInfo};

@@ -1,0 +1,233 @@
+//! One end-to-end federated experiment (a single trial).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, StoreKind};
+use crate::data::{
+    BatchLoader, DataSource, DatasetKind, Partitioner, Split, SynthDataset, TextCorpus,
+};
+use crate::metrics::timeline::{render_ascii, Timeline};
+use crate::metrics::RunLogger;
+use crate::node::{spawn_node, NodeCtx, NodeReport, NodeStatus};
+use crate::runtime::{Engine, Manifest, ModelBundle};
+use crate::store::{FsStore, LatencyStore, MemoryStore, WeightStore};
+use crate::tensor::flat::weighted_average;
+use crate::tensor::FlatParams;
+
+/// Outcome of one experiment run.
+#[derive(Debug)]
+pub struct ExperimentResult {
+    /// Accuracy of the aggregated global model on the held-out test set.
+    pub final_accuracy: f64,
+    /// Mean test loss of the global model.
+    pub final_loss: f64,
+    pub wall_clock_s: f64,
+    pub reports: Vec<NodeReport>,
+    /// Total pushes observed by the store.
+    pub store_pushes: u64,
+    /// Fraction of wall-clock the average node spent blocked on the sync
+    /// barrier (the Figure-1 quantity; ~0 for async).
+    pub mean_idle_fraction: f64,
+    /// True iff every node ran all its epochs.
+    pub all_completed: bool,
+}
+
+impl ExperimentResult {
+    /// Figure-1-style ASCII rendering of the node timelines.
+    pub fn render_timelines(&self, width: usize) -> String {
+        let tls: Vec<&Timeline> = self.reports.iter().map(|r| &r.timeline).collect();
+        // render_ascii takes a slice of Timelines; rebuild by reference
+        render_ascii_refs(&tls, width)
+    }
+}
+
+fn render_ascii_refs(tls: &[&Timeline], width: usize) -> String {
+    // Cheap adapter around metrics::timeline::render_ascii (which takes
+    // owned slice) — we re-implement the iteration to avoid cloning spans.
+    let owned: Vec<Timeline> = tls
+        .iter()
+        .map(|t| {
+            let mut n = Timeline::new(t.node_id, Instant::now());
+            n.spans = t.spans.clone();
+            n
+        })
+        .collect();
+    render_ascii(&owned, width)
+}
+
+fn build_store(cfg: &ExperimentConfig) -> Result<Arc<dyn WeightStore>> {
+    let base: Arc<dyn WeightStore> = match &cfg.store {
+        StoreKind::Memory => Arc::new(MemoryStore::new()),
+        StoreKind::Fs(path) => Arc::new(FsStore::open(path)?),
+    };
+    Ok(match cfg.latency {
+        None => base,
+        // Arc<dyn WeightStore> implements WeightStore, so wrappers stack.
+        Some(lat) => Arc::new(LatencyStore::new(base, lat, cfg.seed)),
+    })
+}
+
+/// Build per-node train loaders + a test loader for the configured model.
+fn build_data(
+    cfg: &ExperimentConfig,
+    info: &crate::runtime::ModelInfo,
+) -> Result<(Vec<BatchLoader>, BatchLoader)> {
+    let batch_size = info.batch_size;
+    let num_classes = info.num_classes;
+    if cfg.model.starts_with("lm") {
+        // LM: corpus windows, random split across nodes (the paper applies
+        // label skew only to the classification datasets).
+        let seq_len = info.input_shape[0] - 1; // input_shape = [seq_len + 1]
+        let train = Arc::new(TextCorpus::generate(cfg.seed ^ 0xC0, cfg.train_size * seq_len + 1));
+        let test = Arc::new(TextCorpus::generate(cfg.seed ^ 0xC1, cfg.test_size * seq_len + 1));
+        let n_windows = train.num_windows(seq_len);
+        let labels = vec![0usize; n_windows];
+        let parts = Partitioner::new(cfg.n_nodes, 0.0, 1.max(num_classes)).assign(&labels, cfg.seed);
+        let loaders = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                BatchLoader::new(
+                    DataSource::Text { corpus: Arc::clone(&train), seq_len },
+                    shard,
+                    batch_size,
+                    cfg.seed ^ ((i as u64) << 8),
+                )
+            })
+            .collect();
+        let n_test = test.num_windows(seq_len);
+        let test_loader = BatchLoader::new(
+            DataSource::Text { corpus: test, seq_len },
+            (0..n_test).collect(),
+            batch_size,
+            cfg.seed ^ 0xEE,
+        );
+        Ok((loaders, test_loader))
+    } else {
+        let kind = DatasetKind::parse(&cfg.model)
+            .with_context(|| format!("unknown dataset for model {:?}", cfg.model))?;
+        let ds = Arc::new(SynthDataset::new(kind, cfg.seed, cfg.train_size, cfg.test_size));
+        let labels = ds.labels(Split::Train);
+        let parts =
+            Partitioner::new(cfg.n_nodes, cfg.skew, kind.num_classes()).assign(&labels, cfg.seed);
+        let loaders = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                BatchLoader::new(
+                    DataSource::Image { ds: Arc::clone(&ds), split: Split::Train },
+                    shard,
+                    batch_size,
+                    cfg.seed ^ ((i as u64) << 8),
+                )
+            })
+            .collect();
+        let test_loader = BatchLoader::new(
+            DataSource::Image { ds, split: Split::Test },
+            (0..cfg.test_size).collect(),
+            batch_size,
+            cfg.seed ^ 0xEE,
+        );
+        Ok((loaders, test_loader))
+    }
+}
+
+/// Run one federated experiment end-to-end and evaluate the global model.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
+    cfg.validate()?;
+    let manifest = Arc::new(Manifest::discover()?);
+    let info = manifest.model(&cfg.model)?.clone();
+
+    let (loaders, test_loader) = build_data(cfg, &info)?;
+    let store = build_store(cfg)?;
+    store.clear()?; // fresh namespace per trial (like a new bucket prefix)
+
+    let logger = match &cfg.log_dir {
+        Some(dir) => Some(Arc::new(RunLogger::create(dir.join(cfg.run_name()))?)),
+        None => None,
+    };
+
+    let origin = Instant::now();
+    let start = Arc::new(std::sync::Barrier::new(cfg.n_nodes));
+    let mut handles = Vec::new();
+    for (node_id, loader) in loaders.into_iter().enumerate() {
+        let ctx = NodeCtx {
+            node_id,
+            cfg: Arc::new(cfg.clone()),
+            manifest: Arc::clone(&manifest),
+            store: Arc::clone(&store),
+            strategy: cfg.strategy.build(),
+            loader,
+            origin,
+            start: Arc::clone(&start),
+            logger: logger.clone(),
+        };
+        handles.push(spawn_node(ctx));
+    }
+    let reports: Vec<NodeReport> = handles.into_iter().map(NodeHandleExt::wait_report).collect();
+    let wall_clock_s = origin.elapsed().as_secs_f64();
+
+    // ---- global model = example-weighted average of the nodes' final
+    // weights (what the store would converge to; identical to any node's
+    // last sync aggregation in sync mode).
+    let finals: Vec<(&FlatParams, f32)> = reports
+        .iter()
+        .filter_map(|r| r.final_params.as_ref().map(|p| (p, r.n_examples_per_epoch as f32)))
+        .collect();
+    anyhow::ensure!(
+        !finals.is_empty(),
+        "no node produced final weights; statuses: {:?}",
+        reports.iter().map(|r| &r.status).collect::<Vec<_>>()
+    );
+    let total: f32 = finals.iter().map(|(_, n)| n).sum();
+    let weights: Vec<f32> = finals.iter().map(|(_, n)| n / total).collect();
+    let params_refs: Vec<&FlatParams> = finals.iter().map(|(p, _)| *p).collect();
+    let global = weighted_average(&params_refs, &weights);
+
+    // ---- evaluate on the un-partitioned test set (paper §4.1)
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, &info)?;
+    let batches = test_loader.full_batches();
+    let (final_loss, final_accuracy) = bundle.evaluate(&global, &batches)?;
+
+    let mean_idle_fraction = reports
+        .iter()
+        .map(|r| r.timeline.idle_fraction())
+        .sum::<f64>()
+        / reports.len() as f64;
+    let all_completed = reports.iter().all(|r| r.status == NodeStatus::Completed);
+
+    if let Some(lg) = &logger {
+        let _ = lg.log_event(
+            "experiment_done",
+            &[
+                ("accuracy", format!("{final_accuracy:.4}")),
+                ("loss", format!("{final_loss:.4}")),
+                ("wall_clock_s", format!("{wall_clock_s:.2}")),
+            ],
+        );
+    }
+
+    Ok(ExperimentResult {
+        final_accuracy,
+        final_loss,
+        wall_clock_s,
+        store_pushes: store.push_count(),
+        mean_idle_fraction,
+        all_completed,
+        reports,
+    })
+}
+
+trait NodeHandleExt {
+    fn wait_report(self) -> NodeReport;
+}
+
+impl NodeHandleExt for crate::node::NodeHandle {
+    fn wait_report(self) -> NodeReport {
+        self.wait()
+    }
+}

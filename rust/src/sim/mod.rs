@@ -1,0 +1,10 @@
+//! Experiment driver: wire data + store + strategies + nodes together, run
+//! a federated training experiment end-to-end, and evaluate the resulting
+//! global model on the held-out test set — once per trial, with
+//! mean ± 95% CI across trials (the paper's table cells).
+
+mod experiment;
+mod trial;
+
+pub use experiment::{run_experiment, ExperimentResult};
+pub use trial::{run_trials, TrialSet};

@@ -1,0 +1,46 @@
+//! Repeated trials: run an experiment `n` times with different seeds and
+//! summarize accuracy as mean ± 95% CI — one paper-table cell.
+
+use anyhow::Result;
+
+use super::{run_experiment, ExperimentResult};
+use crate::config::ExperimentConfig;
+use crate::metrics::stats::Summary;
+
+/// Results of repeated trials of one configuration.
+#[derive(Debug)]
+pub struct TrialSet {
+    pub cfg_name: String,
+    pub results: Vec<ExperimentResult>,
+    pub accuracy: Summary,
+    pub loss: Summary,
+    pub wall_clock: Summary,
+}
+
+impl TrialSet {
+    /// Paper-style cell text, e.g. `.983 ± .002`.
+    pub fn cell(&self) -> String {
+        self.accuracy.fmt_paper()
+    }
+}
+
+/// Run `n_trials` trials, offsetting the seed each time.
+pub fn run_trials(cfg: &ExperimentConfig, n_trials: usize) -> Result<TrialSet> {
+    anyhow::ensure!(n_trials >= 1);
+    let mut results = Vec::with_capacity(n_trials);
+    for t in 0..n_trials {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(1000 * t as u64);
+        results.push(run_experiment(&c)?);
+    }
+    let accs: Vec<f64> = results.iter().map(|r| r.final_accuracy).collect();
+    let losses: Vec<f64> = results.iter().map(|r| r.final_loss).collect();
+    let walls: Vec<f64> = results.iter().map(|r| r.wall_clock_s).collect();
+    Ok(TrialSet {
+        cfg_name: cfg.run_name(),
+        accuracy: Summary::of(&accs),
+        loss: Summary::of(&losses),
+        wall_clock: Summary::of(&walls),
+        results,
+    })
+}

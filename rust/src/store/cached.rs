@@ -1,0 +1,146 @@
+//! Read-through cache for pull-heavy stores — the standard production
+//! optimization over a remote weight store: `latest_per_node` results are
+//! served from a local cache keyed by the store's state hash, so a client
+//! that polls an *unchanged* store (a fast node between slow peers' pushes)
+//! pays one cheap LIST (`state_hash`) instead of re-downloading every blob.
+//!
+//! With the simulated-S3 `LatencyStore` underneath, this converts the
+//! async protocol's pull cost from O(K·P·4 bytes) per federation to ~one
+//! RTT in the unchanged case (measured in EXPERIMENTS.md §Perf).
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::{PushRequest, WeightEntry, WeightStore};
+
+/// Caches `latest_per_node` keyed by `state_hash`.
+pub struct CachedStore<S> {
+    inner: S,
+    cache: Mutex<Option<(u64, Vec<WeightEntry>)>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl<S: WeightStore> CachedStore<S> {
+    pub fn new(inner: S) -> Self {
+        CachedStore {
+            inner,
+            cache: Mutex::new(None),
+            hits: Default::default(),
+            misses: Default::default(),
+        }
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// (cache hits, cache misses) on `latest_per_node`.
+    pub fn stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.hits.load(Relaxed), self.misses.load(Relaxed))
+    }
+}
+
+impl<S: WeightStore> WeightStore for CachedStore<S> {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        // a push invalidates our own view immediately
+        let seq = self.inner.push(req)?;
+        *self.cache.lock().unwrap() = None;
+        Ok(seq)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let h = self.inner.state_hash()?;
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some((ch, entries)) = cache.as_ref() {
+                if *ch == h {
+                    self.hits.fetch_add(1, Relaxed);
+                    return Ok(entries.clone()); // Arc'd params: cheap clone
+                }
+            }
+        }
+        self.misses.fetch_add(1, Relaxed);
+        let entries = self.inner.latest_per_node()?;
+        *self.cache.lock().unwrap() = Some((h, entries.clone()));
+        Ok(entries)
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        self.inner.entries_for_round(round)
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        self.inner.state_hash()
+    }
+
+    fn push_count(&self) -> u64 {
+        self.inner.push_count()
+    }
+
+    fn clear(&self) -> Result<()> {
+        *self.cache.lock().unwrap() = None;
+        self.inner.clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::store_tests::{self, push_req};
+    use crate::store::MemoryStore;
+
+    #[test]
+    fn conformance() {
+        store_tests::conformance(&CachedStore::new(MemoryStore::new()));
+    }
+
+    #[test]
+    fn concurrent() {
+        store_tests::concurrent_pushes(std::sync::Arc::new(CachedStore::new(
+            MemoryStore::new(),
+        )));
+    }
+
+    #[test]
+    fn repeated_pulls_hit_cache() {
+        let s = CachedStore::new(MemoryStore::new());
+        s.push(push_req(0, 0, 1.0)).unwrap();
+        let a = s.latest_per_node().unwrap();
+        let b = s.latest_per_node().unwrap();
+        let c = s.latest_per_node().unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(b[0].params.0, c[0].params.0);
+        let (hits, misses) = s.stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 2);
+    }
+
+    #[test]
+    fn push_invalidates() {
+        let s = CachedStore::new(MemoryStore::new());
+        s.push(push_req(0, 0, 1.0)).unwrap();
+        assert_eq!(s.latest_per_node().unwrap()[0].params.0[0], 1.0);
+        s.push(push_req(0, 1, 2.0)).unwrap();
+        assert_eq!(s.latest_per_node().unwrap()[0].params.0[0], 2.0);
+    }
+
+    #[test]
+    fn foreign_push_detected_via_hash() {
+        // two handles on one inner store: a pull through handle A after a
+        // push through handle B must see the new entry (hash changed)
+        let inner: std::sync::Arc<dyn WeightStore> =
+            std::sync::Arc::new(MemoryStore::new());
+        let a = CachedStore::new(std::sync::Arc::clone(&inner));
+        a.push(push_req(0, 0, 1.0)).unwrap();
+        let _ = a.latest_per_node().unwrap();
+        inner.push(push_req(1, 0, 5.0)).unwrap();
+        let entries = a.latest_per_node().unwrap();
+        assert_eq!(entries.len(), 2, "cached handle must observe foreign push");
+        let (_, misses) = a.stats();
+        assert_eq!(misses, 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Fault-injecting store wrapper: seeded transient errors on push/pull,
+//! used by the robustness experiments (§4.2.1: "real world model training
+//! jobs can be fragile") and by failure-handling tests.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::util::Rng;
+
+/// Wraps an inner store; each operation fails with probability `p_fail`.
+pub struct FaultStore<S> {
+    inner: S,
+    p_fail: f64,
+    rng: Mutex<Rng>,
+    injected: std::sync::atomic::AtomicU64,
+}
+
+impl<S: WeightStore> FaultStore<S> {
+    pub fn new(inner: S, p_fail: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p_fail));
+        FaultStore {
+            inner,
+            p_fail,
+            rng: Mutex::new(Rng::new(seed ^ 0xFA_17)),
+            injected: Default::default(),
+        }
+    }
+
+    /// Number of injected failures so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn maybe_fail(&self, op: &str) -> Result<()> {
+        let roll = self.rng.lock().unwrap().chance(self.p_fail);
+        if roll {
+            self.injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            bail!("injected store failure during {op}");
+        }
+        Ok(())
+    }
+}
+
+impl<S: WeightStore> WeightStore for FaultStore<S> {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        self.maybe_fail("push")?;
+        self.inner.push(req)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        self.maybe_fail("latest_per_node")?;
+        self.inner.latest_per_node()
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        self.maybe_fail("entries_for_round")?;
+        self.inner.entries_for_round(round)
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        self.maybe_fail("state_hash")?;
+        self.inner.state_hash()
+    }
+
+    fn push_count(&self) -> u64 {
+        self.inner.push_count()
+    }
+
+    fn clear(&self) -> Result<()> {
+        self.inner.clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::store_tests;
+    use crate::store::MemoryStore;
+
+    #[test]
+    fn p_zero_is_transparent() {
+        let s = FaultStore::new(MemoryStore::new(), 0.0, 1);
+        store_tests::conformance(&s);
+        assert_eq!(s.injected(), 0);
+    }
+
+    #[test]
+    fn p_one_always_fails() {
+        let s = FaultStore::new(MemoryStore::new(), 1.0, 1);
+        assert!(s.push(store_tests::push_req(0, 0, 1.0)).is_err());
+        assert!(s.latest_per_node().is_err());
+        assert!(s.state_hash().is_err());
+        assert_eq!(s.injected(), 3);
+    }
+
+    #[test]
+    fn failure_rate_roughly_matches() {
+        let s = FaultStore::new(MemoryStore::new(), 0.3, 7);
+        let fails = (0..1000)
+            .filter(|_| s.push(store_tests::push_req(0, 0, 1.0)).is_err())
+            .count();
+        assert!((200..400).contains(&fails), "fails={fails}");
+    }
+}

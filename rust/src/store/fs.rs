@@ -1,0 +1,246 @@
+//! Filesystem weight store — the direct analogue of the paper's
+//! `S3Folder("mybucket/experiment1")`: a directory of self-validating blob
+//! files that genuinely separate OS processes can share.
+//!
+//! Layout: `<root>/n{node}_s{seq}.flwr`, written atomically
+//! (`.tmp` + rename) so readers never observe torn files; the blob codec's
+//! payload hash catches anything that slips through (e.g. a copied
+//! partial file on a network mount).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::tensor::codec::{decode_blob, encode_blob, BlobMeta};
+use crate::util::hash::combine;
+
+pub struct FsStore {
+    root: PathBuf,
+    /// Sequence counter; files from other processes are merged by mtime
+    /// order at read time, so cross-process seq collisions are harmless.
+    seq: AtomicU64,
+    pushes: AtomicU64,
+    /// Serializes directory scans (cheap; pushes stay concurrent).
+    scan_lock: Mutex<()>,
+}
+
+impl FsStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open<P: AsRef<Path>>(root: P) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root).with_context(|| format!("mkdir {root:?}"))?;
+        // resume the seq counter past any existing files
+        let mut max_seq = 0;
+        for f in fs::read_dir(&root)? {
+            if let Some((_, seq)) = parse_name(&f?.path()) {
+                max_seq = max_seq.max(seq);
+            }
+        }
+        Ok(FsStore {
+            root,
+            seq: AtomicU64::new(max_seq),
+            pushes: AtomicU64::new(0),
+            scan_lock: Mutex::new(()),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn scan(&self) -> Result<Vec<WeightEntry>> {
+        let _g = self.scan_lock.lock().unwrap();
+        let mut out = Vec::new();
+        for f in fs::read_dir(&self.root)? {
+            let path = f?.path();
+            let Some((_node, seq)) = parse_name(&path) else { continue };
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => continue, // racing a concurrent rename; skip
+            };
+            // A torn/corrupt blob is skipped, not fatal — eventual
+            // consistency, like listing a bucket mid-upload.
+            if let Ok((meta, params)) = decode_blob(&bytes) {
+                out.push(WeightEntry {
+                    node_id: meta.node_id as usize,
+                    round: meta.round,
+                    epoch: meta.epoch,
+                    n_examples: meta.n_examples,
+                    seq,
+                    params: std::sync::Arc::new(params),
+                });
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        Ok(out)
+    }
+}
+
+fn parse_name(path: &Path) -> Option<(usize, u64)> {
+    let name = path.file_name()?.to_str()?;
+    let stem = name.strip_suffix(".flwr")?;
+    let (n, s) = stem.split_once("_s")?;
+    let node = n.strip_prefix('n')?.parse().ok()?;
+    let seq = s.parse().ok()?;
+    Some((node, seq))
+}
+
+impl WeightStore for FsStore {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let meta = BlobMeta {
+            node_id: req.node_id as u32,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+        };
+        let blob = encode_blob(&meta, &req.params);
+        let final_path = self.root.join(format!("n{}_s{}.flwr", req.node_id, seq));
+        let tmp_path = self.root.join(format!(".tmp_n{}_s{}", req.node_id, seq));
+        fs::write(&tmp_path, &blob).with_context(|| format!("write {tmp_path:?}"))?;
+        fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("rename to {final_path:?}"))?;
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        let mut latest: std::collections::BTreeMap<usize, WeightEntry> = Default::default();
+        for e in self.scan()? {
+            match latest.get(&e.node_id) {
+                Some(prev) if prev.seq >= e.seq => {}
+                _ => {
+                    latest.insert(e.node_id, e);
+                }
+            }
+        }
+        Ok(latest.into_values().collect())
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        Ok(self.scan()?.into_iter().filter(|e| e.round == round).collect())
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        // hash filenames only — no blob reads, mirroring a LIST request
+        let _g = self.scan_lock.lock().unwrap();
+        let mut names: Vec<(usize, u64)> = Vec::new();
+        for f in fs::read_dir(&self.root)? {
+            if let Some(ns) = parse_name(&f?.path()) {
+                names.push(ns);
+            }
+        }
+        names.sort();
+        let mut h = 0xfeed_f00d_u64;
+        for (node, seq) in names {
+            h = combine(h, (node as u64) << 48 | seq);
+        }
+        Ok(h)
+    }
+
+    fn push_count(&self) -> u64 {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    fn clear(&self) -> Result<()> {
+        let _g = self.scan_lock.lock().unwrap();
+        for f in fs::read_dir(&self.root)? {
+            let p = f?.path();
+            if parse_name(&p).is_some() {
+                let _ = fs::remove_file(p);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::store::store_tests;
+    use crate::tensor::FlatParams;
+
+    fn tmp_store(tag: &str) -> (FsStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "fedless_fsstore_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        (FsStore::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn conformance() {
+        let (s, dir) = tmp_store("conf");
+        store_tests::conformance(&s);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent() {
+        let (s, dir) = tmp_store("conc");
+        store_tests::concurrent_pushes(Arc::new(s));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn survives_reopen() {
+        let (s, dir) = tmp_store("reopen");
+        s.push(store_tests::push_req(2, 5, 9.0)).unwrap();
+        drop(s);
+        let s2 = FsStore::open(&dir).unwrap();
+        let latest = s2.latest_per_node().unwrap();
+        assert_eq!(latest.len(), 1);
+        assert_eq!(latest[0].round, 5);
+        // seq counter resumes: next push gets a higher seq
+        let seq = s2.push(store_tests::push_req(2, 6, 1.0)).unwrap();
+        assert!(seq > latest[0].seq);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn ignores_corrupt_files() {
+        let (s, dir) = tmp_store("corrupt");
+        s.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        fs::write(dir.join("n9_s99.flwr"), b"not a blob").unwrap();
+        let latest = s.latest_per_node().unwrap();
+        assert_eq!(latest.len(), 1, "corrupt entry must be skipped");
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn two_handles_share_the_directory() {
+        // Two FsStore handles on one root = two "processes" sharing a bucket.
+        let (a, dir) = tmp_store("share");
+        let b = FsStore::open(&dir).unwrap();
+        a.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        b.push(store_tests::push_req(1, 0, 2.0)).unwrap();
+        assert_eq!(a.latest_per_node().unwrap().len(), 2);
+        assert_eq!(b.latest_per_node().unwrap().len(), 2);
+        assert_eq!(a.state_hash().unwrap(), b.state_hash().unwrap());
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let (s, dir) = tmp_store("large");
+        let params = Arc::new(FlatParams((0..500_000).map(|i| i as f32).collect()));
+        s.push(super::super::PushRequest {
+            node_id: 0,
+            round: 0,
+            epoch: 0,
+            n_examples: 1,
+            params: Arc::clone(&params),
+        })
+        .unwrap();
+        let latest = s.latest_per_node().unwrap();
+        assert_eq!(latest[0].params.0, params.0);
+        fs::remove_dir_all(dir).unwrap();
+    }
+}

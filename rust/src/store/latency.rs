@@ -1,0 +1,157 @@
+//! Latency-injecting store wrapper — the simulated-S3 layer.
+//!
+//! The paper's weight store is an S3 bucket; this wrapper reproduces the
+//! *timing* behaviour (per-op latency with jitter, payload-proportional
+//! transfer time) on top of any inner store, so experiments can measure the
+//! protocol's sensitivity to store round-trip cost (DESIGN.md
+//! §Substitutions).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::util::Rng;
+
+/// Timing model for a remote object store.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyConfig {
+    /// Fixed per-operation round-trip.
+    pub base: Duration,
+    /// Uniform jitter added on top: `U[0, jitter]`.
+    pub jitter: Duration,
+    /// Simulated bandwidth for payload transfer (bytes/sec); 0 = infinite.
+    pub bytes_per_sec: u64,
+}
+
+impl LatencyConfig {
+    /// Rough S3 same-region profile scaled for simulation: ~20ms RTT,
+    /// 10ms jitter, 200 MB/s.
+    pub fn s3_like() -> Self {
+        LatencyConfig {
+            base: Duration::from_millis(20),
+            jitter: Duration::from_millis(10),
+            bytes_per_sec: 200_000_000,
+        }
+    }
+
+    pub fn none() -> Self {
+        LatencyConfig { base: Duration::ZERO, jitter: Duration::ZERO, bytes_per_sec: 0 }
+    }
+}
+
+/// Wraps an inner store, sleeping a seeded-random latency on each op.
+pub struct LatencyStore<S> {
+    inner: S,
+    cfg: LatencyConfig,
+    rng: Mutex<Rng>,
+}
+
+impl<S: WeightStore> LatencyStore<S> {
+    pub fn new(inner: S, cfg: LatencyConfig, seed: u64) -> Self {
+        LatencyStore { inner, cfg, rng: Mutex::new(Rng::new(seed ^ 0x1A7E_4C1)) }
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    fn delay(&self, payload_bytes: usize) {
+        let jit = {
+            let mut rng = self.rng.lock().unwrap();
+            self.cfg.jitter.mul_f64(rng.f64())
+        };
+        let mut d = self.cfg.base + jit;
+        if self.cfg.bytes_per_sec > 0 && payload_bytes > 0 {
+            d += Duration::from_secs_f64(payload_bytes as f64 / self.cfg.bytes_per_sec as f64);
+        }
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+impl<S: WeightStore> WeightStore for LatencyStore<S> {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        self.delay(req.params.len() * 4);
+        self.inner.push(req)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        let out = self.inner.latest_per_node()?;
+        let bytes: usize = out.iter().map(|e| e.params.len() * 4).sum();
+        self.delay(bytes);
+        Ok(out)
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        let out = self.inner.entries_for_round(round)?;
+        let bytes: usize = out.iter().map(|e| e.params.len() * 4).sum();
+        self.delay(bytes);
+        Ok(out)
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        self.delay(0); // LIST-like op: RTT only
+        self.inner.state_hash()
+    }
+
+    fn push_count(&self) -> u64 {
+        self.inner.push_count()
+    }
+
+    fn clear(&self) -> Result<()> {
+        self.inner.clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    use super::*;
+    use crate::store::store_tests;
+    use crate::store::MemoryStore;
+
+    #[test]
+    fn conformance_with_zero_latency() {
+        let s = LatencyStore::new(MemoryStore::new(), LatencyConfig::none(), 1);
+        store_tests::conformance(&s);
+    }
+
+    #[test]
+    fn injects_measurable_latency() {
+        let cfg = LatencyConfig {
+            base: Duration::from_millis(15),
+            jitter: Duration::ZERO,
+            bytes_per_sec: 0,
+        };
+        let s = LatencyStore::new(MemoryStore::new(), cfg, 1);
+        let t0 = Instant::now();
+        s.state_hash().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(14));
+    }
+
+    #[test]
+    fn bandwidth_term_scales_with_payload() {
+        let cfg = LatencyConfig {
+            base: Duration::ZERO,
+            jitter: Duration::ZERO,
+            bytes_per_sec: 1_000_000, // 1 MB/s
+        };
+        let s = LatencyStore::new(MemoryStore::new(), cfg, 1);
+        let t0 = Instant::now();
+        // 100k f32 = 400 KB -> ~400ms at 1MB/s
+        s.push(super::super::PushRequest {
+            node_id: 0,
+            round: 0,
+            epoch: 0,
+            n_examples: 1,
+            params: std::sync::Arc::new(crate::tensor::FlatParams(vec![0.0; 100_000])),
+        })
+        .unwrap();
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(350), "dt={dt:?}");
+    }
+}

@@ -1,0 +1,114 @@
+//! In-process weight store: an `RwLock`ed entry log. The default for
+//! simulated experiments (paper §5 notes their experiments also simulate
+//! concurrency in-process; ours uses real OS threads + this store).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use anyhow::Result;
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::util::hash::combine;
+
+/// Shared-memory store; cheap Arc-based blob sharing, no serialization.
+#[derive(Default)]
+pub struct MemoryStore {
+    entries: RwLock<Vec<WeightEntry>>,
+    seq: AtomicU64,
+    pushes: AtomicU64,
+}
+
+impl MemoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl WeightStore for MemoryStore {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let entry = WeightEntry {
+            node_id: req.node_id,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+            seq,
+            params: req.params,
+        };
+        self.entries.write().unwrap().push(entry);
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        let entries = self.entries.read().unwrap();
+        let mut latest: std::collections::BTreeMap<usize, &WeightEntry> = Default::default();
+        for e in entries.iter() {
+            match latest.get(&e.node_id) {
+                Some(prev) if prev.seq >= e.seq => {}
+                _ => {
+                    latest.insert(e.node_id, e);
+                }
+            }
+        }
+        Ok(latest.into_values().cloned().collect())
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        Ok(self
+            .entries
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|e| e.round == round)
+            .cloned()
+            .collect())
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        let entries = self.entries.read().unwrap();
+        let mut h = 0xfeed_f00d_u64;
+        for e in entries.iter() {
+            h = combine(h, (e.node_id as u64) << 48 | e.seq);
+        }
+        Ok(h)
+    }
+
+    fn push_count(&self) -> u64 {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    fn clear(&self) -> Result<()> {
+        self.entries.write().unwrap().clear();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::store::store_tests;
+
+    #[test]
+    fn conformance() {
+        store_tests::conformance(&MemoryStore::new());
+    }
+
+    #[test]
+    fn concurrent() {
+        store_tests::concurrent_pushes(Arc::new(MemoryStore::new()));
+    }
+
+    #[test]
+    fn state_hash_differs_by_order() {
+        let a = MemoryStore::new();
+        a.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        a.push(store_tests::push_req(1, 0, 1.0)).unwrap();
+        let b = MemoryStore::new();
+        b.push(store_tests::push_req(1, 0, 1.0)).unwrap();
+        b.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        assert_ne!(a.state_hash().unwrap(), b.state_hash().unwrap());
+    }
+}

@@ -1,0 +1,186 @@
+//! The **weight store** — the shared blob namespace that replaces the
+//! central federation server (the paper's core architectural move).
+//!
+//! "the weight store is intended to be any remote folder that is
+//! accessible by the client machine, for example a bucket/blob location on
+//! a cloud service provider" (§3). Clients *push* their weights after an
+//! epoch, *pull* the latest weights of their peers, and aggregate
+//! **client-side**; a cheap [`WeightStore::state_hash`] lets a client detect
+//! "if the remote server has changed state" without downloading anything
+//! (Algorithm 1).
+//!
+//! Implementations:
+//! * [`MemoryStore`] — in-process, for simulation and tests.
+//! * [`FsStore`]     — a directory of blob files; the S3Folder analogue,
+//!   usable by genuinely separate OS processes.
+//! * [`LatencyStore`] — wraps any store with configurable latency/jitter
+//!   (simulated S3 RTT).
+//! * [`FaultStore`]  — wraps any store with seeded error injection.
+
+mod cached;
+mod fault;
+mod fs;
+mod latency;
+mod memory;
+
+pub use cached::CachedStore;
+pub use fault::FaultStore;
+pub use fs::FsStore;
+pub use latency::{LatencyConfig, LatencyStore};
+pub use memory::MemoryStore;
+
+use anyhow::Result;
+
+use crate::tensor::FlatParams;
+
+/// One deposited weight entry.
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub node_id: usize,
+    /// Sync protocol: the federation round. Async: the node's epoch count.
+    pub round: u64,
+    pub epoch: u64,
+    /// Examples this client trained on (the FedAvg weight numerator n_k).
+    pub n_examples: u64,
+    /// Store-assigned monotonically increasing sequence number.
+    pub seq: u64,
+    pub params: std::sync::Arc<FlatParams>,
+}
+
+/// Shared blob namespace for serverless federation. All methods are
+/// thread-safe; `&self` receivers allow `Arc<dyn WeightStore>` sharing
+/// across node threads.
+pub trait WeightStore: Send + Sync {
+    /// Deposit this node's weights. Returns the assigned sequence number.
+    fn push(&self, entry: PushRequest) -> Result<u64>;
+
+    /// Latest entry per node (the async protocol's pull set ω).
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>>;
+
+    /// All entries deposited for a specific sync round.
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>>;
+
+    /// Cheap change-detection hash over (node, seq) pairs. A client skips
+    /// aggregation when this hasn't moved since its last pull (Algorithm 1:
+    /// "performs a check to see if the remote server has changed state").
+    fn state_hash(&self) -> Result<u64>;
+
+    /// Number of push operations performed (for metrics/backpressure).
+    fn push_count(&self) -> u64;
+
+    /// Remove all entries (between trials).
+    fn clear(&self) -> Result<()>;
+}
+
+/// Arguments to [`WeightStore::push`].
+#[derive(Clone, Debug)]
+pub struct PushRequest {
+    pub node_id: usize,
+    pub round: u64,
+    pub epoch: u64,
+    pub n_examples: u64,
+    pub params: std::sync::Arc<FlatParams>,
+}
+
+/// `Arc<dyn WeightStore>` is itself a store, so wrappers generic over a
+/// concrete store type (`LatencyStore<S>`, `CachedStore<S>`, …) can stack
+/// on top of dynamically-chosen inner stores.
+impl WeightStore for std::sync::Arc<dyn WeightStore> {
+    fn push(&self, entry: PushRequest) -> Result<u64> {
+        (**self).push(entry)
+    }
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        (**self).latest_per_node()
+    }
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        (**self).entries_for_round(round)
+    }
+    fn state_hash(&self) -> Result<u64> {
+        (**self).state_hash()
+    }
+    fn push_count(&self) -> u64 {
+        (**self).push_count()
+    }
+    fn clear(&self) -> Result<()> {
+        (**self).clear()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod store_tests {
+    //! Conformance suite run against every store implementation.
+    use std::sync::Arc;
+
+    use super::*;
+
+    pub fn push_req(node: usize, round: u64, val: f32) -> PushRequest {
+        PushRequest {
+            node_id: node,
+            round,
+            epoch: round,
+            n_examples: 100 + node as u64,
+            params: Arc::new(FlatParams(vec![val; 8])),
+        }
+    }
+
+    pub fn conformance(store: &dyn WeightStore) {
+        // empty
+        assert!(store.latest_per_node().unwrap().is_empty());
+        let h0 = store.state_hash().unwrap();
+
+        // push two nodes
+        store.push(push_req(0, 0, 1.0)).unwrap();
+        let h1 = store.state_hash().unwrap();
+        assert_ne!(h0, h1, "state hash must change on push");
+        store.push(push_req(1, 0, 2.0)).unwrap();
+
+        let latest = store.latest_per_node().unwrap();
+        assert_eq!(latest.len(), 2);
+        let r0 = store.entries_for_round(0).unwrap();
+        assert_eq!(r0.len(), 2);
+        assert!(store.entries_for_round(1).unwrap().is_empty());
+
+        // node 0 pushes a newer entry: latest_per_node must pick it
+        store.push(push_req(0, 1, 3.0)).unwrap();
+        let latest = store.latest_per_node().unwrap();
+        assert_eq!(latest.len(), 2);
+        let e0 = latest.iter().find(|e| e.node_id == 0).unwrap();
+        assert_eq!(e0.round, 1);
+        assert_eq!(e0.params.0[0], 3.0);
+        // seq strictly increases
+        let e1 = latest.iter().find(|e| e.node_id == 1).unwrap();
+        assert!(e0.seq > e1.seq);
+
+        // payload integrity
+        assert_eq!(e1.params.0, vec![2.0; 8]);
+        assert_eq!(e1.n_examples, 101);
+
+        // clear
+        store.clear().unwrap();
+        assert!(store.latest_per_node().unwrap().is_empty());
+        assert!(store.entries_for_round(0).unwrap().is_empty());
+    }
+
+    pub fn concurrent_pushes(store: Arc<dyn WeightStore>) {
+        let threads: Vec<_> = (0..8)
+            .map(|node| {
+                let s = Arc::clone(&store);
+                std::thread::spawn(move || {
+                    for round in 0..20 {
+                        s.push(push_req(node, round, node as f32)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let latest = store.latest_per_node().unwrap();
+        assert_eq!(latest.len(), 8);
+        for e in &latest {
+            assert_eq!(e.round, 19, "node {} latest round", e.node_id);
+            assert_eq!(e.params.0[0], e.node_id as f32);
+        }
+        assert_eq!(store.push_count(), 160);
+    }
+}

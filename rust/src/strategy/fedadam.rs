@@ -1,0 +1,107 @@
+//! FedAdam (Reddi et al. 2021, "Adaptive Federated Optimization") — Adam on
+//! the server pseudo-gradient, run client-side in the serverless setting.
+//!
+//! `Δ = w_avg - w_prev;  m <- β1 m + (1-β1)Δ;  v <- β2 v + (1-β2)Δ²;
+//!  w <- w_prev + lr * m / (sqrt(v) + τ)`
+
+use super::{fedavg_of, Contribution, Strategy};
+use crate::tensor::FlatParams;
+
+pub struct FedAdam {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    tau: f32,
+    m: Option<Vec<f32>>,
+    v: Option<Vec<f32>>,
+    prev: Option<FlatParams>,
+}
+
+impl FedAdam {
+    pub fn new(lr: f32, b1: f32, b2: f32, tau: f32) -> Self {
+        FedAdam { lr, b1, b2, tau, m: None, v: None, prev: None }
+    }
+}
+
+impl Strategy for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let avg = fedavg_of(contribs);
+        let prev = match &self.prev {
+            None => {
+                self.m = Some(vec![0.0; avg.len()]);
+                // FedOpt initializes v to tau^2
+                self.v = Some(vec![self.tau * self.tau; avg.len()]);
+                self.prev = Some(avg.clone());
+                return Some(avg);
+            }
+            Some(p) => p.clone(),
+        };
+        let delta = prev.delta_to(&avg);
+        let m = self.m.as_mut().unwrap();
+        let v = self.v.as_mut().unwrap();
+        let mut next = prev;
+        for i in 0..delta.len() {
+            let d = delta.0[i];
+            m[i] = self.b1 * m[i] + (1.0 - self.b1) * d;
+            v[i] = self.b2 * v[i] + (1.0 - self.b2) * d * d;
+            next.0[i] += self.lr * m[i] / (v[i].sqrt() + self.tau);
+        }
+        self.prev = Some(next.clone());
+        Some(next)
+    }
+
+    fn reset(&mut self) {
+        self.m = None;
+        self.v = None;
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn first_call_adopts_average() {
+        let mut s = FedAdam::new(1e-2, 0.9, 0.999, 1e-3);
+        let out = s
+            .aggregate(&[contrib(0, 1, true, &[1.0]), contrib(1, 1, false, &[3.0])])
+            .unwrap();
+        assert_eq!(out.0, vec![2.0]);
+    }
+
+    #[test]
+    fn moves_toward_average() {
+        let mut s = FedAdam::new(1e-1, 0.9, 0.999, 1e-3);
+        s.aggregate(&[contrib(0, 1, true, &[0.0])]).unwrap();
+        let out = s.aggregate(&[contrib(0, 1, true, &[10.0])]).unwrap();
+        assert!(out.0[0] > 0.0, "must step toward the new average");
+        assert!(out.0[0] < 10.0, "adaptive step is damped");
+    }
+
+    #[test]
+    fn step_size_bounded_by_lr_over_sqrt_v() {
+        // With a huge delta the normalized step approaches lr * (1-b1) scale
+        let mut s = FedAdam::new(1e-2, 0.9, 0.999, 1e-3);
+        s.aggregate(&[contrib(0, 1, true, &[0.0])]).unwrap();
+        let out = s.aggregate(&[contrib(0, 1, true, &[1e6])]).unwrap();
+        assert!(out.0[0].abs() < 1.0, "step must be normalized, got {}", out.0[0]);
+    }
+
+    #[test]
+    fn reset_forgets_moments() {
+        let mut s = FedAdam::new(1e-2, 0.9, 0.999, 1e-3);
+        s.aggregate(&[contrib(0, 1, true, &[5.0])]).unwrap();
+        s.reset();
+        let out = s.aggregate(&[contrib(0, 1, true, &[7.0])]).unwrap();
+        assert_eq!(out.0, vec![7.0]);
+    }
+}

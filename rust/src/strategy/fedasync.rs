@@ -1,0 +1,131 @@
+//! FedAsync (Xie et al. 2019) — staleness-aware asynchronous mixing; one
+//! of the extensions the paper's §5 lists as unimplemented future work
+//! ("We did not implement staleness-aware asynchronous strategies ... that
+//! were shown to produce higher accuracy").
+//!
+//! The node mixes its local weights toward the peers' average with a
+//! staleness-attenuated factor:
+//! `α_eff = α / (1 + s)^a`, `w <- (1 - α_eff) w_local + α_eff w_peers`,
+//! where staleness `s` is how many store sequence numbers behind the
+//! freshest entry the peer average is (polynomial attenuation, the paper's
+//! `α_t = α (t - τ + 1)^{-a}` adapted to the serverless store).
+
+use super::{example_weights, Contribution, Strategy};
+use crate::tensor::FlatParams;
+
+pub struct FedAsync {
+    /// Base mixing weight α.
+    alpha: f32,
+    /// Polynomial staleness exponent a.
+    exponent: f32,
+}
+
+impl FedAsync {
+    pub fn new(alpha: f32, exponent: f32) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        assert!(exponent >= 0.0);
+        FedAsync { alpha, exponent }
+    }
+}
+
+impl Strategy for FedAsync {
+    fn name(&self) -> &'static str {
+        "fedasync"
+    }
+
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        let own = contribs.iter().find(|c| c.is_self)?;
+        let peers: Vec<&Contribution> = contribs.iter().filter(|c| !c.is_self).collect();
+        if peers.is_empty() {
+            return Some(own.params.as_ref().clone());
+        }
+
+        // Example-weighted average of the peers only.
+        let peer_contribs: Vec<Contribution> = peers.iter().map(|&c| c.clone()).collect();
+        let w = example_weights(&peer_contribs);
+        let refs: Vec<&FlatParams> =
+            peer_contribs.iter().map(|c| c.params.as_ref()).collect();
+        let peer_avg = crate::tensor::flat::weighted_average(&refs, &w);
+
+        // Staleness: how far the average peer entry lags the freshest seq
+        // seen in this pull (own push is typically the freshest).
+        let max_seq = contribs.iter().map(|c| c.seq).max().unwrap_or(0);
+        let mean_peer_seq =
+            peer_contribs.iter().map(|c| c.seq as f64).sum::<f64>() / peer_contribs.len() as f64;
+        let staleness = (max_seq as f64 - mean_peer_seq).max(0.0);
+        let alpha_eff = self.alpha * (1.0 + staleness as f32).powf(-self.exponent);
+
+        let mut next = own.params.as_ref().clone();
+        next.lerp(alpha_eff, &peer_avg);
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    fn contrib_seq(node: usize, n: u64, is_self: bool, vals: &[f32], seq: u64) -> Contribution {
+        Contribution {
+            node_id: node,
+            n_examples: n,
+            is_self,
+            seq,
+            params: Arc::new(FlatParams(vals.to_vec())),
+        }
+    }
+
+    #[test]
+    fn no_peers_keeps_own() {
+        let mut s = FedAsync::new(0.6, 0.5);
+        let out = s.aggregate(&[contrib(0, 1, true, &[2.0])]).unwrap();
+        assert_eq!(out.0, vec![2.0]);
+    }
+
+    #[test]
+    fn fresh_peer_mixes_by_alpha() {
+        let mut s = FedAsync::new(0.5, 0.5);
+        // own seq = peer seq -> staleness 0 -> alpha_eff = 0.5
+        let out = s
+            .aggregate(&[
+                contrib_seq(0, 1, true, &[0.0], 5),
+                contrib_seq(1, 1, false, &[4.0], 5),
+            ])
+            .unwrap();
+        assert!((out.0[0] - 2.0).abs() < 1e-6, "{}", out.0[0]);
+    }
+
+    #[test]
+    fn stale_peer_gets_attenuated() {
+        let mut s = FedAsync::new(0.5, 1.0);
+        // peer 9 seqs behind -> alpha_eff = 0.5 / 10 = 0.05
+        let out = s
+            .aggregate(&[
+                contrib_seq(0, 1, true, &[0.0], 10),
+                contrib_seq(1, 1, false, &[4.0], 1),
+            ])
+            .unwrap();
+        assert!((out.0[0] - 0.2).abs() < 1e-6, "{}", out.0[0]);
+    }
+
+    #[test]
+    fn exponent_zero_ignores_staleness() {
+        let mut s = FedAsync::new(0.5, 0.0);
+        let out = s
+            .aggregate(&[
+                contrib_seq(0, 1, true, &[0.0], 100),
+                contrib_seq(1, 1, false, &[4.0], 1),
+            ])
+            .unwrap();
+        assert!((out.0[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_self_returns_none() {
+        let mut s = FedAsync::new(0.5, 0.5);
+        assert!(s.aggregate(&[contrib(1, 1, false, &[1.0])]).is_none());
+    }
+}

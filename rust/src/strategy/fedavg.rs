@@ -1,0 +1,58 @@
+//! FedAvg (McMahan et al. 2016), applied client-side — Eq. (1):
+//! `w <- sum_k (n_k / n) * ω[k]`. Stateless.
+
+use super::{fedavg_of, Contribution, Strategy};
+use crate::tensor::FlatParams;
+
+#[derive(Default)]
+pub struct FedAvg;
+
+impl FedAvg {
+    pub fn new() -> Self {
+        FedAvg
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        Some(fedavg_of(contribs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn weighted_mean() {
+        let mut s = FedAvg::new();
+        let out = s
+            .aggregate(&[
+                contrib(0, 100, true, &[1.0, 2.0]),
+                contrib(1, 300, false, &[5.0, 6.0]),
+            ])
+            .unwrap();
+        assert_eq!(out.0, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn single_self_contribution_is_identity() {
+        let mut s = FedAvg::new();
+        let out = s.aggregate(&[contrib(0, 10, true, &[3.0, -1.0])]).unwrap();
+        assert_eq!(out.0, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let mut s = FedAvg::new();
+        assert!(s.aggregate(&[]).is_none());
+    }
+}

@@ -1,0 +1,108 @@
+//! FedAvgM — FedAvg with server-side momentum (Hsu et al. 2019), run
+//! client-side here. Each aggregation computes the pseudo-gradient
+//! `Δ = w_avg - w_prev`, updates the momentum buffer
+//! `v <- β v + Δ`, and steps `w <- w_prev + lr * v`.
+//!
+//! In the serverless design every node owns its *own* momentum buffer —
+//! a direct consequence of "each client may implement its own aggregation
+//! strategy" (§3).
+
+use super::{fedavg_of, Contribution, Strategy};
+use crate::tensor::FlatParams;
+
+pub struct FedAvgM {
+    beta: f32,
+    lr: f32,
+    velocity: Option<FlatParams>,
+    prev: Option<FlatParams>,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f32, lr: f32) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        FedAvgM { beta, lr, velocity: None, prev: None }
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let avg = fedavg_of(contribs);
+        let prev = match &self.prev {
+            None => {
+                // first federation: adopt the average, momentum starts at 0
+                self.velocity = Some(FlatParams::zeros(avg.len()));
+                self.prev = Some(avg.clone());
+                return Some(avg);
+            }
+            Some(p) => p.clone(),
+        };
+        let delta = prev.delta_to(&avg);
+        let v = self.velocity.as_mut().expect("velocity init'd with prev");
+        v.scale(self.beta);
+        v.axpy(1.0, &delta);
+        let mut next = prev;
+        next.axpy(self.lr, v);
+        self.prev = Some(next.clone());
+        Some(next)
+    }
+
+    fn reset(&mut self) {
+        self.velocity = None;
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn first_call_adopts_average() {
+        let mut s = FedAvgM::new(0.9, 1.0);
+        let out = s
+            .aggregate(&[contrib(0, 1, true, &[2.0]), contrib(1, 1, false, &[4.0])])
+            .unwrap();
+        assert_eq!(out.0, vec![3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_along_consistent_direction() {
+        let mut s = FedAvgM::new(0.9, 1.0);
+        // round 1 establishes prev=0
+        s.aggregate(&[contrib(0, 1, true, &[0.0])]).unwrap();
+        // each later round's average is prev+1 -> delta = 1 each time;
+        // velocity compounds: v1=1, step to 1; v2=.9+1=1.9, step to 2.9...
+        let w1 = s.aggregate(&[contrib(0, 1, true, &[1.0])]).unwrap();
+        assert!((w1.0[0] - 1.0).abs() < 1e-6);
+        let w2 = s.aggregate(&[contrib(0, 1, true, &[w1.0[0] + 1.0])]).unwrap();
+        assert!((w2.0[0] - 2.9).abs() < 1e-5, "{}", w2.0[0]);
+    }
+
+    #[test]
+    fn zero_beta_equals_fedavg_direction() {
+        let mut s = FedAvgM::new(0.0, 1.0);
+        s.aggregate(&[contrib(0, 1, true, &[0.0])]).unwrap();
+        let out = s
+            .aggregate(&[contrib(0, 1, true, &[2.0]), contrib(1, 1, false, &[4.0])])
+            .unwrap();
+        // beta=0, lr=1: w = prev + (avg - prev) = avg
+        assert_eq!(out.0, vec![3.0]);
+    }
+
+    #[test]
+    fn reset_forgets_state() {
+        let mut s = FedAvgM::new(0.9, 1.0);
+        s.aggregate(&[contrib(0, 1, true, &[5.0])]).unwrap();
+        s.reset();
+        let out = s.aggregate(&[contrib(0, 1, true, &[1.0])]).unwrap();
+        assert_eq!(out.0, vec![1.0]); // re-adopts average
+    }
+}

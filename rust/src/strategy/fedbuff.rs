@@ -1,0 +1,119 @@
+//! FedBuff (Nguyen et al. 2022) — buffered asynchronous aggregation,
+//! adapted to the serverless store: the node only aggregates once it has
+//! observed `buffer_size` *new* peer entries since its last aggregation;
+//! until then it keeps training on its current weights.
+//!
+//! This is the second §5 future-work strategy; it trades update frequency
+//! for lower variance per update.
+
+use std::collections::HashMap;
+
+use super::{fedavg_of, Contribution, Strategy};
+use crate::tensor::FlatParams;
+
+pub struct FedBuff {
+    buffer_size: usize,
+    /// Last seq seen per peer at the last aggregation.
+    seen: HashMap<usize, u64>,
+}
+
+impl FedBuff {
+    pub fn new(buffer_size: usize) -> Self {
+        assert!(buffer_size >= 1);
+        FedBuff { buffer_size, seen: HashMap::new() }
+    }
+
+    fn count_new(&self, contribs: &[Contribution]) -> usize {
+        contribs
+            .iter()
+            .filter(|c| !c.is_self)
+            .filter(|c| self.seen.get(&c.node_id).map(|&s| c.seq > s).unwrap_or(true))
+            .count()
+    }
+}
+
+impl Strategy for FedBuff {
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        contribs.iter().find(|c| c.is_self)?;
+        let fresh = self.count_new(contribs);
+        if fresh < self.buffer_size {
+            return None; // buffer not full: keep local weights
+        }
+        for c in contribs.iter().filter(|c| !c.is_self) {
+            self.seen.insert(c.node_id, c.seq);
+        }
+        Some(fedavg_of(contribs))
+    }
+
+    fn reset(&mut self) {
+        self.seen.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    fn contrib_seq(node: usize, is_self: bool, val: f32, seq: u64) -> Contribution {
+        Contribution {
+            node_id: node,
+            n_examples: 1,
+            is_self,
+            seq,
+            params: Arc::new(FlatParams(vec![val])),
+        }
+    }
+
+    #[test]
+    fn waits_for_buffer_to_fill() {
+        let mut s = FedBuff::new(2);
+        // only one fresh peer -> no update
+        assert!(s
+            .aggregate(&[contrib_seq(0, true, 0.0, 10), contrib_seq(1, false, 4.0, 1)])
+            .is_none());
+        // two fresh peers -> aggregate
+        let out = s
+            .aggregate(&[
+                contrib_seq(0, true, 0.0, 10),
+                contrib_seq(1, false, 3.0, 1),
+                contrib_seq(2, false, 6.0, 2),
+            ])
+            .unwrap();
+        assert!((out.0[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn already_seen_entries_do_not_count() {
+        let mut s = FedBuff::new(1);
+        let c1 = contrib_seq(1, false, 4.0, 7);
+        assert!(s.aggregate(&[contrib_seq(0, true, 0.0, 9), c1.clone()]).is_some());
+        // same peer seq again -> stale -> buffered, no update
+        assert!(s.aggregate(&[contrib_seq(0, true, 2.0, 10), c1]).is_none());
+        // newer seq from that peer counts again
+        assert!(s
+            .aggregate(&[contrib_seq(0, true, 2.0, 11), contrib_seq(1, false, 4.0, 8)])
+            .is_some());
+    }
+
+    #[test]
+    fn reset_clears_seen() {
+        let mut s = FedBuff::new(1);
+        let c1 = contrib_seq(1, false, 4.0, 7);
+        s.aggregate(&[contrib_seq(0, true, 0.0, 9), c1.clone()]).unwrap();
+        s.reset();
+        assert!(s.aggregate(&[contrib_seq(0, true, 0.0, 9), c1]).is_some());
+    }
+
+    #[test]
+    fn requires_self_entry() {
+        let mut s = FedBuff::new(1);
+        assert!(s.aggregate(&[contrib(1, 1, false, &[1.0])]).is_none());
+    }
+}

@@ -1,0 +1,164 @@
+//! Federated aggregation strategies, applied **client-side** (serverless:
+//! "each client may implement its own aggregation strategy", §3).
+//!
+//! Implemented: the paper's three (FedAvg, FedAvgM, FedAdam — §4.2.2) plus
+//! the two asynchronous extensions its §5 lists as future work:
+//! staleness-aware FedAsync [Xie et al. 2019] and buffered FedBuff
+//! [Nguyen et al. 2022].
+//!
+//! A strategy is stateful *per node* (e.g. each node carries its own
+//! server-momentum buffer) — exactly what the serverless design implies.
+
+mod fedadam;
+mod fedasync;
+mod fedavg;
+mod fedavgm;
+mod fedbuff;
+
+pub use fedadam::FedAdam;
+pub use fedasync::FedAsync;
+pub use fedavg::FedAvg;
+pub use fedavgm::FedAvgM;
+pub use fedbuff::FedBuff;
+
+use std::sync::Arc;
+
+use crate::tensor::FlatParams;
+
+/// One client's weights entering an aggregation.
+#[derive(Clone, Debug)]
+pub struct Contribution {
+    pub node_id: usize,
+    pub n_examples: u64,
+    /// True for the aggregating node's own current weights (Algorithm 1's
+    /// `ω[k] ← w^k`).
+    pub is_self: bool,
+    /// Store sequence number of the entry (novelty/staleness signal).
+    pub seq: u64,
+    pub params: Arc<FlatParams>,
+}
+
+/// Client-side aggregation strategy.
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Aggregate the contributions into new local weights. Returns `None`
+    /// when the strategy decides not to update (e.g. FedBuff's buffer has
+    /// not filled) — the caller then keeps its current weights.
+    ///
+    /// `contribs` always contains exactly one `is_self` entry.
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams>;
+
+    /// Reset per-node state (between trials).
+    fn reset(&mut self) {}
+}
+
+/// `n_k / n` weights over the contributions (Eq. 1).
+pub(crate) fn example_weights(contribs: &[Contribution]) -> Vec<f32> {
+    let total: u64 = contribs.iter().map(|c| c.n_examples).sum();
+    if total == 0 {
+        // degenerate: fall back to uniform
+        return vec![1.0 / contribs.len() as f32; contribs.len()];
+    }
+    contribs.iter().map(|c| c.n_examples as f32 / total as f32).collect()
+}
+
+/// Plain example-weighted average of the contributions.
+pub(crate) fn fedavg_of(contribs: &[Contribution]) -> FlatParams {
+    let weights = example_weights(contribs);
+    let refs: Vec<&FlatParams> = contribs.iter().map(|c| c.params.as_ref()).collect();
+    crate::tensor::flat::weighted_average(&refs, &weights)
+}
+
+/// Strategy selector used in configs / CLI (`--strategy fedavg`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    FedAvg,
+    FedAvgM,
+    FedAdam,
+    FedAsync,
+    FedBuff,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Some(StrategyKind::FedAvg),
+            "fedavgm" => Some(StrategyKind::FedAvgM),
+            "fedadam" => Some(StrategyKind::FedAdam),
+            "fedasync" => Some(StrategyKind::FedAsync),
+            "fedbuff" => Some(StrategyKind::FedBuff),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::FedAvg => "fedavg",
+            StrategyKind::FedAvgM => "fedavgm",
+            StrategyKind::FedAdam => "fedadam",
+            StrategyKind::FedAsync => "fedasync",
+            StrategyKind::FedBuff => "fedbuff",
+        }
+    }
+
+    /// Instantiate with default hyperparameters (paper-faithful).
+    pub fn build(self) -> Box<dyn Strategy> {
+        match self {
+            StrategyKind::FedAvg => Box::new(FedAvg::new()),
+            StrategyKind::FedAvgM => Box::new(FedAvgM::new(0.9, 1.0)),
+            StrategyKind::FedAdam => Box::new(FedAdam::new(1e-2, 0.9, 0.999, 1e-3)),
+            StrategyKind::FedAsync => Box::new(FedAsync::new(0.6, 0.5)),
+            StrategyKind::FedBuff => Box::new(FedBuff::new(2)),
+        }
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod strategy_tests {
+    use super::*;
+
+    pub fn contrib(node: usize, n: u64, is_self: bool, vals: &[f32]) -> Contribution {
+        Contribution {
+            node_id: node,
+            n_examples: n,
+            is_self,
+            seq: node as u64 + 1,
+            params: Arc::new(FlatParams(vals.to_vec())),
+        }
+    }
+
+    #[test]
+    fn example_weights_normalize() {
+        let cs = [contrib(0, 300, true, &[0.0]), contrib(1, 100, false, &[0.0])];
+        let w = example_weights(&cs);
+        assert_eq!(w, vec![0.75, 0.25]);
+    }
+
+    #[test]
+    fn example_weights_zero_total_uniform() {
+        let cs = [contrib(0, 0, true, &[0.0]), contrib(1, 0, false, &[0.0])];
+        let w = example_weights(&cs);
+        assert_eq!(w, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [
+            StrategyKind::FedAvg,
+            StrategyKind::FedAvgM,
+            StrategyKind::FedAdam,
+            StrategyKind::FedAsync,
+            StrategyKind::FedBuff,
+        ] {
+            assert_eq!(StrategyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StrategyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,154 @@
+//! Binary blob codec for weight-store entries (the wire/disk format).
+//!
+//! Layout (little-endian):
+//! ```text
+//!   magic   u32   0x464C_5752  ("FLWR")
+//!   version u16   1
+//!   flags   u16   reserved, 0
+//!   node_id u32
+//!   round   u64   (sync round; async entries use the node's epoch counter)
+//!   epoch   u64
+//!   n_examples u64
+//!   len     u64   number of f32 elements
+//!   hash    u64   fnv1a64 of the payload bytes
+//!   payload len * 4 bytes of f32 LE
+//! ```
+//! The hash field makes torn/corrupt writes detectable — important for the
+//! `FsStore`, where concurrent readers may observe partially-written files
+//! (the same failure mode an S3 multipart PUT protects against).
+
+use anyhow::{bail, Result};
+
+use super::FlatParams;
+use crate::util::fnv1a64;
+
+pub const MAGIC: u32 = 0x464C_5752;
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 4 + 2 + 2 + 4 + 8 + 8 + 8 + 8 + 8;
+
+/// Metadata attached to a serialized weight entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlobMeta {
+    pub node_id: u32,
+    pub round: u64,
+    pub epoch: u64,
+    pub n_examples: u64,
+}
+
+/// Serialize params + metadata into a self-validating blob.
+pub fn encode_blob(meta: &BlobMeta, params: &FlatParams) -> Vec<u8> {
+    let payload_len = params.len() * 4;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload_len);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&meta.node_id.to_le_bytes());
+    out.extend_from_slice(&meta.round.to_le_bytes());
+    out.extend_from_slice(&meta.epoch.to_le_bytes());
+    out.extend_from_slice(&meta.n_examples.to_le_bytes());
+    out.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    // hash goes after len; fill payload first, then patch
+    let hash_pos = out.len();
+    out.extend_from_slice(&0u64.to_le_bytes());
+    for x in params.as_slice() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    let h = fnv1a64(&out[HEADER_LEN..]);
+    out[hash_pos..hash_pos + 8].copy_from_slice(&h.to_le_bytes());
+    out
+}
+
+fn read_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes(b[at..at + 2].try_into().unwrap())
+}
+fn read_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+fn read_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+/// Decode and validate a blob produced by [`encode_blob`].
+pub fn decode_blob(bytes: &[u8]) -> Result<(BlobMeta, FlatParams)> {
+    if bytes.len() < HEADER_LEN {
+        bail!("blob too short: {} bytes", bytes.len());
+    }
+    if read_u32(bytes, 0) != MAGIC {
+        bail!("bad magic");
+    }
+    let version = read_u16(bytes, 4);
+    if version != VERSION {
+        bail!("unsupported blob version {version}");
+    }
+    let meta = BlobMeta {
+        node_id: read_u32(bytes, 8),
+        round: read_u64(bytes, 12),
+        epoch: read_u64(bytes, 20),
+        n_examples: read_u64(bytes, 28),
+    };
+    let len = read_u64(bytes, 36) as usize;
+    let hash = read_u64(bytes, 44);
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != len * 4 {
+        bail!("payload length {} != {} * 4 (torn write?)", payload.len(), len);
+    }
+    if fnv1a64(payload) != hash {
+        bail!("payload hash mismatch (corrupt or torn write)");
+    }
+    let mut xs = Vec::with_capacity(len);
+    for chunk in payload.chunks_exact(4) {
+        xs.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((meta, FlatParams(xs)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> BlobMeta {
+        BlobMeta { node_id: 3, round: 7, epoch: 2, n_examples: 38400 }
+    }
+
+    #[test]
+    fn round_trip() {
+        let p = FlatParams(vec![1.0, -2.5, f32::MIN_POSITIVE, 1e30]);
+        let blob = encode_blob(&meta(), &p);
+        let (m2, p2) = decode_blob(&blob).unwrap();
+        assert_eq!(m2, meta());
+        assert_eq!(p2, p);
+    }
+
+    #[test]
+    fn empty_params_round_trip() {
+        let p = FlatParams(vec![]);
+        let (m2, p2) = decode_blob(&encode_blob(&meta(), &p)).unwrap();
+        assert_eq!(m2, meta());
+        assert!(p2.is_empty());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let blob = encode_blob(&meta(), &FlatParams(vec![1.0; 100]));
+        assert!(decode_blob(&blob[..blob.len() - 4]).is_err());
+        assert!(decode_blob(&blob[..10]).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut blob = encode_blob(&meta(), &FlatParams(vec![1.0; 100]));
+        let n = blob.len();
+        blob[n - 1] ^= 0xFF;
+        assert!(decode_blob(&blob).is_err());
+    }
+
+    #[test]
+    fn detects_bad_magic_and_version() {
+        let mut blob = encode_blob(&meta(), &FlatParams(vec![1.0]));
+        blob[0] = 0;
+        assert!(decode_blob(&blob).is_err());
+        let mut blob2 = encode_blob(&meta(), &FlatParams(vec![1.0]));
+        blob2[4] = 99;
+        assert!(decode_blob(&blob2).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! [`FlatParams`] — a flat `f32` parameter vector with the small amount of
+//! linear algebra the federation strategies need (axpy, scale, lerp).
+
+use crate::util::hash::hash_f32s;
+
+/// A model's full parameter (or optimizer-moment) vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatParams(pub Vec<f32>);
+
+impl FlatParams {
+    pub fn zeros(n: usize) -> Self {
+        FlatParams(vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Content hash (used in store entries and change detection).
+    pub fn content_hash(&self) -> u64 {
+        hash_f32s(&self.0)
+    }
+
+    /// `self += alpha * other` (fused multiply-add per element; the
+    /// aggregation hot path — see benches/microbench.rs).
+    pub fn axpy(&mut self, alpha: f32, other: &FlatParams) {
+        assert_eq!(self.len(), other.len(), "axpy length mismatch");
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a = b.mul_add(alpha, *a);
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.0.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// `self = (1 - t) * self + t * other` — the staleness-mixing update
+    /// used by FedAsync.
+    pub fn lerp(&mut self, t: f32, other: &FlatParams) {
+        assert_eq!(self.len(), other.len(), "lerp length mismatch");
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a = *a + t * (*b - *a);
+        }
+    }
+
+    /// Element-wise difference `other - self` (pseudo-gradient for
+    /// server-side optimizers à la FedOpt).
+    pub fn delta_to(&self, other: &FlatParams) -> FlatParams {
+        assert_eq!(self.len(), other.len(), "delta length mismatch");
+        FlatParams(
+            self.0
+                .iter()
+                .zip(other.0.iter())
+                .map(|(a, b)| b - a)
+                .collect(),
+        )
+    }
+
+    /// Max |a_i - b_i|; used by tests/parity checks.
+    pub fn max_abs_diff(&self, other: &FlatParams) -> f32 {
+        assert_eq!(self.len(), other.len());
+        self.0
+            .iter()
+            .zip(other.0.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.0.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.0.iter().all(|x| x.is_finite())
+    }
+}
+
+/// Weighted average of parameter vectors: `sum_k w[k] * xs[k]` — Eq. (1) of
+/// the paper, computed client-side. This is the pure-rust reference used by
+/// every strategy; `runtime::agg` offers the same computation through the
+/// lowered Pallas artifact, and `rust/tests/artifact_parity.rs` checks they
+/// agree.
+pub fn weighted_average(xs: &[&FlatParams], weights: &[f32]) -> FlatParams {
+    assert_eq!(xs.len(), weights.len(), "weights/params arity mismatch");
+    assert!(!xs.is_empty(), "cannot average zero clients");
+    let n = xs[0].len();
+    for x in xs {
+        assert_eq!(x.len(), n, "client param length mismatch");
+    }
+    let mut out = FlatParams::zeros(n);
+    for (x, &w) in xs.iter().zip(weights.iter()) {
+        out.axpy(w, x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(xs: &[f32]) -> FlatParams {
+        FlatParams(xs.to_vec())
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut a = fp(&[1.0, 2.0]);
+        a.axpy(0.5, &fp(&[4.0, 8.0]));
+        assert_eq!(a.0, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let mut a = fp(&[1.0, 2.0]);
+        a.lerp(0.0, &fp(&[5.0, 5.0]));
+        assert_eq!(a.0, vec![1.0, 2.0]);
+        a.lerp(1.0, &fp(&[5.0, 6.0]));
+        assert_eq!(a.0, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_average_equal_weights_is_mean() {
+        let out = weighted_average(&[&fp(&[0.0, 2.0]), &fp(&[2.0, 4.0])], &[0.5, 0.5]);
+        assert_eq!(out.0, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_average_single_identity() {
+        let x = fp(&[1.5, -2.5, 3.0]);
+        let out = weighted_average(&[&x], &[1.0]);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let out = weighted_average(&[&fp(&[1.0]), &fp(&[3.0])], &[0.75, 0.25]);
+        assert!((out.0[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn weighted_average_arity_mismatch_panics() {
+        weighted_average(&[&fp(&[1.0])], &[0.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn weighted_average_length_mismatch_panics() {
+        weighted_average(&[&fp(&[1.0]), &fp(&[1.0, 2.0])], &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn delta_and_norm() {
+        let a = fp(&[1.0, 1.0]);
+        let b = fp(&[4.0, 5.0]);
+        let d = a.delta_to(&b);
+        assert_eq!(d.0, vec![3.0, 4.0]);
+        assert!((d.norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn content_hash_changes_with_content() {
+        let a = fp(&[1.0, 2.0]);
+        let mut b = a.clone();
+        assert_eq!(a.content_hash(), b.content_hash());
+        b.0[0] = 1.0001;
+        assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn finite_check() {
+        assert!(fp(&[1.0, -2.0]).all_finite());
+        assert!(!fp(&[f32::NAN]).all_finite());
+        assert!(!fp(&[f32::INFINITY]).all_finite());
+    }
+}

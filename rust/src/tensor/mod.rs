@@ -1,0 +1,12 @@
+//! Flat-parameter tensors and the on-disk/on-wire blob codec.
+//!
+//! Every model's weights cross the L2/L3 boundary as a single flat `f32`
+//! vector (see `python/compile/train.py`), so the whole coordinator is
+//! architecture-agnostic: aggregation, stores and protocols only ever see
+//! [`FlatParams`].
+
+pub mod codec;
+pub mod flat;
+
+pub use codec::{decode_blob, encode_blob};
+pub use flat::FlatParams;

@@ -1,0 +1,62 @@
+//! FNV-1a 64-bit hashing — used for weight-store state hashes (the paper's
+//! "check if the remote server has changed state (as reported by a unique
+//! hash)") and for blob integrity headers in the on-disk codec.
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Hash an f32 slice by its raw little-endian bytes.
+pub fn hash_f32s(xs: &[f32]) -> u64 {
+    // Safety-free path: serialize in chunks to avoid an extra allocation.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Combine hashes order-dependently (for store state hashes).
+pub fn combine(a: u64, b: u64) -> u64 {
+    a ^ b
+        .wrapping_add(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(a << 6)
+        .wrapping_add(a >> 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_fnv_vector() {
+        // FNV-1a("") = offset basis
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        // differs for different inputs
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn f32_hash_matches_byte_hash() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        for x in &xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(hash_f32s(&xs), fnv1a64(&bytes));
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        assert_ne!(combine(1, 2), combine(2, 1));
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained substrates: deterministic RNG, a minimal JSON
+//! parser (for `artifacts/manifest.json` — the image has no serde), and a
+//! fast non-cryptographic hash used for weight-store state hashes and blob
+//! integrity checks.
+
+pub mod hash;
+pub mod json;
+pub mod rng;
+
+pub use hash::fnv1a64;
+pub use rng::Rng;

@@ -1,0 +1,165 @@
+//! Cross-layer parity: the rust-native math must agree with the lowered
+//! Pallas/JAX artifacts executed via PJRT. This is the boundary contract of
+//! the whole three-layer design. Requires `make artifacts`.
+
+use fedless::data::{DataSource, DatasetKind, Split, SynthDataset};
+use fedless::runtime::{AggExecutor, Engine, Manifest, ModelBundle, TrainState};
+use fedless::tensor::flat::weighted_average;
+use fedless::tensor::FlatParams;
+use fedless::util::Rng;
+
+fn random_params(rng: &mut Rng, n: usize) -> FlatParams {
+    FlatParams((0..n).map(|_| rng.normal_f32()).collect())
+}
+
+#[test]
+fn agg_kernel_matches_rust_weighted_average() {
+    let engine = Engine::new().unwrap();
+    let manifest = Manifest::discover().unwrap();
+    let mut rng = Rng::new(11);
+    for &k in &[2usize, 3, 5] {
+        let agg = AggExecutor::load(&engine, &manifest, k).unwrap();
+        // one unpadded length and one multi-chunk length
+        for n in [10_000usize, manifest.chunk + 777] {
+            let params: Vec<FlatParams> =
+                (0..k).map(|_| random_params(&mut rng, n)).collect();
+            let refs: Vec<&FlatParams> = params.iter().collect();
+            let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 0.1).collect();
+            let total: f32 = w.iter().sum();
+            w.iter_mut().for_each(|x| *x /= total);
+
+            let via_kernel = agg.aggregate(&refs, &w).unwrap();
+            let via_rust = weighted_average(&refs, &w);
+            let diff = via_kernel.max_abs_diff(&via_rust);
+            assert!(
+                diff < 1e-5,
+                "k={k} n={n}: kernel vs rust max diff {diff}"
+            );
+        }
+    }
+}
+
+#[test]
+fn init_is_deterministic_across_engines() {
+    let manifest = Manifest::discover().unwrap();
+    let info = manifest.model("mnist").unwrap();
+    let e1 = Engine::new().unwrap();
+    let b1 = ModelBundle::load(&e1, info).unwrap();
+    let p1 = b1.init_params(123).unwrap();
+    let e2 = Engine::new().unwrap();
+    let b2 = ModelBundle::load(&e2, info).unwrap();
+    let p2 = b2.init_params(123).unwrap();
+    assert_eq!(p1, p2, "same seed, same params on independent engines");
+    let p3 = b2.init_params(124).unwrap();
+    assert!(p1.max_abs_diff(&p3) > 0.0);
+    assert!(p1.all_finite());
+    assert_eq!(p1.len(), info.param_count);
+}
+
+#[test]
+fn train_step_and_run_steps_agree() {
+    // the literal-resident epoch loop must compute exactly the same states
+    // as the step-at-a-time host path
+    let manifest = Manifest::discover().unwrap();
+    let info = manifest.model("mnist").unwrap();
+    let engine = Engine::new().unwrap();
+    let bundle = ModelBundle::load(&engine, info).unwrap();
+
+    let ds = std::sync::Arc::new(SynthDataset::new(DatasetKind::Mnist, 5, 500, 50));
+    let make_loader = || {
+        fedless::data::BatchLoader::new(
+            DataSource::Image { ds: std::sync::Arc::clone(&ds), split: Split::Train },
+            (0..500).collect(),
+            info.batch_size,
+            9,
+        )
+    };
+
+    let p0 = bundle.init_params(42).unwrap();
+    // path A: 3 x train_step
+    let mut sa = TrainState::new(p0.clone());
+    let mut la = make_loader();
+    for _ in 0..3 {
+        let b = la.next_batch();
+        bundle.train_step(&mut sa, &b).unwrap();
+    }
+    // path B: run_steps(3)
+    let mut sb = TrainState::new(p0);
+    let mut lb = make_loader();
+    bundle.run_steps(&mut sb, &mut lb, 3, |_, _| {}).unwrap();
+
+    assert_eq!(sa.step, 3);
+    assert_eq!(sb.step, 3);
+    let diff = sa.params.max_abs_diff(&sb.params);
+    assert!(diff == 0.0, "paths diverged by {diff}");
+}
+
+#[test]
+fn train_loss_decreases_on_fixed_shard() {
+    let manifest = Manifest::discover().unwrap();
+    let info = manifest.model("mnist").unwrap();
+    let engine = Engine::new().unwrap();
+    let bundle = ModelBundle::load(&engine, info).unwrap();
+    let ds = std::sync::Arc::new(SynthDataset::new(DatasetKind::Mnist, 6, 1000, 100));
+    let mut loader = fedless::data::BatchLoader::new(
+        DataSource::Image { ds, split: Split::Train },
+        (0..1000).collect(),
+        info.batch_size,
+        10,
+    );
+    let mut state = TrainState::new(bundle.init_params(1).unwrap());
+    let mut losses = Vec::new();
+    bundle
+        .run_steps(&mut state, &mut loader, 40, |_, m| losses.push(m.loss))
+        .unwrap();
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[35..].iter().sum::<f32>() / 5.0;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(state.params.all_finite());
+    assert!(state.step == 40);
+}
+
+#[test]
+fn eval_counts_are_bounded_and_consistent() {
+    let manifest = Manifest::discover().unwrap();
+    let info = manifest.model("mnist").unwrap();
+    let engine = Engine::new().unwrap();
+    let bundle = ModelBundle::load(&engine, info).unwrap();
+    let ds = std::sync::Arc::new(SynthDataset::new(DatasetKind::Mnist, 6, 100, 320));
+    let loader = fedless::data::BatchLoader::new(
+        DataSource::Image { ds, split: Split::Test },
+        (0..320).collect(),
+        info.batch_size,
+        4,
+    );
+    let params = bundle.init_params(2).unwrap();
+    let batches = loader.full_batches();
+    let (loss, acc) = bundle.evaluate(&params, &batches).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+    // untrained params ~ chance accuracy (10 classes)
+    assert!(acc < 0.5, "untrained acc {acc}");
+
+    // single batch path agrees with the aggregate path direction
+    let (l0, c0) = bundle.eval_batch(&params, &batches[0]).unwrap();
+    assert!(l0.is_finite());
+    assert!(c0 >= 0.0 && c0 <= info.batch_size as f32);
+}
+
+#[test]
+fn all_manifest_models_compile_and_init() {
+    let manifest = Manifest::discover().unwrap();
+    let engine = Engine::new().unwrap();
+    for (name, info) in &manifest.models {
+        // lm14m compile+init is heavier; still worth exercising weekly but
+        // keep CI fast by skipping the biggest variant here.
+        if name == "lm14m" {
+            continue;
+        }
+        let bundle = ModelBundle::load(&engine, info)
+            .unwrap_or_else(|e| panic!("compile {name}: {e}"));
+        let p = bundle.init_params(7).unwrap();
+        assert_eq!(p.len(), info.param_count, "{name}");
+        assert!(p.all_finite(), "{name}");
+    }
+}

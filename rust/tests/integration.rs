@@ -1,0 +1,261 @@
+//! End-to-end integration tests over the full stack: artifacts + runtime +
+//! data + store + protocols + evaluation. Requires `make artifacts`.
+//!
+//! Sizes are "smoke" scale so the suite stays fast; the accuracy assertions
+//! are deliberately loose (they check learning happened, not paper numbers
+//! — those are fedbench's job).
+
+use std::time::Duration;
+
+use fedless::config::{CrashSpec, ExperimentConfig, FederationMode, StoreKind};
+use fedless::node::NodeStatus;
+use fedless::sim::{run_experiment, run_trials};
+use fedless::strategy::StrategyKind;
+
+fn smoke_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        model: "mnist".into(),
+        n_nodes: 2,
+        mode: FederationMode::Async,
+        strategy: StrategyKind::FedAvg,
+        skew: 0.0,
+        epochs: 2,
+        steps_per_epoch: 25,
+        train_size: 2_000,
+        test_size: 320,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn async_mnist_learns() {
+    let res = run_experiment(&smoke_cfg()).unwrap();
+    assert!(res.all_completed);
+    assert!(
+        res.final_accuracy > 0.5,
+        "2x25 steps should beat chance by far, got {}",
+        res.final_accuracy
+    );
+    assert_eq!(res.reports.len(), 2);
+    for r in &res.reports {
+        assert_eq!(r.status, NodeStatus::Completed);
+        assert_eq!(r.epochs_done, 2);
+        assert!(r.pushes >= 1);
+        // loss decreased across epochs
+        assert!(r.epoch_losses[1] < r.epoch_losses[0] * 1.2);
+    }
+    // async: every node pushed every epoch (sample_prob = 1)
+    assert_eq!(res.store_pushes, 4);
+}
+
+#[test]
+fn sync_mnist_learns_and_waits() {
+    let mut cfg = smoke_cfg();
+    cfg.mode = FederationMode::Sync;
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    assert!(res.final_accuracy > 0.5, "{}", res.final_accuracy);
+    for r in &res.reports {
+        // sync: one aggregation per epoch, all K entries present
+        assert_eq!(r.aggregations, cfg.epochs as u64);
+    }
+}
+
+#[test]
+fn centralized_baseline_runs() {
+    let mut cfg = smoke_cfg();
+    cfg.mode = FederationMode::Local;
+    cfg.n_nodes = 1;
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    assert_eq!(res.store_pushes, 0, "local mode must not touch the store");
+    assert!(res.final_accuracy > 0.5);
+}
+
+#[test]
+fn results_are_reproducible_for_same_seed() {
+    // Sync federation is bit-deterministic: every round aggregates the
+    // same K entries regardless of thread timing. (Async is inherently
+    // timing-dependent — a pull races peers' pushes — so only sync can be
+    // asserted bit-identical; that looseness is the protocol's design,
+    // not a bug.)
+    let mut cfg = smoke_cfg();
+    cfg.mode = FederationMode::Sync;
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.final_accuracy, b.final_accuracy);
+    assert_eq!(a.final_loss, b.final_loss);
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut cfg = smoke_cfg();
+    cfg.mode = FederationMode::Sync;
+    let a = run_experiment(&cfg).unwrap();
+    cfg.seed = 8;
+    let b = run_experiment(&cfg).unwrap();
+    assert_ne!(a.final_accuracy, b.final_accuracy);
+}
+
+#[test]
+fn fs_store_full_run() {
+    let dir = std::env::temp_dir().join(format!("fedless_it_fs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = smoke_cfg();
+    cfg.store = StoreKind::Fs(dir.clone());
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    assert!(res.final_accuracy > 0.5);
+    // blobs actually landed on disk
+    let n_files = std::fs::read_dir(&dir).unwrap().count();
+    assert!(n_files >= 2, "expected blob files, found {n_files}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn crash_async_survives_sync_stalls() {
+    let mut cfg = smoke_cfg();
+    cfg.n_nodes = 3;
+    cfg.crash = Some(CrashSpec { node: 1, at_epoch: 1 });
+    cfg.sync_timeout = Duration::from_secs(2);
+
+    // async: healthy nodes complete
+    cfg.mode = FederationMode::Async;
+    let res = run_experiment(&cfg).unwrap();
+    assert!(!res.all_completed);
+    let crashed: Vec<_> = res
+        .reports
+        .iter()
+        .filter(|r| matches!(r.status, NodeStatus::Crashed { .. }))
+        .collect();
+    assert_eq!(crashed.len(), 1);
+    let healthy_done = res
+        .reports
+        .iter()
+        .filter(|r| r.status == NodeStatus::Completed)
+        .count();
+    assert_eq!(healthy_done, 2, "async healthy nodes must finish");
+
+    // sync: healthy nodes stall at the barrier of the crashed round
+    cfg.mode = FederationMode::Sync;
+    let res = run_experiment(&cfg).unwrap();
+    let stalled = res
+        .reports
+        .iter()
+        .filter(|r| matches!(r.status, NodeStatus::Stalled { .. }))
+        .count();
+    assert_eq!(stalled, 2, "sync healthy nodes must stall: {:?}",
+        res.reports.iter().map(|r| &r.status).collect::<Vec<_>>());
+}
+
+#[test]
+fn straggler_makes_sync_slower_than_async() {
+    let mut cfg = smoke_cfg();
+    cfg.n_nodes = 2;
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 15;
+    cfg.node_delays_ms = vec![0.0, 30.0]; // node 1 ~30ms/step slower
+
+    cfg.mode = FederationMode::Sync;
+    let sync = run_experiment(&cfg).unwrap();
+    cfg.mode = FederationMode::Async;
+    let asyn = run_experiment(&cfg).unwrap();
+
+    // the fast sync node idles at the barrier; async one doesn't
+    let sync_idle = sync.reports[0].wait_time;
+    let async_idle = asyn.reports[0].wait_time;
+    assert!(
+        sync_idle > async_idle + Duration::from_millis(100),
+        "sync fast-node idle {sync_idle:?} must exceed async idle {async_idle:?}"
+    );
+}
+
+#[test]
+fn sample_prob_zero_means_no_async_pushes_after_warmup() {
+    let mut cfg = smoke_cfg();
+    cfg.sample_prob = 0.0;
+    let res = run_experiment(&cfg).unwrap();
+    assert_eq!(res.store_pushes, 0, "C=0 -> WeightUpdate never runs");
+    assert!(res.all_completed);
+}
+
+#[test]
+fn trials_summarize() {
+    let cfg = smoke_cfg();
+    let set = run_trials(&cfg, 2).unwrap();
+    assert_eq!(set.results.len(), 2);
+    assert!(set.accuracy.mean > 0.4);
+    assert!(set.accuracy.ci95 >= 0.0);
+    assert!(!set.cell().is_empty());
+}
+
+#[test]
+fn strategies_all_run_end_to_end() {
+    for kind in [
+        StrategyKind::FedAvg,
+        StrategyKind::FedAvgM,
+        StrategyKind::FedAdam,
+        StrategyKind::FedAsync,
+        StrategyKind::FedBuff,
+    ] {
+        let mut cfg = smoke_cfg();
+        cfg.epochs = 2;
+        cfg.steps_per_epoch = 10;
+        cfg.strategy = kind;
+        let res = run_experiment(&cfg)
+            .unwrap_or_else(|e| panic!("strategy {} failed: {e}", kind.name()));
+        assert!(res.all_completed, "strategy {}", kind.name());
+        assert!(
+            res.final_accuracy > 0.2,
+            "strategy {} acc {}",
+            kind.name(),
+            res.final_accuracy
+        );
+    }
+}
+
+#[test]
+fn lm_end_to_end_smoke() {
+    let cfg = ExperimentConfig {
+        model: "lm".into(),
+        n_nodes: 2,
+        mode: FederationMode::Async,
+        epochs: 2,
+        steps_per_epoch: 15,
+        train_size: 600,
+        test_size: 80,
+        seed: 3,
+        ..Default::default()
+    };
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    // next-token accuracy on the structured corpus beats uniform-random
+    // (1/256) after a handful of steps (spaces dominate)
+    assert!(res.final_accuracy > 0.05, "{}", res.final_accuracy);
+    for r in &res.reports {
+        assert!(r.epoch_losses[1] < r.epoch_losses[0], "{:?}", r.epoch_losses);
+    }
+}
+
+#[test]
+fn latency_store_run_is_correct() {
+    // The injected delay itself is asserted at the store level
+    // (store::latency unit tests); end-to-end wall-clock comparisons are
+    // too noisy on a shared 1-core box (artifact-compile variance >> the
+    // injected RTTs), so here we only require that federation through a
+    // high-latency store still completes and learns.
+    use fedless::store::LatencyConfig;
+    let mut cfg = smoke_cfg();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 8;
+    cfg.latency = Some(LatencyConfig {
+        base: Duration::from_millis(80),
+        jitter: Duration::ZERO,
+        bytes_per_sec: 0,
+    });
+    let slow = run_experiment(&cfg).unwrap();
+    assert!(slow.all_completed);
+    assert!(slow.final_accuracy > 0.4);
+    assert_eq!(slow.store_pushes, 4, "federation went through the latency store");
+}

@@ -1,0 +1,254 @@
+//! Property-based protocol invariants, randomized across many seeds with
+//! the crate's deterministic RNG (the image carries no proptest; failures
+//! print the offending seed so any case replays exactly).
+
+use std::sync::Arc;
+
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::data::Partitioner;
+use fedless::sim::run_experiment;
+use fedless::store::{MemoryStore, PushRequest, WeightStore};
+use fedless::strategy::{Contribution, StrategyKind};
+use fedless::tensor::codec::{decode_blob, encode_blob, BlobMeta};
+use fedless::tensor::flat::weighted_average;
+use fedless::tensor::FlatParams;
+use fedless::util::Rng;
+
+// ---------------------------------------------------------------------------
+// aggregation properties
+
+/// FedAvg output is a convex combination: every coordinate lies within the
+/// per-coordinate min/max envelope of the inputs.
+#[test]
+fn prop_fedavg_is_convex_combination() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let k = 2 + rng.below(4);
+        let n = 1 + rng.below(200);
+        let xs: Vec<FlatParams> = (0..k)
+            .map(|_| FlatParams((0..n).map(|_| rng.normal_f32() * 10.0).collect()))
+            .collect();
+        let mut w: Vec<f32> = (0..k).map(|_| rng.f32() + 1e-3).collect();
+        let tot: f32 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= tot);
+        let refs: Vec<&FlatParams> = xs.iter().collect();
+        let avg = weighted_average(&refs, &w);
+        for i in 0..n {
+            let lo = xs.iter().map(|x| x.0[i]).fold(f32::INFINITY, f32::min);
+            let hi = xs.iter().map(|x| x.0[i]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(
+                avg.0[i] >= lo - 1e-4 && avg.0[i] <= hi + 1e-4,
+                "seed {seed} coord {i}: {} outside [{lo}, {hi}]",
+                avg.0[i]
+            );
+        }
+    }
+}
+
+/// Aggregating K identical parameter vectors is the identity for every
+/// strategy (first call; fixed-point property of Eq. 1).
+#[test]
+fn prop_identical_inputs_are_fixed_point() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let n = 1 + rng.below(100);
+        let x = FlatParams((0..n).map(|_| rng.normal_f32()).collect());
+        for kind in [StrategyKind::FedAvg, StrategyKind::FedAvgM, StrategyKind::FedAdam] {
+            let mut s = kind.build();
+            let contribs: Vec<Contribution> = (0..3)
+                .map(|i| Contribution {
+                    node_id: i,
+                    n_examples: 100,
+                    is_self: i == 0,
+                    seq: i as u64,
+                    params: Arc::new(x.clone()),
+                })
+                .collect();
+            let out = s.aggregate(&contribs).unwrap();
+            let diff = out.max_abs_diff(&x);
+            assert!(diff < 1e-5, "seed {seed} strategy {} diff {diff}", kind.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// partitioner properties
+
+#[test]
+fn prop_partition_is_exact_cover_at_any_skew() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x9999);
+        let n_nodes = 1 + rng.below(5);
+        let skew = rng.f64();
+        let n = 200 + rng.below(2000);
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+        let shards = Partitioner::new(n_nodes, skew, 10).assign(&labels, seed);
+        let mut seen = vec![false; n];
+        for shard in &shards {
+            for &i in shard {
+                assert!(!seen[i], "seed {seed}: duplicate assignment");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "seed {seed}: examples dropped");
+    }
+}
+
+#[test]
+fn prop_higher_skew_increases_home_fraction() {
+    // monotonicity in expectation: home-label fraction grows with s
+    let mut rng = Rng::new(0xF00);
+    let labels: Vec<usize> = (0..20_000).map(|_| rng.below(10)).collect();
+    let mut last = 0.0;
+    for (i, skew) in [0.0, 0.5, 0.9, 1.0].iter().enumerate() {
+        let p = Partitioner::new(2, *skew, 10);
+        let shards = p.assign(&labels, 77);
+        let home: usize = shards
+            .iter()
+            .enumerate()
+            .map(|(node, shard)| {
+                shard.iter().filter(|&&ix| p.home_node(labels[ix]) == node).count()
+            })
+            .sum();
+        let frac = home as f64 / labels.len() as f64;
+        assert!(frac >= last - 0.02, "skew {skew}: home frac {frac} < prev {last}");
+        if i == 3 {
+            assert!(frac > 0.999, "full skew must be fully partitioned");
+        }
+        last = frac;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec properties
+
+#[test]
+fn prop_codec_roundtrip_random_payloads() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xC0DEC);
+        let n = rng.below(3000);
+        let params = FlatParams(
+            (0..n)
+                .map(|_| f32::from_bits(rng.next_u64() as u32))
+                .map(|f| if f.is_nan() { 0.0 } else { f }) // NaN != NaN
+                .collect(),
+        );
+        let meta = BlobMeta {
+            node_id: rng.next_u64() as u32,
+            round: rng.next_u64(),
+            epoch: rng.next_u64(),
+            n_examples: rng.next_u64(),
+        };
+        let blob = encode_blob(&meta, &params);
+        let (m2, p2) = decode_blob(&blob).unwrap();
+        assert_eq!(meta, m2, "seed {seed}");
+        assert_eq!(params, p2, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_codec_rejects_any_single_bitflip_in_payload() {
+    let mut rng = Rng::new(42);
+    let params = FlatParams((0..100).map(|_| rng.normal_f32()).collect());
+    let meta = BlobMeta { node_id: 1, round: 2, epoch: 3, n_examples: 4 };
+    let blob = encode_blob(&meta, &params);
+    let header = fedless::tensor::codec::HEADER_LEN;
+    for trial in 0..30 {
+        let mut corrupted = blob.clone();
+        let pos = header + (trial * 13) % (corrupted.len() - header);
+        corrupted[pos] ^= 1 << (trial % 8);
+        assert!(decode_blob(&corrupted).is_err(), "bitflip at {pos} undetected");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// store properties
+
+/// latest_per_node is exactly the highest-seq entry per node, for any
+/// random push interleaving.
+#[test]
+fn prop_store_latest_is_max_seq() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x5708E);
+        let store = MemoryStore::new();
+        let mut expected: std::collections::BTreeMap<usize, (u64, f32)> = Default::default();
+        for _ in 0..rng.below(60) + 1 {
+            let node = rng.below(6);
+            let val = rng.normal_f32();
+            let seq = store
+                .push(PushRequest {
+                    node_id: node,
+                    round: 0,
+                    epoch: 0,
+                    n_examples: 1,
+                    params: Arc::new(FlatParams(vec![val; 3])),
+                })
+                .unwrap();
+            expected.insert(node, (seq, val));
+        }
+        let latest = store.latest_per_node().unwrap();
+        assert_eq!(latest.len(), expected.len(), "seed {seed}");
+        for e in latest {
+            let (seq, val) = expected[&e.node_id];
+            assert_eq!(e.seq, seq, "seed {seed}");
+            assert_eq!(e.params.0[0], val, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol-level invariant (needs artifacts)
+
+/// In synchronous serverless federation every node aggregates the same
+/// round set, so all nodes must end up with bit-identical weights — the
+/// core correctness claim of server-free sync federation (§3).
+#[test]
+fn sync_nodes_end_with_identical_weights() {
+    for seed in [3u64, 17] {
+        let cfg = ExperimentConfig {
+            model: "mnist".into(),
+            n_nodes: 3,
+            mode: FederationMode::Sync,
+            epochs: 2,
+            steps_per_epoch: 8,
+            train_size: 900,
+            test_size: 96,
+            seed,
+            ..Default::default()
+        };
+        let res = run_experiment(&cfg).unwrap();
+        assert!(res.all_completed);
+        let finals: Vec<&FlatParams> =
+            res.reports.iter().map(|r| r.final_params.as_ref().unwrap()).collect();
+        for (i, f) in finals.iter().enumerate().skip(1) {
+            let diff = finals[0].max_abs_diff(f);
+            assert_eq!(
+                diff, 0.0,
+                "seed {seed}: node {i} diverged from node 0 by {diff}"
+            );
+        }
+    }
+}
+
+/// Async with C = 1 and a memory store: every node aggregates at least
+/// once, and the store ends holding exactly one latest entry per node.
+#[test]
+fn async_all_nodes_aggregate_and_store_converges() {
+    let cfg = ExperimentConfig {
+        model: "mnist".into(),
+        n_nodes: 3,
+        mode: FederationMode::Async,
+        epochs: 3,
+        steps_per_epoch: 8,
+        train_size: 900,
+        test_size: 96,
+        seed: 5,
+        ..Default::default()
+    };
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    assert_eq!(res.store_pushes, 9, "3 nodes x 3 epochs with C=1");
+    for r in &res.reports {
+        assert!(r.aggregations >= 1, "node {} never aggregated", r.node_id);
+    }
+}
