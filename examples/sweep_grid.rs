@@ -1,0 +1,47 @@
+//! Sweep: reproduce a paper-style table in one call.
+//!
+//! Runs a sync-vs-async × FedAvg/FedAvgM grid (2 seeds per cell, 8 trials
+//! total) on the work-stealing sweep scheduler and prints the aggregated
+//! mean ± std table — the programmatic twin of:
+//!
+//! ```sh
+//! cargo run --release --bin fedbench -- sweep examples/sweep_small.json
+//! ```
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example sweep_grid
+//! ```
+
+use fedless::sweep::{run_sweep, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = SweepSpec::parse_json(
+        r#"{
+            "model": "mnist",
+            "modes": ["sync", "async"],
+            "strategies": ["fedavg", "fedavgm"],
+            "skews": 0.9,
+            "n_nodes": 2,
+            "trials": 2,
+            "epochs": 2,
+            "steps_per_epoch": 25,
+            "train_size": 2000,
+            "test_size": 320,
+            "store": "sharded",
+            "jobs": 4
+        }"#,
+    )?;
+
+    println!(
+        "running {} cells x {} seeds = {} trials on up to {} workers...\n",
+        spec.cells().len(),
+        spec.seeds.len(),
+        spec.n_trials(),
+        if spec.jobs == 0 { fedless::sweep::default_jobs() } else { spec.jobs },
+    );
+
+    let report = run_sweep(&spec)?;
+    println!("{}", report.to_markdown());
+    println!("csv:\n{}", report.to_csv());
+    Ok(())
+}

@@ -7,6 +7,8 @@
 //! fedbench fig1          straggler timelines + sync/async wall-clock
 //! fedbench robustness    crash injection: async survives, sync stalls
 //! fedbench all           every table at the chosen scale
+//! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
+//!                        run a custom experiment grid in parallel
 //! ```
 //!
 //! Each cell reports `mean ± 95% CI` over repeated trials next to the
@@ -22,6 +24,7 @@ use std::time::Duration;
 use fedless::config::{CrashSpec, ExperimentConfig, FederationMode, Scale};
 use fedless::sim::{run_experiment, run_trials};
 use fedless::strategy::StrategyKind;
+use fedless::sweep::{run_sweep, SweepSpec};
 
 // ---------------------------------------------------------------------------
 // scale presets
@@ -332,15 +335,81 @@ fn run_one(name: &str, o: &Opts) -> Option<TableOut> {
     }
 }
 
+/// `fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]` — run a
+/// JSON-defined experiment grid on the bounded sweep scheduler and print
+/// the aggregated mean ± std table.
+fn cmd_sweep(args: &[String]) -> Result<(), String> {
+    let mut spec_path: Option<&str> = None;
+    let mut jobs: Option<usize> = None;
+    let mut out: Option<&str> = None;
+    let mut csv: Option<&str> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--jobs" => {
+                i += 1;
+                let v = args.get(i).ok_or("--jobs needs a value")?;
+                jobs = Some(v.parse().map_err(|_| format!("bad --jobs {v:?}"))?);
+            }
+            "--out" => {
+                i += 1;
+                out = Some(args.get(i).map(String::as_str).ok_or("--out needs a value")?);
+            }
+            "--csv" => {
+                i += 1;
+                csv = Some(args.get(i).map(String::as_str).ok_or("--csv needs a value")?);
+            }
+            other if spec_path.is_none() && !other.starts_with("--") => {
+                spec_path = Some(other);
+            }
+            other => return Err(format!("unknown sweep flag {other:?}")),
+        }
+        i += 1;
+    }
+    let spec_path =
+        spec_path.ok_or("usage: fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]")?;
+    let text = std::fs::read_to_string(spec_path)
+        .map_err(|e| format!("reading {spec_path:?}: {e}"))?;
+    let mut spec = SweepSpec::parse_json(&text).map_err(|e| format!("{e:#}"))?;
+    if let Some(j) = jobs {
+        spec.jobs = j;
+    }
+    eprintln!(
+        "sweep: {} cell(s) x {} seed(s) = {} trial(s)",
+        spec.cells().len(),
+        spec.seeds.len(),
+        spec.n_trials()
+    );
+    let report = run_sweep(&spec).map_err(|e| format!("{e:#}"))?;
+    println!("{}", report.to_markdown());
+    if let Some(path) = out {
+        std::fs::write(path, report.to_markdown()).map_err(|e| format!("write {path:?}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = csv {
+        std::fs::write(path, report.to_csv()).map_err(|e| format!("write {path:?}: {e}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().cloned() else {
         eprintln!(
             "usage: fedbench <table1..table7|fig1|robustness|all> \
-             [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE]"
+             [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE]\n\
+             \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);
     };
+    if cmd == "sweep" {
+        if let Err(e) = cmd_sweep(&args[1..]) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let mut o = Opts { scale: Scale::Small, trials: None, out: None, seed: 42 };
     let mut i = 1;
     while i < args.len() {

@@ -10,7 +10,7 @@
 //! skew = 0.9
 //! epochs = 3
 //! steps_per_epoch = 120
-//! store = memory          # memory | fs:/path/to/dir
+//! store = memory          # memory | sharded[:N] | fs:/path/to/dir
 //! node_delays_ms = 0,40   # per-node straggler delays
 //! crash = 1@2             # crash node 1 at epoch 2
 //! ```
@@ -22,9 +22,12 @@ use super::{CrashSpec, ExperimentConfig, FederationMode, StoreKind};
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 
+/// A parse error pointing at the offending config line.
 #[derive(Debug)]
 pub struct ConfigError {
+    /// 1-based line number in the config text.
     pub line: usize,
+    /// Human-readable description of what went wrong.
     pub msg: String,
 }
 
@@ -83,26 +86,14 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                     .map_err(|_| err(line_no, format!("bad seed {value:?}")))?
             }
             "store" => {
-                cfg.store = if value == "memory" {
-                    StoreKind::Memory
-                } else if let Some(path) = value.strip_prefix("fs:") {
-                    StoreKind::Fs(path.into())
-                } else {
-                    return Err(err(line_no, format!("unknown store {value:?}")));
-                }
+                cfg.store = StoreKind::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown store {value:?}")))?
             }
             "latency" => {
                 cfg.latency = match value {
                     "none" => None,
                     "s3" => Some(LatencyConfig::s3_like()),
-                    ms => {
-                        let v = parse_f64(ms)?;
-                        Some(LatencyConfig {
-                            base: Duration::from_secs_f64(v / 1000.0),
-                            jitter: Duration::from_secs_f64(v / 2000.0),
-                            bytes_per_sec: 200_000_000,
-                        })
-                    }
+                    ms => Some(LatencyConfig::from_ms(parse_f64(ms)?)),
                 }
             }
             "node_delays_ms" => {
@@ -176,6 +167,15 @@ mod tests {
         assert_eq!(e.line, 1);
         let e = parse_config_text("just a line\n").unwrap_err();
         assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn sharded_store_values() {
+        let cfg = parse_config_text("store = sharded\n").unwrap();
+        assert_eq!(cfg.store, StoreKind::Sharded(crate::store::DEFAULT_SHARDS));
+        let cfg = parse_config_text("store = sharded:16\n").unwrap();
+        assert_eq!(cfg.store, StoreKind::Sharded(16));
+        assert!(parse_config_text("store = sharded:zero\n").is_err());
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub enum FederationMode {
 }
 
 impl FederationMode {
+    /// Parse a config/CLI mode name (`sync` / `async` / `local`).
     pub fn parse(s: &str) -> Option<FederationMode> {
         match s.to_ascii_lowercase().as_str() {
             "sync" => Some(FederationMode::Sync),
@@ -32,6 +33,7 @@ impl FederationMode {
         }
     }
 
+    /// Canonical lowercase name (inverse of [`FederationMode::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             FederationMode::Sync => "sync",
@@ -53,6 +55,7 @@ pub enum Scale {
 }
 
 impl Scale {
+    /// Parse a CLI scale name (`smoke` / `small` / `paper`).
     pub fn parse(s: &str) -> Option<Scale> {
         match s.to_ascii_lowercase().as_str() {
             "smoke" => Some(Scale::Smoke),
@@ -62,6 +65,7 @@ impl Scale {
         }
     }
 
+    /// Canonical lowercase name (inverse of [`Scale::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             Scale::Smoke => "smoke",
@@ -74,14 +78,37 @@ impl Scale {
 /// Where weights are exchanged.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StoreKind {
+    /// Single-lock in-process store ([`crate::store::MemoryStore`]).
     Memory,
+    /// In-process store with this many independently locked shards
+    /// ([`crate::store::ShardedStore`]) — use for 8+ nodes or sweeps.
+    Sharded(usize),
+    /// Directory of blob files ([`crate::store::FsStore`]) — shareable
+    /// across OS processes, like the paper's S3 bucket.
     Fs(PathBuf),
+}
+
+impl StoreKind {
+    /// Parse a config value: `memory`, `sharded`, `sharded:N`, or
+    /// `fs:/path/to/dir`.
+    pub fn parse(s: &str) -> Option<StoreKind> {
+        if s == "memory" {
+            Some(StoreKind::Memory)
+        } else if s == "sharded" {
+            Some(StoreKind::Sharded(crate::store::DEFAULT_SHARDS))
+        } else if let Some(n) = s.strip_prefix("sharded:") {
+            n.parse::<usize>().ok().filter(|&n| n >= 1).map(StoreKind::Sharded)
+        } else {
+            s.strip_prefix("fs:").map(|path| StoreKind::Fs(path.into()))
+        }
+    }
 }
 
 /// Failure injection: crash a node partway through training (§4.2.1
 /// robustness experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CrashSpec {
+    /// Which node to crash.
     pub node: usize,
     /// Crash at the start of this 0-based epoch.
     pub at_epoch: usize,
@@ -92,12 +119,17 @@ pub struct CrashSpec {
 pub struct ExperimentConfig {
     /// Model/dataset family: "mnist", "cifar", "lm" (+ lm_medium/lm14m).
     pub model: String,
+    /// Number of federated nodes (clients).
     pub n_nodes: usize,
+    /// Federation protocol: sync barrier, async Algorithm 1, or local.
     pub mode: FederationMode,
+    /// Client-side aggregation strategy.
     pub strategy: StrategyKind,
     /// Label skew s ∈ [0, 1] (paper §4.1). Ignored for LM (random split).
     pub skew: f64,
+    /// Local training epochs per node; federation happens at epoch ends.
     pub epochs: usize,
+    /// Local SGD/Adam steps per epoch.
     pub steps_per_epoch: usize,
     /// Client-sampling probability C (Algorithm 1). 1.0 = every epoch.
     pub sample_prob: f64,
@@ -105,7 +137,9 @@ pub struct ExperimentConfig {
     pub train_size: usize,
     /// Held-out (un-partitioned) eval examples.
     pub test_size: usize,
+    /// Trial seed: drives data synthesis, partitioning, init and sampling.
     pub seed: u64,
+    /// Which weight-store backend the nodes share.
     pub store: StoreKind,
     /// Simulated store latency (None = instantaneous in-memory).
     pub latency: Option<LatencyConfig>,
@@ -221,6 +255,19 @@ mod tests {
         assert_eq!(FederationMode::parse("centralized"), Some(FederationMode::Local));
         assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
         assert_eq!(Scale::parse("x"), None);
+    }
+
+    #[test]
+    fn store_kind_parse() {
+        assert_eq!(StoreKind::parse("memory"), Some(StoreKind::Memory));
+        assert_eq!(
+            StoreKind::parse("sharded"),
+            Some(StoreKind::Sharded(crate::store::DEFAULT_SHARDS))
+        );
+        assert_eq!(StoreKind::parse("sharded:4"), Some(StoreKind::Sharded(4)));
+        assert_eq!(StoreKind::parse("fs:/tmp/ws"), Some(StoreKind::Fs("/tmp/ws".into())));
+        assert_eq!(StoreKind::parse("sharded:0"), None);
+        assert_eq!(StoreKind::parse("s3"), None);
     }
 
     #[test]

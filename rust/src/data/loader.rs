@@ -14,13 +14,16 @@ use crate::util::Rng;
 /// Batch feature data — images are f32, LM token windows are i32.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BatchData {
+    /// Flattened f32 image features.
     F32(Vec<f32>),
+    /// Flattened i32 token windows.
     I32(Vec<i32>),
 }
 
 /// One training/eval batch in artifact layout.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Flattened feature data.
     pub x: BatchData,
     /// Class labels (images) or all-zeros dummy (LM — targets come from the
     /// token window itself).
@@ -32,8 +35,20 @@ pub struct Batch {
 /// Where a loader's examples come from.
 #[derive(Clone)]
 pub enum DataSource {
-    Image { ds: Arc<SynthDataset>, split: Split },
-    Text { corpus: Arc<TextCorpus>, seq_len: usize },
+    /// A split of a synthetic image dataset.
+    Image {
+        /// The shared dataset.
+        ds: Arc<SynthDataset>,
+        /// Which split to read.
+        split: Split,
+    },
+    /// Fixed-stride windows over a synthetic text corpus.
+    Text {
+        /// The shared corpus.
+        corpus: Arc<TextCorpus>,
+        /// Window length in tokens (the model sees `seq_len + 1`).
+        seq_len: usize,
+    },
 }
 
 /// Shuffled cycling batch iterator over a shard (list of example indices).
@@ -48,6 +63,8 @@ pub struct BatchLoader {
 }
 
 impl BatchLoader {
+    /// Loader over `indices` (this node's shard) of `source`. The shard
+    /// must be non-empty; iteration order is deterministic in `seed`.
     pub fn new(source: DataSource, mut indices: Vec<usize>, batch_size: usize, seed: u64) -> Self {
         assert!(!indices.is_empty(), "empty shard");
         assert!(batch_size > 0);

@@ -15,12 +15,17 @@ use crate::util::Rng;
 /// Assigns example indices to federated nodes with controllable label skew.
 #[derive(Clone, Debug)]
 pub struct Partitioner {
+    /// Number of nodes to split across.
     pub n_nodes: usize,
+    /// Label skew s ∈ [0, 1].
     pub skew: f64,
+    /// Total label classes (defines the home-node ranges).
     pub num_classes: usize,
 }
 
 impl Partitioner {
+    /// A partitioner for `n_nodes` nodes at label skew `skew` over
+    /// `num_classes` classes.
     pub fn new(n_nodes: usize, skew: f64, num_classes: usize) -> Self {
         assert!(n_nodes >= 1, "need at least one node");
         assert!((0.0..=1.0).contains(&skew), "skew must be in [0,1]");

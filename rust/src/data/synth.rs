@@ -24,6 +24,7 @@ pub enum DatasetKind {
 }
 
 impl DatasetKind {
+    /// Image dimensions `(height, width, channels)`.
     pub fn dims(self) -> (usize, usize, usize) {
         match self {
             DatasetKind::Mnist => (28, 28, 1),
@@ -31,15 +32,18 @@ impl DatasetKind {
         }
     }
 
+    /// Number of label classes.
     pub fn num_classes(self) -> usize {
         10
     }
 
+    /// Flattened per-example feature length (h × w × c).
     pub fn example_len(self) -> usize {
         let (h, w, c) = self.dims();
         h * w * c
     }
 
+    /// Parse a dataset name (`mnist` / `cifar`).
     pub fn parse(s: &str) -> Option<DatasetKind> {
         match s {
             "mnist" => Some(DatasetKind::Mnist),
@@ -92,9 +96,13 @@ struct Blob {
 
 /// A synthetic labelled image dataset.
 pub struct SynthDataset {
+    /// Which dataset family (shapes/classes).
     pub kind: DatasetKind,
+    /// Generation seed: same seed → bit-identical dataset.
     pub seed: u64,
+    /// Number of train examples.
     pub train_len: usize,
+    /// Number of test examples.
     pub test_len: usize,
     prototypes: Vec<Vec<Blob>>, // per class
     /// Pre-rendered prototype images (perf: renders each class's Gaussian
@@ -105,6 +113,7 @@ pub struct SynthDataset {
 }
 
 impl SynthDataset {
+    /// Generate (lazily — prototypes only) a dataset of the given sizes.
     pub fn new(kind: DatasetKind, seed: u64, train_len: usize, test_len: usize) -> Self {
         let mut proto_rng = Rng::new(seed ^ 0xDA7A_5E1D);
         let (_, _, ch) = kind.dims();
@@ -189,6 +198,7 @@ impl SynthDataset {
         label
     }
 
+    /// Allocating variant of [`SynthDataset::example_into`].
     pub fn example(&self, split: Split, idx: usize) -> (Vec<f32>, usize) {
         let mut out = vec![0.0; self.kind.example_len()];
         let label = self.example_into(split, idx, &mut out);
@@ -208,7 +218,9 @@ impl SynthDataset {
 /// Train/test split selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// The training split (partitioned across nodes).
     Train,
+    /// The held-out evaluation split.
     Test,
 }
 

@@ -34,6 +34,11 @@
 //! let result = run_experiment(&exp).unwrap();
 //! println!("test accuracy = {:.3}", result.final_accuracy);
 //! ```
+//!
+//! To reproduce a whole paper table (a *grid* of experiments) in one
+//! call, see the [`sweep`] module and the `fedbench sweep` subcommand.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod data;
@@ -43,6 +48,7 @@ pub mod runtime;
 pub mod sim;
 pub mod store;
 pub mod strategy;
+pub mod sweep;
 pub mod tensor;
 pub mod util;
 
@@ -54,7 +60,8 @@ pub mod prelude {
     pub use crate::node::{NodeHandle, NodeReport};
     pub use crate::runtime::{Engine, ModelBundle};
     pub use crate::sim::{run_experiment, run_trials, ExperimentResult};
-    pub use crate::store::{FsStore, LatencyStore, MemoryStore, WeightStore};
+    pub use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
     pub use crate::strategy::StrategyKind;
+    pub use crate::sweep::{run_sweep, SweepReport, SweepSpec};
     pub use crate::tensor::FlatParams;
 }

@@ -33,6 +33,7 @@ impl RunLogger {
         })
     }
 
+    /// The run directory this logger writes into.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

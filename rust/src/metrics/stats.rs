@@ -24,14 +24,18 @@ fn t95(df: usize) -> f64 {
 /// Mean ± half-width of the 95% CI over a set of trial results.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Sample mean.
     pub mean: f64,
+    /// Sample standard deviation (Bessel-corrected; 0 when n == 1).
     pub std: f64,
     /// Half-width of the 95% confidence interval (0 when n == 1).
     pub ci95: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample. Panics on an empty slice.
     pub fn of(xs: &[f64]) -> Summary {
         let n = xs.len();
         assert!(n > 0, "summary of empty sample");
@@ -51,6 +55,16 @@ impl Summary {
             format!("{:.3}", self.mean)
         } else {
             format!("{:.3} ± {:.3}", self.mean, self.ci95)
+        }
+    }
+
+    /// `mean ± std` formatting (used by sweep reports, where std across
+    /// seeds is the more natural spread measure than a CI half-width).
+    pub fn fmt_mean_std(&self) -> String {
+        if self.n == 1 {
+            format!("{:.3}", self.mean)
+        } else {
+            format!("{:.3} ± {:.3}", self.mean, self.std)
         }
     }
 }
@@ -103,6 +117,14 @@ mod tests {
         let s = Summary::of(&[2.0, 2.0, 2.0]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn mean_std_formatting() {
+        assert_eq!(Summary::of(&[0.5]).fmt_mean_std(), "0.500");
+        let s = Summary::of(&[0.9, 1.1]);
+        // std = sqrt(0.02) = 0.1414...
+        assert_eq!(s.fmt_mean_std(), "1.000 ± 0.141");
     }
 
     #[test]

@@ -10,13 +10,18 @@ use std::time::{Duration, Instant};
 /// What a node was doing during a span.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SpanKind {
+    /// Local training steps.
     Train,
+    /// Blocked polling the sync barrier for peers.
     Wait,
+    /// Pushing/pulling/aggregating through the weight store.
     Aggregate,
+    /// Injected crash (the node stops here).
     Crashed,
 }
 
 impl SpanKind {
+    /// One-character glyph used by [`render_ascii`].
     pub fn glyph(self) -> char {
         match self {
             SpanKind::Train => '#',
@@ -27,10 +32,14 @@ impl SpanKind {
     }
 }
 
+/// One recorded activity interval.
 #[derive(Clone, Debug)]
 pub struct Span {
+    /// What the node was doing.
     pub kind: SpanKind,
+    /// Start offset from the shared origin.
     pub start: Duration,
+    /// End offset from the shared origin.
     pub end: Duration,
 }
 
@@ -38,11 +47,14 @@ pub struct Span {
 #[derive(Debug)]
 pub struct Timeline {
     origin: Instant,
+    /// The node these spans belong to.
     pub node_id: usize,
+    /// Recorded spans, in recording order.
     pub spans: Vec<Span>,
 }
 
 impl Timeline {
+    /// Empty timeline for `node_id`, measuring against `origin`.
     pub fn new(node_id: usize, origin: Instant) -> Self {
         Timeline { origin, node_id, spans: Vec::new() }
     }
@@ -56,6 +68,7 @@ impl Timeline {
         });
     }
 
+    /// Total time recorded under `kind` across all spans.
     pub fn total(&self, kind: SpanKind) -> Duration {
         self.spans
             .iter()
@@ -82,7 +95,11 @@ impl Timeline {
 /// ASCII rendering of a set of node timelines (Figure-1 style). The common
 /// setup prefix (engine construction + artifact compilation, before any
 /// span starts) is trimmed so the picture shows the federation dynamics.
-pub fn render_ascii(timelines: &[Timeline], width: usize) -> String {
+///
+/// Takes timelines by reference so callers holding them inside other
+/// structures (e.g. [`crate::node::NodeReport`]) can render without
+/// cloning any span data.
+pub fn render_ascii(timelines: &[&Timeline], width: usize) -> String {
     let t0 = timelines
         .iter()
         .flat_map(|t| t.spans.iter().map(|s| s.start))
@@ -151,7 +168,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(2));
         a.record(SpanKind::Train, s);
         b.record(SpanKind::Wait, s);
-        let art = render_ascii(&[a, b], 40);
+        let art = render_ascii(&[&a, &b], 40);
         assert_eq!(art.lines().count(), 3); // header + 2 rows
         assert!(art.contains("node  0"));
         assert!(art.contains('#'));

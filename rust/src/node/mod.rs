@@ -10,6 +10,32 @@
 //!    aggregating **client-side** with its own [`crate::strategy::Strategy`]
 //!    instance,
 //! 3. repeats for `epochs`, then reports its final weights.
+//!
+//! Most callers go through [`crate::sim::run_experiment`], which spawns
+//! one node per data shard and collects the [`NodeReport`]s:
+//!
+//! ```no_run
+//! use fedless::config::ExperimentConfig;
+//! use fedless::node::NodeStatus;
+//! use fedless::sim::run_experiment;
+//!
+//! let result = run_experiment(&ExperimentConfig::default()).unwrap();
+//! for report in &result.reports {
+//!     assert_eq!(report.status, NodeStatus::Completed);
+//!     println!(
+//!         "node {}: {} epochs, {} aggregations, idle {:.0}%",
+//!         report.node_id,
+//!         report.epochs_done,
+//!         report.aggregations,
+//!         100.0 * report.timeline.idle_fraction(),
+//!     );
+//! }
+//! ```
+//!
+//! Driving nodes directly (custom orchestration) means building a
+//! [`NodeCtx`] per node — shared store, shared start barrier, per-node
+//! data shard — and calling [`spawn_node`]; see `sim/experiment.rs` for
+//! the canonical wiring.
 
 mod worker;
 
@@ -26,10 +52,16 @@ pub enum NodeStatus {
     /// Ran all epochs.
     Completed,
     /// Injected crash (failure experiments).
-    Crashed { at_epoch: usize },
+    Crashed {
+        /// The 0-based epoch at which the crash was injected.
+        at_epoch: usize,
+    },
     /// Sync barrier timed out waiting for peers (e.g. a peer crashed —
     /// the paper's "in synchronous training, the other nodes are stuck").
-    Stalled { at_round: u64 },
+    Stalled {
+        /// The round whose barrier the node gave up on.
+        at_round: u64,
+    },
     /// Runtime error.
     Failed(String),
 }
@@ -37,8 +69,11 @@ pub enum NodeStatus {
 /// Everything a node thread reports back to the experiment driver.
 #[derive(Debug)]
 pub struct NodeReport {
+    /// Which node this report came from.
     pub node_id: usize,
+    /// How the node finished.
     pub status: NodeStatus,
+    /// Completed local epochs.
     pub epochs_done: usize,
     /// Final local weights (after the last client-side aggregation).
     pub final_params: Option<FlatParams>,
@@ -54,17 +89,22 @@ pub struct NodeReport {
     pub pushes: u64,
     /// Wall-clock the node spent in each phase.
     pub timeline: Timeline,
+    /// Total time spent in local training steps.
     pub train_time: Duration,
+    /// Total time spent blocked on the sync barrier.
     pub wait_time: Duration,
 }
 
 /// Join handle + node id for a spawned node.
 pub struct NodeHandle {
+    /// Which node this handle joins.
     pub node_id: usize,
+    /// The underlying OS thread handle.
     pub join: std::thread::JoinHandle<NodeReport>,
 }
 
 impl NodeHandle {
+    /// Join the node thread; a panicked node yields a `Failed` report.
     pub fn wait(self) -> NodeReport {
         match self.join.join() {
             Ok(r) => r,

@@ -31,16 +31,23 @@ use super::{NodeHandle, NodeReport, NodeStatus};
 
 /// Everything a node thread needs (moved into the thread).
 pub struct NodeCtx {
+    /// This node's id (also its index into per-node config vectors).
     pub node_id: usize,
+    /// The experiment configuration (shared, read-only).
     pub cfg: Arc<ExperimentConfig>,
+    /// Artifact manifest for loading the model bundle.
     pub manifest: Arc<Manifest>,
+    /// The weight store shared by all nodes of the experiment.
     pub store: Arc<dyn WeightStore>,
+    /// This node's own aggregation strategy instance (client-side state).
     pub strategy: Box<dyn Strategy>,
+    /// Batch loader over this node's data shard.
     pub loader: BatchLoader,
     /// Shared wall-clock origin for timelines.
     pub origin: Instant,
     /// Shared start barrier so all nodes begin epoch 0 together.
     pub start: Arc<std::sync::Barrier>,
+    /// Optional shared run logger (CSV metrics + JSONL events).
     pub logger: Option<Arc<RunLogger>>,
 }
 

@@ -19,7 +19,9 @@ use crate::tensor::FlatParams;
 /// Chunked FedAvg aggregation via the compiled Pallas kernel.
 pub struct AggExecutor {
     exe: xla::PjRtLoadedExecutable,
+    /// Number of clients the loaded artifact aggregates.
     pub k: usize,
+    /// Chunk width the artifact was lowered with.
     pub chunk: usize,
 }
 

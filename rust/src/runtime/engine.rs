@@ -27,11 +27,13 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Create a PJRT CPU client for the calling thread.
     pub fn new() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         Ok(Engine { client })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -58,9 +60,13 @@ impl Engine {
 /// Host-side training state (params + Adam moments + step counter).
 #[derive(Clone, Debug)]
 pub struct TrainState {
+    /// Model parameters.
     pub params: FlatParams,
+    /// Adam first-moment buffer.
     pub m: FlatParams,
+    /// Adam second-moment buffer.
     pub v: FlatParams,
+    /// Optimizer step counter (drives bias correction).
     pub step: i32,
 }
 
@@ -83,6 +89,7 @@ impl TrainState {
 /// Per-step metrics from the train artifact.
 #[derive(Clone, Copy, Debug)]
 pub struct StepMetrics {
+    /// Mean training loss of the step's batch.
     pub loss: f32,
     /// Correct predictions in the batch (count, not rate).
     pub acc_count: f32,
@@ -92,6 +99,7 @@ pub struct StepMetrics {
 
 /// One model's compiled executables.
 pub struct ModelBundle {
+    /// The manifest entry this bundle was compiled from.
     pub info: ModelInfo,
     init_exe: xla::PjRtLoadedExecutable,
     train_exe: xla::PjRtLoadedExecutable,
@@ -235,7 +243,9 @@ impl ModelBundle {
     }
 }
 
-/// Typed aliases kept for API clarity in downstream code.
+/// Typed alias kept for API clarity in downstream code.
 pub type InitStep = ModelBundle;
+/// Typed alias kept for API clarity in downstream code.
 pub type TrainStep = ModelBundle;
+/// Typed alias kept for API clarity in downstream code.
 pub type EvalStep = ModelBundle;

@@ -12,17 +12,25 @@ use crate::util::json::Json;
 /// Per-model artifact info.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
+    /// Model name (the manifest key, e.g. "mnist").
     pub name: String,
+    /// Flat parameter vector length P.
     pub param_count: usize,
+    /// Batch size the artifacts were lowered with.
     pub batch_size: usize,
     /// Per-example feature shape (no batch dim), e.g. `[28, 28, 1]` or `[65]`.
     pub input_shape: Vec<usize>,
     /// "f32" for images, "i32" for token windows.
     pub input_dtype: String,
+    /// Output classes (vocab size for LM models).
     pub num_classes: usize,
+    /// Local Adam learning rate baked into the train artifact.
     pub lr: f64,
+    /// Path to the init HLO artifact.
     pub init_file: PathBuf,
+    /// Path to the train-step HLO artifact.
     pub train_file: PathBuf,
+    /// Path to the eval HLO artifact.
     pub eval_file: PathBuf,
 }
 
@@ -41,9 +49,13 @@ impl ModelInfo {
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Whether the artifacts were lowered with Pallas kernels.
     pub use_pallas: bool,
+    /// Chunk width of the aggregation kernel artifacts.
     pub chunk: usize,
+    /// Per-model artifact info, keyed by model name.
     pub models: BTreeMap<String, ModelInfo>,
     /// Aggregation artifacts: K -> file.
     pub agg: BTreeMap<usize, PathBuf>,
@@ -155,6 +167,7 @@ impl Manifest {
         })
     }
 
+    /// Look up a model by name, with a readable error listing what exists.
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models.get(name).ok_or_else(|| {
             anyhow!(

@@ -13,7 +13,7 @@ use crate::metrics::timeline::{render_ascii, Timeline};
 use crate::metrics::RunLogger;
 use crate::node::{spawn_node, NodeCtx, NodeReport, NodeStatus};
 use crate::runtime::{Engine, Manifest, ModelBundle};
-use crate::store::{FsStore, LatencyStore, MemoryStore, WeightStore};
+use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
 use crate::tensor::flat::weighted_average;
 use crate::tensor::FlatParams;
 
@@ -24,7 +24,9 @@ pub struct ExperimentResult {
     pub final_accuracy: f64,
     /// Mean test loss of the global model.
     pub final_loss: f64,
+    /// Wall-clock seconds from node spawn to last node exit.
     pub wall_clock_s: f64,
+    /// Per-node reports (status, metrics, timeline), in node-id order.
     pub reports: Vec<NodeReport>,
     /// Total pushes observed by the store.
     pub store_pushes: u64,
@@ -39,28 +41,14 @@ impl ExperimentResult {
     /// Figure-1-style ASCII rendering of the node timelines.
     pub fn render_timelines(&self, width: usize) -> String {
         let tls: Vec<&Timeline> = self.reports.iter().map(|r| &r.timeline).collect();
-        // render_ascii takes a slice of Timelines; rebuild by reference
-        render_ascii_refs(&tls, width)
+        render_ascii(&tls, width)
     }
-}
-
-fn render_ascii_refs(tls: &[&Timeline], width: usize) -> String {
-    // Cheap adapter around metrics::timeline::render_ascii (which takes
-    // owned slice) — we re-implement the iteration to avoid cloning spans.
-    let owned: Vec<Timeline> = tls
-        .iter()
-        .map(|t| {
-            let mut n = Timeline::new(t.node_id, Instant::now());
-            n.spans = t.spans.clone();
-            n
-        })
-        .collect();
-    render_ascii(&owned, width)
 }
 
 fn build_store(cfg: &ExperimentConfig) -> Result<Arc<dyn WeightStore>> {
     let base: Arc<dyn WeightStore> = match &cfg.store {
         StoreKind::Memory => Arc::new(MemoryStore::new()),
+        StoreKind::Sharded(n) => Arc::new(ShardedStore::new(*n)),
         StoreKind::Fs(path) => Arc::new(FsStore::open(path)?),
     };
     Ok(match cfg.latency {

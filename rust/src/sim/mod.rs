@@ -2,6 +2,32 @@
 //! a federated training experiment end-to-end, and evaluate the resulting
 //! global model on the held-out test set — once per trial, with
 //! mean ± 95% CI across trials (the paper's table cells).
+//!
+//! [`run_experiment`] is the single-trial entry point; [`run_trials`]
+//! repeats it across seeds for one table cell; [`crate::sweep`] runs a
+//! whole grid of cells in parallel.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use fedless::config::{ExperimentConfig, FederationMode};
+//! use fedless::sim::{run_experiment, run_trials};
+//!
+//! let cfg = ExperimentConfig {
+//!     model: "mnist".into(),
+//!     n_nodes: 3,
+//!     mode: FederationMode::Async,
+//!     skew: 0.9,
+//!     ..Default::default()
+//! };
+//! // one trial...
+//! let result = run_experiment(&cfg).unwrap();
+//! println!("accuracy = {:.3}", result.final_accuracy);
+//! println!("{}", result.render_timelines(72));
+//! // ...or a paper-style cell: mean ± 95% CI over three seeds
+//! let cell = run_trials(&cfg, 3).unwrap();
+//! println!("accuracy = {}", cell.accuracy.fmt_paper());
+//! ```
 
 mod experiment;
 mod trial;

@@ -10,10 +10,15 @@ use crate::metrics::stats::Summary;
 /// Results of repeated trials of one configuration.
 #[derive(Debug)]
 pub struct TrialSet {
+    /// The configuration's `run_name` (base seed's name).
     pub cfg_name: String,
+    /// Per-trial results, in seed order.
     pub results: Vec<ExperimentResult>,
+    /// Accuracy across trials.
     pub accuracy: Summary,
+    /// Test loss across trials.
     pub loss: Summary,
+    /// Wall-clock seconds across trials.
     pub wall_clock: Summary,
 }
 

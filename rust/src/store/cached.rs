@@ -23,6 +23,7 @@ pub struct CachedStore<S> {
 }
 
 impl<S: WeightStore> CachedStore<S> {
+    /// Wrap `inner` with an (initially empty) read-through cache.
     pub fn new(inner: S) -> Self {
         CachedStore {
             inner,
@@ -32,6 +33,7 @@ impl<S: WeightStore> CachedStore<S> {
         }
     }
 
+    /// The wrapped store.
     pub fn inner(&self) -> &S {
         &self.inner
     }

@@ -18,6 +18,8 @@ pub struct FaultStore<S> {
 }
 
 impl<S: WeightStore> FaultStore<S> {
+    /// Wrap `inner`; each operation fails with probability `p_fail`,
+    /// deterministically in `seed`.
     pub fn new(inner: S, p_fail: f64, seed: u64) -> Self {
         assert!((0.0..=1.0).contains(&p_fail));
         FaultStore {

@@ -18,6 +18,8 @@ use super::{PushRequest, WeightEntry, WeightStore};
 use crate::tensor::codec::{decode_blob, encode_blob, BlobMeta};
 use crate::util::hash::combine;
 
+/// Weight store backed by a directory of blob files (sharable across OS
+/// processes; see the module docs for the layout).
 pub struct FsStore {
     root: PathBuf,
     /// Sequence counter; files from other processes are merged by mtime
@@ -48,6 +50,7 @@ impl FsStore {
         })
     }
 
+    /// The store's root directory.
     pub fn root(&self) -> &Path {
         &self.root
     }

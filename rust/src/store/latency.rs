@@ -36,8 +36,21 @@ impl LatencyConfig {
         }
     }
 
+    /// Zero latency, infinite bandwidth (a transparent wrapper).
     pub fn none() -> Self {
         LatencyConfig { base: Duration::ZERO, jitter: Duration::ZERO, bytes_per_sec: 0 }
+    }
+
+    /// The config-value timing model: `ms` RTT, half as much jitter, and
+    /// the simulated-S3 bandwidth. Shared by the `latency = <ms>` config
+    /// key and the sweep spec's `"latency": <ms>` so the two formats can
+    /// never drift apart.
+    pub fn from_ms(ms: f64) -> Self {
+        LatencyConfig {
+            base: Duration::from_secs_f64(ms / 1000.0),
+            jitter: Duration::from_secs_f64(ms / 2000.0),
+            bytes_per_sec: 200_000_000,
+        }
     }
 }
 
@@ -49,10 +62,13 @@ pub struct LatencyStore<S> {
 }
 
 impl<S: WeightStore> LatencyStore<S> {
+    /// Wrap `inner` with the `cfg` timing model; jitter is deterministic
+    /// in `seed`.
     pub fn new(inner: S, cfg: LatencyConfig, seed: u64) -> Self {
         LatencyStore { inner, cfg, rng: Mutex::new(Rng::new(seed ^ 0x1A7E_4C1)) }
     }
 
+    /// The wrapped store.
     pub fn inner(&self) -> &S {
         &self.inner
     }

@@ -19,6 +19,7 @@ pub struct MemoryStore {
 }
 
 impl MemoryStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }

@@ -10,24 +10,33 @@
 //! (Algorithm 1).
 //!
 //! Implementations:
-//! * [`MemoryStore`] — in-process, for simulation and tests.
-//! * [`FsStore`]     — a directory of blob files; the S3Folder analogue,
+//! * [`MemoryStore`]  — in-process, for simulation and tests.
+//! * [`ShardedStore`] — in-process, partitioned by `node_id` across
+//!   independently locked shards; the scalable choice for 8+ nodes and
+//!   for concurrent sweep trials.
+//! * [`FsStore`]      — a directory of blob files; the S3Folder analogue,
 //!   usable by genuinely separate OS processes.
 //! * [`LatencyStore`] — wraps any store with configurable latency/jitter
 //!   (simulated S3 RTT).
-//! * [`FaultStore`]  — wraps any store with seeded error injection.
+//! * [`CachedStore`]  — read-through cache keyed by the state hash.
+//! * [`FaultStore`]   — wraps any store with seeded error injection.
+//!
+//! Wrappers compose: `FaultStore<CachedStore<ShardedStore>>` is a valid
+//! stack (and is exercised by this module's composition tests).
 
 mod cached;
 mod fault;
 mod fs;
 mod latency;
 mod memory;
+mod sharded;
 
 pub use cached::CachedStore;
 pub use fault::FaultStore;
 pub use fs::FsStore;
 pub use latency::{LatencyConfig, LatencyStore};
 pub use memory::MemoryStore;
+pub use sharded::{ShardedStore, DEFAULT_SHARDS};
 
 use anyhow::Result;
 
@@ -36,14 +45,17 @@ use crate::tensor::FlatParams;
 /// One deposited weight entry.
 #[derive(Clone, Debug)]
 pub struct WeightEntry {
+    /// Id of the node that deposited this entry.
     pub node_id: usize,
     /// Sync protocol: the federation round. Async: the node's epoch count.
     pub round: u64,
+    /// The depositing node's local epoch counter.
     pub epoch: u64,
     /// Examples this client trained on (the FedAvg weight numerator n_k).
     pub n_examples: u64,
     /// Store-assigned monotonically increasing sequence number.
     pub seq: u64,
+    /// The deposited flat weight vector (shared, not copied, in-process).
     pub params: std::sync::Arc<FlatParams>,
 }
 
@@ -75,10 +87,15 @@ pub trait WeightStore: Send + Sync {
 /// Arguments to [`WeightStore::push`].
 #[derive(Clone, Debug)]
 pub struct PushRequest {
+    /// Id of the pushing node.
     pub node_id: usize,
+    /// Sync protocol: the federation round. Async: the node's epoch count.
     pub round: u64,
+    /// The pushing node's local epoch counter.
     pub epoch: u64,
+    /// Examples this client trained on (the FedAvg weight numerator n_k).
     pub n_examples: u64,
+    /// The flat weight vector to deposit.
     pub params: std::sync::Arc<FlatParams>,
 }
 
@@ -161,6 +178,18 @@ pub(crate) mod store_tests {
         assert!(store.entries_for_round(0).unwrap().is_empty());
     }
 
+    /// Conformance plus the 8-thread stress test for a wrapper stack
+    /// built by `make_store` (fresh store per phase, since `conformance`
+    /// ends with a `clear` and `concurrent_pushes` counts pushes).
+    pub fn stack_conformance<S, F>(make_store: F)
+    where
+        S: WeightStore + 'static,
+        F: Fn() -> S,
+    {
+        conformance(&make_store());
+        concurrent_pushes(Arc::new(make_store()));
+    }
+
     pub fn concurrent_pushes(store: Arc<dyn WeightStore>) {
         let threads: Vec<_> = (0..8)
             .map(|node| {
@@ -182,5 +211,66 @@ pub(crate) mod store_tests {
             assert_eq!(e.params.0[0], e.node_id as f32);
         }
         assert_eq!(store.push_count(), 160);
+    }
+}
+
+#[cfg(test)]
+mod stack_tests {
+    //! Wrapper-stack compositions: the conformance suite must hold for any
+    //! wrapper stacked on any backend, not just for each layer in
+    //! isolation (a caching bug, say, could only surface over a sharded
+    //! inner store whose read order differs from the push order).
+
+    use std::sync::Arc;
+
+    use super::store_tests::stack_conformance;
+    use super::*;
+
+    #[test]
+    fn cached_over_sharded() {
+        stack_conformance(|| CachedStore::new(ShardedStore::default()));
+    }
+
+    #[test]
+    fn fault_over_sharded_p_zero_is_transparent() {
+        stack_conformance(|| FaultStore::new(ShardedStore::default(), 0.0, 1));
+    }
+
+    #[test]
+    fn fault_over_cached_over_sharded() {
+        stack_conformance(|| FaultStore::new(CachedStore::new(ShardedStore::new(3)), 0.0, 7));
+    }
+
+    #[test]
+    fn cached_over_memory() {
+        stack_conformance(|| CachedStore::new(MemoryStore::new()));
+    }
+
+    #[test]
+    fn latency_over_sharded_zero_cost() {
+        stack_conformance(|| {
+            LatencyStore::new(ShardedStore::default(), LatencyConfig::none(), 11)
+        });
+    }
+
+    #[test]
+    fn cached_pulls_hit_on_unchanged_sharded_store() {
+        // The cache keys on the *merged* sharded hash. The foreign push
+        // goes through a second handle on the same inner store, so only
+        // the hash change can reveal it — a ShardedStore::state_hash
+        // that skipped a shard would serve stale weights here.
+        let inner: Arc<dyn WeightStore> = Arc::new(ShardedStore::new(4));
+        let s = CachedStore::new(Arc::clone(&inner));
+        s.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        let _ = s.latest_per_node().unwrap();
+        let _ = s.latest_per_node().unwrap();
+        let (hits, misses) = s.stats();
+        assert_eq!((hits, misses), (1, 1));
+        // foreign push into a *different shard*, bypassing the cache
+        inner.push(store_tests::push_req(3, 0, 2.0)).unwrap();
+        let entries = s.latest_per_node().unwrap();
+        assert_eq!(entries.len(), 2, "merged hash must reveal the foreign shard's push");
+        let (_, misses) = s.stats();
+        assert_eq!(misses, 2, "push into another shard must invalidate");
     }
 }

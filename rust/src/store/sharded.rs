@@ -1,0 +1,230 @@
+//! Sharded in-process weight store — the scalable backend for many-node
+//! trials and concurrent sweeps.
+//!
+//! [`super::MemoryStore`] serializes every operation behind one `RwLock`,
+//! which is fine for 2–5 nodes but becomes the contention point at 8+
+//! concurrent nodes (and across the sweep scheduler's parallel trials,
+//! where many node threads hammer stores at once). `ShardedStore`
+//! partitions the blob namespace by `node_id` across N independently
+//! locked shards:
+//!
+//! * `push` from node k only takes shard `k % N`'s write lock — pushes
+//!   from different nodes proceed in parallel;
+//! * the store-wide sequence counter stays a single atomic (uncontended
+//!   fetch-add), so `seq` ordering is still global and strictly
+//!   increasing, as the [`super::WeightStore`] contract requires;
+//! * read operations (`latest_per_node`, `entries_for_round`,
+//!   `state_hash`) take the shard read locks one at a time and merge,
+//!   so a reader never blocks more than one shard's writers at once.
+//!
+//! The merged [`WeightStore::state_hash`] combines per-shard partial
+//! hashes in shard order; like every store, it changes whenever an entry
+//! is added, which is all Algorithm 1's change detection needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use anyhow::Result;
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::util::hash::combine;
+
+/// Default shard count: comfortably above the paper's node counts (2–5)
+/// and the 8-node conformance stress test, while keeping the merge cost
+/// of read operations trivial.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// In-process weight store partitioned by `node_id` across independently
+/// locked shards. Drop-in replacement for [`super::MemoryStore`] wherever
+/// push contention matters (8+ nodes, parallel sweep trials).
+pub struct ShardedStore {
+    shards: Vec<RwLock<Vec<WeightEntry>>>,
+    seq: AtomicU64,
+    pushes: AtomicU64,
+}
+
+impl ShardedStore {
+    /// Create a store with `n_shards` independently locked shards.
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        ShardedStore {
+            shards: (0..n_shards).map(|_| RwLock::new(Vec::new())).collect(),
+            seq: AtomicU64::new(0),
+            pushes: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards this store was built with.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, node_id: usize) -> usize {
+        node_id % self.shards.len()
+    }
+}
+
+impl Default for ShardedStore {
+    fn default() -> Self {
+        ShardedStore::new(DEFAULT_SHARDS)
+    }
+}
+
+impl WeightStore for ShardedStore {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        // Global ordering from one uncontended atomic; only the owning
+        // shard's lock is taken, so pushes from different nodes run in
+        // parallel.
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let entry = WeightEntry {
+            node_id: req.node_id,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+            seq,
+            params: req.params,
+        };
+        let shard = self.shard_of(entry.node_id);
+        self.shards[shard].write().unwrap().push(entry);
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        let mut latest: std::collections::BTreeMap<usize, WeightEntry> = Default::default();
+        for shard in &self.shards {
+            let entries = shard.read().unwrap();
+            for e in entries.iter() {
+                match latest.get(&e.node_id) {
+                    Some(prev) if prev.seq >= e.seq => {}
+                    _ => {
+                        latest.insert(e.node_id, e.clone());
+                    }
+                }
+            }
+        }
+        Ok(latest.into_values().collect())
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let entries = shard.read().unwrap();
+            out.extend(entries.iter().filter(|e| e.round == round).cloned());
+        }
+        // Deterministic order regardless of shard layout.
+        out.sort_by_key(|e| e.seq);
+        Ok(out)
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        // Merge per-shard partial hashes in shard order. Entries carry
+        // globally unique seqs, so any push changes its shard's partial
+        // and therefore the merged hash.
+        let mut h = 0xfeed_f00d_u64;
+        for shard in &self.shards {
+            let entries = shard.read().unwrap();
+            let mut partial = 0x5A4D_ED51_u64;
+            for e in entries.iter() {
+                partial = combine(partial, (e.node_id as u64) << 48 | e.seq);
+            }
+            h = combine(h, partial);
+        }
+        Ok(h)
+    }
+
+    fn push_count(&self) -> u64 {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    fn clear(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::store::store_tests::{self, push_req};
+
+    #[test]
+    fn conformance_single_shard() {
+        store_tests::conformance(&ShardedStore::new(1));
+    }
+
+    #[test]
+    fn conformance_default_shards() {
+        store_tests::conformance(&ShardedStore::default());
+    }
+
+    #[test]
+    fn conformance_more_shards_than_nodes() {
+        store_tests::conformance(&ShardedStore::new(32));
+    }
+
+    #[test]
+    fn concurrent() {
+        store_tests::concurrent_pushes(Arc::new(ShardedStore::default()));
+    }
+
+    #[test]
+    fn concurrent_with_colliding_shards() {
+        // 8 nodes onto 3 shards: several nodes share each lock, global
+        // seq/count invariants must still hold.
+        store_tests::concurrent_pushes(Arc::new(ShardedStore::new(3)));
+    }
+
+    #[test]
+    fn entries_land_in_expected_shard() {
+        let s = ShardedStore::new(4);
+        for node in 0..8 {
+            s.push(push_req(node, 0, node as f32)).unwrap();
+        }
+        for (i, shard) in s.shards.iter().enumerate() {
+            let entries = shard.read().unwrap();
+            assert_eq!(entries.len(), 2, "shard {i}");
+            for e in entries.iter() {
+                assert_eq!(e.node_id % 4, i);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_hash_sees_every_shard() {
+        // A push into any shard must change the merged hash.
+        let s = ShardedStore::new(4);
+        let mut last = s.state_hash().unwrap();
+        for node in 0..4 {
+            s.push(push_req(node, 0, 1.0)).unwrap();
+            let h = s.state_hash().unwrap();
+            assert_ne!(h, last, "push into shard {node} must change hash");
+            last = h;
+        }
+    }
+
+    #[test]
+    fn round_entries_sorted_by_seq() {
+        let s = ShardedStore::new(4);
+        // interleave pushes so shard iteration order != seq order
+        s.push(push_req(3, 0, 1.0)).unwrap();
+        s.push(push_req(0, 0, 2.0)).unwrap();
+        s.push(push_req(2, 0, 3.0)).unwrap();
+        s.push(push_req(1, 0, 4.0)).unwrap();
+        let seqs: Vec<u64> = s.entries_for_round(0).unwrap().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn seq_is_globally_monotonic_across_shards() {
+        let s = ShardedStore::new(2);
+        let a = s.push(push_req(0, 0, 1.0)).unwrap();
+        let b = s.push(push_req(1, 0, 1.0)).unwrap();
+        let c = s.push(push_req(0, 1, 1.0)).unwrap();
+        assert!(a < b && b < c);
+    }
+}

@@ -7,6 +7,7 @@
 use super::{fedavg_of, Contribution, Strategy};
 use crate::tensor::FlatParams;
 
+/// Adam over the aggregation pseudo-gradient, with client-held moments.
 pub struct FedAdam {
     lr: f32,
     b1: f32,
@@ -18,6 +19,8 @@ pub struct FedAdam {
 }
 
 impl FedAdam {
+    /// Server learning rate `lr`, moment decays `b1`/`b2`, and adaptivity
+    /// floor `tau` (FedOpt's defaults: 1e-2, 0.9, 0.999, 1e-3).
     pub fn new(lr: f32, b1: f32, b2: f32, tau: f32) -> Self {
         FedAdam { lr, b1, b2, tau, m: None, v: None, prev: None }
     }

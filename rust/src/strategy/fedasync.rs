@@ -13,6 +13,7 @@
 use super::{example_weights, Contribution, Strategy};
 use crate::tensor::FlatParams;
 
+/// Staleness-attenuated asynchronous mixing toward the peer average.
 pub struct FedAsync {
     /// Base mixing weight α.
     alpha: f32,
@@ -21,6 +22,8 @@ pub struct FedAsync {
 }
 
 impl FedAsync {
+    /// Base mixing weight `alpha` ∈ [0, 1] and polynomial staleness
+    /// exponent `exponent` ≥ 0 (0 disables staleness attenuation).
     pub fn new(alpha: f32, exponent: f32) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         assert!(exponent >= 0.0);

@@ -4,10 +4,12 @@
 use super::{fedavg_of, Contribution, Strategy};
 use crate::tensor::FlatParams;
 
+/// Stateless example-weighted averaging — the paper's default strategy.
 #[derive(Default)]
 pub struct FedAvg;
 
 impl FedAvg {
+    /// FedAvg has no hyperparameters or state.
     pub fn new() -> Self {
         FedAvg
     }

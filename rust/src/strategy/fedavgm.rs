@@ -10,6 +10,7 @@
 use super::{fedavg_of, Contribution, Strategy};
 use crate::tensor::FlatParams;
 
+/// FedAvg with a client-held server-momentum buffer.
 pub struct FedAvgM {
     beta: f32,
     lr: f32,
@@ -18,6 +19,8 @@ pub struct FedAvgM {
 }
 
 impl FedAvgM {
+    /// Momentum decay `beta` ∈ [0, 1) and server learning rate `lr`
+    /// (paper defaults: 0.9 and 1.0).
     pub fn new(beta: f32, lr: f32) -> Self {
         assert!((0.0..1.0).contains(&beta));
         FedAvgM { beta, lr, velocity: None, prev: None }

@@ -11,6 +11,8 @@ use std::collections::HashMap;
 use super::{fedavg_of, Contribution, Strategy};
 use crate::tensor::FlatParams;
 
+/// Buffered asynchronous aggregation: wait for `buffer_size` fresh peer
+/// entries before averaging.
 pub struct FedBuff {
     buffer_size: usize,
     /// Last seq seen per peer at the last aggregation.
@@ -18,6 +20,7 @@ pub struct FedBuff {
 }
 
 impl FedBuff {
+    /// Aggregate only once `buffer_size` (≥ 1) fresh peer entries arrive.
     pub fn new(buffer_size: usize) -> Self {
         assert!(buffer_size >= 1);
         FedBuff { buffer_size, seen: HashMap::new() }

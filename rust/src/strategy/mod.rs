@@ -8,6 +8,39 @@
 //!
 //! A strategy is stateful *per node* (e.g. each node carries its own
 //! server-momentum buffer) — exactly what the serverless design implies.
+//!
+//! # Example
+//!
+//! A strategy consumes [`Contribution`]s (one per node, exactly one
+//! marked `is_self`) and produces the node's next weights:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//!
+//! use fedless::strategy::{Contribution, StrategyKind};
+//! use fedless::tensor::FlatParams;
+//!
+//! let mut strategy = StrategyKind::FedAvg.build();
+//! let contribs = vec![
+//!     Contribution {
+//!         node_id: 0,
+//!         n_examples: 300,
+//!         is_self: true,
+//!         seq: 2,
+//!         params: Arc::new(FlatParams(vec![1.0; 4])),
+//!     },
+//!     Contribution {
+//!         node_id: 1,
+//!         n_examples: 100,
+//!         is_self: false,
+//!         seq: 1,
+//!         params: Arc::new(FlatParams(vec![5.0; 4])),
+//!     },
+//! ];
+//! // example-weighted: 0.75 * 1.0 + 0.25 * 5.0 = 2.0 per coordinate
+//! let next = strategy.aggregate(&contribs).unwrap();
+//! assert_eq!(next.0, vec![2.0; 4]);
+//! ```
 
 mod fedadam;
 mod fedasync;
@@ -28,18 +61,22 @@ use crate::tensor::FlatParams;
 /// One client's weights entering an aggregation.
 #[derive(Clone, Debug)]
 pub struct Contribution {
+    /// The contributing node.
     pub node_id: usize,
+    /// Examples that node trained on (the FedAvg weight numerator n_k).
     pub n_examples: u64,
     /// True for the aggregating node's own current weights (Algorithm 1's
     /// `ω[k] ← w^k`).
     pub is_self: bool,
     /// Store sequence number of the entry (novelty/staleness signal).
     pub seq: u64,
+    /// The contributed flat weight vector.
     pub params: Arc<FlatParams>,
 }
 
 /// Client-side aggregation strategy.
 pub trait Strategy: Send {
+    /// Canonical lowercase strategy name (matches [`StrategyKind::name`]).
     fn name(&self) -> &'static str;
 
     /// Aggregate the contributions into new local weights. Returns `None`
@@ -73,14 +110,20 @@ pub(crate) fn fedavg_of(contribs: &[Contribution]) -> FlatParams {
 /// Strategy selector used in configs / CLI (`--strategy fedavg`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StrategyKind {
+    /// Example-weighted averaging (paper Eq. 1).
     FedAvg,
+    /// FedAvg with (client-held) server momentum.
     FedAvgM,
+    /// Adam on the aggregation pseudo-gradient.
     FedAdam,
+    /// Staleness-aware asynchronous mixing (Xie et al. 2019).
     FedAsync,
+    /// Buffered asynchronous aggregation (Nguyen et al. 2022).
     FedBuff,
 }
 
 impl StrategyKind {
+    /// Parse a config/CLI strategy name.
     pub fn parse(s: &str) -> Option<StrategyKind> {
         match s.to_ascii_lowercase().as_str() {
             "fedavg" => Some(StrategyKind::FedAvg),
@@ -92,6 +135,7 @@ impl StrategyKind {
         }
     }
 
+    /// Canonical lowercase name (inverse of [`StrategyKind::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             StrategyKind::FedAvg => "fedavg",

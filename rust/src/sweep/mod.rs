@@ -1,0 +1,48 @@
+//! Sweep orchestration: run a *grid* of experiments — the unit at which
+//! the paper argues (§4) — in one call.
+//!
+//! The paper's evidence is never a single trial: every table is a
+//! cartesian grid (sync vs async × strategy × skew × node count, several
+//! seeds per cell) and every claim is a *shape* across that grid. This
+//! module makes the grid the first-class object:
+//!
+//! * [`SweepSpec`] — the grid definition: a base
+//!   [`crate::config::ExperimentConfig`] plus axes, parseable from JSON
+//!   (`fedbench sweep spec.json`) or built programmatically;
+//! * [`run_sweep`] — a work-stealing scheduler that runs the expanded
+//!   trials on a bounded worker pool, each trial fully isolated (own
+//!   seed, own data shards, own store namespace);
+//! * [`SweepReport`] — per-cell mean ± std aggregation rendered as a
+//!   paper-style Markdown table or CSV.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use fedless::sweep::{run_sweep, SweepSpec};
+//!
+//! let spec = SweepSpec::parse_json(
+//!     r#"{
+//!         "model": "mnist",
+//!         "modes": ["sync", "async"],
+//!         "strategies": ["fedavg", "fedavgm"],
+//!         "skews": [0.0, 0.9],
+//!         "n_nodes": 2,
+//!         "trials": 2,
+//!         "epochs": 2,
+//!         "steps_per_epoch": 25,
+//!         "store": "sharded",
+//!         "jobs": 4
+//!     }"#,
+//! )
+//! .unwrap();
+//! let report = run_sweep(&spec).unwrap();
+//! println!("{}", report.to_markdown());
+//! ```
+
+pub mod report;
+pub mod scheduler;
+pub mod spec;
+
+pub use report::{CellSummary, SweepReport, TrialMetrics, TrialOutcome};
+pub use scheduler::{default_jobs, run_sweep, run_sweep_with};
+pub use spec::{CellKey, SweepSpec, SweepTrial};

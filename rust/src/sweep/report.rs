@@ -1,0 +1,332 @@
+//! [`SweepReport`] — aggregate sweep results into a paper-style table.
+//!
+//! Each grid cell's trials (one per seed) are summarized as mean ± std via
+//! [`crate::metrics::stats::Summary`]; the report renders as a Markdown
+//! table (the format of this repo's `fedbench` tables and the paper's §4
+//! tables) and as CSV for downstream plotting.
+
+use std::fmt::Write as _;
+
+use crate::metrics::stats::Summary;
+
+use super::spec::{CellKey, SweepSpec};
+
+/// The scalar results the report keeps per successful trial.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialMetrics {
+    /// Held-out accuracy of the aggregated global model.
+    pub accuracy: f64,
+    /// Held-out mean loss of the global model.
+    pub loss: f64,
+    /// Trial wall-clock seconds.
+    pub wall_clock_s: f64,
+    /// Whether every node ran all its epochs.
+    pub all_completed: bool,
+}
+
+/// Outcome of one scheduled trial (success metrics or the error text).
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    /// Index into the expanded trial list.
+    pub trial_index: usize,
+    /// Index into [`SweepSpec::cells`].
+    pub cell_index: usize,
+    /// The trial's `ExperimentConfig::run_name` (for logs).
+    pub run_name: String,
+    /// Metrics on success, the rendered error on failure.
+    pub result: Result<TrialMetrics, String>,
+}
+
+/// Per-cell aggregate over that cell's seeds.
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    /// Which grid cell this row describes.
+    pub cell: CellKey,
+    /// Trials attempted in this cell.
+    pub n_trials: usize,
+    /// Trials that returned an error.
+    pub failures: usize,
+    /// Accuracy summary over successful trials (`None` if all failed).
+    pub accuracy: Option<Summary>,
+    /// Loss summary over successful trials.
+    pub loss: Option<Summary>,
+    /// Wall-clock summary over successful trials.
+    pub wall_clock: Option<Summary>,
+    /// First error message, when any trial failed.
+    pub first_error: Option<String>,
+}
+
+/// Aggregated results of one sweep run.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// Model of the sweep's base config.
+    pub model: String,
+    /// One summary per grid cell, in [`SweepSpec::cells`] order.
+    pub cells: Vec<CellSummary>,
+    /// Total trials scheduled.
+    pub n_trials: usize,
+    /// Total trials that failed.
+    pub n_failures: usize,
+    /// Worker threads the scheduler used.
+    pub n_workers: usize,
+    /// Whole-sweep wall-clock seconds.
+    pub wall_clock_s: f64,
+}
+
+impl SweepReport {
+    /// Aggregate raw trial outcomes into per-cell summaries.
+    pub(crate) fn build(
+        spec: &SweepSpec,
+        outcomes: &[TrialOutcome],
+        n_workers: usize,
+        wall_clock_s: f64,
+    ) -> SweepReport {
+        let keys = spec.cells();
+        let mut cells: Vec<CellSummary> = keys
+            .into_iter()
+            .map(|cell| CellSummary {
+                cell,
+                n_trials: 0,
+                failures: 0,
+                accuracy: None,
+                loss: None,
+                wall_clock: None,
+                first_error: None,
+            })
+            .collect();
+
+        let mut accs: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut losses: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut walls: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut n_failures = 0;
+        for o in outcomes {
+            let c = &mut cells[o.cell_index];
+            c.n_trials += 1;
+            match &o.result {
+                Ok(m) => {
+                    accs[o.cell_index].push(m.accuracy);
+                    losses[o.cell_index].push(m.loss);
+                    walls[o.cell_index].push(m.wall_clock_s);
+                }
+                Err(e) => {
+                    c.failures += 1;
+                    n_failures += 1;
+                    if c.first_error.is_none() {
+                        c.first_error = Some(e.clone());
+                    }
+                }
+            }
+        }
+        for (i, c) in cells.iter_mut().enumerate() {
+            if !accs[i].is_empty() {
+                c.accuracy = Some(Summary::of(&accs[i]));
+                c.loss = Some(Summary::of(&losses[i]));
+                c.wall_clock = Some(Summary::of(&walls[i]));
+            }
+        }
+
+        SweepReport {
+            model: spec.base.model.clone(),
+            cells,
+            n_trials: outcomes.len(),
+            n_failures,
+            n_workers,
+            wall_clock_s,
+        }
+    }
+
+    /// Paper-style Markdown table, one row per grid cell.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "## Sweep: {} — {} trial(s) over {} cell(s), {} worker(s), {:.1}s{}\n",
+            self.model,
+            self.n_trials,
+            self.cells.len(),
+            self.n_workers,
+            self.wall_clock_s,
+            if self.n_failures > 0 {
+                format!(" — {} FAILED", self.n_failures)
+            } else {
+                String::new()
+            }
+        );
+        out.push_str(
+            "| mode | strategy | skew | nodes | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s |\n",
+        );
+        out.push_str(
+            "|------|----------|------|-------|--------|-----------------------|-------------------|--------------|\n",
+        );
+        for c in &self.cells {
+            let trials = if c.failures > 0 {
+                format!("{}/{}", c.n_trials - c.failures, c.n_trials)
+            } else {
+                format!("{}", c.n_trials)
+            };
+            let (acc, loss, wall) = match (&c.accuracy, &c.loss, &c.wall_clock) {
+                (Some(a), Some(l), Some(w)) => {
+                    (a.fmt_mean_std(), l.fmt_mean_std(), w.fmt_mean_std())
+                }
+                _ => {
+                    let e = truncate(c.first_error.as_deref().unwrap_or("no trials"), 48);
+                    (format!("ERR({e})"), "-".into(), "-".into())
+                }
+            };
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                c.cell.mode.name(),
+                c.cell.strategy.name(),
+                c.cell.skew,
+                c.cell.n_nodes,
+                trials,
+                acc,
+                loss,
+                wall
+            );
+        }
+        out
+    }
+
+    /// CSV with one row per grid cell (header included).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "model,mode,strategy,skew,n_nodes,trials,failures,\
+             acc_mean,acc_std,loss_mean,loss_std,wall_mean,wall_std\n",
+        );
+        let num = |s: &Option<Summary>, f: fn(&Summary) -> f64| -> String {
+            s.as_ref().map(|x| format!("{}", f(x))).unwrap_or_default()
+        };
+        for c in &self.cells {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                self.model,
+                c.cell.mode.name(),
+                c.cell.strategy.name(),
+                c.cell.skew,
+                c.cell.n_nodes,
+                c.n_trials,
+                c.failures,
+                num(&c.accuracy, |s| s.mean),
+                num(&c.accuracy, |s| s.std),
+                num(&c.loss, |s| s.mean),
+                num(&c.loss, |s| s.std),
+                num(&c.wall_clock, |s| s.mean),
+                num(&c.wall_clock, |s| s.std),
+            );
+        }
+        out
+    }
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.len() <= max {
+        s.to_string()
+    } else {
+        let cut = s
+            .char_indices()
+            .take_while(|(i, _)| *i < max)
+            .last()
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        format!("{}...", &s[..cut])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::spec::SweepSpec;
+
+    fn outcome(cell: usize, i: usize, acc: f64) -> TrialOutcome {
+        TrialOutcome {
+            trial_index: i,
+            cell_index: cell,
+            run_name: format!("t{i}"),
+            result: Ok(TrialMetrics {
+                accuracy: acc,
+                loss: 1.0 - acc,
+                wall_clock_s: 2.0,
+                all_completed: true,
+            }),
+        }
+    }
+
+    fn failure(cell: usize, i: usize, msg: &str) -> TrialOutcome {
+        TrialOutcome {
+            trial_index: i,
+            cell_index: cell,
+            run_name: format!("t{i}"),
+            result: Err(msg.to_string()),
+        }
+    }
+
+    fn two_cell_spec() -> SweepSpec {
+        SweepSpec::parse_json(r#"{"modes": ["sync", "async"], "seeds": [1, 2]}"#).unwrap()
+    }
+
+    #[test]
+    fn aggregates_mean_and_std_per_cell() {
+        let spec = two_cell_spec();
+        let outcomes = vec![
+            outcome(0, 0, 0.9),
+            outcome(0, 1, 0.7),
+            outcome(1, 2, 0.5),
+            outcome(1, 3, 0.5),
+        ];
+        let r = SweepReport::build(&spec, &outcomes, 2, 4.0);
+        assert_eq!(r.cells.len(), 2);
+        assert_eq!(r.n_trials, 4);
+        assert_eq!(r.n_failures, 0);
+        let a0 = r.cells[0].accuracy.unwrap();
+        assert!((a0.mean - 0.8).abs() < 1e-12);
+        assert!(a0.std > 0.1);
+        let a1 = r.cells[1].accuracy.unwrap();
+        assert_eq!(a1.std, 0.0);
+    }
+
+    #[test]
+    fn markdown_has_one_row_per_cell() {
+        let spec = two_cell_spec();
+        let outcomes =
+            vec![outcome(0, 0, 0.9), outcome(0, 1, 0.7), outcome(1, 2, 0.5), outcome(1, 3, 0.5)];
+        let md = SweepReport::build(&spec, &outcomes, 2, 4.0).to_markdown();
+        assert_eq!(md.lines().filter(|l| l.starts_with("| sync")).count(), 1);
+        assert_eq!(md.lines().filter(|l| l.starts_with("| async")).count(), 1);
+        assert!(md.contains("0.800 ± 0.141"), "{md}");
+        assert!(md.contains("4 trial(s) over 2 cell(s)"), "{md}");
+    }
+
+    #[test]
+    fn failed_cells_render_err_and_partial_counts() {
+        let spec = two_cell_spec();
+        let outcomes = vec![
+            failure(0, 0, "boom"),
+            failure(0, 1, "boom"),
+            outcome(1, 2, 0.5),
+            failure(1, 3, "later"),
+        ];
+        let r = SweepReport::build(&spec, &outcomes, 1, 4.0);
+        assert_eq!(r.n_failures, 3);
+        assert!(r.cells[0].accuracy.is_none());
+        assert_eq!(r.cells[0].first_error.as_deref(), Some("boom"));
+        let md = r.to_markdown();
+        assert!(md.contains("ERR(boom)"), "{md}");
+        assert!(md.contains("| 1/2 |"), "{md}");
+        assert!(md.contains("3 FAILED"), "{md}");
+    }
+
+    #[test]
+    fn csv_shape() {
+        let spec = two_cell_spec();
+        let outcomes = vec![outcome(0, 0, 0.9), outcome(1, 1, 0.5)];
+        let csv = SweepReport::build(&spec, &outcomes, 1, 1.0).to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 cells
+        assert!(lines[0].starts_with("model,mode,strategy"));
+        let cols = lines[1].split(',').count();
+        assert_eq!(cols, lines[0].split(',').count());
+    }
+}

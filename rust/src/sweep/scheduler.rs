@@ -1,0 +1,280 @@
+//! The multi-trial scheduler: run an expanded sweep on a bounded pool of
+//! worker threads.
+//!
+//! Work distribution is work-stealing in the self-scheduling sense: all
+//! trials sit in one shared queue (an atomic cursor over the expanded
+//! trial list) and every idle worker steals the next undone trial, so a
+//! worker that drew short trials naturally takes more of them and no
+//! static partition can leave a worker idle while trials remain. Trials
+//! are fully independent — each owns its seed, its data shards and (via
+//! [`super::spec::SweepSpec::expand`]'s namespacing) its store — so no
+//! cross-trial synchronization exists beyond the queue cursor.
+//!
+//! The pool is bounded because each trial internally spawns `n_nodes` OS
+//! threads, each with its own PJRT engine: `jobs` caps *trials* in
+//! flight, so peak thread count is `jobs × max(n_nodes)`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::sim::{run_experiment, ExperimentResult};
+
+use super::report::{SweepReport, TrialMetrics, TrialOutcome};
+use super::spec::SweepSpec;
+
+/// Scheduler width when the spec leaves `jobs` at 0: the machine's
+/// available parallelism, capped at 4 because every trial multiplies into
+/// `n_nodes` node threads of its own.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(4)
+        .max(1)
+}
+
+/// Run every trial of the sweep through [`crate::sim::run_experiment`]
+/// and aggregate the results. Progress lines go to stderr as trials
+/// finish; a failed trial is recorded in the report, not fatal to the
+/// sweep.
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    run_sweep_with(spec, run_experiment)
+}
+
+/// [`run_sweep`] with a custom trial runner — the seam that lets the
+/// scheduler be tested (and reused) without artifacts or a PJRT runtime.
+pub fn run_sweep_with<F>(spec: &SweepSpec, runner: F) -> Result<SweepReport>
+where
+    F: Fn(&ExperimentConfig) -> Result<ExperimentResult> + Sync,
+{
+    let trials = spec.expand()?;
+    anyhow::ensure!(!trials.is_empty(), "sweep expands to zero trials");
+    let n_workers = match spec.jobs {
+        0 => default_jobs(),
+        j => j,
+    }
+    .min(trials.len())
+    .max(1);
+
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<TrialOutcome>>> =
+        Mutex::new((0..trials.len()).map(|_| None).collect());
+    let t0 = Instant::now();
+
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| loop {
+                // Steal the next undone trial from the shared queue.
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= trials.len() {
+                    break;
+                }
+                let trial = &trials[i];
+                let run_name = trial.cfg.run_name();
+                let t_trial = Instant::now();
+                // A panicking trial must not sink the sweep (or the
+                // worker): contain it like an Err. Node-thread panics are
+                // already caught by NodeHandle::wait; this catches
+                // driver-side panics (e.g. a degenerate data split).
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    runner(&trial.cfg)
+                }));
+                let result = match caught {
+                    Ok(Ok(res)) => Ok(TrialMetrics {
+                        accuracy: res.final_accuracy,
+                        loss: res.final_loss,
+                        wall_clock_s: res.wall_clock_s,
+                        all_completed: res.all_completed,
+                    }),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(panic) => Err(format!("trial panicked: {}", panic_msg(&panic))),
+                };
+                let finished = done.fetch_add(1, Ordering::SeqCst) + 1;
+                match &result {
+                    Ok(m) => eprintln!(
+                        "[sweep {finished}/{}] {run_name}: acc={:.4} ({:.1}s)",
+                        trials.len(),
+                        m.accuracy,
+                        t_trial.elapsed().as_secs_f64()
+                    ),
+                    Err(e) => eprintln!(
+                        "[sweep {finished}/{}] {run_name}: FAILED: {e}",
+                        trials.len()
+                    ),
+                }
+                slots.lock().unwrap()[i] = Some(TrialOutcome {
+                    trial_index: trial.trial_index,
+                    cell_index: trial.cell_index,
+                    run_name,
+                    result,
+                });
+            });
+        }
+    });
+
+    let outcomes: Vec<TrialOutcome> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every queued trial produces an outcome"))
+        .collect();
+    Ok(SweepReport::build(spec, &outcomes, n_workers, t0.elapsed().as_secs_f64()))
+}
+
+fn panic_msg(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    use super::*;
+    use crate::config::FederationMode;
+
+    fn fake_result(acc: f64) -> ExperimentResult {
+        ExperimentResult {
+            final_accuracy: acc,
+            final_loss: 1.0 - acc,
+            wall_clock_s: 0.01,
+            reports: vec![],
+            store_pushes: 0,
+            mean_idle_fraction: 0.0,
+            all_completed: true,
+        }
+    }
+
+    fn grid_spec(jobs: usize) -> SweepSpec {
+        let mut spec = SweepSpec::parse_json(
+            r#"{"modes": ["sync", "async"], "skews": [0.0, 0.9], "seeds": [1, 2]}"#,
+        )
+        .unwrap();
+        spec.jobs = jobs;
+        spec
+    }
+
+    #[test]
+    fn runs_every_trial_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        let report = run_sweep_with(&grid_spec(3), |cfg| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok(fake_result(cfg.skew)) // echo the cell's skew as accuracy
+        })
+        .unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 8);
+        assert_eq!(report.n_trials, 8);
+        assert_eq!(report.n_failures, 0);
+        assert_eq!(report.cells.len(), 4);
+        // aggregation is per-cell: the skew-0.9 cells must average 0.9
+        for c in &report.cells {
+            let a = c.cell.skew;
+            assert!((c.accuracy.unwrap().mean - a).abs() < 1e-12);
+            assert_eq!(c.n_trials, 2);
+        }
+    }
+
+    #[test]
+    fn pool_is_bounded_by_jobs() {
+        let in_flight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let report = run_sweep_with(&grid_spec(2), |_| {
+            let cur = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(cur, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(15));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+            Ok(fake_result(0.5))
+        })
+        .unwrap();
+        assert_eq!(report.n_workers, 2);
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "at most `jobs` trials in flight, saw {}",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn workers_capped_by_trial_count() {
+        let spec = {
+            let mut s = SweepSpec::parse_json(r#"{"seeds": [1]}"#).unwrap();
+            s.jobs = 16;
+            s
+        };
+        let report = run_sweep_with(&spec, |_| Ok(fake_result(0.5))).unwrap();
+        assert_eq!(report.n_workers, 1);
+    }
+
+    #[test]
+    fn a_failing_trial_does_not_sink_the_sweep() {
+        let report = run_sweep_with(&grid_spec(4), |cfg| {
+            if cfg.mode == FederationMode::Sync {
+                anyhow::bail!("injected failure")
+            }
+            Ok(fake_result(0.7))
+        })
+        .unwrap();
+        assert_eq!(report.n_failures, 4);
+        for c in &report.cells {
+            match c.cell.mode {
+                FederationMode::Sync => {
+                    assert_eq!(c.failures, 2);
+                    assert!(c.accuracy.is_none());
+                    assert!(c.first_error.as_deref().unwrap().contains("injected"));
+                }
+                _ => {
+                    assert_eq!(c.failures, 0);
+                    assert!((c.accuracy.unwrap().mean - 0.7).abs() < 1e-12);
+                }
+            }
+        }
+        let md = report.to_markdown();
+        assert!(md.contains("FAILED"), "{md}");
+    }
+
+    #[test]
+    fn a_panicking_trial_is_contained() {
+        let report = run_sweep_with(&grid_spec(2), |cfg| {
+            if cfg.skew > 0.5 {
+                panic!("degenerate split");
+            }
+            Ok(fake_result(0.6))
+        })
+        .unwrap();
+        assert_eq!(report.n_failures, 4);
+        for c in &report.cells {
+            if c.cell.skew > 0.5 {
+                assert!(c.first_error.as_deref().unwrap().contains("degenerate split"));
+            } else {
+                assert!((c.accuracy.unwrap().mean - 0.6).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn trials_run_under_their_resolved_configs() {
+        // The runner must see each cell's resolved (mode, skew, seed).
+        let seen = Mutex::new(Vec::new());
+        run_sweep_with(&grid_spec(1), |cfg| {
+            seen.lock().unwrap().push((cfg.mode.name(), cfg.skew, cfg.seed));
+            Ok(fake_result(0.5))
+        })
+        .unwrap();
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen.len(), 8);
+        seen.dedup();
+        assert_eq!(seen.len(), 8, "every trial has a distinct config");
+    }
+}

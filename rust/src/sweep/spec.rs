@@ -1,0 +1,471 @@
+//! [`SweepSpec`] — declarative description of an experiment grid.
+//!
+//! A sweep is the cartesian product of up to five axes (federation mode ×
+//! strategy × label skew × node count × seed) over a shared base
+//! [`ExperimentConfig`]. The paper's tables are exactly such grids (e.g.
+//! Table 2 is strategies × node counts at fixed skew, three seeds per
+//! cell), so one spec regenerates one table.
+//!
+//! Specs are written as JSON and parsed with the crate's own
+//! [`crate::util::json`] layer (the image carries no serde). Every scalar
+//! config key doubles as a single-value axis: `"n_nodes": 2` and
+//! `"n_nodes": [2, 3, 5]` are both accepted.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ExperimentConfig, FederationMode, StoreKind};
+use crate::store::LatencyConfig;
+use crate::strategy::StrategyKind;
+use crate::util::json::Json;
+
+/// One cell of the sweep grid: a unique (mode, strategy, skew, n_nodes)
+/// combination. Seeds are *trials within* a cell, not part of the key —
+/// the report aggregates across them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellKey {
+    /// Federation protocol of this cell.
+    pub mode: FederationMode,
+    /// Aggregation strategy of this cell.
+    pub strategy: StrategyKind,
+    /// Label skew of this cell.
+    pub skew: f64,
+    /// Node count of this cell.
+    pub n_nodes: usize,
+}
+
+impl CellKey {
+    /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}_{}_s{}_n{}",
+            self.mode.name(),
+            self.strategy.name(),
+            self.skew,
+            self.n_nodes
+        )
+    }
+}
+
+/// One concrete trial produced by [`SweepSpec::expand`]: a fully resolved
+/// [`ExperimentConfig`] plus its position in the grid.
+#[derive(Clone, Debug)]
+pub struct SweepTrial {
+    /// Position in the expanded trial list (also the scheduler's queue id).
+    pub trial_index: usize,
+    /// Index into [`SweepSpec::cells`] — which grid cell this trial fills.
+    pub cell_index: usize,
+    /// The resolved per-trial configuration (seed and, for filesystem
+    /// stores, a namespaced store path already applied).
+    pub cfg: ExperimentConfig,
+}
+
+/// A grid of experiments: base config + axes + scheduler width.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Shared settings for every trial (model, epochs, sizes, store, ...).
+    pub base: ExperimentConfig,
+    /// Federation-mode axis.
+    pub modes: Vec<FederationMode>,
+    /// Strategy axis.
+    pub strategies: Vec<StrategyKind>,
+    /// Label-skew axis.
+    pub skews: Vec<f64>,
+    /// Node-count axis.
+    pub node_counts: Vec<usize>,
+    /// Seeds to run per cell (each seed is one trial).
+    pub seeds: Vec<u64>,
+    /// Worker threads for the scheduler; 0 = automatic
+    /// ([`crate::sweep::default_jobs`]).
+    pub jobs: usize,
+}
+
+impl SweepSpec {
+    /// A 1×1×1×1 sweep over `base` (every axis a singleton of the base
+    /// value) — the starting point for programmatic construction.
+    pub fn from_base(base: ExperimentConfig) -> Self {
+        SweepSpec {
+            modes: vec![base.mode],
+            strategies: vec![base.strategy],
+            skews: vec![base.skew],
+            node_counts: vec![base.n_nodes],
+            seeds: vec![base.seed],
+            jobs: 0,
+            base,
+        }
+    }
+
+    /// Parse a JSON sweep spec.
+    ///
+    /// Recognized keys — axes (scalar or array): `modes`, `strategies`,
+    /// `skews`, `n_nodes`, `seeds`; `trials: T` is shorthand for `seeds =
+    /// [seed, seed + 1000, ...]` (the [`crate::sim::run_trials`] seed
+    /// schedule). Scalars forwarded to the base config: `model`, `epochs`,
+    /// `steps_per_epoch`, `sample_prob`, `train_size`, `test_size`,
+    /// `seed`, `store`, `latency`, `sync_timeout_s`, `log_dir`,
+    /// `verbose`. Scheduler width: `jobs`. Unknown keys are errors (typo
+    /// protection).
+    pub fn parse_json(text: &str) -> Result<SweepSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow!("sweep spec: {e}"))?;
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow!("sweep spec must be a JSON object"))?;
+
+        const KNOWN: &[&str] = &[
+            "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
+            "seed", "store", "latency", "sync_timeout_s", "log_dir", "verbose", "modes",
+            "strategies", "skews", "n_nodes", "seeds", "trials", "jobs",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("sweep spec: unknown key {key:?} (known keys: {KNOWN:?})");
+            }
+        }
+
+        let mut base = ExperimentConfig::default();
+        if let Some(v) = obj.get("model") {
+            base.model = req_str(v, "model")?.to_string();
+        }
+        if let Some(v) = obj.get("epochs") {
+            base.epochs = req_usize(v, "epochs")?;
+        }
+        if let Some(v) = obj.get("steps_per_epoch") {
+            base.steps_per_epoch = req_usize(v, "steps_per_epoch")?;
+        }
+        if let Some(v) = obj.get("sample_prob") {
+            base.sample_prob = req_f64(v, "sample_prob")?;
+        }
+        if let Some(v) = obj.get("train_size") {
+            base.train_size = req_usize(v, "train_size")?;
+        }
+        if let Some(v) = obj.get("test_size") {
+            base.test_size = req_usize(v, "test_size")?;
+        }
+        if let Some(v) = obj.get("seed") {
+            base.seed = req_u64(v, "seed")?;
+        }
+        if let Some(v) = obj.get("store") {
+            let s = req_str(v, "store")?;
+            base.store = StoreKind::parse(s)
+                .ok_or_else(|| anyhow!("sweep spec: unknown store {s:?}"))?;
+        }
+        if let Some(v) = obj.get("latency") {
+            base.latency = parse_latency(v)?;
+        }
+        if let Some(v) = obj.get("sync_timeout_s") {
+            base.sync_timeout = Duration::from_secs_f64(req_f64(v, "sync_timeout_s")?);
+        }
+        if let Some(v) = obj.get("log_dir") {
+            base.log_dir = Some(req_str(v, "log_dir")?.into());
+        }
+        if let Some(v) = obj.get("verbose") {
+            base.verbose = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("sweep spec: verbose must be a bool"))?;
+        }
+
+        let modes = match obj.get("modes") {
+            None => vec![base.mode],
+            Some(v) => axis(v, "modes", |x| {
+                x.as_str().and_then(FederationMode::parse)
+            })?,
+        };
+        let strategies = match obj.get("strategies") {
+            None => vec![base.strategy],
+            Some(v) => axis(v, "strategies", |x| x.as_str().and_then(StrategyKind::parse))?,
+        };
+        let skews = match obj.get("skews") {
+            None => vec![base.skew],
+            Some(v) => axis(v, "skews", Json::as_f64)?,
+        };
+        let node_counts = match obj.get("n_nodes") {
+            None => vec![base.n_nodes],
+            Some(v) => axis(v, "n_nodes", |x| int_of(x).map(|n| n as usize))?,
+        };
+
+        let seeds = match (obj.get("seeds"), obj.get("trials")) {
+            (Some(_), Some(_)) => {
+                bail!("sweep spec: give either `seeds` or `trials`, not both")
+            }
+            (Some(v), None) => axis(v, "seeds", |x| int_of(x).map(|n| n as u64))?,
+            (None, Some(v)) => {
+                let t = req_usize(v, "trials")?;
+                anyhow::ensure!(t >= 1, "sweep spec: trials must be >= 1");
+                // Same seed schedule as crate::sim::run_trials.
+                (0..t).map(|i| base.seed.wrapping_add(1000 * i as u64)).collect()
+            }
+            (None, None) => vec![base.seed],
+        };
+
+        let jobs = match obj.get("jobs") {
+            None => 0,
+            Some(v) => req_usize(v, "jobs")?,
+        };
+
+        Ok(SweepSpec { base, modes, strategies, skews, node_counts, seeds, jobs })
+    }
+
+    /// The grid cells in deterministic (mode, strategy, skew, n_nodes)
+    /// nested order — the row order of the report.
+    pub fn cells(&self) -> Vec<CellKey> {
+        let mut out =
+            Vec::with_capacity(self.modes.len() * self.strategies.len() * self.skews.len());
+        for &mode in &self.modes {
+            for &strategy in &self.strategies {
+                for &skew in &self.skews {
+                    for &n_nodes in &self.node_counts {
+                        out.push(CellKey { mode, strategy, skew, n_nodes });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total trial count: cells × seeds.
+    pub fn n_trials(&self) -> usize {
+        self.cells().len() * self.seeds.len()
+    }
+
+    /// Expand the grid into concrete, validated trial configs.
+    ///
+    /// Per-trial store namespacing: with a filesystem store, each trial
+    /// gets its own `<root>/<cell label>/seed<seed>` directory so
+    /// concurrent trials never share a blob namespace (in-process stores
+    /// are already private — [`crate::sim::run_experiment`] constructs a
+    /// fresh one per call).
+    pub fn expand(&self) -> Result<Vec<SweepTrial>> {
+        anyhow::ensure!(!self.seeds.is_empty(), "sweep needs at least one seed");
+        // Distinct seeds are what make trials distinct — a duplicate would
+        // rerun the identical experiment and, for filesystem stores, share
+        // (and mid-run clear) one blob namespace and log directory.
+        let mut uniq = self.seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        anyhow::ensure!(
+            uniq.len() == self.seeds.len(),
+            "sweep seeds must be distinct, got {:?}",
+            self.seeds
+        );
+        let mut out = Vec::with_capacity(self.n_trials());
+        for (cell_index, cell) in self.cells().iter().enumerate() {
+            for &seed in &self.seeds {
+                let mut cfg = self.base.clone();
+                cfg.mode = cell.mode;
+                cfg.strategy = cell.strategy;
+                cfg.skew = cell.skew;
+                cfg.n_nodes = cell.n_nodes;
+                cfg.seed = seed;
+                if let StoreKind::Fs(root) = &self.base.store {
+                    cfg.store =
+                        StoreKind::Fs(root.join(cell.label()).join(format!("seed{seed}")));
+                }
+                cfg.validate()
+                    .with_context(|| format!("sweep cell {} seed {seed}", cell.label()))?;
+                out.push(SweepTrial { trial_index: out.len(), cell_index, cfg });
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str> {
+    v.as_str().ok_or_else(|| anyhow!("sweep spec: {key} must be a string"))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow!("sweep spec: {key} must be a number"))
+}
+
+/// The value as a non-negative integral number — rejects fractions,
+/// negatives, and values beyond f64's exact-integer range (2^53) instead
+/// of silently truncating/saturating them.
+fn int_of(v: &Json) -> Option<f64> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    v.as_f64().filter(|n| n.fract() == 0.0 && (0.0..=MAX_EXACT).contains(n))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    int_of(v)
+        .map(|n| n as usize)
+        .ok_or_else(|| anyhow!("sweep spec: {key} must be a non-negative integer"))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    int_of(v)
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow!("sweep spec: {key} must be a non-negative integer"))
+}
+
+/// Read an axis value that may be a scalar or an array of scalars.
+fn axis<T>(v: &Json, key: &str, f: impl Fn(&Json) -> Option<T>) -> Result<Vec<T>> {
+    let items: Vec<&Json> = match v {
+        Json::Arr(xs) => xs.iter().collect(),
+        other => vec![other],
+    };
+    anyhow::ensure!(!items.is_empty(), "sweep spec: axis {key} must be non-empty");
+    items
+        .into_iter()
+        .map(|x| f(x).ok_or_else(|| anyhow!("sweep spec: bad value in axis {key}: {x:?}")))
+        .collect()
+}
+
+/// `"none"`, `"s3"`, or a number of milliseconds — same values as the
+/// `latency` key of the `key = value` config format.
+fn parse_latency(v: &Json) -> Result<Option<LatencyConfig>> {
+    match v {
+        Json::Str(s) if s == "none" => Ok(None),
+        Json::Str(s) if s == "s3" => Ok(Some(LatencyConfig::s3_like())),
+        Json::Num(ms) => Ok(Some(LatencyConfig::from_ms(*ms))),
+        _ => bail!("sweep spec: latency must be \"none\", \"s3\", or milliseconds"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let spec = SweepSpec::parse_json(
+            r#"{
+                "model": "mnist",
+                "modes": ["sync", "async"],
+                "strategies": ["fedavg", "fedavgm"],
+                "skews": [0.0, 0.9],
+                "n_nodes": [2, 5],
+                "seeds": [42, 43],
+                "epochs": 2,
+                "steps_per_epoch": 25,
+                "train_size": 2000,
+                "test_size": 320,
+                "store": "sharded:4",
+                "jobs": 3
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.modes, vec![FederationMode::Sync, FederationMode::Async]);
+        assert_eq!(spec.strategies, vec![StrategyKind::FedAvg, StrategyKind::FedAvgM]);
+        assert_eq!(spec.skews, vec![0.0, 0.9]);
+        assert_eq!(spec.node_counts, vec![2, 5]);
+        assert_eq!(spec.seeds, vec![42, 43]);
+        assert_eq!(spec.base.store, StoreKind::Sharded(4));
+        assert_eq!(spec.jobs, 3);
+        assert_eq!(spec.cells().len(), 8);
+        assert_eq!(spec.n_trials(), 16);
+    }
+
+    #[test]
+    fn defaults_are_singleton_axes() {
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.n_trials(), 1);
+        let d = ExperimentConfig::default();
+        assert_eq!(spec.modes, vec![d.mode]);
+        assert_eq!(spec.seeds, vec![d.seed]);
+        assert_eq!(spec.jobs, 0);
+    }
+
+    #[test]
+    fn scalar_axis_values_accepted() {
+        let spec =
+            SweepSpec::parse_json(r#"{"modes": "sync", "n_nodes": 3, "skews": 0.5}"#).unwrap();
+        assert_eq!(spec.modes, vec![FederationMode::Sync]);
+        assert_eq!(spec.node_counts, vec![3]);
+        assert_eq!(spec.skews, vec![0.5]);
+    }
+
+    #[test]
+    fn trials_shorthand_matches_run_trials_schedule() {
+        let spec = SweepSpec::parse_json(r#"{"seed": 7, "trials": 3}"#).unwrap();
+        assert_eq!(spec.seeds, vec![7, 1007, 2007]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(SweepSpec::parse_json(r#"{"strategy": "fedavg"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"modes": ["warp"]}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"seeds": [1], "trials": 2}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"modes": []}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"[1, 2]"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_integral_and_negative_integers() {
+        // no silent truncation/saturation of bad numeric values
+        assert!(SweepSpec::parse_json(r#"{"seed": -1}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"epochs": 2.9}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"seeds": [1.5, 1.7]}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"n_nodes": [2.5]}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"jobs": -2}"#).is_err());
+        // beyond f64's exact-integer range: reject, don't saturate
+        assert!(SweepSpec::parse_json(r#"{"train_size": 1e300}"#).is_err());
+    }
+
+    #[test]
+    fn expand_rejects_duplicate_seeds() {
+        let spec = SweepSpec::parse_json(r#"{"seeds": [5, 5]}"#).unwrap();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn expand_resolves_every_cell_and_seed() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": ["sync", "async"], "skews": [0.0, 0.9], "seeds": [1, 2]}"#,
+        )
+        .unwrap();
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 8);
+        // trials are grouped by cell, seeds innermost
+        assert_eq!(trials[0].cell_index, 0);
+        assert_eq!(trials[1].cell_index, 0);
+        assert_eq!(trials[2].cell_index, 1);
+        assert_eq!(trials[0].cfg.seed, 1);
+        assert_eq!(trials[1].cfg.seed, 2);
+        assert_eq!(trials[3].cfg.mode, FederationMode::Sync);
+        assert_eq!(trials[3].cfg.skew, 0.9);
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.trial_index, i);
+        }
+    }
+
+    #[test]
+    fn fs_store_is_namespaced_per_trial() {
+        let spec = SweepSpec::parse_json(
+            r#"{"store": "fs:/tmp/sweep", "modes": ["sync", "async"], "seeds": [1, 2]}"#,
+        )
+        .unwrap();
+        let trials = spec.expand().unwrap();
+        let mut dirs: Vec<String> = trials
+            .iter()
+            .map(|t| match &t.cfg.store {
+                StoreKind::Fs(p) => p.display().to_string(),
+                other => panic!("expected fs store, got {other:?}"),
+            })
+            .collect();
+        assert!(dirs[0].starts_with("/tmp/sweep/"));
+        assert!(dirs[0].ends_with("seed1"));
+        dirs.sort();
+        dirs.dedup();
+        assert_eq!(dirs.len(), trials.len(), "every trial needs its own namespace");
+    }
+
+    #[test]
+    fn expand_rejects_invalid_cells() {
+        // local mode with n_nodes > 1 violates ExperimentConfig::validate
+        let spec =
+            SweepSpec::parse_json(r#"{"modes": ["local"], "n_nodes": [2]}"#).unwrap();
+        assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn latency_values() {
+        let spec = SweepSpec::parse_json(r#"{"latency": "s3"}"#).unwrap();
+        assert!(spec.base.latency.is_some());
+        let spec = SweepSpec::parse_json(r#"{"latency": 50}"#).unwrap();
+        assert_eq!(spec.base.latency.unwrap().base, Duration::from_millis(50));
+        let spec = SweepSpec::parse_json(r#"{"latency": "none"}"#).unwrap();
+        assert!(spec.base.latency.is_none());
+        assert!(SweepSpec::parse_json(r#"{"latency": true}"#).is_err());
+    }
+}

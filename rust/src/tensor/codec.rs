@@ -22,16 +22,23 @@ use anyhow::{bail, Result};
 use super::FlatParams;
 use crate::util::fnv1a64;
 
+/// Blob magic number ("FLWR" little-endian).
 pub const MAGIC: u32 = 0x464C_5752;
+/// Current blob format version.
 pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (everything before the payload).
 pub const HEADER_LEN: usize = 4 + 2 + 2 + 4 + 8 + 8 + 8 + 8 + 8;
 
 /// Metadata attached to a serialized weight entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlobMeta {
+    /// Id of the node that produced the weights.
     pub node_id: u32,
+    /// Sync round (async entries use the node's epoch counter).
     pub round: u64,
+    /// The producing node's local epoch counter.
     pub epoch: u64,
+    /// Examples the node trained on (FedAvg numerator n_k).
     pub n_examples: u64,
 }
 

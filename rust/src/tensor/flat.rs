@@ -5,21 +5,28 @@ use crate::util::hash::hash_f32s;
 
 /// A model's full parameter (or optimizer-moment) vector.
 #[derive(Clone, Debug, PartialEq)]
-pub struct FlatParams(pub Vec<f32>);
+pub struct FlatParams(
+    /// The raw element storage.
+    pub Vec<f32>,
+);
 
 impl FlatParams {
+    /// An all-zero vector of length `n`.
     pub fn zeros(n: usize) -> Self {
         FlatParams(vec![0.0; n])
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.0.len()
     }
 
+    /// True when the vector has no elements.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }
 
+    /// Borrow the elements as a slice.
     pub fn as_slice(&self) -> &[f32] {
         &self.0
     }
@@ -82,6 +89,7 @@ impl FlatParams {
         self.0.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
     }
 
+    /// True when every element is finite (no NaN/inf).
     pub fn all_finite(&self) -> bool {
         self.0.iter().all(|x| x.is_finite())
     }

@@ -8,17 +8,26 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A JSON string.
     Str(String),
+    /// A JSON array.
     Arr(Vec<Json>),
+    /// A JSON object (key order normalized by the map).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse error with the byte offset of the problem.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -31,6 +40,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -42,6 +52,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup; `None` for missing keys or non-objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -49,6 +60,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -56,6 +68,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -63,10 +76,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +89,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -81,6 +97,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

@@ -37,6 +37,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -81,6 +82,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Standard normal as f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }
