@@ -1,0 +1,143 @@
+//! Protocol-layer microbench: sync-barrier wait, poll vs notify.
+//!
+//! The barrier used to busy-poll `entries_for_round` every 200µs; it now
+//! parks on `WeightStore::wait_for_change`. This bench measures, for the
+//! in-process backends, the two costs that trade off:
+//!
+//! * **wake latency** — time from the last peer's push to the waiter
+//!   noticing the round is complete;
+//! * **store reads** — how many LIST-equivalent reads the waiter issued
+//!   while a straggler held the barrier open.
+//!
+//! Results land in `BENCH_protocols.json` (the protocol perf trajectory;
+//! re-run after store/protocol changes and compare).
+//!
+//! Run: `cargo bench --offline --bench protocols` — store-only, needs no
+//! artifacts.
+
+use std::fs;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fedless::store::{MemoryStore, PushRequest, ShardedStore, WeightStore};
+use fedless::tensor::FlatParams;
+
+const NODES: usize = 4;
+const STRAGGLER_DELAY: Duration = Duration::from_millis(10);
+const TRIALS: usize = 20;
+
+fn req(node: usize) -> PushRequest {
+    PushRequest {
+        node_id: node,
+        round: 0,
+        epoch: 0,
+        n_examples: 100,
+        params: Arc::new(FlatParams(vec![node as f32; 256])),
+    }
+}
+
+/// One barrier wait: K-1 entries are present, the K-th lands after the
+/// straggler delay. Returns (wake latency, store reads issued).
+fn trial(store: &Arc<dyn WeightStore>, notify: bool) -> (Duration, u64) {
+    store.clear().unwrap();
+    for node in 0..NODES - 1 {
+        store.push(req(node)).unwrap();
+    }
+    let pushed_at: Arc<Mutex<Option<Instant>>> = Arc::new(Mutex::new(None));
+    let pusher = {
+        let store = Arc::clone(store);
+        let pushed_at = Arc::clone(&pushed_at);
+        std::thread::spawn(move || {
+            std::thread::sleep(STRAGGLER_DELAY);
+            *pushed_at.lock().unwrap() = Some(Instant::now());
+            store.push(req(NODES - 1)).unwrap();
+        })
+    };
+
+    let mut reads = 0u64;
+    loop {
+        let seen = if notify { store.version().unwrap() } else { 0 };
+        reads += 1;
+        if store.entries_for_round(0).unwrap().len() >= NODES {
+            break;
+        }
+        if notify {
+            store.wait_for_change(seen, Duration::from_secs(10)).unwrap();
+        } else {
+            std::thread::sleep(Duration::from_micros(200)); // the old barrier
+        }
+    }
+    let detected = Instant::now();
+    let pushed = pushed_at.lock().unwrap().expect("barrier completed without the last push");
+    pusher.join().unwrap();
+    (detected.saturating_duration_since(pushed), reads)
+}
+
+struct Row {
+    store: &'static str,
+    waiter: &'static str,
+    mean_wake_us: f64,
+    p95_wake_us: f64,
+    mean_reads: f64,
+}
+
+fn measure(store: Arc<dyn WeightStore>, store_name: &'static str, notify: bool) -> Row {
+    // warmup
+    for _ in 0..3 {
+        trial(&store, notify);
+    }
+    let mut wakes_us: Vec<f64> = Vec::with_capacity(TRIALS);
+    let mut reads: Vec<f64> = Vec::with_capacity(TRIALS);
+    for _ in 0..TRIALS {
+        let (wake, r) = trial(&store, notify);
+        wakes_us.push(wake.as_secs_f64() * 1e6);
+        reads.push(r as f64);
+    }
+    wakes_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let row = Row {
+        store: store_name,
+        waiter: if notify { "notify" } else { "poll_200us" },
+        mean_wake_us: mean(&wakes_us),
+        p95_wake_us: wakes_us[(wakes_us.len() * 95 / 100).min(wakes_us.len() - 1)],
+        mean_reads: mean(&reads),
+    };
+    println!(
+        "{:>8}/{:<10}  wake mean {:>9.1}µs  p95 {:>9.1}µs  reads/wait {:>7.1}",
+        row.store, row.waiter, row.mean_wake_us, row.p95_wake_us, row.mean_reads
+    );
+    row
+}
+
+fn main() {
+    println!(
+        "sync-barrier wait: poll vs notify ({NODES} nodes, {}ms straggler, {TRIALS} trials)",
+        STRAGGLER_DELAY.as_millis()
+    );
+    let mut rows = Vec::new();
+    for notify in [false, true] {
+        rows.push(measure(Arc::new(MemoryStore::new()), "memory", notify));
+        rows.push(measure(Arc::new(ShardedStore::default()), "sharded", notify));
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"sync_barrier_wait_poll_vs_notify\",\n");
+    json.push_str(&format!(
+        "  \"nodes\": {NODES},\n  \"straggler_delay_ms\": {},\n  \"trials\": {TRIALS},\n  \"results\": [\n",
+        STRAGGLER_DELAY.as_millis()
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"store\": \"{}\", \"waiter\": \"{}\", \"mean_wake_us\": {:.1}, \
+             \"p95_wake_us\": {:.1}, \"mean_store_reads_per_wait\": {:.1}}}{}\n",
+            r.store,
+            r.waiter,
+            r.mean_wake_us,
+            r.p95_wake_us,
+            r.mean_reads,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    fs::write("BENCH_protocols.json", &json).expect("write BENCH_protocols.json");
+    println!("\nwrote BENCH_protocols.json");
+}

@@ -7,6 +7,11 @@
 //! fedbench fig1          straggler timelines + sync/async wall-clock
 //! fedbench robustness    crash injection: async survives, sync stalls
 //! fedbench all           every table at the chosen scale
+//! fedbench run [--mode sync|async|local|gossip[:m]] [--model M]
+//!              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]
+//!                        run one experiment at a preset scale (the
+//!                        quickest way to try a protocol, e.g.
+//!                        `fedbench run --mode gossip:2 --nodes 5`)
 //! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
 //!                        run a custom experiment grid in parallel
 //! ```
@@ -335,6 +340,68 @@ fn run_one(name: &str, o: &Opts) -> Option<TableOut> {
     }
 }
 
+/// `fedbench run [--mode M] [--model M] [--nodes N] [--skew S]
+/// [--strategy S] [--scale S] [--seed S]` — one experiment at a preset
+/// scale; the quickest way to exercise any protocol end-to-end.
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let mut cfg = base_cfg("mnist", Scale::Small);
+    let mut scale = Scale::Small;
+    let mut model = String::from("mnist");
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].clone();
+        i += 1;
+        let value = args
+            .get(i)
+            .ok_or_else(|| format!("{flag} needs a value"))?;
+        match flag.as_str() {
+            "--mode" => {
+                cfg.mode = FederationMode::parse(value)
+                    .ok_or_else(|| format!("bad --mode {value:?}"))?;
+            }
+            "--model" => model = value.clone(),
+            "--nodes" => {
+                cfg.n_nodes = value.parse().map_err(|_| format!("bad --nodes {value:?}"))?;
+            }
+            "--skew" => {
+                cfg.skew = value.parse().map_err(|_| format!("bad --skew {value:?}"))?;
+            }
+            "--strategy" => {
+                cfg.strategy = StrategyKind::parse(value)
+                    .ok_or_else(|| format!("bad --strategy {value:?}"))?;
+            }
+            "--scale" => {
+                scale = Scale::parse(value).ok_or_else(|| format!("bad --scale {value:?}"))?;
+            }
+            "--seed" => {
+                cfg.seed = value.parse().map_err(|_| format!("bad --seed {value:?}"))?;
+            }
+            other => return Err(format!("unknown run flag {other:?}")),
+        }
+        i += 1;
+    }
+    // re-resolve the preset for the chosen model/scale, keeping overrides
+    let chosen = base_cfg(&model, scale);
+    cfg.model = chosen.model;
+    cfg.epochs = chosen.epochs;
+    cfg.steps_per_epoch = chosen.steps_per_epoch;
+    cfg.train_size = chosen.train_size;
+    cfg.test_size = chosen.test_size;
+    cfg.validate().map_err(|e| format!("{e:#}"))?;
+
+    eprintln!("running {} (scale={})...", cfg.run_name(), scale.name());
+    let res = run_experiment(&cfg).map_err(|e| format!("{e:#}"))?;
+    println!("mode         : {}", cfg.mode.label());
+    println!("accuracy     : {:.4}", res.final_accuracy);
+    println!("test loss    : {:.4}", res.final_loss);
+    println!("wall clock   : {:.2}s", res.wall_clock_s);
+    println!("store pushes : {}", res.store_pushes);
+    println!("mean idle    : {:.1}%", 100.0 * res.mean_idle_fraction);
+    println!("all completed: {}", res.all_completed);
+    println!("{}", res.render_timelines(72));
+    Ok(())
+}
+
 /// `fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]` — run a
 /// JSON-defined experiment grid on the bounded sweep scheduler and print
 /// the aggregated mean ± std table.
@@ -399,10 +466,19 @@ fn main() {
         eprintln!(
             "usage: fedbench <table1..table7|fig1|robustness|all> \
              [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE]\n\
+             \x20      fedbench run [--mode sync|async|local|gossip[:m]] [--model M] \
+             [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);
     };
+    if cmd == "run" {
+        if let Err(e) = cmd_run(&args[1..]) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if cmd == "sweep" {
         if let Err(e) = cmd_sweep(&args[1..]) {
             eprintln!("error: {e}");

@@ -5,7 +5,7 @@
 //! # mnist async experiment
 //! model = mnist
 //! n_nodes = 2
-//! mode = async            # sync | async | local
+//! mode = async            # sync | async | local | gossip[:m]
 //! strategy = fedavg       # fedavg | fedavgm | fedadam | fedasync | fedbuff
 //! skew = 0.9
 //! epochs = 3
@@ -167,6 +167,15 @@ mod tests {
         assert_eq!(e.line, 1);
         let e = parse_config_text("just a line\n").unwrap_err();
         assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn gossip_mode_values() {
+        let cfg = parse_config_text("mode = gossip:3\n").unwrap();
+        assert_eq!(cfg.mode, FederationMode::Gossip { fanout: 3 });
+        let cfg = parse_config_text("mode = gossip\n").unwrap();
+        assert!(matches!(cfg.mode, FederationMode::Gossip { .. }));
+        assert!(parse_config_text("mode = gossip:0\n").is_err());
     }
 
     #[test]

@@ -11,34 +11,68 @@ use std::time::Duration;
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 
-/// How nodes federate.
+/// Peers pulled per epoch when `mode = gossip` gives no explicit fanout.
+pub const DEFAULT_GOSSIP_FANOUT: usize = 2;
+
+/// How nodes federate (which [`crate::protocol::FederationProtocol`] each
+/// node runs after every local epoch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FederationMode {
     /// Serverless synchronous: barrier on the weight store each round.
     Sync,
     /// Serverless asynchronous: FedAvgAsync, paper Algorithm 1.
     Async,
-    /// No federation (centralized baseline rows of the paper's tables).
+    /// No federation. With `n_nodes = 1` this is the centralized baseline
+    /// of the paper's tables; with more nodes it is the independent-silos
+    /// lower bound (nodes never communicate; the driver still averages
+    /// their final weights once, so grids can include a no-federation row).
     Local,
+    /// Serverless gossip: each epoch a node pulls and merges with a
+    /// seeded random subset of peers — no global barrier, no full fan-in.
+    Gossip {
+        /// Peers pulled per epoch (clamped to `n_nodes - 1` at runtime).
+        fanout: usize,
+    },
 }
 
 impl FederationMode {
-    /// Parse a config/CLI mode name (`sync` / `async` / `local`).
+    /// Parse a config/CLI mode name: `sync`, `async`, `local`, or
+    /// `gossip[:m]` (e.g. `gossip:3`; bare `gossip` uses
+    /// [`DEFAULT_GOSSIP_FANOUT`]).
     pub fn parse(s: &str) -> Option<FederationMode> {
         match s.to_ascii_lowercase().as_str() {
             "sync" => Some(FederationMode::Sync),
             "async" => Some(FederationMode::Async),
             "local" | "centralized" => Some(FederationMode::Local),
-            _ => None,
+            "gossip" => Some(FederationMode::Gossip { fanout: DEFAULT_GOSSIP_FANOUT }),
+            other => other
+                .strip_prefix("gossip:")
+                .and_then(|m| m.parse::<usize>().ok())
+                .filter(|&fanout| fanout >= 1)
+                .map(|fanout| FederationMode::Gossip { fanout }),
         }
     }
 
-    /// Canonical lowercase name (inverse of [`FederationMode::parse`]).
+    /// Canonical lowercase protocol-family name (`gossip:3` and `gossip`
+    /// both name the `gossip` family; see [`FederationMode::label`] for
+    /// the parameterized form).
     pub fn name(self) -> &'static str {
         match self {
             FederationMode::Sync => "sync",
             FederationMode::Async => "async",
             FederationMode::Local => "local",
+            FederationMode::Gossip { .. } => "gossip",
+        }
+    }
+
+    /// Filesystem- and table-safe label including parameters, e.g.
+    /// `gossip3` — distinct fanouts must land in distinct sweep cells and
+    /// store namespaces, so labels (unlike [`FederationMode::name`])
+    /// carry the fanout.
+    pub fn label(self) -> String {
+        match self {
+            FederationMode::Gossip { fanout } => format!("gossip{fanout}"),
+            other => other.name().to_string(),
         }
     }
 }
@@ -121,7 +155,8 @@ pub struct ExperimentConfig {
     pub model: String,
     /// Number of federated nodes (clients).
     pub n_nodes: usize,
-    /// Federation protocol: sync barrier, async Algorithm 1, or local.
+    /// Federation protocol: sync barrier, async Algorithm 1, gossip, or
+    /// local (see [`crate::protocol`]).
     pub mode: FederationMode,
     /// Client-side aggregation strategy.
     pub strategy: StrategyKind,
@@ -199,19 +234,19 @@ impl ExperimentConfig {
         if let Some(c) = &self.crash {
             anyhow::ensure!(c.node < self.n_nodes, "crash.node out of range");
         }
-        anyhow::ensure!(
-            !(self.mode == FederationMode::Local && self.n_nodes > 1),
-            "local (centralized) mode implies n_nodes = 1"
-        );
+        if let FederationMode::Gossip { fanout } = self.mode {
+            anyhow::ensure!(fanout >= 1, "gossip fanout must be >= 1");
+        }
         Ok(())
     }
 
-    /// Short run identifier, e.g. `mnist_async_fedavg_n2_s0.9_seed42`.
+    /// Short run identifier, e.g. `mnist_async_fedavg_n2_s0.9_seed42`
+    /// (gossip runs carry the fanout: `mnist_gossip2_...`).
     pub fn run_name(&self) -> String {
         format!(
             "{}_{}_{}_n{}_s{}_seed{}",
             self.model,
-            self.mode.name(),
+            self.mode.label(),
             self.strategy.name(),
             self.n_nodes,
             self.skew,
@@ -231,22 +266,33 @@ mod tests {
 
     #[test]
     fn rejects_bad_configs() {
-        let mut c = ExperimentConfig::default();
-        c.n_nodes = 0;
+        let c = ExperimentConfig { n_nodes: 0, ..Default::default() };
         assert!(c.validate().is_err());
 
-        let mut c = ExperimentConfig::default();
-        c.skew = 1.5;
+        let c = ExperimentConfig { skew: 1.5, ..Default::default() };
         assert!(c.validate().is_err());
 
-        let mut c = ExperimentConfig::default();
-        c.crash = Some(CrashSpec { node: 5, at_epoch: 0 });
+        let c = ExperimentConfig {
+            crash: Some(CrashSpec { node: 5, at_epoch: 0 }),
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
 
-        let mut c = ExperimentConfig::default();
-        c.mode = FederationMode::Local;
-        c.n_nodes = 3;
+        let c = ExperimentConfig {
+            mode: FederationMode::Gossip { fanout: 0 },
+            ..Default::default()
+        };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn local_with_many_nodes_is_the_silo_baseline() {
+        let c = ExperimentConfig {
+            mode: FederationMode::Local,
+            n_nodes: 3,
+            ..Default::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]
@@ -255,6 +301,27 @@ mod tests {
         assert_eq!(FederationMode::parse("centralized"), Some(FederationMode::Local));
         assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
         assert_eq!(Scale::parse("x"), None);
+    }
+
+    #[test]
+    fn gossip_mode_parse_and_label() {
+        assert_eq!(
+            FederationMode::parse("gossip"),
+            Some(FederationMode::Gossip { fanout: DEFAULT_GOSSIP_FANOUT })
+        );
+        assert_eq!(
+            FederationMode::parse("gossip:3"),
+            Some(FederationMode::Gossip { fanout: 3 })
+        );
+        assert_eq!(FederationMode::parse("gossip:0"), None);
+        assert_eq!(FederationMode::parse("gossip:x"), None);
+        let g = FederationMode::Gossip { fanout: 3 };
+        assert_eq!(g.name(), "gossip");
+        assert_eq!(g.label(), "gossip3");
+        assert_eq!(FederationMode::parse(g.name()), Some(FederationMode::Gossip {
+            fanout: DEFAULT_GOSSIP_FANOUT
+        }));
+        assert_eq!(FederationMode::Sync.label(), "sync");
     }
 
     #[test]

@@ -5,9 +5,11 @@
 //!
 //! * **L3 (this crate)** — the paper's coordination contribution: federated
 //!   nodes that train locally and aggregate weights **client-side** from a
-//!   shared [`store::WeightStore`], with both the synchronous barrier
-//!   protocol and the asynchronous `FedAvgAsync` protocol (paper
-//!   Algorithm 1). No central server exists anywhere in the system.
+//!   shared [`store::WeightStore`], through a pluggable
+//!   [`protocol::FederationProtocol`]: the synchronous barrier protocol,
+//!   the asynchronous `FedAvgAsync` protocol (paper Algorithm 1), a
+//!   gossip protocol (`mode = gossip[:m]`), and the no-federation
+//!   baseline. No central server exists anywhere in the system.
 //! * **L2 (JAX, build time)** — model fwd/bwd + Adam as flat-parameter
 //!   train/eval steps, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **L1 (Pallas, build time)** — weighted-aggregation, fused-Adam and
@@ -44,6 +46,7 @@ pub mod config;
 pub mod data;
 pub mod metrics;
 pub mod node;
+pub mod protocol;
 pub mod runtime;
 pub mod sim;
 pub mod store;
@@ -58,6 +61,7 @@ pub mod prelude {
     pub use crate::data::{DatasetKind, Partitioner};
     pub use crate::metrics::stats::Summary;
     pub use crate::node::{NodeHandle, NodeReport};
+    pub use crate::protocol::{FederationProtocol, ProtocolKind};
     pub use crate::runtime::{Engine, ModelBundle};
     pub use crate::sim::{run_experiment, run_trials, ExperimentResult};
     pub use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};

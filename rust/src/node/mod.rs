@@ -5,10 +5,11 @@
 //! runtimes are strictly closer to independent processes, §5). A node:
 //!
 //! 1. trains `steps_per_epoch` local steps via the AOT train artifact,
-//! 2. federates through the weight store according to the configured
-//!    protocol — the synchronous barrier or asynchronous Algorithm 1 —
-//!    aggregating **client-side** with its own [`crate::strategy::Strategy`]
-//!    instance,
+//! 2. federates through the weight store by calling its
+//!    [`crate::protocol::FederationProtocol`] (sync barrier, async
+//!    Algorithm 1, gossip, or the local baseline — resolved from
+//!    `cfg.mode`), aggregating **client-side** with its own
+//!    [`crate::strategy::Strategy`] instance,
 //! 3. repeats for `epochs`, then reports its final weights.
 //!
 //! Most callers go through [`crate::sim::run_experiment`], which spawns

@@ -1,31 +1,24 @@
-//! The node thread body: local training + the two serverless federation
-//! protocols.
+//! The node thread body: local training plus federation through the
+//! pluggable protocol layer.
 //!
-//! **Sync** (§3 "Synchronous serverless federated learning"): after each
-//! epoch a node pushes `(round, weights, n_k)` and polls the store until
-//! *all* K nodes' round-`r` entries are present, then every node aggregates
-//! the same set client-side (so all nodes compute identical weights —
-//! checked by `rust/tests/protocol_invariants.rs`).
-//!
-//! **Async** (Algorithm 1, FedAvgAsync): after each epoch, with probability
-//! `C` the node pushes its weights, then compares the store's state hash
-//! with the one it saw last; if the store changed, it pulls the latest
-//! entry per peer, inserts its own weights as `ω[k]`, and aggregates with
-//! its strategy. No global round and no waiting — a straggler never blocks
-//! anyone.
+//! The protocol logic itself (sync barrier, async Algorithm 1, gossip,
+//! local baseline) lives in [`crate::protocol`]; this thread only trains
+//! `steps_per_epoch` local steps per epoch, hands its weights to
+//! [`crate::protocol::FederationProtocol::after_epoch`], and folds the
+//! [`crate::protocol::ProtocolOutcome`] into its [`NodeReport`]. Crash
+//! injection and run logging are worker concerns and stay here.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::config::{ExperimentConfig, FederationMode};
+use crate::config::ExperimentConfig;
 use crate::data::BatchLoader;
 use crate::metrics::timeline::{SpanKind, Timeline};
 use crate::metrics::RunLogger;
+use crate::protocol::{EpochCtx, ProtocolKind};
 use crate::runtime::{Engine, Manifest, ModelBundle, TrainState};
-use crate::store::{PushRequest, WeightStore};
-use crate::strategy::{Contribution, Strategy};
-
-use crate::util::Rng;
+use crate::store::WeightStore;
+use crate::strategy::Strategy;
 
 use super::{NodeHandle, NodeReport, NodeStatus};
 
@@ -68,8 +61,9 @@ fn run_node(mut ctx: NodeCtx) -> NodeReport {
         status: NodeStatus::Completed,
         epochs_done: 0,
         final_params: None,
-        n_examples_per_epoch: (ctx.cfg.steps_per_epoch
-            * batch_size_of(&ctx.manifest, &ctx.cfg.model)) as u64,
+        // set from the manifest in run_node_inner; an unknown model is a
+        // hard error there, never a silently wrong default weight
+        n_examples_per_epoch: 0,
         epoch_losses: vec![],
         epoch_accs: vec![],
         aggregations: 0,
@@ -93,10 +87,6 @@ fn run_node(mut ctx: NodeCtx) -> NodeReport {
     report
 }
 
-fn batch_size_of(manifest: &Manifest, model: &str) -> usize {
-    manifest.model(model).map(|m| m.batch_size).unwrap_or(32)
-}
-
 fn run_node_inner(
     ctx: &mut NodeCtx,
     report: &mut NodeReport,
@@ -104,6 +94,9 @@ fn run_node_inner(
 ) -> anyhow::Result<()> {
     let cfg = Arc::clone(&ctx.cfg);
     let info = ctx.manifest.model(&cfg.model)?.clone();
+    // n_k: examples this node trains on per epoch (the FedAvg weight
+    // numerator), from the manifest's authoritative batch size
+    report.n_examples_per_epoch = (cfg.steps_per_epoch * info.batch_size) as u64;
     let engine = Engine::new()?;
     let bundle = ModelBundle::load(&engine, &info)?;
 
@@ -111,7 +104,7 @@ fn run_node_inner(
     // Algorithm 1).
     let params = bundle.init_params(cfg.seed)?;
     let mut state = TrainState::new(params);
-    let mut rng = Rng::new(cfg.seed ^ ((ctx.node_id as u64 + 1) << 20));
+    let mut protocol = ProtocolKind::from(cfg.mode).build(ctx.node_id, &cfg);
 
     let step_delay = cfg
         .node_delays_ms
@@ -119,9 +112,6 @@ fn run_node_inner(
         .copied()
         .map(|ms| Duration::from_secs_f64(ms / 1000.0))
         .unwrap_or(Duration::ZERO);
-
-    // async change detection: last store state hash we aggregated against
-    let mut last_seen_hash: Option<u64> = None;
 
     ctx.start.wait();
 
@@ -174,63 +164,24 @@ fn run_node_inner(
             );
         }
 
-        // ---- federation ------------------------------------------------
-        match cfg.mode {
-            FederationMode::Local => {} // centralized baseline: no store
-            FederationMode::Sync => {
-                let round = epoch as u64;
-                sync_federate(ctx, report, timeline, &mut state, round)?;
-                if matches!(report.status, NodeStatus::Stalled { .. }) {
-                    // The node is stuck at the barrier, not dead: its
-                    // current weights still exist (and were pushed), so
-                    // report them — the driver can evaluate what training
-                    // achieved before the stall.
-                    report.final_params = Some(state.params.clone());
-                    return Ok(());
-                }
-            }
-            FederationMode::Async => {
-                // Algorithm 1: sampling gates the WeightUpdate step; a
-                // non-sampled client keeps training on its own weights.
-                if rng.chance(cfg.sample_prob) {
-                    async_federate(ctx, report, timeline, &mut state, epoch, &mut last_seen_hash)?;
-                }
-            }
-        }
-    }
-
-    report.final_params = Some(state.params.clone());
-    Ok(())
-}
-
-/// Synchronous serverless federation: push for `round`, barrier-poll until
-/// all peers' entries for `round` exist, aggregate client-side.
-fn sync_federate(
-    ctx: &mut NodeCtx,
-    report: &mut NodeReport,
-    timeline: &mut Timeline,
-    state: &mut TrainState,
-    round: u64,
-) -> anyhow::Result<()> {
-    let cfg = &ctx.cfg;
-    ctx.store.push(PushRequest {
-        node_id: ctx.node_id,
-        round,
-        epoch: round,
-        n_examples: report.n_examples_per_epoch,
-        params: Arc::new(state.params.clone()),
-    })?;
-    report.pushes += 1;
-
-    // barrier: wait for all K entries of this round
-    let t_wait = Instant::now();
-    let entries = loop {
-        let entries = ctx.store.entries_for_round(round)?;
-        if entries.len() >= cfg.n_nodes {
-            break entries;
-        }
-        if t_wait.elapsed() > cfg.sync_timeout {
-            timeline.record(SpanKind::Wait, t_wait);
+        // ---- federation (protocol layer) -------------------------------
+        let mut pctx = EpochCtx {
+            node_id: ctx.node_id,
+            n_nodes: cfg.n_nodes,
+            epoch,
+            n_examples: report.n_examples_per_epoch,
+            store: ctx.store.as_ref(),
+            strategy: ctx.strategy.as_mut(),
+            timeline: &mut *timeline,
+            sync_timeout: cfg.sync_timeout,
+        };
+        let out = protocol.after_epoch(&mut pctx, &mut state.params)?;
+        report.pushes += out.pushes;
+        report.aggregations += out.aggregations;
+        if let Some(round) = out.stalled_at {
+            // The node is stuck at the barrier, not dead: its current
+            // weights still exist (and were pushed), so report them — the
+            // driver can evaluate what training achieved before the stall.
             report.status = NodeStatus::Stalled { at_round: round };
             if let Some(lg) = &ctx.logger {
                 let _ = lg.log_event(
@@ -238,93 +189,11 @@ fn sync_federate(
                     &[("node", ctx.node_id.to_string()), ("round", round.to_string())],
                 );
             }
+            report.final_params = Some(state.params.clone());
             return Ok(());
         }
-        std::thread::sleep(Duration::from_micros(200));
-    };
-    timeline.record(SpanKind::Wait, t_wait);
-
-    let t_agg = Instant::now();
-    let contribs: Vec<Contribution> = entries
-        .iter()
-        .map(|e| Contribution {
-            node_id: e.node_id,
-            n_examples: e.n_examples,
-            is_self: e.node_id == ctx.node_id,
-            seq: e.seq,
-            params: Arc::clone(&e.params),
-        })
-        .collect();
-    if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
-        state.set_params(new_params);
-        report.aggregations += 1;
     }
-    timeline.record(SpanKind::Aggregate, t_agg);
-    Ok(())
-}
 
-/// Asynchronous federation — Algorithm 1's WeightUpdate: push w^k, detect
-/// store change by hash, pull ω, set ω[k] = w^k, aggregate client-side.
-fn async_federate(
-    ctx: &mut NodeCtx,
-    report: &mut NodeReport,
-    timeline: &mut Timeline,
-    state: &mut TrainState,
-    epoch: usize,
-    last_seen_hash: &mut Option<u64>,
-) -> anyhow::Result<()> {
-    let t_agg = Instant::now();
-    ctx.store.push(PushRequest {
-        node_id: ctx.node_id,
-        round: epoch as u64,
-        epoch: epoch as u64,
-        n_examples: report.n_examples_per_epoch,
-        params: Arc::new(state.params.clone()),
-    })?;
-    report.pushes += 1;
-
-    // "performs a check to see if the remote server has changed state"
-    let hash = ctx.store.state_hash()?;
-    let changed = last_seen_hash.map(|h| h != hash).unwrap_or(true);
-    if changed {
-        let entries = ctx.store.latest_per_node()?;
-        // ω[k] <- w^k : own current weights replace our stored entry
-        // (we keep the store-assigned seq so staleness-aware strategies
-        // see honest sequence numbers).
-        let mut contribs: Vec<Contribution> = entries
-            .iter()
-            .map(|e| Contribution {
-                node_id: e.node_id,
-                n_examples: e.n_examples,
-                is_self: e.node_id == ctx.node_id,
-                seq: e.seq,
-                params: if e.node_id == ctx.node_id {
-                    Arc::new(state.params.clone())
-                } else {
-                    Arc::clone(&e.params)
-                },
-            })
-            .collect();
-        if !contribs.iter().any(|c| c.is_self) {
-            // our push raced a clear() or failed partially; contribute
-            // locally anyway
-            let max_seq = contribs.iter().map(|c| c.seq).max().unwrap_or(0);
-            contribs.push(Contribution {
-                node_id: ctx.node_id,
-                n_examples: report.n_examples_per_epoch,
-                is_self: true,
-                seq: max_seq,
-                params: Arc::new(state.params.clone()),
-            });
-        }
-        if contribs.len() > 1 {
-            if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
-                state.set_params(new_params);
-                report.aggregations += 1;
-            }
-        }
-        *last_seen_hash = Some(ctx.store.state_hash()?);
-    }
-    timeline.record(SpanKind::Aggregate, t_agg);
+    report.final_params = Some(state.params.clone());
     Ok(())
 }

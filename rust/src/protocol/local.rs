@@ -1,0 +1,29 @@
+//! [`LocalOnly`] — the no-federation protocol.
+
+use anyhow::Result;
+
+use crate::tensor::FlatParams;
+
+use super::{EpochCtx, FederationProtocol, ProtocolOutcome};
+
+/// No federation: the node never touches the weight store.
+///
+/// With one node this is the paper's centralized baseline; with several
+/// it is the independent-silos lower bound (the experiment driver still
+/// averages the final weights once, so grids can carry a no-federation
+/// row next to the real protocols).
+pub struct LocalOnly;
+
+impl FederationProtocol for LocalOnly {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn after_epoch(
+        &mut self,
+        _ctx: &mut EpochCtx<'_>,
+        _params: &mut FlatParams,
+    ) -> Result<ProtocolOutcome> {
+        Ok(ProtocolOutcome::default())
+    }
+}

@@ -1,0 +1,323 @@
+//! The federation protocol layer — *what a node does at an epoch end*.
+//!
+//! The paper's two protocols (the synchronous store barrier of §3 and
+//! asynchronous FedAvgAsync, Algorithm 1) used to be hard-wired into the
+//! node thread body; every new federation scenario meant editing the
+//! worker. This module makes the protocol a first-class, pluggable
+//! object: [`FederationProtocol`] is per-node state with one hook,
+//! [`FederationProtocol::after_epoch`], called by the node thread after
+//! each local epoch with an [`EpochCtx`] (store + strategy + timeline)
+//! and the node's current weights.
+//!
+//! Implementations (selected by [`ProtocolKind`], which resolves from the
+//! config-level [`FederationMode`]):
+//!
+//! * [`LocalOnly`]   — no federation; the centralized / independent-silos
+//!   baseline.
+//! * [`SyncBarrier`] — push for round `r`, then **block on store change
+//!   notification** ([`WeightStore::wait_for_change`]) until all K
+//!   round-`r` entries exist, aggregate the identical set client-side.
+//!   No sleep-polling: the barrier parks until a peer's push bumps the
+//!   store version.
+//! * [`AsyncHash`]   — FedAvgAsync: push, detect store change via the
+//!   monotone [`WeightStore::version`] counter, pull `latest_per_node`,
+//!   set `ω[k] ← w^k`, aggregate. The version token is recorded *at pull
+//!   time*, so a peer push racing the aggregation is re-detected next
+//!   epoch instead of being silently masked.
+//! * [`Gossip`]      — each epoch pull and merge with a seeded random
+//!   subset of `fanout` peers ([`gossip_peers`] is the replayable
+//!   schedule): no global barrier, no full fan-in — the protocol grid's
+//!   scenario-diversity proof.
+//!
+//! All four report what happened through [`ProtocolOutcome`] (pushes,
+//! aggregations, barrier stalls), which the worker folds into its
+//! [`crate::node::NodeReport`].
+
+mod async_hash;
+mod gossip;
+mod local;
+mod sync;
+
+pub use async_hash::AsyncHash;
+pub use gossip::{gossip_peers, Gossip};
+pub use local::LocalOnly;
+pub use sync::SyncBarrier;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, FederationMode};
+use crate::metrics::timeline::Timeline;
+use crate::store::{PushRequest, WeightStore};
+use crate::strategy::Strategy;
+use crate::tensor::FlatParams;
+
+/// Everything a protocol may touch while federating at an epoch end.
+/// Borrowed from the node thread for the duration of one
+/// [`FederationProtocol::after_epoch`] call.
+pub struct EpochCtx<'a> {
+    /// This node's id.
+    pub node_id: usize,
+    /// Total nodes in the experiment (the sync barrier's fan-in K).
+    pub n_nodes: usize,
+    /// The just-finished 0-based local epoch (doubles as the sync round).
+    pub epoch: usize,
+    /// Examples this node trains on per epoch (the FedAvg numerator n_k).
+    pub n_examples: u64,
+    /// The shared weight store.
+    pub store: &'a dyn WeightStore,
+    /// This node's own client-side aggregation strategy.
+    pub strategy: &'a mut dyn Strategy,
+    /// The node's timeline, for Wait/Aggregate span accounting.
+    pub timeline: &'a mut Timeline,
+    /// How long the sync barrier may wait before reporting a stall.
+    pub sync_timeout: Duration,
+}
+
+impl EpochCtx<'_> {
+    /// Deposit `params` as this node's round-`round` entry; returns the
+    /// store-assigned sequence number.
+    pub fn push_weights(&mut self, params: &FlatParams, round: u64) -> Result<u64> {
+        self.store.push(PushRequest {
+            node_id: self.node_id,
+            round,
+            epoch: round,
+            n_examples: self.n_examples,
+            params: Arc::new(params.clone()),
+        })
+    }
+}
+
+/// What one federation step did (folded into the node report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProtocolOutcome {
+    /// Pushes performed this step.
+    pub pushes: u64,
+    /// Aggregations actually applied this step.
+    pub aggregations: u64,
+    /// Set when the sync barrier gave up waiting at this round; the node
+    /// stops with [`crate::node::NodeStatus::Stalled`].
+    pub stalled_at: Option<u64>,
+}
+
+/// A federation protocol: per-node state plus the epoch-end hook.
+///
+/// Implementations own whatever per-node state the scenario needs (the
+/// async change token, sampling RNG, gossip seed, …); one instance is
+/// built per node via [`ProtocolKind::build`] and lives for the whole
+/// trial.
+pub trait FederationProtocol: Send {
+    /// Canonical lowercase protocol name (matches
+    /// [`FederationMode::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Federate after a finished local epoch, possibly replacing
+    /// `params` with aggregated weights (the node's optimizer moments
+    /// stay local, as in the paper: only weights travel).
+    fn after_epoch(
+        &mut self,
+        ctx: &mut EpochCtx<'_>,
+        params: &mut FlatParams,
+    ) -> Result<ProtocolOutcome>;
+}
+
+/// Protocol selector — the protocol-layer resolution of the config-level
+/// [`FederationMode`] (`ProtocolKind::from(cfg.mode)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// No federation ([`LocalOnly`]).
+    Local,
+    /// Notification-based store barrier each round ([`SyncBarrier`]).
+    Sync,
+    /// FedAvgAsync change-detection protocol ([`AsyncHash`]).
+    Async,
+    /// Seeded random peer-subset merging ([`Gossip`]).
+    Gossip {
+        /// Peers pulled per epoch (clamped to `n_nodes - 1` at runtime).
+        fanout: usize,
+    },
+}
+
+impl From<FederationMode> for ProtocolKind {
+    fn from(mode: FederationMode) -> ProtocolKind {
+        match mode {
+            FederationMode::Local => ProtocolKind::Local,
+            FederationMode::Sync => ProtocolKind::Sync,
+            FederationMode::Async => ProtocolKind::Async,
+            FederationMode::Gossip { fanout } => ProtocolKind::Gossip { fanout },
+        }
+    }
+}
+
+impl ProtocolKind {
+    /// Canonical lowercase name (matches [`FederationMode::name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ProtocolKind::Local => "local",
+            ProtocolKind::Sync => "sync",
+            ProtocolKind::Async => "async",
+            ProtocolKind::Gossip { .. } => "gossip",
+        }
+    }
+
+    /// Instantiate this node's protocol state for one trial.
+    pub fn build(self, node_id: usize, cfg: &ExperimentConfig) -> Box<dyn FederationProtocol> {
+        match self {
+            ProtocolKind::Local => Box::new(LocalOnly),
+            ProtocolKind::Sync => Box::new(SyncBarrier),
+            ProtocolKind::Async => Box::new(AsyncHash::new(cfg.sample_prob, cfg.seed, node_id)),
+            ProtocolKind::Gossip { fanout } => Box::new(Gossip::new(fanout, cfg.seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod protocol_tests {
+    //! Protocol-level harness: drive protocols directly against an
+    //! in-process store, no artifacts or PJRT runtime required.
+
+    use std::time::Instant;
+
+    use super::*;
+    use crate::strategy::StrategyKind;
+
+    /// One simulated node: protocol + strategy + timeline + weights.
+    pub struct TestNode {
+        /// The node id the harness drives.
+        pub node_id: usize,
+        /// The node's protocol instance under test.
+        pub protocol: Box<dyn FederationProtocol>,
+        /// The node's own strategy (FedAvg).
+        pub strategy: Box<dyn Strategy>,
+        /// Timeline sink for span accounting.
+        pub timeline: Timeline,
+        /// Current weights.
+        pub params: FlatParams,
+    }
+
+    impl TestNode {
+        pub fn new(node_id: usize, cfg: &ExperimentConfig) -> TestNode {
+            TestNode {
+                node_id,
+                protocol: ProtocolKind::from(cfg.mode).build(node_id, cfg),
+                strategy: StrategyKind::FedAvg.build(),
+                timeline: Timeline::new(node_id, Instant::now()),
+                // distinct starting weights per node so averaging is visible
+                params: FlatParams(vec![node_id as f32 * 10.0; 4]),
+            }
+        }
+
+        pub fn epoch(
+            &mut self,
+            store: &dyn WeightStore,
+            n_nodes: usize,
+            epoch: usize,
+            sync_timeout: Duration,
+        ) -> ProtocolOutcome {
+            let mut ctx = EpochCtx {
+                node_id: self.node_id,
+                n_nodes,
+                epoch,
+                n_examples: 100,
+                store,
+                strategy: self.strategy.as_mut(),
+                timeline: &mut self.timeline,
+                sync_timeout,
+            };
+            self.protocol.after_epoch(&mut ctx, &mut self.params).unwrap()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::protocol_tests::TestNode;
+    use super::*;
+    use crate::store::MemoryStore;
+
+    #[test]
+    fn kind_resolves_from_mode() {
+        assert_eq!(ProtocolKind::from(FederationMode::Sync), ProtocolKind::Sync);
+        assert_eq!(
+            ProtocolKind::from(FederationMode::Gossip { fanout: 3 }),
+            ProtocolKind::Gossip { fanout: 3 }
+        );
+        for mode in [
+            FederationMode::Local,
+            FederationMode::Sync,
+            FederationMode::Async,
+            FederationMode::Gossip { fanout: 2 },
+        ] {
+            assert_eq!(ProtocolKind::from(mode).name(), mode.name());
+            let cfg = ExperimentConfig { mode, ..Default::default() };
+            assert_eq!(ProtocolKind::from(mode).build(0, &cfg).name(), mode.name());
+        }
+    }
+
+    #[test]
+    fn local_only_never_touches_the_store() {
+        let cfg = ExperimentConfig { mode: FederationMode::Local, ..Default::default() };
+        let store = MemoryStore::new();
+        let mut node = TestNode::new(0, &cfg);
+        for epoch in 0..3 {
+            let out = node.epoch(&store, 1, epoch, Duration::from_secs(1));
+            assert_eq!(out, ProtocolOutcome::default());
+        }
+        assert_eq!(store.push_count(), 0);
+        assert_eq!(node.params.0, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn sync_barrier_two_threads_converge_bit_identically() {
+        // Two real threads against one store: the notification-based
+        // barrier must hand both nodes the same round set every epoch,
+        // so their weights stay bit-identical.
+        let cfg = ExperimentConfig {
+            mode: FederationMode::Sync,
+            n_nodes: 2,
+            ..Default::default()
+        };
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let run = |node_id: usize| {
+            let store = Arc::clone(&store);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut node = TestNode::new(node_id, &cfg);
+                for epoch in 0..3 {
+                    let out = node.epoch(&*store, 2, epoch, Duration::from_secs(30));
+                    assert_eq!(out.pushes, 1);
+                    assert_eq!(out.aggregations, 1);
+                    assert_eq!(out.stalled_at, None);
+                }
+                node.params
+            })
+        };
+        let (a, b) = (run(0), run(1));
+        let (pa, pb) = (a.join().unwrap(), b.join().unwrap());
+        assert_eq!(pa.0, pb.0, "sync nodes must end bit-identical");
+        // equal n_examples: round 0 average of [0,0,0,0] and [10,10,10,10]
+        // is 5s, and identical inputs stay fixed thereafter.
+        assert_eq!(pa.0, vec![5.0; 4]);
+    }
+
+    #[test]
+    fn sync_barrier_stalls_cleanly_without_peers() {
+        let cfg = ExperimentConfig {
+            mode: FederationMode::Sync,
+            n_nodes: 2,
+            ..Default::default()
+        };
+        let store = MemoryStore::new();
+        let mut node = TestNode::new(0, &cfg);
+        let t = std::time::Instant::now();
+        let out = node.epoch(&store, 2, 0, Duration::from_millis(60));
+        assert!(t.elapsed() >= Duration::from_millis(50), "must wait out the timeout");
+        assert_eq!(out.stalled_at, Some(0));
+        assert_eq!(out.pushes, 1);
+        assert_eq!(out.aggregations, 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! [`SyncBarrier`] — the synchronous serverless protocol (§3), now
+//! blocking on store change notification instead of sleep-polling.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::timeline::SpanKind;
+use crate::strategy::Contribution;
+use crate::tensor::FlatParams;
+
+use super::{EpochCtx, FederationProtocol, ProtocolOutcome};
+
+/// Synchronous serverless federation: push for round `r`, park on
+/// [`crate::store::WeightStore::wait_for_change`] until all K round-`r`
+/// entries exist, aggregate the identical set client-side (so all nodes
+/// compute bit-identical weights — `rust/tests/protocol_invariants.rs`).
+///
+/// The barrier is event-driven: a waiting node wakes only when a peer's
+/// push (or any store mutation) advances the store version, never on a
+/// sleep timer. A `sync_timeout` still bounds the wait so a crashed peer
+/// turns the node's status into `Stalled` instead of hanging (§4.2.1).
+pub struct SyncBarrier;
+
+impl FederationProtocol for SyncBarrier {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn after_epoch(
+        &mut self,
+        ctx: &mut EpochCtx<'_>,
+        params: &mut FlatParams,
+    ) -> Result<ProtocolOutcome> {
+        let round = ctx.epoch as u64;
+        ctx.push_weights(params, round)?;
+        let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
+
+        // barrier: park until all K entries of this round exist
+        let t_wait = Instant::now();
+        let entries = loop {
+            // Read the version token *before* listing: a push landing
+            // between the two can only cause a spurious wake-up, never a
+            // missed one.
+            let seen = ctx.store.version()?;
+            let entries = ctx.store.entries_for_round(round)?;
+            if entries.len() >= ctx.n_nodes {
+                break entries;
+            }
+            let elapsed = t_wait.elapsed();
+            if elapsed >= ctx.sync_timeout {
+                ctx.timeline.record(SpanKind::Wait, t_wait);
+                out.stalled_at = Some(round);
+                return Ok(out);
+            }
+            ctx.store.wait_for_change(seen, ctx.sync_timeout - elapsed)?;
+        };
+        ctx.timeline.record(SpanKind::Wait, t_wait);
+
+        let t_agg = Instant::now();
+        let contribs: Vec<Contribution> = entries
+            .iter()
+            .map(|e| Contribution {
+                node_id: e.node_id,
+                n_examples: e.n_examples,
+                is_self: e.node_id == ctx.node_id,
+                seq: e.seq,
+                params: Arc::clone(&e.params),
+            })
+            .collect();
+        if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+            *params = new_params;
+            out.aggregations = 1;
+        }
+        ctx.timeline.record(SpanKind::Aggregate, t_agg);
+        Ok(out)
+    }
+}

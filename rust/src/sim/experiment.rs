@@ -124,6 +124,11 @@ fn build_data(
 }
 
 /// Run one federated experiment end-to-end and evaluate the global model.
+///
+/// Each node federates through the [`crate::protocol::FederationProtocol`]
+/// resolved from `cfg.mode` (sync barrier, async Algorithm 1,
+/// `gossip[:m]`, or the local baseline); the driver itself is
+/// protocol-agnostic.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     cfg.validate()?;
     let manifest = Arc::new(Manifest::discover()?);
@@ -160,7 +165,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
 
     // ---- global model = example-weighted average of the nodes' final
     // weights (what the store would converge to; identical to any node's
-    // last sync aggregation in sync mode).
+    // last sync aggregation in sync mode, and the one-shot average of
+    // independent silos under multi-node local mode).
     let finals: Vec<(&FlatParams, f32)> = reports
         .iter()
         .filter_map(|r| r.final_params.as_ref().map(|p| (p, r.n_examples_per_epoch as f32)))

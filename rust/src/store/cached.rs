@@ -9,6 +9,7 @@
 //! RTT in the unchanged case (measured in EXPERIMENTS.md §Perf).
 
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -77,6 +78,18 @@ impl<S: WeightStore> WeightStore for CachedStore<S> {
 
     fn state_hash(&self) -> Result<u64> {
         self.inner.state_hash()
+    }
+
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        self.inner.latest_for_node(node_id)
+    }
+
+    fn version(&self) -> Result<u64> {
+        self.inner.version()
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        self.inner.wait_for_change(since, timeout)
     }
 
     fn push_count(&self) -> u64 {

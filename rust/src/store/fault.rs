@@ -3,6 +3,7 @@
 //! jobs can be fragile") and by failure-handling tests.
 
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -64,6 +65,23 @@ impl<S: WeightStore> WeightStore for FaultStore<S> {
     fn state_hash(&self) -> Result<u64> {
         self.maybe_fail("state_hash")?;
         self.inner.state_hash()
+    }
+
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        self.maybe_fail("latest_for_node")?;
+        self.inner.latest_for_node(node_id)
+    }
+
+    fn version(&self) -> Result<u64> {
+        self.maybe_fail("version")?;
+        self.inner.version()
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        // The wait itself is a local blocking primitive, not a remote
+        // round-trip: faults are injected on the reads around it, so a
+        // flaky store still delivers wake-ups.
+        self.inner.wait_for_change(since, timeout)
     }
 
     fn push_count(&self) -> u64 {

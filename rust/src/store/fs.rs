@@ -11,6 +11,7 @@ use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -28,6 +29,11 @@ pub struct FsStore {
     pushes: AtomicU64,
     /// Serializes directory scans (cheap; pushes stay concurrent).
     scan_lock: Mutex<()>,
+    /// Handle-local monotone version: `(last observed state hash, counter)`.
+    /// There is no cross-process notification on a plain directory, so the
+    /// counter advances whenever a LIST observes a different hash — the
+    /// mtime-watching analogue for a bucket prefix.
+    change: Mutex<(u64, u64)>,
 }
 
 impl FsStore {
@@ -47,6 +53,7 @@ impl FsStore {
             seq: AtomicU64::new(max_seq),
             pushes: AtomicU64::new(0),
             scan_lock: Mutex::new(()),
+            change: Mutex::new((0, 0)),
         })
     }
 
@@ -145,6 +152,47 @@ impl WeightStore for FsStore {
         Ok(h)
     }
 
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        Ok(self
+            .scan()?
+            .into_iter()
+            .filter(|e| e.node_id == node_id)
+            .max_by_key(|e| e.seq))
+    }
+
+    fn version(&self) -> Result<u64> {
+        // Derive a handle-local monotone counter from the listing hash:
+        // any observed change (our own pushes included, and foreign
+        // processes') advances it exactly once.
+        let h = self.state_hash()?;
+        let mut g = self.change.lock().unwrap();
+        if g.0 != h {
+            g.0 = h;
+            g.1 += 1;
+        }
+        Ok(g.1)
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        // No cross-process notification on a directory: poll the listing
+        // with exponential backoff, bounded by the caller's timeout.
+        let deadline = Instant::now().checked_add(timeout);
+        let mut backoff = Duration::from_micros(500);
+        loop {
+            let v = self.version()?;
+            if v > since {
+                return Ok(v);
+            }
+            let now = Instant::now();
+            match deadline {
+                Some(d) if d <= now => return Ok(v),
+                Some(d) => std::thread::sleep(backoff.min(d - now)),
+                None => std::thread::sleep(backoff),
+            }
+            backoff = (backoff * 2).min(Duration::from_millis(20));
+        }
+    }
+
     fn push_count(&self) -> u64 {
         self.pushes.load(Ordering::Relaxed)
     }
@@ -189,6 +237,25 @@ mod tests {
     fn concurrent() {
         let (s, dir) = tmp_store("conc");
         store_tests::concurrent_pushes(Arc::new(s));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn subscription() {
+        let (s, dir) = tmp_store("subs");
+        store_tests::subscription(Arc::new(s));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn foreign_handle_push_advances_version() {
+        // Version is handle-local but must observe *other* handles'
+        // writes to the shared directory (the cross-process case).
+        let (a, dir) = tmp_store("foreign_ver");
+        let b = FsStore::open(&dir).unwrap();
+        let v = a.version().unwrap();
+        b.push(store_tests::push_req(1, 0, 2.0)).unwrap();
+        assert!(a.version().unwrap() > v);
         fs::remove_dir_all(dir).unwrap();
     }
 

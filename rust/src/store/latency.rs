@@ -113,6 +113,26 @@ impl<S: WeightStore> WeightStore for LatencyStore<S> {
         self.inner.state_hash()
     }
 
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        let out = self.inner.latest_for_node(node_id)?;
+        let bytes = out.as_ref().map(|e| e.params.len() * 4).unwrap_or(0);
+        self.delay(bytes);
+        Ok(out)
+    }
+
+    fn version(&self) -> Result<u64> {
+        self.delay(0); // LIST-like op: RTT only
+        self.inner.version()
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        // The park itself costs no round-trips; charge one RTT for the
+        // LIST that observes the wake-up.
+        let v = self.inner.wait_for_change(since, timeout)?;
+        self.delay(0);
+        Ok(v)
+    }
+
     fn push_count(&self) -> u64 {
         self.inner.push_count()
     }

@@ -4,10 +4,11 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use super::{PushRequest, WeightEntry, WeightStore};
+use super::{ChangeNotifier, PushRequest, WeightEntry, WeightStore};
 use crate::util::hash::combine;
 
 /// Shared-memory store; cheap Arc-based blob sharing, no serialization.
@@ -16,6 +17,7 @@ pub struct MemoryStore {
     entries: RwLock<Vec<WeightEntry>>,
     seq: AtomicU64,
     pushes: AtomicU64,
+    notify: ChangeNotifier,
 }
 
 impl MemoryStore {
@@ -38,6 +40,8 @@ impl WeightStore for MemoryStore {
         };
         self.entries.write().unwrap().push(entry);
         self.pushes.fetch_add(1, Ordering::Relaxed);
+        // bump only after the entry is visible, so woken waiters see it
+        self.notify.bump();
         Ok(seq)
     }
 
@@ -75,12 +79,30 @@ impl WeightStore for MemoryStore {
         Ok(h)
     }
 
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        let entries = self.entries.read().unwrap();
+        Ok(entries
+            .iter()
+            .filter(|e| e.node_id == node_id)
+            .max_by_key(|e| e.seq)
+            .cloned())
+    }
+
+    fn version(&self) -> Result<u64> {
+        Ok(self.notify.version())
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        Ok(self.notify.wait_for_change(since, timeout))
+    }
+
     fn push_count(&self) -> u64 {
         self.pushes.load(Ordering::Relaxed)
     }
 
     fn clear(&self) -> Result<()> {
         self.entries.write().unwrap().clear();
+        self.notify.bump();
         Ok(())
     }
 }
@@ -100,6 +122,11 @@ mod tests {
     #[test]
     fn concurrent() {
         store_tests::concurrent_pushes(Arc::new(MemoryStore::new()));
+    }
+
+    #[test]
+    fn subscription() {
+        store_tests::subscription(Arc::new(MemoryStore::new()));
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! "if the remote server has changed state" without downloading anything
 //! (Algorithm 1).
 //!
+//! Change detection is event-driven: every mutation advances a monotone
+//! [`WeightStore::version`] counter, and [`WeightStore::wait_for_change`]
+//! blocks until the counter moves past a caller-held token (Condvar
+//! notification in the in-process stores, backoff LIST-polling in
+//! [`FsStore`]) — so protocol barriers park on a notification instead of
+//! busy-polling the store (see `crate::protocol`).
+//!
 //! Implementations:
 //! * [`MemoryStore`]  — in-process, for simulation and tests.
 //! * [`ShardedStore`] — in-process, partitioned by `node_id` across
@@ -37,6 +44,9 @@ pub use fs::FsStore;
 pub use latency::{LatencyConfig, LatencyStore};
 pub use memory::MemoryStore;
 pub use sharded::{ShardedStore, DEFAULT_SHARDS};
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -77,11 +87,79 @@ pub trait WeightStore: Send + Sync {
     /// "performs a check to see if the remote server has changed state").
     fn state_hash(&self) -> Result<u64>;
 
+    /// Latest entry for a single node (the gossip protocol's per-peer
+    /// pull); `None` if that node never deposited.
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>>;
+
+    /// Monotone change counter: advances on every mutation (`push` or
+    /// `clear`). Tokens are only comparable against the same store handle
+    /// — wrappers forward to their inner store, and [`FsStore`] derives a
+    /// handle-local counter from directory state.
+    fn version(&self) -> Result<u64>;
+
+    /// Block until [`WeightStore::version`] exceeds `since` or `timeout`
+    /// elapses; returns the version observed at wake-up (a return value
+    /// equal to `since` is a clean timeout). In-process stores park on a
+    /// Condvar and wake on the next mutation; [`FsStore`] polls the
+    /// directory listing with exponential backoff (the bucket-watching
+    /// analogue). Spurious early returns are allowed — callers re-check
+    /// their predicate in a loop.
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64>;
+
     /// Number of push operations performed (for metrics/backpressure).
     fn push_count(&self) -> u64;
 
     /// Remove all entries (between trials).
     fn clear(&self) -> Result<()>;
+}
+
+/// Condvar-backed monotone change counter shared by the in-process
+/// stores: `bump` after a mutation is visible, and waiters parked in
+/// [`ChangeNotifier::wait_for_change`] wake immediately.
+#[derive(Default)]
+pub(crate) struct ChangeNotifier {
+    version: Mutex<u64>,
+    changed: Condvar,
+}
+
+impl ChangeNotifier {
+    /// Advance the counter and wake every parked waiter. Call only after
+    /// the mutation is visible to readers.
+    pub(crate) fn bump(&self) {
+        let mut v = self.version.lock().unwrap();
+        *v += 1;
+        self.changed.notify_all();
+    }
+
+    /// Current counter value.
+    pub(crate) fn version(&self) -> u64 {
+        *self.version.lock().unwrap()
+    }
+
+    /// Park until the counter exceeds `since` or `timeout` elapses;
+    /// returns the counter observed at wake-up.
+    pub(crate) fn wait_for_change(&self, since: u64, timeout: Duration) -> u64 {
+        // A huge timeout may not be representable as a deadline; treat it
+        // as "wait forever".
+        let deadline = Instant::now().checked_add(timeout);
+        let mut v = self.version.lock().unwrap();
+        loop {
+            if *v > since {
+                return *v;
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if d <= now {
+                        return *v;
+                    }
+                    let (guard, _) = self.changed.wait_timeout(v, d - now).unwrap();
+                    v = guard;
+                }
+                None => v = self.changed.wait(v).unwrap(),
+            }
+        }
+    }
 }
 
 /// Arguments to [`WeightStore::push`].
@@ -114,6 +192,15 @@ impl WeightStore for std::sync::Arc<dyn WeightStore> {
     }
     fn state_hash(&self) -> Result<u64> {
         (**self).state_hash()
+    }
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        (**self).latest_for_node(node_id)
+    }
+    fn version(&self) -> Result<u64> {
+        (**self).version()
+    }
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        (**self).wait_for_change(since, timeout)
     }
     fn push_count(&self) -> u64 {
         (**self).push_count()
@@ -172,15 +259,66 @@ pub(crate) mod store_tests {
         assert_eq!(e1.params.0, vec![2.0; 8]);
         assert_eq!(e1.n_examples, 101);
 
+        // single-node pull (the gossip protocol's per-peer read)
+        let s0 = store.latest_for_node(0).unwrap().unwrap();
+        assert_eq!(s0.round, 1);
+        assert_eq!(s0.params.0[0], 3.0);
+        assert!(store.latest_for_node(9).unwrap().is_none());
+
         // clear
         store.clear().unwrap();
         assert!(store.latest_per_node().unwrap().is_empty());
         assert!(store.entries_for_round(0).unwrap().is_empty());
+        assert!(store.latest_for_node(0).unwrap().is_none());
     }
 
-    /// Conformance plus the 8-thread stress test for a wrapper stack
-    /// built by `make_store` (fresh store per phase, since `conformance`
-    /// ends with a `clear` and `concurrent_pushes` counts pushes).
+    /// Conformance for the change-subscription API: `version` advances on
+    /// every mutation, `wait_for_change` wakes on a concurrent push and
+    /// times out cleanly on an unchanged store.
+    pub fn subscription(store: Arc<dyn WeightStore>) {
+        use std::time::{Duration, Instant};
+
+        let v0 = store.version().unwrap();
+        store.push(push_req(0, 0, 1.0)).unwrap();
+        let v1 = store.version().unwrap();
+        assert!(v1 > v0, "push must advance the version");
+
+        // unchanged store: block until the timeout, return the old token
+        let t = Instant::now();
+        let v = store.wait_for_change(v1, Duration::from_millis(40)).unwrap();
+        assert!(
+            t.elapsed() >= Duration::from_millis(30),
+            "unchanged store must block until the timeout"
+        );
+        assert_eq!(v, v1, "clean timeout returns the unchanged version");
+
+        // wake on a concurrent push from another thread
+        let pusher = {
+            let s = Arc::clone(&store);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                s.push(push_req(1, 0, 2.0)).unwrap();
+            })
+        };
+        let t = Instant::now();
+        let v2 = store.wait_for_change(v1, Duration::from_secs(20)).unwrap();
+        assert!(v2 > v1, "waiter must observe the concurrent push");
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "waiter must wake on the push, not ride out the timeout"
+        );
+        pusher.join().unwrap();
+
+        // clear is a mutation too
+        let vc = store.version().unwrap();
+        store.clear().unwrap();
+        assert!(store.version().unwrap() > vc, "clear must advance the version");
+    }
+
+    /// Conformance plus the 8-thread stress test and the subscription
+    /// suite for a wrapper stack built by `make_store` (fresh store per
+    /// phase, since `conformance` ends with a `clear` and
+    /// `concurrent_pushes` counts pushes).
     pub fn stack_conformance<S, F>(make_store: F)
     where
         S: WeightStore + 'static,
@@ -188,6 +326,7 @@ pub(crate) mod store_tests {
     {
         conformance(&make_store());
         concurrent_pushes(Arc::new(make_store()));
+        subscription(Arc::new(make_store()));
     }
 
     pub fn concurrent_pushes(store: Arc<dyn WeightStore>) {

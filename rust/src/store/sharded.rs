@@ -23,10 +23,11 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use super::{PushRequest, WeightEntry, WeightStore};
+use super::{ChangeNotifier, PushRequest, WeightEntry, WeightStore};
 use crate::util::hash::combine;
 
 /// Default shard count: comfortably above the paper's node counts (2–5)
@@ -41,6 +42,10 @@ pub struct ShardedStore {
     shards: Vec<RwLock<Vec<WeightEntry>>>,
     seq: AtomicU64,
     pushes: AtomicU64,
+    /// Store-wide change notification: one counter for all shards (the
+    /// subscription API is a LIST-level signal, not per-shard), bumped
+    /// after the owning shard's lock is released.
+    notify: ChangeNotifier,
 }
 
 impl ShardedStore {
@@ -51,6 +56,7 @@ impl ShardedStore {
             shards: (0..n_shards).map(|_| RwLock::new(Vec::new())).collect(),
             seq: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
+            notify: ChangeNotifier::default(),
         }
     }
 
@@ -87,6 +93,7 @@ impl WeightStore for ShardedStore {
         let shard = self.shard_of(entry.node_id);
         self.shards[shard].write().unwrap().push(entry);
         self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.notify.bump();
         Ok(seq)
     }
 
@@ -133,6 +140,24 @@ impl WeightStore for ShardedStore {
         Ok(h)
     }
 
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        // A node's entries all live in one shard: single-lock read.
+        let shard = self.shards[self.shard_of(node_id)].read().unwrap();
+        Ok(shard
+            .iter()
+            .filter(|e| e.node_id == node_id)
+            .max_by_key(|e| e.seq)
+            .cloned())
+    }
+
+    fn version(&self) -> Result<u64> {
+        Ok(self.notify.version())
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        Ok(self.notify.wait_for_change(since, timeout))
+    }
+
     fn push_count(&self) -> u64 {
         self.pushes.load(Ordering::Relaxed)
     }
@@ -141,6 +166,7 @@ impl WeightStore for ShardedStore {
         for shard in &self.shards {
             shard.write().unwrap().clear();
         }
+        self.notify.bump();
         Ok(())
     }
 }
@@ -170,6 +196,24 @@ mod tests {
     #[test]
     fn concurrent() {
         store_tests::concurrent_pushes(Arc::new(ShardedStore::default()));
+    }
+
+    #[test]
+    fn subscription() {
+        store_tests::subscription(Arc::new(ShardedStore::default()));
+    }
+
+    #[test]
+    fn latest_for_node_reads_only_its_shard() {
+        let s = ShardedStore::new(4);
+        for node in 0..8 {
+            s.push(push_req(node, 0, node as f32)).unwrap();
+            s.push(push_req(node, 1, 10.0 + node as f32)).unwrap();
+        }
+        let e = s.latest_for_node(6).unwrap().unwrap();
+        assert_eq!(e.round, 1);
+        assert_eq!(e.params.0[0], 16.0);
+        assert!(s.latest_for_node(9).unwrap().is_none());
     }
 
     #[test]

@@ -176,7 +176,7 @@ impl SweepReport {
             let _ = writeln!(
                 out,
                 "| {} | {} | {} | {} | {} | {} | {} | {} |",
-                c.cell.mode.name(),
+                c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,
@@ -203,7 +203,7 @@ impl SweepReport {
                 out,
                 "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
-                c.cell.mode.name(),
+                c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,

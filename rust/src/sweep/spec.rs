@@ -36,11 +36,13 @@ pub struct CellKey {
 }
 
 impl CellKey {
-    /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`.
+    /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`
+    /// (gossip cells carry the fanout — `gossip3_...` — so two fanouts
+    /// never share a store namespace or report row).
     pub fn label(&self) -> String {
         format!(
             "{}_{}_s{}_n{}",
-            self.mode.name(),
+            self.mode.label(),
             self.strategy.name(),
             self.skew,
             self.n_nodes
@@ -452,10 +454,36 @@ mod tests {
 
     #[test]
     fn expand_rejects_invalid_cells() {
-        // local mode with n_nodes > 1 violates ExperimentConfig::validate
+        // train_size smaller than a cell's node count violates
+        // ExperimentConfig::validate
         let spec =
-            SweepSpec::parse_json(r#"{"modes": ["local"], "n_nodes": [2]}"#).unwrap();
+            SweepSpec::parse_json(r#"{"train_size": 3, "n_nodes": [2, 5]}"#).unwrap();
         assert!(spec.expand().is_err());
+    }
+
+    #[test]
+    fn gossip_mode_axis_parses_with_fanout() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": ["local", "sync", "async", "gossip:3"], "n_nodes": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.modes.len(), 4);
+        assert_eq!(spec.modes[3], FederationMode::Gossip { fanout: 3 });
+        // all four protocol families expand into one grid
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 4);
+        assert!(trials[3].cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn gossip_fanouts_get_distinct_cells_and_labels() {
+        let spec =
+            SweepSpec::parse_json(r#"{"modes": ["gossip:1", "gossip:2"]}"#).unwrap();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        assert_ne!(cells[0], cells[1]);
+        assert!(cells[0].label().starts_with("gossip1_"));
+        assert!(cells[1].label().starts_with("gossip2_"));
     }
 
     #[test]

@@ -150,6 +150,50 @@ fn crash_async_survives_sync_stalls() {
 }
 
 #[test]
+fn gossip_mnist_learns() {
+    let mut cfg = smoke_cfg();
+    cfg.mode = FederationMode::Gossip { fanout: 1 };
+    cfg.n_nodes = 3;
+    let res = run_experiment(&cfg).unwrap();
+    assert!(res.all_completed);
+    assert!(res.final_accuracy > 0.5, "{}", res.final_accuracy);
+    // one push per node per epoch, like sync — but no barrier
+    assert_eq!(res.store_pushes, (cfg.n_nodes * cfg.epochs) as u64);
+    for r in &res.reports {
+        assert_eq!(r.status, NodeStatus::Completed);
+        assert!(r.pushes >= 1);
+    }
+}
+
+#[test]
+fn four_mode_sweep_completes_end_to_end() {
+    use fedless::sweep::{run_sweep, SweepSpec};
+
+    let mut base = smoke_cfg();
+    base.epochs = 2;
+    base.steps_per_epoch = 10;
+    base.train_size = 900;
+    base.test_size = 96;
+    base.n_nodes = 3;
+    let mut spec = SweepSpec::from_base(base);
+    spec.modes = vec![
+        FederationMode::Local,
+        FederationMode::Sync,
+        FederationMode::Async,
+        FederationMode::Gossip { fanout: 1 },
+    ];
+    spec.node_counts = vec![3];
+    spec.jobs = 2;
+    let report = run_sweep(&spec).unwrap();
+    assert_eq!(report.n_trials, 4);
+    assert_eq!(report.n_failures, 0, "{}", report.to_markdown());
+    let md = report.to_markdown();
+    for mode in ["local", "sync", "async", "gossip1"] {
+        assert!(md.contains(&format!("| {mode} |")), "missing {mode} row:\n{md}");
+    }
+}
+
+#[test]
 fn straggler_makes_sync_slower_than_async() {
     let mut cfg = smoke_cfg();
     cfg.n_nodes = 2;

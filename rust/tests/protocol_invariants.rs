@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use fedless::config::{ExperimentConfig, FederationMode};
 use fedless::data::Partitioner;
+use fedless::protocol::gossip_peers;
 use fedless::sim::run_experiment;
 use fedless::store::{MemoryStore, PushRequest, WeightStore};
 use fedless::strategy::{Contribution, StrategyKind};
@@ -197,11 +198,46 @@ fn prop_store_latest_is_max_seq() {
 }
 
 // ---------------------------------------------------------------------------
+// gossip schedule properties (pure; no artifacts needed)
+
+/// The gossip peer schedule is a pure function of
+/// `(seed, node, epoch, n_nodes, fanout)`: replayable, self-free, within
+/// bounds, and not constant across epochs.
+#[test]
+fn prop_gossip_schedule_deterministic_and_well_formed() {
+    let mut varied = false;
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x605_51F);
+        let n_nodes = 2 + rng.below(6);
+        let fanout = 1 + rng.below(n_nodes);
+        let first = gossip_peers(seed, 0, 0, n_nodes, fanout);
+        for epoch in 0..12 {
+            for node in 0..n_nodes {
+                let a = gossip_peers(seed, node, epoch, n_nodes, fanout);
+                let b = gossip_peers(seed, node, epoch, n_nodes, fanout);
+                assert_eq!(a, b, "seed {seed}: schedule must replay");
+                assert_eq!(a.len(), fanout.min(n_nodes - 1), "seed {seed}");
+                assert!(a.iter().all(|&p| p < n_nodes && p != node), "seed {seed}");
+                let mut dedup = a.clone();
+                dedup.dedup();
+                assert_eq!(dedup, a, "seed {seed}: sorted, no duplicates");
+                if node == 0 && a != first {
+                    varied = true;
+                }
+            }
+        }
+    }
+    assert!(varied, "schedules must vary across epochs somewhere in the grid");
+}
+
+// ---------------------------------------------------------------------------
 // protocol-level invariant (needs artifacts)
 
 /// In synchronous serverless federation every node aggregates the same
 /// round set, so all nodes must end up with bit-identical weights — the
-/// core correctness claim of server-free sync federation (§3).
+/// core correctness claim of server-free sync federation (§3), which must
+/// survive the barrier's move from sleep-polling to blocking on
+/// `WeightStore::wait_for_change` notification.
 #[test]
 fn sync_nodes_end_with_identical_weights() {
     for seed in [3u64, 17] {
