@@ -9,12 +9,19 @@
 //! fedbench all           every table at the chosen scale
 //! fedbench run [--mode sync|async|local|gossip[:m]] [--model M]
 //!              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]
+//!              [--virtual-clock]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
 //!                        `fedbench run --mode gossip:2 --nodes 5`)
 //! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
 //!                        run a custom experiment grid in parallel
 //! ```
+//!
+//! `--virtual-clock` (any experiment; also the `"clock": "virtual"`
+//! sweep-spec key) runs on simulated time: straggler delays, injected
+//! store latency, and barrier timeouts advance a discrete-event clock
+//! instead of sleeping for real, so `fig1`-style timing experiments
+//! finish in milliseconds while reporting faithful simulated wall-clock.
 //!
 //! Each cell reports `mean ± 95% CI` over repeated trials next to the
 //! paper's value. Absolute numbers differ (synthetic data, scaled steps —
@@ -26,7 +33,7 @@
 use std::fmt::Write as _;
 use std::time::Duration;
 
-use fedless::config::{CrashSpec, ExperimentConfig, FederationMode, Scale};
+use fedless::config::{ClockKind, CrashSpec, ExperimentConfig, FederationMode, Scale};
 use fedless::sim::{run_experiment, run_trials};
 use fedless::strategy::StrategyKind;
 use fedless::sweep::{run_sweep, SweepSpec};
@@ -80,6 +87,16 @@ struct Opts {
     trials: Option<usize>,
     out: Option<String>,
     seed: u64,
+    clock: ClockKind,
+}
+
+impl Opts {
+    /// A base config for `model` at this run's scale and clock.
+    fn cfg(&self, model: &str) -> ExperimentConfig {
+        let mut cfg = base_cfg(model, self.scale);
+        cfg.clock = self.clock;
+        cfg
+    }
 }
 
 struct TableOut {
@@ -126,7 +143,7 @@ fn table_sync_vs_async(model: &str, o: &Opts, paper: &[[&str; 3]; 2], centralize
     let skews = [0.0, 0.9, 1.0];
 
     // centralized reference
-    let mut c = base_cfg(model, o.scale);
+    let mut c = o.cfg(model);
     c.mode = FederationMode::Local;
     c.n_nodes = 1;
     c.seed = o.seed;
@@ -138,7 +155,7 @@ fn table_sync_vs_async(model: &str, o: &Opts, paper: &[[&str; 3]; 2], centralize
     for (row, mode) in [FederationMode::Sync, FederationMode::Async].iter().enumerate() {
         let mut cells = Vec::new();
         for (col, &skew) in skews.iter().enumerate() {
-            let mut cfg = base_cfg(model, o.scale);
+            let mut cfg = o.cfg(model);
             cfg.mode = *mode;
             cfg.n_nodes = 2;
             cfg.skew = skew;
@@ -169,7 +186,7 @@ fn table_strategies(
     for (kind, mode, paper) in rows {
         let mut cells = Vec::new();
         for (col, n_nodes) in [2usize, 3, 5].iter().enumerate() {
-            let mut cfg = base_cfg(model, o.scale);
+            let mut cfg = o.cfg(model);
             cfg.strategy = *kind;
             cfg.mode = *mode;
             cfg.n_nodes = *n_nodes;
@@ -195,7 +212,7 @@ fn table7(o: &Opts) -> TableOut {
     ));
     let trials = trials_for(o, model);
 
-    let mut c = base_cfg(model, o.scale);
+    let mut c = o.cfg(model);
     c.mode = FederationMode::Local;
     c.n_nodes = 1;
     c.seed = o.seed;
@@ -208,7 +225,7 @@ fn table7(o: &Opts) -> TableOut {
     for (row, mode) in [FederationMode::Sync, FederationMode::Async].iter().enumerate() {
         let mut cells = Vec::new();
         for (col, n_nodes) in [2usize, 3, 5].iter().enumerate() {
-            let mut cfg = base_cfg(model, o.scale);
+            let mut cfg = o.cfg(model);
             cfg.mode = *mode;
             cfg.n_nodes = *n_nodes;
             cfg.seed = o.seed;
@@ -227,7 +244,7 @@ fn fig1(o: &Opts) -> TableOut {
         o.scale.name()
     ));
     for mode in [FederationMode::Sync, FederationMode::Async] {
-        let mut cfg = base_cfg("mnist", o.scale);
+        let mut cfg = o.cfg("mnist");
         cfg.mode = mode;
         cfg.n_nodes = 3;
         cfg.seed = o.seed;
@@ -258,7 +275,7 @@ fn fig1(o: &Opts) -> TableOut {
 fn robustness(o: &Opts) -> TableOut {
     let mut t = TableOut::new("Robustness: node crash at epoch 1 (paper §4.2.1)");
     for mode in [FederationMode::Sync, FederationMode::Async] {
-        let mut cfg = base_cfg("mnist", o.scale);
+        let mut cfg = o.cfg("mnist");
         cfg.mode = mode;
         cfg.n_nodes = 3;
         cfg.seed = o.seed;
@@ -341,8 +358,9 @@ fn run_one(name: &str, o: &Opts) -> Option<TableOut> {
 }
 
 /// `fedbench run [--mode M] [--model M] [--nodes N] [--skew S]
-/// [--strategy S] [--scale S] [--seed S]` — one experiment at a preset
-/// scale; the quickest way to exercise any protocol end-to-end.
+/// [--strategy S] [--scale S] [--seed S] [--virtual-clock]` — one
+/// experiment at a preset scale; the quickest way to exercise any
+/// protocol end-to-end.
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut cfg = base_cfg("mnist", Scale::Small);
     let mut scale = Scale::Small;
@@ -351,6 +369,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     while i < args.len() {
         let flag = args[i].clone();
         i += 1;
+        if flag == "--virtual-clock" {
+            cfg.clock = ClockKind::Virtual;
+            continue;
+        }
         let value = args
             .get(i)
             .ok_or_else(|| format!("{flag} needs a value"))?;
@@ -389,9 +411,15 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     cfg.test_size = chosen.test_size;
     cfg.validate().map_err(|e| format!("{e:#}"))?;
 
-    eprintln!("running {} (scale={})...", cfg.run_name(), scale.name());
+    eprintln!(
+        "running {} (scale={}, clock={})...",
+        cfg.run_name(),
+        scale.name(),
+        cfg.clock.name()
+    );
     let res = run_experiment(&cfg).map_err(|e| format!("{e:#}"))?;
     println!("mode         : {}", cfg.mode.label());
+    println!("clock        : {}", cfg.clock.name());
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
@@ -465,9 +493,11 @@ fn main() {
     let Some(cmd) = args.first().cloned() else {
         eprintln!(
             "usage: fedbench <table1..table7|fig1|robustness|all> \
-             [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE]\n\
+             [--scale smoke|small|paper] [--trials N] [--seed S] [--out FILE] \
+             [--virtual-clock]\n\
              \x20      fedbench run [--mode sync|async|local|gossip[:m]] [--model M] \
-             [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]\n\
+             [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S] \
+             [--virtual-clock]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);
@@ -486,10 +516,19 @@ fn main() {
         }
         return;
     }
-    let mut o = Opts { scale: Scale::Small, trials: None, out: None, seed: 42 };
+    let mut o = Opts {
+        scale: Scale::Small,
+        trials: None,
+        out: None,
+        seed: 42,
+        clock: ClockKind::Real,
+    };
     let mut i = 1;
     while i < args.len() {
         match args[i].as_str() {
+            "--virtual-clock" => {
+                o.clock = ClockKind::Virtual;
+            }
             "--scale" => {
                 i += 1;
                 o.scale = Scale::parse(&args[i]).unwrap_or_else(|| {

@@ -13,6 +13,7 @@
 //! store = memory          # memory | sharded[:N] | fs:/path/to/dir
 //! node_delays_ms = 0,40   # per-node straggler delays
 //! crash = 1@2             # crash node 1 at epoch 2
+//! clock = virtual         # real (default) | virtual simulated time
 //! ```
 
 use std::fmt;
@@ -114,6 +115,10 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
             "sync_timeout_s" => {
                 cfg.sync_timeout = Duration::from_secs_f64(parse_f64(value)?)
             }
+            "clock" => {
+                cfg.clock = crate::time::ClockKind::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown clock {value:?}")))?
+            }
             "log_dir" => cfg.log_dir = Some(value.into()),
             "verbose" => cfg.verbose = value == "true" || value == "1",
             _ => return Err(err(line_no, format!("unknown key {key:?}"))),
@@ -185,6 +190,18 @@ mod tests {
         let cfg = parse_config_text("store = sharded:16\n").unwrap();
         assert_eq!(cfg.store, StoreKind::Sharded(16));
         assert!(parse_config_text("store = sharded:zero\n").is_err());
+    }
+
+    #[test]
+    fn clock_values() {
+        use crate::time::ClockKind;
+        let cfg = parse_config_text("clock = virtual\n").unwrap();
+        assert_eq!(cfg.clock, ClockKind::Virtual);
+        let cfg = parse_config_text("clock = real\n").unwrap();
+        assert_eq!(cfg.clock, ClockKind::Real);
+        let cfg = parse_config_text("").unwrap();
+        assert_eq!(cfg.clock, ClockKind::Real, "real is the default");
+        assert!(parse_config_text("clock = sundial\n").is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@ use std::time::Duration;
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 
+pub use crate::time::ClockKind;
+
 /// Peers pulled per epoch when `mode = gossip` gives no explicit fanout.
 pub const DEFAULT_GOSSIP_FANOUT: usize = 2;
 
@@ -185,6 +187,12 @@ pub struct ExperimentConfig {
     pub crash: Option<CrashSpec>,
     /// Sync-barrier poll timeout before a node gives up on the round.
     pub sync_timeout: Duration,
+    /// Time domain of the experiment (`clock = real | virtual`): under
+    /// [`ClockKind::Virtual`] straggler/latency sleeps and barrier
+    /// timeouts consume simulated time — a discrete-event scheduler
+    /// advances the clock whenever every node is blocked — so timing
+    /// scenarios run at CPU speed with deterministic timelines.
+    pub clock: ClockKind,
     /// Write metrics.csv / events.jsonl here.
     pub log_dir: Option<PathBuf>,
     /// Print per-epoch progress.
@@ -210,6 +218,7 @@ impl Default for ExperimentConfig {
             node_delays_ms: Vec::new(),
             crash: None,
             sync_timeout: Duration::from_secs(120),
+            clock: ClockKind::Real,
             log_dir: None,
             verbose: false,
         }
@@ -341,5 +350,15 @@ mod tests {
     fn run_name_is_stable() {
         let c = ExperimentConfig::default();
         assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
+    }
+
+    #[test]
+    fn clock_kind_defaults_real_and_parses() {
+        assert_eq!(ExperimentConfig::default().clock, ClockKind::Real);
+        assert_eq!(ClockKind::parse("virtual"), Some(ClockKind::Virtual));
+        assert_eq!(ClockKind::parse("Real"), Some(ClockKind::Real));
+        assert_eq!(ClockKind::parse("wallclock"), None);
+        let c = ExperimentConfig { clock: ClockKind::Virtual, ..Default::default() };
+        c.validate().unwrap();
     }
 }

@@ -53,6 +53,7 @@ pub mod store;
 pub mod strategy;
 pub mod sweep;
 pub mod tensor;
+pub mod time;
 pub mod util;
 
 /// Convenient re-exports for examples and binaries.
@@ -68,4 +69,5 @@ pub mod prelude {
     pub use crate::strategy::StrategyKind;
     pub use crate::sweep::{run_sweep, SweepReport, SweepSpec};
     pub use crate::tensor::FlatParams;
+    pub use crate::time::{Clock, ClockKind, RealClock, VirtualClock};
 }

@@ -1,11 +1,16 @@
 //! Per-node activity timelines — the data behind the paper's Figure 1
 //! (sync stragglers force idle waiting; async nodes keep training).
 //!
-//! Each node records `(kind, start, end)` spans; `render_ascii` draws the
-//! figure in the terminal and `idle_fraction` quantifies the efficiency
-//! loss that asynchronous federation removes.
+//! Each node records `(kind, start, end)` spans as offsets from the
+//! experiment clock's origin; `render_ascii` draws the figure in the
+//! terminal and `idle_fraction` quantifies the efficiency loss that
+//! asynchronous federation removes. Timelines are clock-agnostic:
+//! callers stamp spans with [`crate::time::Clock::now`] offsets, so
+//! under a [`crate::time::VirtualClock`] the recorded spans are
+//! *simulated* time — deterministic, and faithful to the configured
+//! delays rather than to host scheduling noise.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// What a node was doing during a span.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,20 +38,19 @@ impl SpanKind {
 }
 
 /// One recorded activity interval.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Span {
     /// What the node was doing.
     pub kind: SpanKind,
-    /// Start offset from the shared origin.
+    /// Start offset from the experiment clock's origin.
     pub start: Duration,
-    /// End offset from the shared origin.
+    /// End offset from the experiment clock's origin.
     pub end: Duration,
 }
 
-/// Spans for one node, measured against a shared epoch origin.
+/// Spans for one node, as offsets from the experiment clock's origin.
 #[derive(Debug)]
 pub struct Timeline {
-    origin: Instant,
     /// The node these spans belong to.
     pub node_id: usize,
     /// Recorded spans, in recording order.
@@ -54,18 +58,15 @@ pub struct Timeline {
 }
 
 impl Timeline {
-    /// Empty timeline for `node_id`, measuring against `origin`.
-    pub fn new(node_id: usize, origin: Instant) -> Self {
-        Timeline { origin, node_id, spans: Vec::new() }
+    /// Empty timeline for `node_id`.
+    pub fn new(node_id: usize) -> Self {
+        Timeline { node_id, spans: Vec::new() }
     }
 
-    /// Record a span that started at `start` and ends now.
-    pub fn record(&mut self, kind: SpanKind, start: Instant) {
-        self.spans.push(Span {
-            kind,
-            start: start.duration_since(self.origin),
-            end: self.origin.elapsed(),
-        });
+    /// Record a span over `[start, end]` clock offsets (both from
+    /// [`crate::time::Clock::now`] of the experiment's clock).
+    pub fn record(&mut self, kind: SpanKind, start: Duration, end: Duration) {
+        self.spans.push(Span { kind, start, end });
     }
 
     /// Total time recorded under `kind` across all spans.
@@ -138,36 +139,40 @@ pub fn render_ascii(timelines: &[&Timeline], width: usize) -> String {
 mod tests {
     use super::*;
 
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
     #[test]
     fn records_and_totals() {
-        let origin = Instant::now();
-        let mut t = Timeline::new(0, origin);
-        let s = Instant::now();
-        std::thread::sleep(Duration::from_millis(5));
-        t.record(SpanKind::Train, s);
-        assert!(t.total(SpanKind::Train) >= Duration::from_millis(4));
+        let mut t = Timeline::new(0);
+        t.record(SpanKind::Train, ms(0), ms(5));
+        t.record(SpanKind::Train, ms(7), ms(10));
+        assert_eq!(t.total(SpanKind::Train), ms(8));
         assert_eq!(t.total(SpanKind::Wait), Duration::ZERO);
     }
 
     #[test]
     fn idle_fraction_zero_without_waits() {
-        let origin = Instant::now();
-        let mut t = Timeline::new(0, origin);
-        let s = Instant::now();
-        std::thread::sleep(Duration::from_millis(2));
-        t.record(SpanKind::Train, s);
+        let mut t = Timeline::new(0);
+        t.record(SpanKind::Train, ms(0), ms(2));
         assert_eq!(t.idle_fraction(), 0.0);
     }
 
     #[test]
+    fn idle_fraction_counts_wait_spans() {
+        let mut t = Timeline::new(0);
+        t.record(SpanKind::Train, ms(0), ms(6));
+        t.record(SpanKind::Wait, ms(6), ms(8));
+        assert!((t.idle_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
     fn ascii_render_has_one_row_per_node() {
-        let origin = Instant::now();
-        let mut a = Timeline::new(0, origin);
-        let mut b = Timeline::new(1, origin);
-        let s = Instant::now();
-        std::thread::sleep(Duration::from_millis(2));
-        a.record(SpanKind::Train, s);
-        b.record(SpanKind::Wait, s);
+        let mut a = Timeline::new(0);
+        let mut b = Timeline::new(1);
+        a.record(SpanKind::Train, ms(0), ms(2));
+        b.record(SpanKind::Wait, ms(0), ms(2));
         let art = render_ascii(&[&a, &b], 40);
         assert_eq!(art.lines().count(), 3); // header + 2 rows
         assert!(art.contains("node  0"));

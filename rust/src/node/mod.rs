@@ -119,7 +119,7 @@ impl NodeHandle {
                 epoch_accs: vec![],
                 aggregations: 0,
                 pushes: 0,
-                timeline: Timeline::new(self.node_id, std::time::Instant::now()),
+                timeline: Timeline::new(self.node_id),
                 train_time: Duration::ZERO,
                 wait_time: Duration::ZERO,
             },

@@ -7,9 +7,14 @@
 //! [`crate::protocol::FederationProtocol::after_epoch`], and folds the
 //! [`crate::protocol::ProtocolOutcome`] into its [`NodeReport`]. Crash
 //! injection and run logging are worker concerns and stay here.
+//!
+//! All delays, timeouts, and timeline stamps go through the experiment's
+//! [`crate::time::Clock`]: under a virtual clock the straggler
+//! `node_delays_ms` sleeps consume *simulated* time, so a delay grid
+//! runs at CPU speed while the reported timelines stay faithful.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::ExperimentConfig;
 use crate::data::BatchLoader;
@@ -19,6 +24,7 @@ use crate::protocol::{EpochCtx, ProtocolKind};
 use crate::runtime::{Engine, Manifest, ModelBundle, TrainState};
 use crate::store::WeightStore;
 use crate::strategy::Strategy;
+use crate::time::{Clock, ParticipantGuard};
 
 use super::{NodeHandle, NodeReport, NodeStatus};
 
@@ -36,8 +42,9 @@ pub struct NodeCtx {
     pub strategy: Box<dyn Strategy>,
     /// Batch loader over this node's data shard.
     pub loader: BatchLoader,
-    /// Shared wall-clock origin for timelines.
-    pub origin: Instant,
+    /// The experiment's shared clock (timeline origin, straggler delays,
+    /// barrier timeouts).
+    pub clock: Arc<dyn Clock>,
     /// Shared start barrier so all nodes begin epoch 0 together.
     pub start: Arc<std::sync::Barrier>,
     /// Optional shared run logger (CSV metrics + JSONL events).
@@ -47,6 +54,10 @@ pub struct NodeCtx {
 /// Spawn the node thread.
 pub fn spawn_node(ctx: NodeCtx) -> NodeHandle {
     let node_id = ctx.node_id;
+    // Register with the clock *before* the thread exists: a virtual
+    // clock must know every participant up front, or it could advance
+    // simulated time while later nodes are still spawning.
+    ctx.clock.enter();
     let join = std::thread::Builder::new()
         .name(format!("fed-node-{node_id}"))
         .spawn(move || run_node(ctx))
@@ -55,7 +66,11 @@ pub fn spawn_node(ctx: NodeCtx) -> NodeHandle {
 }
 
 fn run_node(mut ctx: NodeCtx) -> NodeReport {
-    let mut timeline = Timeline::new(ctx.node_id, ctx.origin);
+    // Adopt the registration made by spawn_node; dropping the guard
+    // deregisters on every exit path (completion, crash, error, panic),
+    // so a dead node never freezes a virtual clock.
+    let _participant = ParticipantGuard::adopt(Arc::clone(&ctx.clock));
+    let mut timeline = Timeline::new(ctx.node_id);
     let mut report = NodeReport {
         node_id: ctx.node_id,
         status: NodeStatus::Completed,
@@ -68,7 +83,7 @@ fn run_node(mut ctx: NodeCtx) -> NodeReport {
         epoch_accs: vec![],
         aggregations: 0,
         pushes: 0,
-        timeline: Timeline::new(ctx.node_id, ctx.origin),
+        timeline: Timeline::new(ctx.node_id),
         train_time: Duration::ZERO,
         wait_time: Duration::ZERO,
     };
@@ -93,6 +108,7 @@ fn run_node_inner(
     timeline: &mut Timeline,
 ) -> anyhow::Result<()> {
     let cfg = Arc::clone(&ctx.cfg);
+    let clock = Arc::clone(&ctx.clock);
     let info = ctx.manifest.model(&cfg.model)?.clone();
     // n_k: examples this node trains on per epoch (the FedAvg weight
     // numerator), from the manifest's authoritative batch size
@@ -125,24 +141,24 @@ fn run_node_inner(
                         &[("node", ctx.node_id.to_string()), ("epoch", epoch.to_string())],
                     );
                 }
-                let t = Instant::now();
-                timeline.record(SpanKind::Crashed, t);
+                let t = clock.now();
+                timeline.record(SpanKind::Crashed, t, t);
                 return Ok(());
             }
         }
 
         // ---- local training -------------------------------------------
-        let t_train = Instant::now();
+        let t_train = clock.now();
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         bundle.run_steps(&mut state, &mut ctx.loader, cfg.steps_per_epoch, |_i, m| {
             loss_sum += m.loss as f64;
             acc_sum += m.acc_count as f64 / m.n_preds as f64;
-            if !step_delay.is_zero() {
-                std::thread::sleep(step_delay);
-            }
+            // Straggler simulation: per-step delay on the experiment
+            // clock (instant real time under a virtual clock).
+            clock.sleep(step_delay);
         })?;
-        timeline.record(SpanKind::Train, t_train);
+        timeline.record(SpanKind::Train, t_train, clock.now());
         let mean_loss = loss_sum / cfg.steps_per_epoch as f64;
         let mean_acc = acc_sum / cfg.steps_per_epoch as f64;
         report.epoch_losses.push(mean_loss);
@@ -154,7 +170,7 @@ fn run_node_inner(
                 ("epoch", epoch as f64),
                 ("train_loss", mean_loss),
                 ("train_acc", mean_acc),
-                ("elapsed_s", ctx.origin.elapsed().as_secs_f64()),
+                ("elapsed_s", clock.now().as_secs_f64()),
             ]);
         }
         if cfg.verbose {
@@ -174,6 +190,7 @@ fn run_node_inner(
             strategy: ctx.strategy.as_mut(),
             timeline: &mut *timeline,
             sync_timeout: cfg.sync_timeout,
+            clock: clock.as_ref(),
         };
         let out = protocol.after_epoch(&mut pctx, &mut state.params)?;
         report.pushes += out.pushes;

@@ -2,7 +2,6 @@
 //! change detection on the store's monotone version counter.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -70,7 +69,7 @@ impl FederationProtocol for AsyncHash {
             return Ok(ProtocolOutcome::default());
         }
 
-        let t_agg = Instant::now();
+        let t_agg = ctx.clock.now();
         ctx.push_weights(params, ctx.epoch as u64)?;
         let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
 
@@ -118,7 +117,7 @@ impl FederationProtocol for AsyncHash {
             }
             self.last_seen = Some(v_now);
         }
-        ctx.timeline.record(SpanKind::Aggregate, t_agg);
+        ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());
         Ok(out)
     }
 }
@@ -208,19 +207,19 @@ mod tests {
 
     #[test]
     fn push_racing_the_pull_is_never_masked() {
-        use std::time::Instant;
-
         use crate::metrics::timeline::Timeline;
         use crate::strategy::StrategyKind;
+        use crate::time::RealClock;
 
         let store = RacingStore { inner: MemoryStore::new(), injected: AtomicBool::new(false) };
         peer_push(&store.inner, 1, 8.0);
 
         // Drive AsyncHash directly (not via the harness) so the test can
         // inspect the recorded pull token.
+        let clock = RealClock::shared();
         let mut proto = AsyncHash::new(1.0, 42, 0);
         let mut strategy = StrategyKind::FedAvg.build();
-        let mut timeline = Timeline::new(0, Instant::now());
+        let mut timeline = Timeline::new(0);
         let mut params = FlatParams(vec![0.0; 4]);
         let epoch = |proto: &mut AsyncHash,
                      params: &mut FlatParams,
@@ -236,6 +235,7 @@ mod tests {
                 strategy: strategy.as_mut(),
                 timeline,
                 sync_timeout: Duration::from_secs(1),
+                clock: clock.as_ref(),
             };
             proto.after_epoch(&mut ctx, params).unwrap()
         };

@@ -2,7 +2,6 @@
 //! of peers each epoch. No global barrier, no full fan-in.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -71,7 +70,7 @@ impl FederationProtocol for Gossip {
         let own_seq = ctx.push_weights(params, round)?;
         let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
 
-        let t_agg = Instant::now();
+        let t_agg = ctx.clock.now();
         let peers = gossip_peers(self.seed, ctx.node_id, ctx.epoch, ctx.n_nodes, self.fanout);
         let mut contribs = vec![Contribution {
             node_id: ctx.node_id,
@@ -99,7 +98,7 @@ impl FederationProtocol for Gossip {
                 out.aggregations = 1;
             }
         }
-        ctx.timeline.record(SpanKind::Aggregate, t_agg);
+        ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());
         Ok(out)
     }
 }

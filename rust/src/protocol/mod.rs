@@ -53,6 +53,7 @@ use crate::metrics::timeline::Timeline;
 use crate::store::{PushRequest, WeightStore};
 use crate::strategy::Strategy;
 use crate::tensor::FlatParams;
+use crate::time::Clock;
 
 /// Everything a protocol may touch while federating at an epoch end.
 /// Borrowed from the node thread for the duration of one
@@ -72,8 +73,14 @@ pub struct EpochCtx<'a> {
     pub strategy: &'a mut dyn Strategy,
     /// The node's timeline, for Wait/Aggregate span accounting.
     pub timeline: &'a mut Timeline,
-    /// How long the sync barrier may wait before reporting a stall.
+    /// How long the sync barrier may wait before reporting a stall
+    /// (measured on [`EpochCtx::clock`], so simulated under a virtual
+    /// clock).
     pub sync_timeout: Duration,
+    /// The experiment's clock: every protocol timestamp, wait deadline,
+    /// and timeline span is measured on it, which is what lets a
+    /// [`crate::time::VirtualClock`] run timing scenarios at CPU speed.
+    pub clock: &'a dyn Clock,
 }
 
 impl EpochCtx<'_> {
@@ -178,10 +185,9 @@ pub(crate) mod protocol_tests {
     //! Protocol-level harness: drive protocols directly against an
     //! in-process store, no artifacts or PJRT runtime required.
 
-    use std::time::Instant;
-
     use super::*;
     use crate::strategy::StrategyKind;
+    use crate::time::RealClock;
 
     /// One simulated node: protocol + strategy + timeline + weights.
     pub struct TestNode {
@@ -195,17 +201,28 @@ pub(crate) mod protocol_tests {
         pub timeline: Timeline,
         /// Current weights.
         pub params: FlatParams,
+        /// The clock this node's epochs run on.
+        pub clock: Arc<dyn Clock>,
     }
 
     impl TestNode {
         pub fn new(node_id: usize, cfg: &ExperimentConfig) -> TestNode {
+            TestNode::with_clock(node_id, cfg, RealClock::shared())
+        }
+
+        pub fn with_clock(
+            node_id: usize,
+            cfg: &ExperimentConfig,
+            clock: Arc<dyn Clock>,
+        ) -> TestNode {
             TestNode {
                 node_id,
                 protocol: ProtocolKind::from(cfg.mode).build(node_id, cfg),
                 strategy: StrategyKind::FedAvg.build(),
-                timeline: Timeline::new(node_id, Instant::now()),
+                timeline: Timeline::new(node_id),
                 // distinct starting weights per node so averaging is visible
                 params: FlatParams(vec![node_id as f32 * 10.0; 4]),
+                clock,
             }
         }
 
@@ -225,6 +242,7 @@ pub(crate) mod protocol_tests {
                 strategy: self.strategy.as_mut(),
                 timeline: &mut self.timeline,
                 sync_timeout,
+                clock: self.clock.as_ref(),
             };
             self.protocol.after_epoch(&mut ctx, &mut self.params).unwrap()
         }

@@ -2,7 +2,6 @@
 //! blocking on store change notification instead of sleep-polling.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -37,8 +36,11 @@ impl FederationProtocol for SyncBarrier {
         ctx.push_weights(params, round)?;
         let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
 
-        // barrier: park until all K entries of this round exist
-        let t_wait = Instant::now();
+        // barrier: park until all K entries of this round exist; elapsed
+        // time and the stall timeout are measured on the experiment
+        // clock, so a crashed peer releases survivors within *simulated*
+        // timeout under a virtual clock — no real-time wait.
+        let t_wait = ctx.clock.now();
         let entries = loop {
             // Read the version token *before* listing: a push landing
             // between the two can only cause a spurious wake-up, never a
@@ -48,17 +50,17 @@ impl FederationProtocol for SyncBarrier {
             if entries.len() >= ctx.n_nodes {
                 break entries;
             }
-            let elapsed = t_wait.elapsed();
+            let elapsed = ctx.clock.now().saturating_sub(t_wait);
             if elapsed >= ctx.sync_timeout {
-                ctx.timeline.record(SpanKind::Wait, t_wait);
+                ctx.timeline.record(SpanKind::Wait, t_wait, ctx.clock.now());
                 out.stalled_at = Some(round);
                 return Ok(out);
             }
             ctx.store.wait_for_change(seen, ctx.sync_timeout - elapsed)?;
         };
-        ctx.timeline.record(SpanKind::Wait, t_wait);
+        ctx.timeline.record(SpanKind::Wait, t_wait, ctx.clock.now());
 
-        let t_agg = Instant::now();
+        let t_agg = ctx.clock.now();
         let contribs: Vec<Contribution> = entries
             .iter()
             .map(|e| Contribution {
@@ -73,7 +75,7 @@ impl FederationProtocol for SyncBarrier {
             *params = new_params;
             out.aggregations = 1;
         }
-        ctx.timeline.record(SpanKind::Aggregate, t_agg);
+        ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());
         Ok(out)
     }
 }

@@ -1,7 +1,6 @@
 //! One end-to-end federated experiment (a single trial).
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -16,6 +15,7 @@ use crate::runtime::{Engine, Manifest, ModelBundle};
 use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
 use crate::tensor::flat::weighted_average;
 use crate::tensor::FlatParams;
+use crate::time::Clock;
 
 /// Outcome of one experiment run.
 #[derive(Debug)]
@@ -24,7 +24,11 @@ pub struct ExperimentResult {
     pub final_accuracy: f64,
     /// Mean test loss of the global model.
     pub final_loss: f64,
-    /// Wall-clock seconds from node spawn to last node exit.
+    /// Seconds from node spawn to last node exit, on the experiment's
+    /// clock: real seconds under `clock = real`, *simulated* seconds
+    /// under `clock = virtual` (where a straggler grid runs in
+    /// milliseconds of real time but still reports its faithful
+    /// simulated duration).
     pub wall_clock_s: f64,
     /// Per-node reports (status, metrics, timeline), in node-id order.
     pub reports: Vec<NodeReport>,
@@ -45,16 +49,22 @@ impl ExperimentResult {
     }
 }
 
-fn build_store(cfg: &ExperimentConfig) -> Result<Arc<dyn WeightStore>> {
+/// Build the configured store stack on the experiment's clock, so change
+/// waits and injected latency run in the same time domain as the nodes
+/// (a virtual-clocked node parked on a real-clocked store would freeze
+/// simulated time forever).
+fn build_store(cfg: &ExperimentConfig, clock: &Arc<dyn Clock>) -> Result<Arc<dyn WeightStore>> {
     let base: Arc<dyn WeightStore> = match &cfg.store {
-        StoreKind::Memory => Arc::new(MemoryStore::new()),
-        StoreKind::Sharded(n) => Arc::new(ShardedStore::new(*n)),
-        StoreKind::Fs(path) => Arc::new(FsStore::open(path)?),
+        StoreKind::Memory => Arc::new(MemoryStore::with_clock(Arc::clone(clock))),
+        StoreKind::Sharded(n) => Arc::new(ShardedStore::with_clock(*n, Arc::clone(clock))),
+        StoreKind::Fs(path) => Arc::new(FsStore::open_with_clock(path, Arc::clone(clock))?),
     };
     Ok(match cfg.latency {
         None => base,
         // Arc<dyn WeightStore> implements WeightStore, so wrappers stack.
-        Some(lat) => Arc::new(LatencyStore::new(base, lat, cfg.seed)),
+        Some(lat) => {
+            Arc::new(LatencyStore::with_clock(base, lat, cfg.seed, Arc::clone(clock)))
+        }
     })
 }
 
@@ -134,8 +144,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     let manifest = Arc::new(Manifest::discover()?);
     let info = manifest.model(&cfg.model)?.clone();
 
+    // The experiment's time domain (`clock = real | virtual`): one fresh
+    // clock per trial, shared by nodes, stores, and timelines.
+    let clock: Arc<dyn Clock> = cfg.clock.build();
+
     let (loaders, test_loader) = build_data(cfg, &info)?;
-    let store = build_store(cfg)?;
+    let store = build_store(cfg, &clock)?;
     store.clear()?; // fresh namespace per trial (like a new bucket prefix)
 
     let logger = match &cfg.log_dir {
@@ -143,7 +157,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         None => None,
     };
 
-    let origin = Instant::now();
+    let t0 = clock.now();
     let start = Arc::new(std::sync::Barrier::new(cfg.n_nodes));
     let mut handles = Vec::new();
     for (node_id, loader) in loaders.into_iter().enumerate() {
@@ -154,14 +168,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
             store: Arc::clone(&store),
             strategy: cfg.strategy.build(),
             loader,
-            origin,
+            clock: Arc::clone(&clock),
             start: Arc::clone(&start),
             logger: logger.clone(),
         };
         handles.push(spawn_node(ctx));
     }
     let reports: Vec<NodeReport> = handles.into_iter().map(NodeHandleExt::wait_report).collect();
-    let wall_clock_s = origin.elapsed().as_secs_f64();
+    let wall_clock_s = clock.now().saturating_sub(t0).as_secs_f64();
 
     // ---- global model = example-weighted average of the nodes' final
     // weights (what the store would converge to; identical to any node's

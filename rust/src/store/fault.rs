@@ -73,14 +73,20 @@ impl<S: WeightStore> WeightStore for FaultStore<S> {
     }
 
     fn version(&self) -> Result<u64> {
-        self.maybe_fail("version")?;
+        // Never fault-injected: `version`/`wait_for_change` are the
+        // barrier notification path, and a poll that "fails" would
+        // desert it — the sync barrier reads `version` for its wake-up
+        // token every lap, so an injected error here aborted the whole
+        // node instead of simulating a flaky *data* operation. Faults
+        // belong on the data reads/writes around the subscription
+        // (push/pull/state_hash), which the protocols handle.
         self.inner.version()
     }
 
     fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
         // The wait itself is a local blocking primitive, not a remote
         // round-trip: faults are injected on the reads around it, so a
-        // flaky store still delivers wake-ups.
+        // flaky store still delivers wake-ups (see `version`).
         self.inner.wait_for_change(since, timeout)
     }
 
@@ -113,6 +119,47 @@ mod tests {
         assert!(s.latest_per_node().is_err());
         assert!(s.state_hash().is_err());
         assert_eq!(s.injected(), 3);
+    }
+
+    /// Regression: the subscription path (`version`/`wait_for_change`)
+    /// must never be fault-injected. A poll that "fails" deserts the
+    /// barrier notification path — the sync barrier reads `version` for
+    /// its wake-up token every lap, so an injected error there aborted
+    /// the node instead of simulating a flaky data op.
+    #[test]
+    fn subscription_path_is_never_fault_injected() {
+        use std::sync::Arc;
+        use std::time::Instant;
+
+        let inner: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let s = Arc::new(FaultStore::new(Arc::clone(&inner), 1.0, 1));
+
+        // version succeeds even at p = 1 (everything else fails)
+        let v0 = s.version().expect("version must never be injected");
+        assert!(s.state_hash().is_err(), "data ops still fail at p = 1");
+
+        // ...and a waiter parked through the faulty wrapper still gets
+        // the wake-up when a peer's push lands on the shared inner store.
+        let waiter = {
+            let s = Arc::clone(&s);
+            std::thread::spawn(move || {
+                s.wait_for_change(v0, Duration::from_secs(20))
+                    .expect("wait_for_change must never be injected")
+            })
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        let t = Instant::now();
+        inner.push(store_tests::push_req(1, 0, 2.0)).unwrap();
+        let v = waiter.join().unwrap();
+        assert!(v > v0, "waiter must observe the push through the faulty wrapper");
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "waiter must wake on the push, not ride out the timeout"
+        );
+
+        // a clean timeout is also not an error
+        let v = s.wait_for_change(v, Duration::from_millis(20)).unwrap();
+        assert_eq!(v, s.version().unwrap());
     }
 
     #[test]

@@ -10,13 +10,14 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::{PushRequest, WeightEntry, WeightStore};
 use crate::tensor::codec::{decode_blob, encode_blob, BlobMeta};
+use crate::time::{Clock, RealClock};
 use crate::util::hash::combine;
 
 /// Weight store backed by a directory of blob files (sharable across OS
@@ -34,11 +35,22 @@ pub struct FsStore {
     /// counter advances whenever a LIST observes a different hash — the
     /// mtime-watching analogue for a bucket prefix.
     change: Mutex<(u64, u64)>,
+    /// Time domain for the `wait_for_change` backoff polling.
+    clock: Arc<dyn Clock>,
 }
 
 impl FsStore {
-    /// Open (creating if needed) a store rooted at `root`.
+    /// Open (creating if needed) a store rooted at `root` (change waits
+    /// poll in real time).
     pub fn open<P: AsRef<Path>>(root: P) -> Result<Self> {
+        FsStore::open_with_clock(root, RealClock::shared())
+    }
+
+    /// Like [`FsStore::open`], but the `wait_for_change` polling sleeps
+    /// in `clock`'s time domain — under a
+    /// [`crate::time::VirtualClock`] the backoff consumes simulated
+    /// time, so directory watching costs no real wall-clock.
+    pub fn open_with_clock<P: AsRef<Path>>(root: P, clock: Arc<dyn Clock>) -> Result<Self> {
         let root = root.as_ref().to_path_buf();
         fs::create_dir_all(&root).with_context(|| format!("mkdir {root:?}"))?;
         // resume the seq counter past any existing files
@@ -54,6 +66,7 @@ impl FsStore {
             pushes: AtomicU64::new(0),
             scan_lock: Mutex::new(()),
             change: Mutex::new((0, 0)),
+            clock,
         })
     }
 
@@ -175,20 +188,21 @@ impl WeightStore for FsStore {
 
     fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
         // No cross-process notification on a directory: poll the listing
-        // with exponential backoff, bounded by the caller's timeout.
-        let deadline = Instant::now().checked_add(timeout);
+        // with exponential backoff, bounded by the caller's timeout. The
+        // backoff sleeps in the store's clock domain, so a virtual clock
+        // turns the whole poll loop into simulated time.
+        let start = self.clock.now();
         let mut backoff = Duration::from_micros(500);
         loop {
             let v = self.version()?;
             if v > since {
                 return Ok(v);
             }
-            let now = Instant::now();
-            match deadline {
-                Some(d) if d <= now => return Ok(v),
-                Some(d) => std::thread::sleep(backoff.min(d - now)),
-                None => std::thread::sleep(backoff),
+            let elapsed = self.clock.now().saturating_sub(start);
+            if elapsed >= timeout {
+                return Ok(v);
             }
+            self.clock.sleep(backoff.min(timeout - elapsed));
             backoff = (backoff * 2).min(Duration::from_millis(20));
         }
     }

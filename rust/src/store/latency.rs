@@ -6,12 +6,13 @@
 //! protocol's sensitivity to store round-trip cost (DESIGN.md
 //! §Substitutions).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::{PushRequest, WeightEntry, WeightStore};
+use crate::time::{Clock, RealClock};
 use crate::util::Rng;
 
 /// Timing model for a remote object store.
@@ -59,13 +60,22 @@ pub struct LatencyStore<S> {
     inner: S,
     cfg: LatencyConfig,
     rng: Mutex<Rng>,
+    clock: Arc<dyn Clock>,
 }
 
 impl<S: WeightStore> LatencyStore<S> {
     /// Wrap `inner` with the `cfg` timing model; jitter is deterministic
-    /// in `seed`.
+    /// in `seed`. Delays are real `thread::sleep`s.
     pub fn new(inner: S, cfg: LatencyConfig, seed: u64) -> Self {
-        LatencyStore { inner, cfg, rng: Mutex::new(Rng::new(seed ^ 0x1A7E_4C1)) }
+        LatencyStore::with_clock(inner, cfg, seed, RealClock::shared())
+    }
+
+    /// Like [`LatencyStore::new`], but delays sleep in `clock`'s time
+    /// domain — under a [`crate::time::VirtualClock`] the simulated-S3
+    /// round-trips consume simulated time only, so latency sweeps run at
+    /// CPU speed.
+    pub fn with_clock(inner: S, cfg: LatencyConfig, seed: u64, clock: Arc<dyn Clock>) -> Self {
+        LatencyStore { inner, cfg, rng: Mutex::new(Rng::new(seed ^ 0x1A7E_4C1)), clock }
     }
 
     /// The wrapped store.
@@ -82,9 +92,7 @@ impl<S: WeightStore> LatencyStore<S> {
         if self.cfg.bytes_per_sec > 0 && payload_bytes > 0 {
             d += Duration::from_secs_f64(payload_bytes as f64 / self.cfg.bytes_per_sec as f64);
         }
-        if !d.is_zero() {
-            std::thread::sleep(d);
-        }
+        self.clock.sleep(d);
     }
 }
 

@@ -12,7 +12,6 @@ use super::{ChangeNotifier, PushRequest, WeightEntry, WeightStore};
 use crate::util::hash::combine;
 
 /// Shared-memory store; cheap Arc-based blob sharing, no serialization.
-#[derive(Default)]
 pub struct MemoryStore {
     entries: RwLock<Vec<WeightEntry>>,
     seq: AtomicU64,
@@ -20,10 +19,32 @@ pub struct MemoryStore {
     notify: ChangeNotifier,
 }
 
+impl Default for MemoryStore {
+    fn default() -> Self {
+        MemoryStore::new()
+    }
+}
+
 impl MemoryStore {
-    /// An empty store.
+    /// An empty store (change waits park in real time).
     pub fn new() -> Self {
-        Self::default()
+        MemoryStore::with_notifier(ChangeNotifier::default())
+    }
+
+    /// An empty store whose change subscriptions park in `clock`'s time
+    /// domain — pass the experiment's [`crate::time::VirtualClock`] so
+    /// `wait_for_change` consumes simulated time.
+    pub fn with_clock(clock: std::sync::Arc<dyn crate::time::Clock>) -> Self {
+        MemoryStore::with_notifier(ChangeNotifier::new(clock))
+    }
+
+    fn with_notifier(notify: ChangeNotifier) -> Self {
+        MemoryStore {
+            entries: RwLock::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            pushes: AtomicU64::new(0),
+            notify,
+        }
     }
 }
 

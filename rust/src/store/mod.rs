@@ -11,10 +11,14 @@
 //!
 //! Change detection is event-driven: every mutation advances a monotone
 //! [`WeightStore::version`] counter, and [`WeightStore::wait_for_change`]
-//! blocks until the counter moves past a caller-held token (Condvar
+//! blocks until the counter moves past a caller-held token (condition
 //! notification in the in-process stores, backoff LIST-polling in
 //! [`FsStore`]) — so protocol barriers park on a notification instead of
-//! busy-polling the store (see `crate::protocol`).
+//! busy-polling the store (see `crate::protocol`). All waits and
+//! injected delays run in a [`crate::time::Clock`]'s time domain: build
+//! a store `with_clock` on a [`crate::time::VirtualClock`] and every
+//! park/sleep consumes *simulated* time (instant in real time), which is
+//! what lets timing experiments run at CPU speed.
 //!
 //! Implementations:
 //! * [`MemoryStore`]  — in-process, for simulation and tests.
@@ -45,12 +49,14 @@ pub use latency::{LatencyConfig, LatencyStore};
 pub use memory::MemoryStore;
 pub use sharded::{ShardedStore, DEFAULT_SHARDS};
 
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::tensor::FlatParams;
+use crate::time::{Clock, Condition, RealClock};
 
 /// One deposited weight entry.
 #[derive(Clone, Debug)]
@@ -113,51 +119,64 @@ pub trait WeightStore: Send + Sync {
     fn clear(&self) -> Result<()>;
 }
 
-/// Condvar-backed monotone change counter shared by the in-process
-/// stores: `bump` after a mutation is visible, and waiters parked in
-/// [`ChangeNotifier::wait_for_change`] wake immediately.
-#[derive(Default)]
+/// Clock-aware monotone change counter shared by the in-process stores:
+/// `bump` after a mutation is visible, and waiters parked in
+/// [`ChangeNotifier::wait_for_change`] wake immediately. Timeouts are
+/// measured in the owning [`Clock`]'s time domain, so a store built with
+/// a [`crate::time::VirtualClock`] parks in *simulated* time (the wait
+/// completes instantly in real time once every node is blocked).
 pub(crate) struct ChangeNotifier {
-    version: Mutex<u64>,
-    changed: Condvar,
+    version: AtomicU64,
+    clock: Arc<dyn Clock>,
+    cond: Arc<dyn Condition>,
+}
+
+impl Default for ChangeNotifier {
+    fn default() -> Self {
+        ChangeNotifier::new(RealClock::shared())
+    }
 }
 
 impl ChangeNotifier {
+    /// A notifier parking in `clock`'s time domain.
+    pub(crate) fn new(clock: Arc<dyn Clock>) -> ChangeNotifier {
+        let cond = clock.condition();
+        ChangeNotifier { version: AtomicU64::new(0), clock, cond }
+    }
+
     /// Advance the counter and wake every parked waiter. Call only after
     /// the mutation is visible to readers.
     pub(crate) fn bump(&self) {
-        let mut v = self.version.lock().unwrap();
-        *v += 1;
-        self.changed.notify_all();
+        // Version first, then notify: a woken waiter must observe the
+        // new counter (the condition's epoch/notify pairing makes the
+        // check-then-wait race in `wait_for_change` benign).
+        self.version.fetch_add(1, Ordering::SeqCst);
+        self.cond.notify_all();
     }
 
     /// Current counter value.
     pub(crate) fn version(&self) -> u64 {
-        *self.version.lock().unwrap()
+        self.version.load(Ordering::SeqCst)
     }
 
-    /// Park until the counter exceeds `since` or `timeout` elapses;
-    /// returns the counter observed at wake-up.
+    /// Park until the counter exceeds `since` or `timeout` of clock time
+    /// elapses; returns the counter observed at wake-up.
     pub(crate) fn wait_for_change(&self, since: u64, timeout: Duration) -> u64 {
-        // A huge timeout may not be representable as a deadline; treat it
-        // as "wait forever".
-        let deadline = Instant::now().checked_add(timeout);
-        let mut v = self.version.lock().unwrap();
+        let start = self.clock.now();
         loop {
-            if *v > since {
-                return *v;
+            // Epoch token *before* the predicate check: a bump landing in
+            // between turns the wait into an immediate return instead of
+            // a lost wake-up.
+            let tok = self.cond.epoch();
+            let v = self.version();
+            if v > since {
+                return v;
             }
-            match deadline {
-                Some(d) => {
-                    let now = Instant::now();
-                    if d <= now {
-                        return *v;
-                    }
-                    let (guard, _) = self.changed.wait_timeout(v, d - now).unwrap();
-                    v = guard;
-                }
-                None => v = self.changed.wait(v).unwrap(),
+            let elapsed = self.clock.now().saturating_sub(start);
+            if elapsed >= timeout {
+                return v;
             }
+            self.cond.wait_past(tok, timeout - elapsed);
         }
     }
 }

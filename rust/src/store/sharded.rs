@@ -49,14 +49,27 @@ pub struct ShardedStore {
 }
 
 impl ShardedStore {
-    /// Create a store with `n_shards` independently locked shards.
+    /// Create a store with `n_shards` independently locked shards
+    /// (change waits park in real time).
     pub fn new(n_shards: usize) -> Self {
+        ShardedStore::with_notifier(n_shards, ChangeNotifier::default())
+    }
+
+    /// Like [`ShardedStore::new`], but change subscriptions park in
+    /// `clock`'s time domain — pass the experiment's
+    /// [`crate::time::VirtualClock`] so `wait_for_change` consumes
+    /// simulated time.
+    pub fn with_clock(n_shards: usize, clock: std::sync::Arc<dyn crate::time::Clock>) -> Self {
+        ShardedStore::with_notifier(n_shards, ChangeNotifier::new(clock))
+    }
+
+    fn with_notifier(n_shards: usize, notify: ChangeNotifier) -> Self {
         assert!(n_shards >= 1, "need at least one shard");
         ShardedStore {
             shards: (0..n_shards).map(|_| RwLock::new(Vec::new())).collect(),
             seq: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
-            notify: ChangeNotifier::default(),
+            notify,
         }
     }
 

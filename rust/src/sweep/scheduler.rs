@@ -13,6 +13,14 @@
 //! The pool is bounded because each trial internally spawns `n_nodes` OS
 //! threads, each with its own PJRT engine: `jobs` caps *trials* in
 //! flight, so peak thread count is `jobs × max(n_nodes)`.
+//!
+//! Time: the sweep's own wall-clock (progress lines, `SweepReport`
+//! header) is real time — it measures the scheduler. Each *trial's*
+//! `wall_clock_s` is measured on that trial's own clock
+//! ([`crate::sim::run_experiment`] builds one per trial from the base
+//! config's `clock` key), so a `"clock": "virtual"` spec sweeps
+//! straggler/latency grids at CPU speed while the per-cell wall-clock
+//! columns report deterministic simulated seconds.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

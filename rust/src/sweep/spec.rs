@@ -105,9 +105,11 @@ impl SweepSpec {
     /// [seed, seed + 1000, ...]` (the [`crate::sim::run_trials`] seed
     /// schedule). Scalars forwarded to the base config: `model`, `epochs`,
     /// `steps_per_epoch`, `sample_prob`, `train_size`, `test_size`,
-    /// `seed`, `store`, `latency`, `sync_timeout_s`, `log_dir`,
-    /// `verbose`. Scheduler width: `jobs`. Unknown keys are errors (typo
-    /// protection).
+    /// `seed`, `store`, `latency`, `sync_timeout_s`, `clock` (`"virtual"`
+    /// runs every trial on its own simulated clock — straggler/latency
+    /// grids at CPU speed, deterministic per-cell `wall_clock_s`),
+    /// `log_dir`, `verbose`. Scheduler width: `jobs`. Unknown keys are
+    /// errors (typo protection).
     pub fn parse_json(text: &str) -> Result<SweepSpec> {
         let j = Json::parse(text).map_err(|e| anyhow!("sweep spec: {e}"))?;
         let obj = j
@@ -116,8 +118,8 @@ impl SweepSpec {
 
         const KNOWN: &[&str] = &[
             "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
-            "seed", "store", "latency", "sync_timeout_s", "log_dir", "verbose", "modes",
-            "strategies", "skews", "n_nodes", "seeds", "trials", "jobs",
+            "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
+            "modes", "strategies", "skews", "n_nodes", "seeds", "trials", "jobs",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -157,6 +159,11 @@ impl SweepSpec {
         }
         if let Some(v) = obj.get("sync_timeout_s") {
             base.sync_timeout = Duration::from_secs_f64(req_f64(v, "sync_timeout_s")?);
+        }
+        if let Some(v) = obj.get("clock") {
+            let s = req_str(v, "clock")?;
+            base.clock = crate::time::ClockKind::parse(s)
+                .ok_or_else(|| anyhow!("sweep spec: unknown clock {s:?}"))?;
         }
         if let Some(v) = obj.get("log_dir") {
             base.log_dir = Some(req_str(v, "log_dir")?.into());
@@ -484,6 +491,17 @@ mod tests {
         assert_ne!(cells[0], cells[1]);
         assert!(cells[0].label().starts_with("gossip1_"));
         assert!(cells[1].label().starts_with("gossip2_"));
+    }
+
+    #[test]
+    fn clock_values() {
+        use crate::time::ClockKind;
+        let spec = SweepSpec::parse_json(r#"{"clock": "virtual"}"#).unwrap();
+        assert_eq!(spec.base.clock, ClockKind::Virtual);
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.base.clock, ClockKind::Real);
+        assert!(SweepSpec::parse_json(r#"{"clock": "sundial"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"clock": 3}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Time virtualization — the [`Clock`] abstraction behind every delay,
+//! timeout, and timestamp in the experiment stack.
+//!
+//! The paper's headline claim is about *time*: asynchronous serverless
+//! federation removes the wall-clock bottleneck imposed by slow or
+//! fragile clients (§4). Arguing that with real `thread::sleep` calls
+//! makes time-to-accuracy experiments slow and timing assertions flaky.
+//! This module abstracts the clock behind a trait with two
+//! implementations:
+//!
+//! * [`RealClock`] — wall-clock time: `sleep` is `std::thread::sleep`,
+//!   conditions are plain `Condvar`s. The default; behaviour is
+//!   identical to the pre-clock code.
+//! * [`VirtualClock`] — a discrete-event scheduler. Simulated time
+//!   advances **only** when every registered participant thread is
+//!   blocked in a clock primitive (a [`Clock::sleep`] or a
+//!   [`Condition`] wait); it then jumps straight to the earliest
+//!   pending deadline. A 10-node run with 500 ms/step straggler delays
+//!   completes in milliseconds of real time while reporting faithful
+//!   simulated wall-clock — and, because time only moves under
+//!   unanimity, the simulated timeline is a pure function of the
+//!   configuration: repeated runs are bit-identical.
+//!
+//! Everything time-dependent threads a clock through:
+//! the node worker's straggler delay, the simulated-S3
+//! [`crate::store::LatencyStore`], the store subscription layer
+//! ([`crate::store::WeightStore::wait_for_change`] parks on a
+//! [`Condition`]), the sync barrier's `sync_timeout`, and the
+//! [`crate::metrics::timeline::Timeline`] spans behind `wall_clock_s`.
+//! Select with the `clock = real | virtual` config key or
+//! `fedbench ... --virtual-clock`.
+//!
+//! # Participants
+//!
+//! A virtual clock must know how many threads are *supposed* to be
+//! running, or it would advance time while a node is still mid-compute.
+//! [`Clock::enter`] reserves a participant slot (the experiment driver
+//! reserves each node's slot before spawning it — see
+//! [`crate::node::spawn_node`]), [`Clock::attach`] marks the node's own
+//! thread as that participant, and [`Clock::exit`]/[`Clock::detach`]
+//! undo both on thread end ([`ParticipantGuard`] makes the pair
+//! drop-safe). Only **attached** threads count toward the advance
+//! quorum — an unattached thread blocking on the clock (say, a monitor
+//! polling the store) parks harmlessly and can never advance time while
+//! a node is still computing. Real compute takes zero simulated time;
+//! only sleeps and timeouts move the clock. With zero registered
+//! participants any blocking call advances immediately, which gives
+//! single-threaded use (tests, standalone stores) the obvious
+//! semantics.
+//!
+//! # Determinism caveat
+//!
+//! Two store operations issued at the *same* simulated instant (e.g.
+//! identical per-node delays) still race in real time; their relative
+//! order is not fixed by the clock. Scenarios with distinct per-node
+//! delays are fully deterministic — the regression tests in
+//! `rust/tests/timing.rs` assert bit-identical timelines.
+
+mod real;
+mod virtual_clock;
+
+pub use real::RealClock;
+pub use virtual_clock::VirtualClock;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A source of time plus blocking primitives in that time domain. All
+/// methods are thread-safe; `&self` receivers allow `Arc<dyn Clock>`
+/// sharing across node threads.
+pub trait Clock: Send + Sync {
+    /// Elapsed time since this clock's origin (monotone).
+    fn now(&self) -> Duration;
+
+    /// Block the calling thread for `d` of this clock's time. A zero
+    /// duration returns immediately.
+    fn sleep(&self, d: Duration);
+
+    /// Create a condition variable in this clock's time domain (see
+    /// [`Condition`]). Waits on it consume simulated time under a
+    /// virtual clock and real time under a real one.
+    fn condition(&self) -> Arc<dyn Condition>;
+
+    /// Reserve one participant slot (virtual clocks advance only when
+    /// all participants are blocked). Callable from any thread — the
+    /// experiment driver reserves each node's slot *before* spawning
+    /// it. No-op for [`RealClock`].
+    fn enter(&self);
+
+    /// Mark the **calling** thread as one of this clock's participant
+    /// threads: only attached threads count toward a virtual clock's
+    /// advance quorum, so a stray unattached thread blocking on the
+    /// clock (e.g. a monitor polling the store) can never advance
+    /// simulated time while a node is still computing. Pairs with
+    /// [`Clock::detach`]; [`ParticipantGuard`] manages both. No-op for
+    /// [`RealClock`].
+    fn attach(&self) {}
+
+    /// Unmark the calling thread (inverse of [`Clock::attach`]). No-op
+    /// for [`RealClock`].
+    fn detach(&self) {}
+
+    /// Release one participant slot (must pair with a prior
+    /// [`Clock::enter`]). No-op for [`RealClock`].
+    fn exit(&self);
+}
+
+/// A clock-domain condition variable with an epoch counter instead of a
+/// guarded predicate: [`Condition::notify_all`] advances the epoch and
+/// wakes every waiter, and [`Condition::wait_past`] parks until the
+/// epoch exceeds a caller-held token or a timeout (in the owning
+/// clock's time) elapses.
+///
+/// The token protocol makes the check-then-wait race benign: read
+/// [`Condition::epoch`] *before* checking your predicate, and a notify
+/// that lands in between turns the subsequent `wait_past` into an
+/// immediate return instead of a lost wake-up. Spurious returns are
+/// allowed — callers re-check their predicate in a loop.
+pub trait Condition: Send + Sync {
+    /// Current notification epoch (monotone; advances on every
+    /// [`Condition::notify_all`]).
+    fn epoch(&self) -> u64;
+
+    /// Park until `epoch() > seen` or `timeout` of the owning clock's
+    /// time elapses. May return spuriously.
+    fn wait_past(&self, seen: u64, timeout: Duration);
+
+    /// Advance the epoch and wake every parked waiter.
+    fn notify_all(&self);
+}
+
+/// Which [`Clock`] an experiment runs under — the config-level selector
+/// (`clock = real | virtual`), parallel to `StoreKind` for stores.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockKind {
+    /// Wall-clock time ([`RealClock`]); the default.
+    #[default]
+    Real,
+    /// Discrete-event simulated time ([`VirtualClock`]): straggler and
+    /// latency sleeps complete instantly in real time, `wall_clock_s`
+    /// reports simulated seconds, and timelines are deterministic.
+    Virtual,
+}
+
+impl ClockKind {
+    /// Parse a config/CLI value: `real` or `virtual`.
+    pub fn parse(s: &str) -> Option<ClockKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "real" => Some(ClockKind::Real),
+            "virtual" => Some(ClockKind::Virtual),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (inverse of [`ClockKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockKind::Real => "real",
+            ClockKind::Virtual => "virtual",
+        }
+    }
+
+    /// Build a fresh clock of this kind (origin = now). Each experiment
+    /// gets its own instance so timeline offsets start near zero.
+    pub fn build(self) -> Arc<dyn Clock> {
+        match self {
+            ClockKind::Real => Arc::new(RealClock::new()),
+            ClockKind::Virtual => Arc::new(VirtualClock::new()),
+        }
+    }
+}
+
+/// RAII participant registration: calls [`Clock::exit`] on drop, so a
+/// node thread deregisters even when it crashes, errors, or panics.
+pub struct ParticipantGuard {
+    clock: Arc<dyn Clock>,
+}
+
+impl ParticipantGuard {
+    /// Reserve a participant slot, attach the calling thread to it, and
+    /// guard both.
+    pub fn enter(clock: Arc<dyn Clock>) -> ParticipantGuard {
+        clock.enter();
+        clock.attach();
+        ParticipantGuard { clock }
+    }
+
+    /// Attach the calling thread to a slot reserved earlier by someone
+    /// else (e.g. the driver calling [`Clock::enter`] before spawning
+    /// the node thread) and guard it.
+    pub fn adopt(clock: Arc<dyn Clock>) -> ParticipantGuard {
+        clock.attach();
+        ParticipantGuard { clock }
+    }
+}
+
+impl Drop for ParticipantGuard {
+    fn drop(&mut self) {
+        self.clock.detach();
+        self.clock.exit();
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod clock_tests {
+    //! Conformance suite shared by [`RealClock`] and [`VirtualClock`]
+    //! (mirroring the store subscription-conformance pattern): monotone
+    //! `now()`, `sleep` ordering, and park/notify wake-ups behave
+    //! identically in both time domains.
+
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use super::*;
+
+    pub fn conformance(clock: Arc<dyn Clock>) {
+        // now() is monotone
+        let t0 = clock.now();
+        let t1 = clock.now();
+        assert!(t1 >= t0, "now must be monotone");
+
+        // sleep(0) is a no-op that returns
+        clock.sleep(Duration::ZERO);
+
+        // sleep(d) advances now() by at least d
+        let before = clock.now();
+        clock.sleep(Duration::from_millis(30));
+        let after = clock.now();
+        assert!(
+            after.saturating_sub(before) >= Duration::from_millis(30),
+            "sleep must advance the clock by at least the slept duration \
+             ({before:?} -> {after:?})"
+        );
+
+        // park/notify: a waiter parked with a long timeout wakes on a
+        // peer's notify, at the peer's (clock-domain) notify instant.
+        let cond = clock.condition();
+        let tok = cond.epoch();
+        clock.enter(); // waiter
+        clock.enter(); // notifier
+        std::thread::scope(|scope| {
+            let waiter = {
+                let clock = Arc::clone(&clock);
+                let cond = Arc::clone(&cond);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let t0 = clock.now();
+                    cond.wait_past(tok, Duration::from_secs(60));
+                    (t0, clock.now(), cond.epoch())
+                })
+            };
+            let notifier = {
+                let clock = Arc::clone(&clock);
+                let cond = Arc::clone(&cond);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    clock.sleep(Duration::from_millis(20));
+                    cond.notify_all();
+                })
+            };
+            notifier.join().unwrap();
+            let (t0, t_wake, epoch) = waiter.join().unwrap();
+            assert!(epoch > tok, "waiter must observe the notify epoch");
+            assert!(
+                t_wake.saturating_sub(t0) < Duration::from_secs(30),
+                "waiter must wake on the notify, not ride out the timeout"
+            );
+        });
+
+        // clean timeout: an unnotified wait consumes exactly-at-least
+        // its timeout of clock time, then returns
+        let cond = clock.condition();
+        let tok = cond.epoch();
+        let t0 = clock.now();
+        cond.wait_past(tok, Duration::from_millis(25));
+        assert!(
+            clock.now().saturating_sub(t0) >= Duration::from_millis(25),
+            "clean timeout must consume the full timeout of clock time"
+        );
+        assert_eq!(cond.epoch(), tok, "no notify happened");
+
+        // a notify that lands before the wait (stale token) returns
+        // immediately instead of being lost
+        let cond = clock.condition();
+        let tok = cond.epoch();
+        cond.notify_all();
+        let t0 = clock.now();
+        cond.wait_past(tok, Duration::from_secs(60));
+        assert!(
+            clock.now().saturating_sub(t0) < Duration::from_secs(30),
+            "a pre-wait notify must not be lost"
+        );
+    }
+
+    #[test]
+    fn clock_kind_parse_and_name() {
+        assert_eq!(ClockKind::parse("real"), Some(ClockKind::Real));
+        assert_eq!(ClockKind::parse("VIRTUAL"), Some(ClockKind::Virtual));
+        assert_eq!(ClockKind::parse("simulated"), None);
+        assert_eq!(ClockKind::Real.name(), "real");
+        assert_eq!(ClockKind::Virtual.name(), "virtual");
+        assert_eq!(ClockKind::default(), ClockKind::Real);
+        for kind in [ClockKind::Real, ClockKind::Virtual] {
+            assert_eq!(ClockKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn real_clock_conformance() {
+        conformance(Arc::new(RealClock::new()));
+    }
+
+    #[test]
+    fn virtual_clock_conformance() {
+        conformance(Arc::new(VirtualClock::new()));
+    }
+}

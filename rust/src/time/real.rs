@@ -1,0 +1,127 @@
+//! [`RealClock`] — wall-clock time; the behaviour every component had
+//! before the clock abstraction existed.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::{Clock, Condition};
+
+/// Wall-clock [`Clock`]: `now` is elapsed real time since construction,
+/// `sleep` is `std::thread::sleep`, conditions are plain `Condvar`s and
+/// participant registration is a no-op (real time advances on its own).
+pub struct RealClock {
+    origin: Instant,
+}
+
+impl RealClock {
+    /// A clock whose origin is now.
+    pub fn new() -> RealClock {
+        RealClock { origin: Instant::now() }
+    }
+
+    /// The process-wide shared real clock — the default time source for
+    /// stores built without an explicit clock. Its origin is the first
+    /// call, which is fine for every user: they only ever take `now()`
+    /// differences.
+    pub fn shared() -> Arc<RealClock> {
+        static SHARED: OnceLock<Arc<RealClock>> = OnceLock::new();
+        Arc::clone(SHARED.get_or_init(|| Arc::new(RealClock::new())))
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+
+    fn sleep(&self, d: Duration) {
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    fn condition(&self) -> Arc<dyn Condition> {
+        Arc::new(RealCondition::default())
+    }
+
+    fn enter(&self) {}
+
+    fn exit(&self) {}
+}
+
+/// Plain `Condvar`-backed [`Condition`] with an epoch counter.
+#[derive(Default)]
+struct RealCondition {
+    epoch: Mutex<u64>,
+    changed: Condvar,
+}
+
+impl Condition for RealCondition {
+    fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    fn wait_past(&self, seen: u64, timeout: Duration) {
+        // A huge timeout may not be representable as a deadline; treat
+        // it as "wait forever".
+        let deadline = Instant::now().checked_add(timeout);
+        let mut e = self.epoch.lock().unwrap();
+        loop {
+            if *e > seen {
+                return;
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if d <= now {
+                        return;
+                    }
+                    let (guard, _) = self.changed.wait_timeout(e, d - now).unwrap();
+                    e = guard;
+                }
+                None => e = self.changed.wait(e).unwrap(),
+            }
+        }
+    }
+
+    fn notify_all(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e += 1;
+        self.changed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_tracks_real_time() {
+        let c = RealClock::new();
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(c.now() - t0 >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn shared_clock_is_one_instance() {
+        let a = RealClock::shared();
+        let b = RealClock::shared();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn condition_timeout_is_real_time() {
+        let c = RealClock::new();
+        let cond = c.condition();
+        let t0 = Instant::now();
+        cond.wait_past(cond.epoch(), Duration::from_millis(30));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

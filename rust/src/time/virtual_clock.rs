@@ -1,0 +1,537 @@
+//! [`VirtualClock`] — a conservative discrete-event scheduler behind the
+//! [`Clock`] trait.
+//!
+//! Simulated time advances **only** when every registered participant
+//! thread is blocked inside a clock primitive; it then jumps straight to
+//! the earliest pending deadline and wakes the threads whose wait is
+//! over. Real compute between blocking calls takes zero simulated time,
+//! so a straggler grid that would burn minutes of `thread::sleep` runs
+//! at CPU speed while reporting faithful simulated wall-clock — and the
+//! unanimity rule makes the simulated timeline independent of OS thread
+//! scheduling: with distinct per-node delays, repeated runs produce
+//! bit-identical timelines.
+//!
+//! # Blocked-count bookkeeping
+//!
+//! The subtle invariant is *when a waiter stops counting as blocked*. A
+//! waiter woken by [`Condition::notify_all`] is discounted **at notify
+//! time** (by the notifier, under the clock lock), not when its OS
+//! thread happens to resume — otherwise the notifier could race ahead,
+//! block again, and re-establish unanimity while the logically-awake
+//! waiter still counted as blocked, advancing time past the instant the
+//! waiter is about to observe. Each wait therefore registers a
+//! [`Waiter`] record; `notify_all` flips its `woken` flag and
+//! decrements `blocked` on its behalf, and the waiter skips the
+//! decrement when it finds the flag set.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::{Clock, Condition};
+
+thread_local! {
+    /// Clocks (by `VcShared` address) the current thread is attached to
+    /// as a participant ([`Clock::attach`]); only attached threads count
+    /// toward a clock's advance quorum.
+    static ATTACHED: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
+/// One thread parked in a virtual-clock primitive.
+struct Waiter {
+    /// Unique id of this wait (for removal).
+    id: u64,
+    /// Virtual instant at which the wait times out.
+    deadline: Duration,
+    /// `Some(condition id)` for condition waits, `None` for sleeps.
+    cond: Option<u64>,
+    /// Whether the parked thread is an attached participant (counts in
+    /// `blocked` rather than `blocked_others`).
+    participant: bool,
+    /// Set by `notify_all`: the waiter is logically runnable and has
+    /// already been discounted from its blocked counter.
+    woken: bool,
+}
+
+struct VcState {
+    /// Current simulated time since the clock's origin.
+    now: Duration,
+    /// Registered participant threads ([`Clock::enter`]).
+    participants: usize,
+    /// Participant threads currently parked in a clock primitive
+    /// (excluding waiters already marked `woken`).
+    blocked: usize,
+    /// Non-participant threads currently parked. They never count
+    /// toward the quorum while participants exist — a stray monitor
+    /// thread blocking on the store must not let time advance while a
+    /// node is still computing — but with zero participants any blocked
+    /// thread advances (single-threaded simulation semantics).
+    blocked_others: usize,
+    /// All currently parked waits.
+    waiters: Vec<Waiter>,
+    /// Id source for waits and conditions.
+    next_id: u64,
+}
+
+struct VcShared {
+    state: Mutex<VcState>,
+    wake: Condvar,
+}
+
+impl VcShared {
+    /// Whether the calling thread is attached to this clock.
+    fn current_thread_attached(this: &Arc<VcShared>) -> bool {
+        let token = Arc::as_ptr(this) as usize;
+        ATTACHED.with(|a| a.borrow().contains(&token))
+    }
+
+    /// If every participant is blocked, advance `now` to the earliest
+    /// live deadline and wake everyone to re-check their predicates.
+    /// With zero participants any single blocked thread advances
+    /// immediately (single-threaded simulation semantics).
+    fn try_advance(state: &mut VcState, wake: &Condvar) {
+        let quorum = if state.participants > 0 {
+            state.blocked >= state.participants
+        } else {
+            state.blocked + state.blocked_others > 0
+        };
+        if !quorum {
+            return;
+        }
+        if let Some(d) = state
+            .waiters
+            .iter()
+            .filter(|w| !w.woken)
+            .map(|w| w.deadline)
+            .min()
+        {
+            if d > state.now {
+                state.now = d;
+            }
+            wake.notify_all();
+        }
+    }
+
+    /// Park-entry bookkeeping shared by sleeps and condition waits.
+    fn add_blocked(state: &mut VcState, participant: bool) {
+        if participant {
+            state.blocked += 1;
+        } else {
+            state.blocked_others += 1;
+        }
+    }
+
+    /// Park-exit bookkeeping (skipped when `notify_all` already
+    /// discounted the waiter).
+    fn remove_blocked(state: &mut VcState, participant: bool) {
+        if participant {
+            state.blocked -= 1;
+        } else {
+            state.blocked_others -= 1;
+        }
+    }
+}
+
+/// Discrete-event simulated [`Clock`]; see the module docs for the
+/// advancement rule. Construct one per experiment
+/// ([`crate::time::ClockKind::build`]); conditions created from it share
+/// its time domain.
+pub struct VirtualClock {
+    shared: Arc<VcShared>,
+}
+
+impl VirtualClock {
+    /// A virtual clock at `now == 0` with no participants.
+    pub fn new() -> VirtualClock {
+        VirtualClock {
+            shared: Arc::new(VcShared {
+                state: Mutex::new(VcState {
+                    now: Duration::ZERO,
+                    participants: 0,
+                    blocked: 0,
+                    blocked_others: 0,
+                    waiters: Vec::new(),
+                    next_id: 0,
+                }),
+                wake: Condvar::new(),
+            }),
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        self.shared.state.lock().unwrap().now
+    }
+
+    fn sleep(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        let sh = &self.shared;
+        let participant = VcShared::current_thread_attached(sh);
+        let mut st = sh.state.lock().unwrap();
+        let deadline = st.now.saturating_add(d);
+        let id = st.next_id;
+        st.next_id += 1;
+        st.waiters.push(Waiter { id, deadline, cond: None, participant, woken: false });
+        VcShared::add_blocked(&mut st, participant);
+        VcShared::try_advance(&mut st, &sh.wake);
+        while st.now < deadline {
+            st = sh.wake.wait(st).unwrap();
+        }
+        let pos = st.waiters.iter().position(|w| w.id == id).unwrap();
+        st.waiters.swap_remove(pos);
+        VcShared::remove_blocked(&mut st, participant);
+        // A departing non-participant may leave the participants
+        // unanimous again (for a participant the quorum is now false,
+        // so this is a no-op — time stays frozen while it runs).
+        VcShared::try_advance(&mut st, &sh.wake);
+    }
+
+    fn condition(&self) -> Arc<dyn Condition> {
+        let id = {
+            let mut st = self.shared.state.lock().unwrap();
+            let id = st.next_id;
+            st.next_id += 1;
+            id
+        };
+        Arc::new(VirtualCondition {
+            shared: Arc::clone(&self.shared),
+            id,
+            epoch: AtomicU64::new(0),
+        })
+    }
+
+    fn enter(&self) {
+        self.shared.state.lock().unwrap().participants += 1;
+    }
+
+    fn attach(&self) {
+        let token = Arc::as_ptr(&self.shared) as usize;
+        ATTACHED.with(|a| a.borrow_mut().push(token));
+    }
+
+    fn detach(&self) {
+        let token = Arc::as_ptr(&self.shared) as usize;
+        ATTACHED.with(|a| {
+            let mut v = a.borrow_mut();
+            if let Some(pos) = v.iter().position(|&t| t == token) {
+                v.swap_remove(pos);
+            }
+        });
+    }
+
+    fn exit(&self) {
+        let sh = &self.shared;
+        let mut st = sh.state.lock().unwrap();
+        st.participants = st.participants.saturating_sub(1);
+        // The remaining blocked threads may now be unanimous.
+        VcShared::try_advance(&mut st, &sh.wake);
+    }
+}
+
+/// A [`Condition`] in a [`VirtualClock`]'s time domain. The epoch cell
+/// is only read/written under the clock's state lock, which pairs every
+/// notify with its blocked-count bookkeeping (no lost wake-ups, no
+/// premature advance).
+struct VirtualCondition {
+    shared: Arc<VcShared>,
+    id: u64,
+    epoch: AtomicU64,
+}
+
+impl Condition for VirtualCondition {
+    fn epoch(&self) -> u64 {
+        let _st = self.shared.state.lock().unwrap();
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    fn wait_past(&self, seen: u64, timeout: Duration) {
+        let sh = &self.shared;
+        let participant = VcShared::current_thread_attached(sh);
+        let mut st = sh.state.lock().unwrap();
+        if self.epoch.load(Ordering::SeqCst) > seen || timeout.is_zero() {
+            return;
+        }
+        let deadline = st.now.saturating_add(timeout);
+        let id = st.next_id;
+        st.next_id += 1;
+        st.waiters.push(Waiter { id, deadline, cond: Some(self.id), participant, woken: false });
+        VcShared::add_blocked(&mut st, participant);
+        VcShared::try_advance(&mut st, &sh.wake);
+        loop {
+            let me = st.waiters.iter().find(|w| w.id == id).unwrap();
+            if me.woken || st.now >= deadline {
+                break;
+            }
+            st = sh.wake.wait(st).unwrap();
+        }
+        let pos = st.waiters.iter().position(|w| w.id == id).unwrap();
+        let was_woken = st.waiters.swap_remove(pos).woken;
+        if !was_woken {
+            // Timed out: notify_all never discounted us.
+            VcShared::remove_blocked(&mut st, participant);
+        }
+        // See VirtualClock::sleep: a departing non-participant may leave
+        // the participants unanimous again.
+        VcShared::try_advance(&mut st, &sh.wake);
+    }
+
+    fn notify_all(&self) {
+        let sh = &self.shared;
+        let mut st = sh.state.lock().unwrap();
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        // Discount every waiter on this condition *now*: they are
+        // logically runnable from this instant, and counting them as
+        // blocked until their OS thread resumes would let the clock
+        // advance past the moment they are about to observe.
+        let state = &mut *st;
+        let (mut woke, mut woke_others) = (0, 0);
+        for w in state.waiters.iter_mut() {
+            if w.cond == Some(self.id) && !w.woken {
+                w.woken = true;
+                if w.participant {
+                    woke += 1;
+                } else {
+                    woke_others += 1;
+                }
+            }
+        }
+        state.blocked -= woke;
+        state.blocked_others -= woke_others;
+        sh.wake.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::time::ParticipantGuard;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn starts_at_zero() {
+        assert_eq!(VirtualClock::new().now(), Duration::ZERO);
+    }
+
+    #[test]
+    fn single_thread_sleep_advances_exactly() {
+        // No participants: a lone sleeper advances immediately, by
+        // exactly the slept duration — no real time passes.
+        let c = VirtualClock::new();
+        let t0 = std::time::Instant::now();
+        c.sleep(ms(250));
+        c.sleep(ms(750));
+        assert_eq!(c.now(), ms(1000));
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not sleep for real");
+    }
+
+    #[test]
+    fn zero_sleep_is_free() {
+        let c = VirtualClock::new();
+        c.sleep(Duration::ZERO);
+        assert_eq!(c.now(), Duration::ZERO);
+    }
+
+    #[test]
+    fn advances_to_earliest_deadline_among_participants() {
+        // Two participants sleeping different durations: the clock must
+        // step 100 -> 300, never past a live deadline.
+        let clock = Arc::new(VirtualClock::new());
+        clock.enter();
+        clock.enter();
+        let wakes: Vec<Duration> = std::thread::scope(|scope| {
+            let handles: Vec<_> = [ms(100), ms(300)]
+                .into_iter()
+                .map(|d| {
+                    let clock = Arc::clone(&clock);
+                    scope.spawn(move || {
+                        let _p =
+                            ParticipantGuard::adopt(Arc::clone(&clock));
+                        clock.sleep(d);
+                        clock.now()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(wakes, vec![ms(100), ms(300)]);
+        assert_eq!(clock.now(), ms(300));
+    }
+
+    #[test]
+    fn clock_does_not_advance_while_a_participant_runs() {
+        // One participant sleeps while the other is busy (never blocks):
+        // time must stay frozen until the busy one exits.
+        let clock = Arc::new(VirtualClock::new());
+        clock.enter();
+        clock.enter();
+        std::thread::scope(|scope| {
+            let sleeper = {
+                let clock = Arc::clone(&clock);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    clock.sleep(ms(50));
+                    clock.now()
+                })
+            };
+            let busy = {
+                let clock = Arc::clone(&clock);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    // Busy for real; the sleeper must not time-travel
+                    // while we are runnable.
+                    std::thread::sleep(ms(30));
+                    clock.now()
+                })
+            };
+            let seen_by_busy = busy.join().unwrap();
+            assert_eq!(seen_by_busy, Duration::ZERO, "time frozen while runnable");
+            // After busy exits (guard drop), the sleeper is unanimous.
+            assert_eq!(sleeper.join().unwrap(), ms(50));
+        });
+    }
+
+    #[test]
+    fn notify_wakes_condition_waiter_at_the_notify_instant() {
+        let clock = Arc::new(VirtualClock::new());
+        let cond = clock.condition();
+        let tok = cond.epoch();
+        clock.enter();
+        clock.enter();
+        std::thread::scope(|scope| {
+            let waiter = {
+                let clock = Arc::clone(&clock);
+                let cond = Arc::clone(&cond);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    cond.wait_past(tok, Duration::from_secs(3600));
+                    clock.now()
+                })
+            };
+            let notifier = {
+                let clock = Arc::clone(&clock);
+                let cond = Arc::clone(&cond);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    clock.sleep(ms(40));
+                    cond.notify_all();
+                })
+            };
+            notifier.join().unwrap();
+            assert_eq!(waiter.join().unwrap(), ms(40), "woken at the notify instant");
+        });
+    }
+
+    #[test]
+    fn unnotified_wait_consumes_exactly_its_timeout() {
+        let c = VirtualClock::new();
+        let cond = c.condition();
+        cond.wait_past(cond.epoch(), ms(120));
+        assert_eq!(c.now(), ms(120));
+    }
+
+    #[test]
+    fn stale_token_returns_without_advancing() {
+        let c = VirtualClock::new();
+        let cond = c.condition();
+        let tok = cond.epoch();
+        cond.notify_all();
+        cond.wait_past(tok, Duration::from_secs(3600));
+        assert_eq!(c.now(), Duration::ZERO, "pre-wait notify must not be lost");
+    }
+
+    #[test]
+    fn conditions_are_independent() {
+        // A notify on one condition must not wake (or discount) a
+        // waiter on another.
+        let c = VirtualClock::new();
+        let a = c.condition();
+        let b = c.condition();
+        b.notify_all();
+        let tok = a.epoch();
+        a.wait_past(tok, ms(80)); // times out despite b's notify
+        assert_eq!(c.now(), ms(80));
+        assert_eq!(a.epoch(), tok);
+    }
+
+    #[test]
+    fn unattached_thread_cannot_advance_time_while_participant_runs() {
+        // An unattached thread (e.g. a monitor polling the store) may
+        // park on the clock, but it must never count toward the advance
+        // quorum: time stays frozen until the *attached* participant
+        // blocks, and the monitor's departure hands the advance back to
+        // the participants.
+        let clock = Arc::new(VirtualClock::new());
+        clock.enter(); // slot reserved; its thread attaches below
+        std::thread::scope(|scope| {
+            let monitor = {
+                let clock = Arc::clone(&clock);
+                scope.spawn(move || {
+                    // deliberately NOT attached
+                    clock.sleep(ms(10));
+                    clock.now()
+                })
+            };
+            let participant = {
+                let clock = Arc::clone(&clock);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    // busy for real so the monitor is parked by now
+                    std::thread::sleep(Duration::from_millis(200));
+                    let before = clock.now();
+                    clock.sleep(ms(50));
+                    (before, clock.now())
+                })
+            };
+            let monitor_wake = monitor.join().unwrap();
+            let (before, after) = participant.join().unwrap();
+            assert_eq!(
+                before,
+                Duration::ZERO,
+                "an unattached park must not advance time past a running participant"
+            );
+            // The monitor wakes at its 10 ms deadline, but its own
+            // departure may hand the advance to the participant before
+            // it reads the clock again — it observes 10..=50 ms.
+            assert!(
+                monitor_wake >= ms(10) && monitor_wake <= ms(50),
+                "monitor wake read {monitor_wake:?}"
+            );
+            assert_eq!(after, ms(50), "participant's sleep is unaffected");
+        });
+    }
+
+    #[test]
+    fn same_deadline_wakes_all_sleepers() {
+        let clock = Arc::new(VirtualClock::new());
+        clock.enter();
+        clock.enter();
+        let wakes: Vec<Duration> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let clock = Arc::clone(&clock);
+                    scope.spawn(move || {
+                        let _p =
+                            ParticipantGuard::adopt(Arc::clone(&clock));
+                        clock.sleep(ms(500));
+                        clock.now()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(wakes, vec![ms(500), ms(500)]);
+    }
+}

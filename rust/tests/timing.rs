@@ -1,0 +1,521 @@
+//! Deterministic timing suite — every test here runs timing scenarios
+//! that would take minutes of real `thread::sleep` under the
+//! [`fedless::time::VirtualClock`], at CPU speed, with *exact*
+//! assertions on simulated durations (no tolerance windows, no
+//! flakiness: simulated time is a pure function of the configuration).
+//!
+//! The suite covers the paper's §4.2 time argument (async removes the
+//! straggler bottleneck), the §4.2.1 crash scenario (the sync barrier
+//! releases survivors within *simulated* timeout), the store layer's
+//! virtual-time subscriptions and latency injection, and a golden sweep
+//! report (cells are deterministic under the virtual clock, so a
+//! snapshot is finally safe).
+//!
+//! CI runs this file under a hard real-time budget (see
+//! `.github/workflows/ci.yml`): if the virtual clock ever regresses
+//! into real sleeping, the job times out.
+//!
+//! The protocol-level harness below needs no artifacts or PJRT runtime;
+//! the two `run_experiment` end-to-end tests skip themselves when the
+//! artifacts are not built (same environment contract as
+//! `rust/tests/integration.rs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fedless::config::{ClockKind, CrashSpec, ExperimentConfig, FederationMode};
+use fedless::metrics::timeline::{Span, SpanKind, Timeline};
+use fedless::protocol::ProtocolKind;
+use fedless::store::{LatencyConfig, LatencyStore, MemoryStore, WeightStore};
+use fedless::strategy::StrategyKind;
+use fedless::tensor::FlatParams;
+use fedless::time::{Clock, ParticipantGuard, VirtualClock};
+
+fn ms(n: u64) -> Duration {
+    Duration::from_millis(n)
+}
+
+// ---------------------------------------------------------------------------
+// protocol-level simulation harness (no artifacts, no PJRT)
+
+/// What one simulated node reports back.
+struct SimNode {
+    finish: Duration,
+    spans: Vec<Span>,
+    params: FlatParams,
+    stalled: bool,
+}
+
+/// Drive `delays.len()` real threads through `epochs` epochs of
+/// `mode`-federation on one shared virtual-clocked store: each epoch is
+/// one `clock.sleep(delay)` ("training") followed by the protocol's
+/// `after_epoch`. `crash` = `(node, epoch)` makes that node exit at the
+/// start of that epoch without pushing (the §4.2.1 scenario).
+fn run_sim(
+    mode: FederationMode,
+    delays: &[Duration],
+    epochs: usize,
+    sync_timeout: Duration,
+    crash: Option<(usize, usize)>,
+) -> Vec<SimNode> {
+    let n = delays.len();
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig { mode, n_nodes: n, ..Default::default() };
+    let store: Arc<dyn WeightStore> =
+        Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    // Register every node before any thread runs, so the clock never
+    // advances while some nodes are still spawning.
+    for _ in 0..n {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(n));
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let store = Arc::clone(&store);
+                let cfg = cfg.clone();
+                let start = Arc::clone(&start);
+                let delay = delays[node_id];
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = StrategyKind::FedAvg.build();
+                    let mut timeline = Timeline::new(node_id);
+                    // distinct starting weights so averaging is visible
+                    let mut params = FlatParams(vec![node_id as f32; 4]);
+                    let mut stalled = false;
+                    start.wait();
+                    for epoch in 0..epochs {
+                        if crash == Some((node_id, epoch)) {
+                            break; // dies without pushing this round
+                        }
+                        let t = clock.now();
+                        clock.sleep(delay);
+                        timeline.record(SpanKind::Train, t, clock.now());
+                        let mut ctx = fedless::protocol::EpochCtx {
+                            node_id,
+                            n_nodes: n,
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout,
+                            clock: clock.as_ref(),
+                        };
+                        let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
+                        if out.stalled_at.is_some() {
+                            stalled = true;
+                            break;
+                        }
+                    }
+                    SimNode { finish: clock.now(), spans: timeline.spans, params, stalled }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the paper's §4.2 straggler scenario, deterministic
+
+/// Under the virtual clock, async's simulated time-to-final-epoch beats
+/// sync by *exactly* the straggler ratio when one node is 10× slower —
+/// the paper's Figure-1 phenomenon as an exact regression test.
+#[test]
+fn async_beats_sync_by_exactly_the_straggler_ratio() {
+    let epochs = 5;
+    let d = ms(50);
+    let delays = [d, 10 * d]; // node 1 is the 10x straggler
+    let t_real = Instant::now();
+
+    let sync = run_sim(FederationMode::Sync, &delays, epochs, Duration::from_secs(3600), None);
+    let asyn = run_sim(FederationMode::Async, &delays, epochs, Duration::from_secs(3600), None);
+
+    assert!(
+        t_real.elapsed() < Duration::from_secs(5),
+        "virtual clock must run at CPU speed, took {:?}",
+        t_real.elapsed()
+    );
+
+    // sync: the fast node is dragged to the straggler's pace, exactly
+    assert_eq!(sync[0].finish, 10 * d * epochs as u32);
+    assert_eq!(sync[1].finish, 10 * d * epochs as u32);
+    // async: the fast node finishes on its own schedule, exactly
+    assert_eq!(asyn[0].finish, d * epochs as u32);
+    assert_eq!(asyn[1].finish, 10 * d * epochs as u32);
+    let ratio = sync[0].finish.as_secs_f64() / asyn[0].finish.as_secs_f64();
+    assert_eq!(ratio, 10.0, "time-to-final-epoch ratio must be the delay ratio");
+
+    // the fast sync node's idle time is exactly what the straggler costs
+    let sync_wait: Duration = sync[0]
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Wait)
+        .map(|s| s.end - s.start)
+        .sum();
+    assert_eq!(sync_wait, (10 * d - d) * epochs as u32);
+    let async_wait: Duration = asyn[0]
+        .spans
+        .iter()
+        .filter(|s| s.kind == SpanKind::Wait)
+        .map(|s| s.end - s.start)
+        .sum();
+    assert_eq!(async_wait, Duration::ZERO, "async never waits");
+}
+
+/// The same scenario replayed twice is bit-identical: every timeline
+/// span and every weight — simulated time has no scheduling noise.
+#[test]
+fn straggler_runs_replay_bit_identically() {
+    let delays = [ms(50), ms(500)];
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let a = run_sim(mode, &delays, 4, Duration::from_secs(3600), None);
+        let b = run_sim(mode, &delays, 4, Duration::from_secs(3600), None);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish, y.finish, "{mode:?}: finish times must replay");
+            assert_eq!(x.spans, y.spans, "{mode:?}: timelines must be bit-identical");
+            assert_eq!(x.params.0, y.params.0, "{mode:?}: weights must be bit-identical");
+        }
+    }
+}
+
+/// The acceptance scenario: a 10-node, 20-epoch run with ~500 ms/epoch
+/// delays completes in well under 5 s of real time, reports the exact
+/// analytic simulated duration per node, and replays bit-identically.
+#[test]
+fn ten_node_straggler_grid_runs_at_cpu_speed() {
+    let epochs = 20;
+    // 500 ms base plus a distinct per-node skew so no two events share a
+    // simulated instant (full determinism, see module docs)
+    let delays: Vec<Duration> = (0..10).map(|i| ms(500 + i)).collect();
+    let t_real = Instant::now();
+    let a = run_sim(FederationMode::Async, &delays, epochs, Duration::from_secs(3600), None);
+    let b = run_sim(FederationMode::Async, &delays, epochs, Duration::from_secs(3600), None);
+    assert!(
+        t_real.elapsed() < Duration::from_secs(5),
+        "two 10-node 20-epoch straggler runs must finish in < 5 s real, took {:?}",
+        t_real.elapsed()
+    );
+    for (i, node) in a.iter().enumerate() {
+        // analytic: node i trains 20 epochs at (500 + i) ms each
+        assert_eq!(node.finish, ms(500 + i as u64) * epochs as u32, "node {i}");
+    }
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.spans, y.spans, "repeated runs must be bit-identical");
+        assert_eq!(x.params.0, y.params.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §4.2.1 crash: the barrier releases survivors in simulated time
+
+/// A node dies mid-run under sync mode; the survivors' barrier times out
+/// after *simulated* `sync_timeout` — 300 simulated seconds of stall
+/// cost (asserted exactly) at milliseconds of real time.
+#[test]
+fn crashed_peer_releases_sync_survivors_within_simulated_timeout() {
+    let sync_timeout = Duration::from_secs(300);
+    let delays = [ms(50), ms(70), ms(230)];
+    let t_real = Instant::now();
+    // node 2 dies at the start of epoch 1 (after round 0 completed)
+    let nodes = run_sim(FederationMode::Sync, &delays, 3, sync_timeout, Some((2, 1)));
+    let real = t_real.elapsed();
+    assert!(
+        real < Duration::from_secs(10),
+        "the 300 s stall must be simulated, not real (took {real:?})"
+    );
+    for survivor in &nodes[0..2] {
+        assert!(survivor.stalled, "survivors must stall at the crashed round");
+        let wait: Duration = survivor
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Wait)
+            .map(|s| s.end - s.start)
+            .sum();
+        // round 0's barrier waits are free of the crash; the stalled
+        // round's wait is exactly the timeout
+        assert!(
+            wait >= sync_timeout,
+            "stall must ride out the full simulated timeout, waited {wait:?}"
+        );
+    }
+    assert!(!nodes[2].stalled, "the crashed node never reached a barrier");
+    // the crashed node stopped at round 0's completion instant
+    assert_eq!(nodes[2].finish, ms(230));
+}
+
+// ---------------------------------------------------------------------------
+// store layer in virtual time
+
+#[test]
+fn store_wait_for_change_parks_in_simulated_time() {
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let store: Arc<dyn WeightStore> =
+        Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    let v0 = store.version().unwrap();
+    clock.enter();
+    clock.enter();
+    let t_real = Instant::now();
+    let (woke_at, v) = std::thread::scope(|scope| {
+        let waiter = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            scope.spawn(move || {
+                let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                let v = store.wait_for_change(v0, Duration::from_secs(600)).unwrap();
+                (clock.now(), v)
+            })
+        };
+        let pusher = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            scope.spawn(move || {
+                let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                clock.sleep(ms(50));
+                store
+                    .push(fedless::store::PushRequest {
+                        node_id: 0,
+                        round: 0,
+                        epoch: 0,
+                        n_examples: 1,
+                        params: Arc::new(FlatParams(vec![1.0; 4])),
+                    })
+                    .unwrap();
+            })
+        };
+        pusher.join().unwrap();
+        waiter.join().unwrap()
+    });
+    assert!(v > v0, "waiter must observe the push");
+    assert_eq!(woke_at, ms(50), "woken at the push's simulated instant");
+    assert!(t_real.elapsed() < Duration::from_secs(5), "no real waiting");
+
+    // clean timeout: consumes exactly the timeout of simulated time
+    let before = clock.now();
+    let v2 = store.wait_for_change(v, ms(200)).unwrap();
+    assert_eq!(v2, v, "clean timeout returns the unchanged version");
+    assert_eq!(clock.now() - before, ms(200));
+}
+
+#[test]
+fn latency_store_delays_are_simulated() {
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = LatencyConfig {
+        base: ms(20),
+        jitter: Duration::ZERO,
+        bytes_per_sec: 0,
+    };
+    let store = LatencyStore::with_clock(
+        MemoryStore::with_clock(Arc::clone(&clock)),
+        cfg,
+        1,
+        Arc::clone(&clock),
+    );
+    let t_real = Instant::now();
+    store.state_hash().unwrap(); // one RTT
+    store.state_hash().unwrap(); // another
+    assert_eq!(clock.now(), ms(40), "two RTTs of simulated latency");
+    assert!(t_real.elapsed() < Duration::from_secs(2), "no real sleeping");
+}
+
+#[test]
+fn fs_store_polling_backoff_is_simulated() {
+    let dir = std::env::temp_dir().join(format!(
+        "fedless_timing_fs_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let store = fedless::store::FsStore::open_with_clock(&dir, Arc::clone(&clock)).unwrap();
+    let v0 = store.version().unwrap();
+    let t_real = Instant::now();
+    let v = store.wait_for_change(v0, ms(200)).unwrap();
+    assert_eq!(v, v0, "nothing changed");
+    assert_eq!(clock.now(), ms(200), "the poll backoff consumed simulated time");
+    assert!(t_real.elapsed() < Duration::from_secs(2), "no real sleeping");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// golden sweep report: deterministic cells make snapshots safe
+
+/// A tiny 2×2 sweep (mode × skew, two seeds per cell) whose trial runner
+/// simulates the protocols on a fresh virtual clock per trial: every
+/// cell — including the wall-clock column — is deterministic, so the
+/// whole Markdown body snapshots exactly.
+#[test]
+fn golden_sweep_report_under_virtual_clock() {
+    use fedless::sweep::{run_sweep_with, SweepSpec};
+
+    let base = ExperimentConfig {
+        clock: ClockKind::Virtual,
+        n_nodes: 2,
+        epochs: 3,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut spec = SweepSpec::from_base(base);
+    spec.modes = vec![FederationMode::Sync, FederationMode::Async];
+    spec.skews = vec![0.0, 0.5];
+    spec.seeds = vec![42, 43];
+    spec.jobs = 1;
+
+    let runner = |cfg: &ExperimentConfig| -> anyhow::Result<fedless::sim::ExperimentResult> {
+        // Simulate the trial's protocol on its own virtual clock:
+        // distinct per-node delays so the whole timeline is exact.
+        let nodes = run_sim(
+            cfg.mode,
+            &[ms(50), ms(230)],
+            cfg.epochs,
+            Duration::from_secs(3600),
+            None,
+        );
+        let wall = nodes.iter().map(|n| n.finish).max().unwrap();
+        // pure, hand-checkable cell metrics (accuracy is not the point
+        // of this golden; deterministic *timing* is)
+        let accuracy = 0.9
+            - 0.1 * cfg.skew
+            - if cfg.mode == FederationMode::Async { 0.02 } else { 0.0 };
+        Ok(fedless::sim::ExperimentResult {
+            final_accuracy: accuracy,
+            final_loss: 1.0 - accuracy,
+            wall_clock_s: wall.as_secs_f64(),
+            reports: vec![],
+            store_pushes: 0,
+            mean_idle_fraction: 0.0,
+            all_completed: !nodes.iter().any(|n| n.stalled),
+        })
+    };
+
+    let body = |md: &str| -> String {
+        // skip the header line: it carries the sweep's *real* wall-clock
+        md.lines().skip(1).collect::<Vec<_>>().join("\n")
+    };
+
+    let r1 = run_sweep_with(&spec, runner).unwrap();
+    let r2 = run_sweep_with(&spec, runner).unwrap();
+    assert_eq!(r1.n_failures, 0, "{}", r1.to_markdown());
+    assert_eq!(
+        body(&r1.to_markdown()),
+        body(&r2.to_markdown()),
+        "repeated sweeps must render identically"
+    );
+
+    let golden = "\n\
+| mode | strategy | skew | nodes | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s |\n\
+|------|----------|------|-------|--------|-----------------------|-------------------|--------------|\n\
+| sync | fedavg | 0 | 2 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 |\n\
+| sync | fedavg | 0.5 | 2 | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 |\n\
+| async | fedavg | 0 | 2 | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 |\n\
+| async | fedavg | 0.5 | 2 | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 |";
+    assert_eq!(
+        body(&r1.to_markdown()),
+        golden,
+        "sweep body diverged from the golden snapshot:\n{}",
+        r1.to_markdown()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end through run_experiment (skipped without artifacts)
+
+fn have_artifacts() -> bool {
+    fedless::runtime::Manifest::discover().is_ok()
+}
+
+/// `CrashSpec` node dies mid-run under sync mode + `clock = virtual`:
+/// the barrier's `sync_timeout` releases the surviving peers within
+/// *simulated* (not real) timeout.
+#[test]
+fn e2e_crash_recovery_releases_survivors_in_simulated_time() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let cfg = ExperimentConfig {
+        model: "mnist".into(),
+        n_nodes: 3,
+        mode: FederationMode::Sync,
+        epochs: 3,
+        steps_per_epoch: 8,
+        train_size: 900,
+        test_size: 96,
+        seed: 7,
+        crash: Some(CrashSpec { node: 1, at_epoch: 1 }),
+        sync_timeout: Duration::from_secs(300),
+        clock: ClockKind::Virtual,
+        ..Default::default()
+    };
+    let t_real = Instant::now();
+    let res = fedless::sim::run_experiment(&cfg).unwrap();
+    let real = t_real.elapsed();
+    assert!(
+        real < Duration::from_secs(120),
+        "the 300 s barrier timeout must not be waited for real (took {real:?})"
+    );
+    let stalled = res
+        .reports
+        .iter()
+        .filter(|r| matches!(r.status, fedless::node::NodeStatus::Stalled { .. }))
+        .count();
+    assert_eq!(stalled, 2, "survivors must stall: {:?}",
+        res.reports.iter().map(|r| &r.status).collect::<Vec<_>>());
+    assert!(
+        res.wall_clock_s >= 300.0,
+        "reported wall-clock must include the simulated stall, got {}",
+        res.wall_clock_s
+    );
+    for r in res.reports.iter().filter(|r| matches!(r.status,
+        fedless::node::NodeStatus::Stalled { .. }))
+    {
+        assert!(
+            r.wait_time >= Duration::from_secs(300),
+            "node {} stalled wait must be the simulated timeout, got {:?}",
+            r.node_id,
+            r.wait_time
+        );
+    }
+}
+
+/// The acceptance scenario end-to-end: 10 nodes × 20 epochs × 2 steps
+/// with 500 ms/step delays is 20 s of simulated training per node; under
+/// `clock = virtual` the run reports exactly that while real time is
+/// bounded by compute only.
+#[test]
+fn e2e_ten_node_delay_run_reports_analytic_simulated_wall_clock() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let cfg = ExperimentConfig {
+        model: "mnist".into(),
+        n_nodes: 10,
+        mode: FederationMode::Async,
+        epochs: 20,
+        steps_per_epoch: 2,
+        train_size: 2_000,
+        test_size: 320,
+        seed: 11,
+        node_delays_ms: vec![500.0; 10],
+        clock: ClockKind::Virtual,
+        ..Default::default()
+    };
+    let t_real = Instant::now();
+    let res = fedless::sim::run_experiment(&cfg).unwrap();
+    let real = t_real.elapsed();
+    assert!(res.all_completed);
+    // analytic: 20 epochs × 2 steps × 500 ms = 20 s simulated per node
+    assert!(
+        (res.wall_clock_s - 20.0).abs() < 1e-6,
+        "simulated wall-clock must match the analytic 20 s, got {}",
+        res.wall_clock_s
+    );
+    assert!(
+        real < Duration::from_secs(120),
+        "200 s of cumulative simulated delay must not be slept for real \
+         (took {real:?})"
+    );
+}
