@@ -1,0 +1,115 @@
+//! Compression-codec microbench: bytes-on-wire and encode/decode
+//! throughput for every [`fedless::compress`] codec over an
+//! mnist-sized parameter vector.
+//!
+//! Results land in `BENCH_compress.json` (the communication-cost
+//! trajectory; re-run after codec changes and compare). CI runs this in
+//! check mode (`--check`: tiny vector, few iterations) to keep the
+//! artifact fresh without burning minutes.
+//!
+//! Run: `cargo bench --offline --bench compress [-- --check]` —
+//! codec-only, needs no artifacts.
+
+use std::fs;
+use std::time::Instant;
+
+use fedless::compress::{CodecKind, CodecState};
+use fedless::tensor::codec::{raw_wire_bytes, BlobMeta};
+use fedless::tensor::FlatParams;
+
+struct Row {
+    codec: String,
+    wire_bytes: u64,
+    ratio: f64,
+    enc_gbps: f64,
+    dec_gbps: f64,
+    max_abs_err: f32,
+}
+
+/// Training-shaped pseudo-weights: smooth, bounded, non-trivial.
+fn weights(n: usize) -> FlatParams {
+    FlatParams((0..n).map(|i| ((i as f32) * 0.0137).sin() * 0.5).collect())
+}
+
+fn measure(kind: CodecKind, n: usize, iters: usize) -> Row {
+    let params = weights(n);
+    let base = FlatParams(params.0.iter().map(|x| x - 1e-3).collect());
+    let codec = kind.build();
+    let raw_bytes = (n * 4) as f64;
+
+    // wire size through the real push path (header included)
+    let mut state = CodecState::new(kind);
+    state.set_base(1, &base);
+    let meta = BlobMeta { node_id: 0, round: 0, epoch: 0, n_examples: 1 };
+    let (wire_bytes, reconstruction) =
+        state.encode_for_push(&meta, &params).expect("encode_for_push");
+
+    // encode / decode payload throughput (codec only, no blob framing)
+    let b = Some(&base);
+    let mut payload = Vec::new();
+    let t = Instant::now();
+    for _ in 0..iters {
+        payload = codec.encode(&params, b);
+        std::hint::black_box(&payload);
+    }
+    let enc_gbps = raw_bytes * iters as f64 / t.elapsed().as_secs_f64() / 1e9;
+    let t = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(codec.decode(&payload, n, b).expect("decode"));
+    }
+    let dec_gbps = raw_bytes * iters as f64 / t.elapsed().as_secs_f64() / 1e9;
+
+    let row = Row {
+        codec: kind.label(),
+        wire_bytes,
+        ratio: raw_wire_bytes(n) as f64 / wire_bytes as f64,
+        enc_gbps,
+        dec_gbps,
+        max_abs_err: params.max_abs_diff(&reconstruction),
+    };
+    println!(
+        "{:>9}  wire {:>9} B  ratio {:>5.2}x  enc {:>6.2} GB/s  dec {:>6.2} GB/s  max|err| {:.2e}",
+        row.codec, row.wire_bytes, row.ratio, row.enc_gbps, row.dec_gbps, row.max_abs_err
+    );
+    row
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    // check mode: small vector + few iters, same artifact shape
+    let (n, iters) = if check { (20_000, 5) } else { (1_000_000, 30) };
+    println!(
+        "weight-compression codecs over {n} f32 params ({} mode, {iters} iters)",
+        if check { "check" } else { "full" }
+    );
+
+    let kinds = [
+        CodecKind::None,
+        CodecKind::Q8,
+        CodecKind::TopK { frac: 0.1 },
+        CodecKind::DeltaQ8,
+    ];
+    let rows: Vec<Row> = kinds.iter().map(|&k| measure(k, n, iters)).collect();
+
+    let mut json = String::from("{\n  \"bench\": \"weight_compression_codecs\",\n");
+    json.push_str(&format!(
+        "  \"params\": {n},\n  \"raw_wire_bytes\": {},\n  \"iters\": {iters},\n  \"check_mode\": {check},\n  \"results\": [\n",
+        raw_wire_bytes(n)
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"codec\": \"{}\", \"wire_bytes\": {}, \"compression_ratio\": {:.3}, \
+             \"encode_gbps\": {:.3}, \"decode_gbps\": {:.3}, \"max_abs_err\": {:e}}}{}\n",
+            r.codec,
+            r.wire_bytes,
+            r.ratio,
+            r.enc_gbps,
+            r.dec_gbps,
+            r.max_abs_err,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    fs::write("BENCH_compress.json", &json).expect("write BENCH_compress.json");
+    println!("\nwrote BENCH_compress.json");
+}

@@ -110,13 +110,7 @@ fn bench_store() {
     println!("\n--- weight store ops (mnist-sized blobs, 20k f32) ---");
     let mut rng = Rng::new(3);
     let params = Arc::new(random_params(&mut rng, 20_490));
-    let req = |node: usize| PushRequest {
-        node_id: node,
-        round: 0,
-        epoch: 0,
-        n_examples: 1,
-        params: Arc::clone(&params),
-    };
+    let req = |node: usize| PushRequest::raw(node, 0, 0, 1, Arc::clone(&params));
 
     let mem = MemoryStore::new();
     bench("store/memory/push", 10, 200, || {

@@ -27,13 +27,7 @@ const STRAGGLER_DELAY: Duration = Duration::from_millis(10);
 const TRIALS: usize = 20;
 
 fn req(node: usize) -> PushRequest {
-    PushRequest {
-        node_id: node,
-        round: 0,
-        epoch: 0,
-        n_examples: 100,
-        params: Arc::new(FlatParams(vec![node as f32; 256])),
-    }
+    PushRequest::raw(node, 0, 0, 100, Arc::new(FlatParams(vec![node as f32; 256])))
 }
 
 /// One barrier wait: K-1 entries are present, the K-th lands after the

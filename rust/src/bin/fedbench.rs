@@ -9,10 +9,11 @@
 //! fedbench all           every table at the chosen scale
 //! fedbench run [--mode sync|async|local|gossip[:m]] [--model M]
 //!              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]
-//!              [--virtual-clock]
+//!              [--compress none|q8|topk:<f>|delta-q8] [--virtual-clock]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
-//!                        `fedbench run --mode gossip:2 --nodes 5`)
+//!                        `fedbench run --mode gossip:2 --nodes 5` or a
+//!                        codec: `fedbench run --compress q8`)
 //! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
 //!                        run a custom experiment grid in parallel
 //! ```
@@ -33,6 +34,7 @@
 use std::fmt::Write as _;
 use std::time::Duration;
 
+use fedless::compress::CodecKind;
 use fedless::config::{ClockKind, CrashSpec, ExperimentConfig, FederationMode, Scale};
 use fedless::sim::{run_experiment, run_trials};
 use fedless::strategy::StrategyKind;
@@ -392,6 +394,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 cfg.strategy = StrategyKind::parse(value)
                     .ok_or_else(|| format!("bad --strategy {value:?}"))?;
             }
+            "--compress" => {
+                cfg.compress = CodecKind::parse(value)
+                    .ok_or_else(|| format!("bad --compress {value:?}"))?;
+            }
             "--scale" => {
                 scale = Scale::parse(value).ok_or_else(|| format!("bad --scale {value:?}"))?;
             }
@@ -418,12 +424,33 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         cfg.clock.name()
     );
     let res = run_experiment(&cfg).map_err(|e| format!("{e:#}"))?;
+    let traffic = res.total_traffic();
     println!("mode         : {}", cfg.mode.label());
     println!("clock        : {}", cfg.clock.name());
+    println!("compress     : {}", cfg.compress.label());
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
     println!("store pushes : {}", res.store_pushes);
+    println!(
+        "wire pushed  : {:.3} MB ({} pushes)",
+        traffic.mb_pushed(),
+        traffic.pushes
+    );
+    println!(
+        "wire pulled  : {:.3} MB ({} entries)",
+        traffic.mb_pulled(),
+        traffic.entries_pulled
+    );
+    for r in &res.reports {
+        let t = &r.timeline.traffic;
+        println!(
+            "  node {:>2}    : pushed {:.3} MB, pulled {:.3} MB",
+            r.node_id,
+            t.mb_pushed(),
+            t.mb_pulled()
+        );
+    }
     println!("mean idle    : {:.1}%", 100.0 * res.mean_idle_fraction);
     println!("all completed: {}", res.all_completed);
     println!("{}", res.render_timelines(72));
@@ -497,7 +524,7 @@ fn main() {
              [--virtual-clock]\n\
              \x20      fedbench run [--mode sync|async|local|gossip[:m]] [--model M] \
              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S] \
-             [--virtual-clock]\n\
+             [--compress none|q8|topk:<f>|delta-q8] [--virtual-clock]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);

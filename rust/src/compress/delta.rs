@@ -1,0 +1,158 @@
+//! [`DeltaQ8`] — delta against a pulled base, then int8 quantization
+//! (codec id 3).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::FlatParams;
+
+use super::q8::{q8_decode, q8_encode, q8_error_bound};
+use super::{Codec, CodecKind};
+
+/// Payload flag: self-contained full quantization (no base used).
+const FLAG_FULL: u8 = 0;
+/// Payload flag: quantized delta against the base vector.
+const FLAG_DELTA: u8 = 1;
+
+/// Delta codec: encode `params - base` with the [`super::Q8`] quantizer
+/// (weight *changes* between federation rounds have a far tighter range
+/// than the weights themselves, so the same 8 bits buy much finer
+/// resolution). Falls back to a full Q8 encoding — flagged in the first
+/// payload byte — whenever the base is missing or shape-mismatched, so
+/// a cold start or a model resize never fails a push.
+///
+/// Wire cost: `1 + n + 8 · ceil(n / 256)` bytes, same as [`super::Q8`]
+/// plus the flag byte. Error bound (per element): half a quantization
+/// step of the *encoded* vector — the delta in delta mode, the raw
+/// params in fallback mode.
+pub struct DeltaQ8;
+
+fn usable_base<'a>(params: &FlatParams, base: Option<&'a FlatParams>) -> Option<&'a FlatParams> {
+    base.filter(|b| b.len() == params.len())
+}
+
+impl Codec for DeltaQ8 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::DeltaQ8
+    }
+
+    fn encode(&self, params: &FlatParams, base: Option<&FlatParams>) -> Vec<u8> {
+        match usable_base(params, base) {
+            Some(b) => {
+                let delta: Vec<f32> =
+                    params.as_slice().iter().zip(b.as_slice()).map(|(x, y)| x - y).collect();
+                let mut out = q8_encode(&delta);
+                out.insert(0, FLAG_DELTA);
+                out
+            }
+            None => {
+                let mut out = q8_encode(params.as_slice());
+                out.insert(0, FLAG_FULL);
+                out
+            }
+        }
+    }
+
+    fn decode(&self, payload: &[u8], n: usize, base: Option<&FlatParams>) -> Result<FlatParams> {
+        let Some((&flag, body)) = payload.split_first() else {
+            bail!("delta-q8 payload is empty");
+        };
+        match flag {
+            FLAG_FULL => Ok(FlatParams(q8_decode(body, n)?)),
+            FLAG_DELTA => {
+                let Some(b) = base.filter(|b| b.len() == n) else {
+                    bail!(
+                        "delta-q8 payload needs an {n}-element base to decode \
+                         (got {:?})",
+                        base.map(FlatParams::len)
+                    );
+                };
+                let delta = q8_decode(body, n)?;
+                Ok(FlatParams(
+                    b.as_slice().iter().zip(delta.iter()).map(|(y, d)| y + d).collect(),
+                ))
+            }
+            other => bail!("unknown delta-q8 flag byte {other}"),
+        }
+    }
+
+    fn error_bound(&self, params: &FlatParams, base: Option<&FlatParams>) -> f32 {
+        match usable_base(params, base) {
+            Some(b) => {
+                let delta: Vec<f32> =
+                    params.as_slice().iter().zip(b.as_slice()).map(|(x, y)| x - y).collect();
+                // the reconstruction adds the exact base back: the error
+                // is the delta's quantization plus one f32 add's rounding,
+                // which scales with the base's magnitude
+                let base_mag = b.as_slice().iter().fold(0.0f32, |m, x| m.max(x.abs()));
+                q8_error_bound(&delta) + base_mag * f32::EPSILON
+            }
+            None => q8_error_bound(params.as_slice()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, seed: f32) -> FlatParams {
+        FlatParams((0..n).map(|i| ((i as f32) * 0.13 + seed).sin()).collect())
+    }
+
+    #[test]
+    fn without_base_behaves_like_q8_plus_flag() {
+        let p = params(700, 0.0);
+        let enc = DeltaQ8.encode(&p, None);
+        assert_eq!(enc[0], FLAG_FULL);
+        assert_eq!(enc.len(), 1 + 700 + 8 * 3);
+        let dec = DeltaQ8.decode(&enc, 700, None).unwrap();
+        assert!(p.max_abs_diff(&dec) <= DeltaQ8.error_bound(&p, None));
+    }
+
+    #[test]
+    fn shape_mismatched_base_falls_back_to_full() {
+        let p = params(100, 0.0);
+        let wrong = params(64, 1.0);
+        let enc = DeltaQ8.encode(&p, Some(&wrong));
+        assert_eq!(enc[0], FLAG_FULL, "mismatched base must not be used");
+        // full-mode payloads decode without any base at all
+        assert!(DeltaQ8.decode(&enc, 100, None).is_ok());
+    }
+
+    #[test]
+    fn delta_mode_is_much_finer_than_full_q8_near_the_base() {
+        let base = params(2_000, 0.0);
+        // a small training step away from the base
+        let p = FlatParams(
+            base.0.iter().enumerate().map(|(i, x)| x + 1e-3 * ((i % 5) as f32 - 2.0)).collect(),
+        );
+        let enc = DeltaQ8.encode(&p, Some(&base));
+        assert_eq!(enc[0], FLAG_DELTA);
+        let dec = DeltaQ8.decode(&enc, 2_000, Some(&base)).unwrap();
+        let bound = DeltaQ8.error_bound(&p, Some(&base));
+        assert!(p.max_abs_diff(&dec) <= bound, "{} > {}", p.max_abs_diff(&dec), bound);
+        // delta range is ~4e-3 vs the params' ~2: the bound tightens by
+        // orders of magnitude
+        let full_bound = DeltaQ8.error_bound(&p, None);
+        assert!(bound < full_bound / 50.0, "delta {bound} vs full {full_bound}");
+    }
+
+    #[test]
+    fn delta_payload_without_base_errors_cleanly() {
+        let base = params(64, 0.0);
+        let p = params(64, 0.01);
+        let enc = DeltaQ8.encode(&p, Some(&base));
+        assert_eq!(enc[0], FLAG_DELTA);
+        assert!(DeltaQ8.decode(&enc, 64, None).is_err());
+        let wrong = params(32, 0.0);
+        assert!(DeltaQ8.decode(&enc, 64, Some(&wrong)).is_err());
+    }
+
+    #[test]
+    fn malformed_payloads_error() {
+        assert!(DeltaQ8.decode(&[], 4, None).is_err());
+        assert!(DeltaQ8.decode(&[7, 0, 0], 4, None).is_err(), "unknown flag");
+        let enc = DeltaQ8.encode(&params(10, 0.0), None);
+        assert!(DeltaQ8.decode(&enc[..enc.len() - 1], 10, None).is_err());
+    }
+}

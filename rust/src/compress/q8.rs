@@ -1,0 +1,215 @@
+//! [`Q8`] — per-chunk affine int8 quantization (codec id 1).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::FlatParams;
+
+use super::{Codec, CodecKind};
+
+/// Elements per quantization chunk: small enough that one outlier only
+/// coarsens 256 neighbours, large enough that the 8-byte per-chunk
+/// header (min + scale) stays ~3% overhead.
+pub const Q8_CHUNK: usize = 256;
+
+/// Affine int8 quantizer: each [`Q8_CHUNK`]-element chunk stores
+/// `(min: f32, scale: f32)` followed by one byte per element, with
+/// `x ≈ min + scale * q`, `q ∈ [0, 255]`, `scale = (max - min) / 255`.
+///
+/// Wire cost: `n + 8 * ceil(n / 256)` bytes — ~3.88× smaller than raw
+/// f32. Error bound (per element): half a quantization step,
+/// `(chunk_max - chunk_min) / 255 / 2`, plus f32 rounding slop (see
+/// [`Codec::error_bound`]).
+pub struct Q8;
+
+/// Encode one chunk in place onto `out`. Quantizer arithmetic runs in
+/// f64 so a chunk spanning huge magnitudes (where `max - min` overflows
+/// f32 to inf) still yields a finite scale and finite reconstructions —
+/// a silent-NaN here would poison every peer's aggregation.
+fn encode_chunk(chunk: &[f32], out: &mut Vec<u8>) {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in chunk {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !min.is_finite() || !max.is_finite() {
+        // Degenerate chunk (empty or non-finite): store a zero range so
+        // decode reproduces the min for every slot.
+        min = if min.is_finite() { min } else { 0.0 };
+        max = min;
+    }
+    // f64 range never overflows for finite f32 inputs; the f32 scale is
+    // finite (<= f32::MAX / 255 * 2).
+    let scale = ((max as f64 - min as f64) / 255.0) as f32;
+    out.extend_from_slice(&min.to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    for &x in chunk {
+        let q = if scale > 0.0 {
+            ((x as f64 - min as f64) / scale as f64).round().clamp(0.0, 255.0) as u8
+        } else {
+            0
+        };
+        out.push(q);
+    }
+}
+
+/// Quantize a full vector (shared with [`super::DeltaQ8`], which runs
+/// the same quantizer over a delta vector).
+pub(crate) fn q8_encode(xs: &[f32]) -> Vec<u8> {
+    let chunks = xs.len().div_ceil(Q8_CHUNK);
+    let mut out = Vec::with_capacity(xs.len() + 8 * chunks);
+    for chunk in xs.chunks(Q8_CHUNK) {
+        encode_chunk(chunk, &mut out);
+    }
+    out
+}
+
+/// Dequantize `n` elements from a [`q8_encode`] payload.
+pub(crate) fn q8_decode(payload: &[u8], n: usize) -> Result<Vec<f32>> {
+    let chunks = n.div_ceil(Q8_CHUNK);
+    let want = n
+        .checked_add(chunks.checked_mul(8).ok_or_else(|| anyhow::anyhow!("q8 size overflow"))?)
+        .ok_or_else(|| anyhow::anyhow!("q8 size overflow"))?;
+    if payload.len() != want {
+        bail!("q8 payload is {} bytes, want {} for {} elements", payload.len(), want, n);
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0usize;
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(Q8_CHUNK);
+        let min = f32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
+        let scale = f32::from_le_bytes(payload[at + 4..at + 8].try_into().unwrap());
+        if !min.is_finite() || !scale.is_finite() || scale < 0.0 {
+            bail!("q8 chunk header is not a finite (min, scale >= 0) pair");
+        }
+        at += 8;
+        for &q in &payload[at..at + take] {
+            // f64 keeps min + scale * 255 finite even for chunks spanning
+            // the full f32 range (mirrors the encoder's arithmetic)
+            out.push((min as f64 + scale as f64 * q as f64) as f32);
+        }
+        at += take;
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+/// Documented per-element bound for [`q8_encode`]: half a quantization
+/// step on the widest chunk, with slop for the f32 arithmetic of the
+/// quantizer itself (a few ulps of the chunk magnitude, covered by the
+/// relative term, plus an absolute floor for near-zero ranges).
+pub(crate) fn q8_error_bound(xs: &[f32]) -> f32 {
+    let mut worst = 0.0f32;
+    let mut mag = 0.0f32;
+    for chunk in xs.chunks(Q8_CHUNK) {
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        for &x in chunk {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        if min.is_finite() && max.is_finite() {
+            worst = worst.max(((max as f64 - min as f64) / 255.0 * 0.5) as f32);
+            mag = mag.max(min.abs().max(max.abs()));
+        }
+    }
+    worst * (1.0 + 1e-3) + mag * 8.0 * f32::EPSILON + f32::EPSILON
+}
+
+impl Codec for Q8 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Q8
+    }
+
+    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
+        q8_encode(params.as_slice())
+    }
+
+    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
+        Ok(FlatParams(q8_decode(payload, n)?))
+    }
+
+    fn error_bound(&self, params: &FlatParams, _base: Option<&FlatParams>) -> f32 {
+        q8_error_bound(params.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_size_is_about_a_quarter_of_raw() {
+        let p = FlatParams((0..10_000).map(|i| (i as f32).sin()).collect());
+        let enc = Q8.encode(&p, None);
+        assert_eq!(enc.len(), 10_000 + 8 * 40);
+        assert!((p.len() * 4) as f64 / enc.len() as f64 > 3.8);
+    }
+
+    #[test]
+    fn uniform_chunk_is_lossless() {
+        let p = FlatParams(vec![3.25; 600]);
+        let dec = Q8.decode(&Q8.encode(&p, None), 600, None).unwrap();
+        assert_eq!(dec.0, p.0, "zero-range chunks reproduce exactly");
+    }
+
+    #[test]
+    fn respects_error_bound_on_varied_data() {
+        let p = FlatParams(
+            (0..5_000)
+                .map(|i| ((i as f32) * 0.37).sin() * (1.0 + (i % 7) as f32))
+                .collect(),
+        );
+        let bound = Q8.error_bound(&p, None);
+        let dec = Q8.decode(&Q8.encode(&p, None), p.len(), None).unwrap();
+        assert!(bound > 0.0);
+        assert!(
+            p.max_abs_diff(&dec) <= bound,
+            "max err {} > bound {}",
+            p.max_abs_diff(&dec),
+            bound
+        );
+    }
+
+    #[test]
+    fn full_f32_range_chunk_stays_finite() {
+        // max - min overflows f32 to inf here; the f64 quantizer path
+        // must still produce a finite scale and finite reconstructions
+        // (a silent NaN would poison every peer's aggregation).
+        let mut xs = vec![0.0f32; 300];
+        xs[0] = 3.0e38;
+        xs[1] = -3.0e38;
+        let p = FlatParams(xs);
+        let enc = Q8.encode(&p, None);
+        let dec = Q8.decode(&enc, 300, None).unwrap();
+        assert!(dec.all_finite(), "reconstruction must never contain NaN/inf");
+        let bound = Q8.error_bound(&p, None);
+        assert!(bound.is_finite());
+        assert!(p.max_abs_diff(&dec) <= bound);
+    }
+
+    #[test]
+    fn non_finite_chunk_header_is_an_error() {
+        let p = FlatParams(vec![1.0; 10]);
+        let mut enc = Q8.encode(&p, None);
+        enc[4..8].copy_from_slice(&f32::NAN.to_le_bytes()); // scale slot
+        assert!(Q8.decode(&enc, 10, None).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let p = FlatParams(vec![1.0; 300]);
+        let enc = Q8.encode(&p, None);
+        assert!(Q8.decode(&enc[..enc.len() - 1], 300, None).is_err());
+        assert!(Q8.decode(&enc, 299, None).is_err());
+    }
+
+    #[test]
+    fn empty_vector_round_trips() {
+        let p = FlatParams(vec![]);
+        let enc = Q8.encode(&p, None);
+        assert!(enc.is_empty());
+        assert!(Q8.decode(&enc, 0, None).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,60 @@
+//! [`Raw`] — the bit-exact passthrough codec (codec id 0).
+
+use anyhow::Result;
+
+use crate::tensor::codec::decode_raw_payload;
+use crate::tensor::FlatParams;
+
+use super::{Codec, CodecKind};
+
+/// Identity codec: the payload is the little-endian f32 bytes, exactly
+/// as the v1 blob format stores them. Zero reconstruction error, zero
+/// compression — the baseline every lossy codec is measured against.
+pub struct Raw;
+
+impl Codec for Raw {
+    fn kind(&self) -> CodecKind {
+        CodecKind::None
+    }
+
+    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
+        let mut out = Vec::with_capacity(params.len() * 4);
+        for x in params.as_slice() {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
+        decode_raw_payload(payload, n)
+    }
+
+    fn error_bound(&self, _params: &FlatParams, _base: Option<&FlatParams>) -> f32 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_exact_round_trip() {
+        let p = FlatParams(vec![1.0, -2.5, f32::MIN_POSITIVE, 1e30, -0.0]);
+        let enc = Raw.encode(&p, None);
+        assert_eq!(enc.len(), p.len() * 4);
+        let dec = Raw.decode(&enc, p.len(), None).unwrap();
+        // bit-exact, including the sign of -0.0
+        for (a, b) in p.0.iter().zip(dec.0.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wrong_length_is_an_error() {
+        let p = FlatParams(vec![1.0; 4]);
+        let enc = Raw.encode(&p, None);
+        assert!(Raw.decode(&enc, 3, None).is_err());
+        assert!(Raw.decode(&enc[..15], 4, None).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! [`TopK`] — magnitude sparsification (codec id 2).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::FlatParams;
+
+use super::{Codec, CodecKind};
+
+/// Default kept fraction when `compress = topk` gives no explicit value.
+pub const DEFAULT_TOPK_FRACTION: f64 = 0.1;
+
+/// Keep only the `frac · n` largest-magnitude elements, encoded as
+/// `(u32 index, f32 value)` pairs; everything else decodes to zero.
+///
+/// Wire cost: `4 + 8 · k` bytes with `k = ceil(frac · n)` — at the
+/// default `frac = 0.1` that is ~5× smaller than raw f32. Error bound
+/// (per element): the largest dropped magnitude, i.e. the `(k+1)`-th
+/// largest `|x|` (zero when nothing is dropped). Ties at the threshold
+/// break by lower index, so the selection is deterministic.
+pub struct TopK {
+    frac: f64,
+}
+
+impl TopK {
+    /// A sparsifier keeping the top `frac ∈ (0, 1]` fraction by
+    /// magnitude (at least one element on non-empty input).
+    pub fn new(frac: f64) -> TopK {
+        assert!(frac > 0.0 && frac <= 1.0, "topk fraction must be in (0, 1], got {frac}");
+        TopK { frac }
+    }
+
+    /// How many elements of an `n`-vector this codec keeps.
+    pub fn kept(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        ((self.frac * n as f64).ceil() as usize).clamp(1, n)
+    }
+
+    /// Indices of the kept elements, sorted ascending. Selection is by
+    /// descending magnitude with ties broken by ascending index — a
+    /// total order, so the kept *set* is unique and deterministic.
+    /// `select_nth_unstable_by` keeps this O(n) on the per-push hot
+    /// path (a full sort of a 1M-param index vector per epoch is real
+    /// money).
+    fn select(&self, xs: &[f32]) -> Vec<u32> {
+        let k = self.kept(xs.len());
+        let mut order: Vec<u32> = (0..xs.len() as u32).collect();
+        if k < order.len() {
+            order.select_nth_unstable_by(k - 1, |&a, &b| {
+                let ma = xs[a as usize].abs();
+                let mb = xs[b as usize].abs();
+                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            order.truncate(k);
+        }
+        order.sort_unstable();
+        order
+    }
+}
+
+impl Codec for TopK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK { frac: self.frac }
+    }
+
+    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
+        let xs = params.as_slice();
+        let kept = self.select(xs);
+        let mut out = Vec::with_capacity(4 + 8 * kept.len());
+        out.extend_from_slice(&(kept.len() as u32).to_le_bytes());
+        for &i in &kept {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&xs[i as usize].to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
+        if payload.len() < 4 {
+            bail!("topk payload too short: {} bytes", payload.len());
+        }
+        let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+        let want = 4 + k.checked_mul(8).ok_or_else(|| anyhow::anyhow!("topk size overflow"))?;
+        if payload.len() != want {
+            bail!("topk payload is {} bytes, want {} for k = {k}", payload.len(), want);
+        }
+        if k > n {
+            bail!("topk keeps {k} of only {n} elements");
+        }
+        // the payload size does not determine n here, so enforce the blob
+        // layer's allocation ceiling locally too (a hostile header must
+        // not buy a multi-GB zeroed buffer)
+        if n > crate::tensor::codec::MAX_DECODE_ELEMS {
+            bail!("topk element count {n} exceeds the decode ceiling");
+        }
+        let mut xs = vec![0.0f32; n];
+        for pair in payload[4..].chunks_exact(8) {
+            let i = u32::from_le_bytes(pair[0..4].try_into().unwrap()) as usize;
+            let v = f32::from_le_bytes(pair[4..8].try_into().unwrap());
+            if i >= n {
+                bail!("topk index {i} out of range for {n} elements");
+            }
+            xs[i] = v;
+        }
+        Ok(FlatParams(xs))
+    }
+
+    fn error_bound(&self, params: &FlatParams, _base: Option<&FlatParams>) -> f32 {
+        let xs = params.as_slice();
+        let k = self.kept(xs.len());
+        if k >= xs.len() {
+            return 0.0;
+        }
+        // the largest magnitude among dropped elements: the (k+1)-th
+        // largest overall (O(n) selection, like `select`)
+        let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        let (_, nth, _) = mags.select_nth_unstable_by(k, |a, b| {
+            b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        *nth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topk(frac: f64) -> TopK {
+        TopK::new(frac)
+    }
+
+    #[test]
+    fn keeps_the_largest_magnitudes() {
+        let p = FlatParams(vec![0.1, -9.0, 0.2, 8.0, -0.3, 0.0]);
+        let dec = topk(0.34).decode(&topk(0.34).encode(&p, None), 6, None).unwrap();
+        assert_eq!(dec.0, vec![0.0, -9.0, 0.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn frac_one_is_lossless() {
+        let p = FlatParams(vec![1.0, -2.0, 3.5, 0.0]);
+        let dec = topk(1.0).decode(&topk(1.0).encode(&p, None), 4, None).unwrap();
+        assert_eq!(dec.0, p.0);
+        assert_eq!(topk(1.0).error_bound(&p, None), 0.0);
+    }
+
+    #[test]
+    fn respects_error_bound() {
+        let p = FlatParams((0..4_000).map(|i| ((i as f32) * 1.7).sin()).collect());
+        let t = topk(0.1);
+        let bound = t.error_bound(&p, None);
+        let dec = t.decode(&t.encode(&p, None), p.len(), None).unwrap();
+        assert!(p.max_abs_diff(&dec) <= bound, "{} > {}", p.max_abs_diff(&dec), bound);
+        // and it genuinely compresses: k = 400 pairs + count
+        assert_eq!(t.encode(&p, None).len(), 4 + 8 * 400);
+    }
+
+    #[test]
+    fn selection_is_deterministic_under_ties() {
+        let p = FlatParams(vec![1.0; 10]);
+        let a = topk(0.3).encode(&p, None);
+        let b = topk(0.3).encode(&p, None);
+        assert_eq!(a, b);
+        // ties keep the lowest indices
+        let dec = topk(0.3).decode(&a, 10, None).unwrap();
+        assert_eq!(dec.0[..3], [1.0, 1.0, 1.0]);
+        assert_eq!(dec.0[3..], [0.0; 7]);
+    }
+
+    #[test]
+    fn malformed_payloads_error() {
+        let p = FlatParams(vec![1.0, 2.0, 3.0]);
+        let enc = topk(0.5).encode(&p, None);
+        assert!(topk(0.5).decode(&enc[..enc.len() - 1], 3, None).is_err());
+        assert!(topk(0.5).decode(&enc, 1, None).is_err(), "k > n must error");
+        assert!(topk(0.5).decode(&[], 3, None).is_err());
+        // an out-of-range index is rejected, not written out of bounds
+        let mut bad = enc.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(topk(0.5).decode(&bad, 3, None).is_err());
+    }
+
+    #[test]
+    fn empty_vector_round_trips() {
+        let p = FlatParams(vec![]);
+        let enc = topk(0.1).encode(&p, None);
+        assert_eq!(enc.len(), 4);
+        assert!(topk(0.1).decode(&enc, 0, None).unwrap().is_empty());
+    }
+}

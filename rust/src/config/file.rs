@@ -14,6 +14,7 @@
 //! node_delays_ms = 0,40   # per-node straggler delays
 //! crash = 1@2             # crash node 1 at epoch 2
 //! clock = virtual         # real (default) | virtual simulated time
+//! compress = q8           # none | q8 | topk:<frac> | delta-q8
 //! ```
 
 use std::fmt;
@@ -119,6 +120,10 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                 cfg.clock = crate::time::ClockKind::parse(value)
                     .ok_or_else(|| err(line_no, format!("unknown clock {value:?}")))?
             }
+            "compress" => {
+                cfg.compress = crate::compress::CodecKind::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown compress codec {value:?}")))?
+            }
             "log_dir" => cfg.log_dir = Some(value.into()),
             "verbose" => cfg.verbose = value == "true" || value == "1",
             _ => return Err(err(line_no, format!("unknown key {key:?}"))),
@@ -202,6 +207,21 @@ mod tests {
         let cfg = parse_config_text("").unwrap();
         assert_eq!(cfg.clock, ClockKind::Real, "real is the default");
         assert!(parse_config_text("clock = sundial\n").is_err());
+    }
+
+    #[test]
+    fn compress_values() {
+        use crate::compress::CodecKind;
+        let cfg = parse_config_text("compress = q8\n").unwrap();
+        assert_eq!(cfg.compress, CodecKind::Q8);
+        let cfg = parse_config_text("compress = topk:0.1\n").unwrap();
+        assert_eq!(cfg.compress, CodecKind::TopK { frac: 0.1 });
+        let cfg = parse_config_text("compress = delta-q8\n").unwrap();
+        assert_eq!(cfg.compress, CodecKind::DeltaQ8);
+        let cfg = parse_config_text("").unwrap();
+        assert_eq!(cfg.compress, CodecKind::None, "none is the default");
+        assert!(parse_config_text("compress = zip\n").is_err());
+        assert!(parse_config_text("compress = topk:2\n").is_err());
     }
 
     #[test]

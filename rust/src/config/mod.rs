@@ -11,6 +11,7 @@ use std::time::Duration;
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 
+pub use crate::compress::CodecKind;
 pub use crate::time::ClockKind;
 
 /// Peers pulled per epoch when `mode = gossip` gives no explicit fanout.
@@ -193,6 +194,13 @@ pub struct ExperimentConfig {
     /// advances the clock whenever every node is blocked — so timing
     /// scenarios run at CPU speed with deterministic timelines.
     pub clock: ClockKind,
+    /// Wire codec for weight exchange (`compress = none | q8 |
+    /// topk:<frac> | delta-q8`): every push is encoded, its blob size
+    /// charged by the latency layer and accounted by the traffic meter,
+    /// and the store deposits the decoded reconstruction — so lossy
+    /// compression has real (not modeled) accuracy effects. `none`
+    /// keeps today's v1 blobs byte-for-byte.
+    pub compress: CodecKind,
     /// Write metrics.csv / events.jsonl here.
     pub log_dir: Option<PathBuf>,
     /// Print per-epoch progress.
@@ -219,6 +227,7 @@ impl Default for ExperimentConfig {
             crash: None,
             sync_timeout: Duration::from_secs(120),
             clock: ClockKind::Real,
+            compress: CodecKind::None,
             log_dir: None,
             verbose: false,
         }
@@ -250,10 +259,15 @@ impl ExperimentConfig {
     }
 
     /// Short run identifier, e.g. `mnist_async_fedavg_n2_s0.9_seed42`
-    /// (gossip runs carry the fanout: `mnist_gossip2_...`).
+    /// (gossip runs carry the fanout, `mnist_gossip2_...`; compressed
+    /// runs carry the codec, `..._seed42_q8`).
     pub fn run_name(&self) -> String {
+        let compress = match self.compress {
+            CodecKind::None => String::new(),
+            other => format!("_{}", other.label()),
+        };
         format!(
-            "{}_{}_{}_n{}_s{}_seed{}",
+            "{}_{}_{}_n{}_s{}_seed{}{compress}",
             self.model,
             self.mode.label(),
             self.strategy.name(),
@@ -350,6 +364,19 @@ mod tests {
     fn run_name_is_stable() {
         let c = ExperimentConfig::default();
         assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
+        // compressed runs must land in distinct log/store namespaces
+        let c = ExperimentConfig { compress: CodecKind::Q8, ..Default::default() };
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_q8");
+    }
+
+    #[test]
+    fn compress_defaults_to_none_and_validates() {
+        assert_eq!(ExperimentConfig::default().compress, CodecKind::None);
+        let c = ExperimentConfig {
+            compress: CodecKind::TopK { frac: 0.2 },
+            ..Default::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

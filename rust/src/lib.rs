@@ -42,6 +42,7 @@
 
 #![warn(missing_docs)]
 
+pub mod compress;
 pub mod config;
 pub mod data;
 pub mod metrics;
@@ -58,6 +59,7 @@ pub mod util;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
+    pub use crate::compress::{Codec, CodecKind};
     pub use crate::config::{ExperimentConfig, FederationMode, Scale};
     pub use crate::data::{DatasetKind, Partitioner};
     pub use crate::metrics::stats::Summary;

@@ -17,7 +17,7 @@ fn usage() -> ! {
         "usage:\n  fedless run [--config FILE] [--set key=value ...] [--trials N]\n  fedless info\n\
          \nconfig keys: model n_nodes mode strategy skew epochs steps_per_epoch\n\
          sample_prob train_size test_size seed store latency node_delays_ms\n\
-         crash sync_timeout_s log_dir verbose"
+         crash sync_timeout_s clock compress log_dir verbose"
     );
     std::process::exit(2);
 }

@@ -1,11 +1,14 @@
 //! Metrics: summary statistics (mean ± 95% CI, as the paper's tables
-//! report), run logging (CSV/JSONL — the W&B substitute), and per-node
-//! timelines used to regenerate the Figure-1 straggler-idle picture.
+//! report), run logging (CSV/JSONL — the W&B substitute), per-node
+//! timelines used to regenerate the Figure-1 straggler-idle picture,
+//! and per-node weight-store traffic accounting ([`TrafficMeter`]).
 
 pub mod logger;
 pub mod stats;
 pub mod timeline;
+pub mod traffic;
 
 pub use logger::RunLogger;
 pub use stats::Summary;
 pub use timeline::{SpanKind, Timeline};
+pub use traffic::TrafficMeter;

@@ -55,12 +55,15 @@ pub struct Timeline {
     pub node_id: usize,
     /// Recorded spans, in recording order.
     pub spans: Vec<Span>,
+    /// Wire-byte accounting for this node's pushes and pulls (recorded
+    /// by the protocol layer alongside the Aggregate/Wait spans).
+    pub traffic: crate::metrics::TrafficMeter,
 }
 
 impl Timeline {
     /// Empty timeline for `node_id`.
     pub fn new(node_id: usize) -> Self {
-        Timeline { node_id, spans: Vec::new() }
+        Timeline { node_id, spans: Vec::new(), traffic: Default::default() }
     }
 
     /// Record a span over `[start, end]` clock offsets (both from

@@ -1,0 +1,101 @@
+//! [`TrafficMeter`] — per-node weight-store traffic accounting.
+//!
+//! Every protocol-layer push and pull records its *encoded wire bytes*
+//! (blob header included, see [`crate::tensor::codec`]) here, so an
+//! experiment reports exactly how much data each node would have moved
+//! through the paper's S3 bucket — the quantity the
+//! [`crate::compress`] codecs exist to shrink. The meter rides on each
+//! node's [`crate::metrics::Timeline`] and surfaces in
+//! `ExperimentResult::total_traffic`, the sweep-report traffic columns,
+//! and `fedbench run` output.
+
+/// Byte and operation counters for one node's weight-store traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficMeter {
+    /// Encoded bytes this node pushed (wire blobs, headers included).
+    pub bytes_pushed: u64,
+    /// Encoded bytes this node pulled (sum over every downloaded entry).
+    pub bytes_pulled: u64,
+    /// Push operations recorded.
+    pub pushes: u64,
+    /// Entries downloaded (one pull of K entries counts K).
+    pub entries_pulled: u64,
+}
+
+impl TrafficMeter {
+    /// Record one push of `bytes` wire bytes.
+    pub fn record_push(&mut self, bytes: u64) {
+        self.bytes_pushed += bytes;
+        self.pushes += 1;
+    }
+
+    /// Record one downloaded entry of `bytes` wire bytes.
+    pub fn record_pull(&mut self, bytes: u64) {
+        self.bytes_pulled += bytes;
+        self.entries_pulled += 1;
+    }
+
+    /// Total bytes moved in either direction.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_pushed + self.bytes_pulled
+    }
+
+    /// Fold another meter into this one (for experiment-wide totals).
+    pub fn merge(&mut self, other: &TrafficMeter) {
+        self.bytes_pushed += other.bytes_pushed;
+        self.bytes_pulled += other.bytes_pulled;
+        self.pushes += other.pushes;
+        self.entries_pulled += other.entries_pulled;
+    }
+
+    /// Megabytes pushed (decimal MB, for report columns).
+    pub fn mb_pushed(&self) -> f64 {
+        self.bytes_pushed as f64 / 1e6
+    }
+
+    /// Megabytes pulled (decimal MB, for report columns).
+    pub fn mb_pulled(&self) -> f64 {
+        self.bytes_pulled as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let mut t = TrafficMeter::default();
+        t.record_push(100);
+        t.record_push(50);
+        t.record_pull(30);
+        assert_eq!(t.bytes_pushed, 150);
+        assert_eq!(t.bytes_pulled, 30);
+        assert_eq!(t.pushes, 2);
+        assert_eq!(t.entries_pulled, 1);
+        assert_eq!(t.total_bytes(), 180);
+    }
+
+    #[test]
+    fn merge_sums_every_counter() {
+        let mut a = TrafficMeter::default();
+        a.record_push(10);
+        let mut b = TrafficMeter::default();
+        b.record_pull(7);
+        b.record_pull(3);
+        a.merge(&b);
+        assert_eq!(
+            a,
+            TrafficMeter { bytes_pushed: 10, bytes_pulled: 10, pushes: 1, entries_pulled: 2 }
+        );
+    }
+
+    #[test]
+    fn mb_columns_are_decimal_megabytes() {
+        let mut t = TrafficMeter::default();
+        t.record_push(2_500_000);
+        t.record_pull(500_000);
+        assert!((t.mb_pushed() - 2.5).abs() < 1e-12);
+        assert!((t.mb_pulled() - 0.5).abs() < 1e-12);
+    }
+}

@@ -16,6 +16,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::compress::CodecState;
 use crate::config::ExperimentConfig;
 use crate::data::BatchLoader;
 use crate::metrics::timeline::{SpanKind, Timeline};
@@ -121,6 +122,9 @@ fn run_node_inner(
     let params = bundle.init_params(cfg.seed)?;
     let mut state = TrainState::new(params);
     let mut protocol = ProtocolKind::from(cfg.mode).build(ctx.node_id, &cfg);
+    // per-node wire codec state (compress = none | q8 | topk:<f> |
+    // delta-q8): every push below runs through it
+    let mut codec = CodecState::new(cfg.compress);
 
     let step_delay = cfg
         .node_delays_ms
@@ -191,6 +195,7 @@ fn run_node_inner(
             timeline: &mut *timeline,
             sync_timeout: cfg.sync_timeout,
             clock: clock.as_ref(),
+            codec: &mut codec,
         };
         let out = protocol.after_epoch(&mut pctx, &mut state.params)?;
         report.pushes += out.pushes;

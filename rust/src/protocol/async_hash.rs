@@ -80,6 +80,7 @@ impl FederationProtocol for AsyncHash {
             // v_now was read before this pull: anything the pull misses
             // is newer than v_now and re-detected next epoch.
             let entries = ctx.store.latest_per_node()?;
+            ctx.record_pull(&entries);
             // ω[k] <- w^k : own current weights replace our stored entry
             // (we keep the store-assigned seq so staleness-aware
             // strategies see honest sequence numbers).
@@ -113,6 +114,7 @@ impl FederationProtocol for AsyncHash {
                 if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
                     *params = new_params;
                     out.aggregations = 1;
+                    ctx.adopt_aggregate(params, &entries);
                 }
             }
             self.last_seen = Some(v_now);
@@ -138,13 +140,7 @@ mod tests {
 
     fn peer_push(store: &dyn WeightStore, node: usize, val: f32) {
         store
-            .push(PushRequest {
-                node_id: node,
-                round: 0,
-                epoch: 0,
-                n_examples: 100,
-                params: Arc::new(FlatParams(vec![val; 4])),
-            })
+            .push(PushRequest::raw(node, 0, 0, 100, Arc::new(FlatParams(vec![val; 4]))))
             .unwrap();
     }
 
@@ -220,12 +216,13 @@ mod tests {
         let mut proto = AsyncHash::new(1.0, 42, 0);
         let mut strategy = StrategyKind::FedAvg.build();
         let mut timeline = Timeline::new(0);
+        let mut codec = crate::compress::CodecState::new(Default::default());
         let mut params = FlatParams(vec![0.0; 4]);
-        let epoch = |proto: &mut AsyncHash,
-                     params: &mut FlatParams,
-                     strategy: &mut Box<dyn crate::strategy::Strategy>,
-                     timeline: &mut Timeline,
-                     epoch: usize| {
+        let mut epoch = |proto: &mut AsyncHash,
+                         params: &mut FlatParams,
+                         strategy: &mut Box<dyn crate::strategy::Strategy>,
+                         timeline: &mut Timeline,
+                         epoch: usize| {
             let mut ctx = EpochCtx {
                 node_id: 0,
                 n_nodes: 2,
@@ -236,6 +233,7 @@ mod tests {
                 timeline,
                 sync_timeout: Duration::from_secs(1),
                 clock: clock.as_ref(),
+                codec: &mut codec,
             };
             proto.after_epoch(&mut ctx, params).unwrap()
         };

@@ -72,6 +72,15 @@ impl FederationProtocol for Gossip {
 
         let t_agg = ctx.clock.now();
         let peers = gossip_peers(self.seed, ctx.node_id, ctx.epoch, ctx.n_nodes, self.fanout);
+        let mut pulled = Vec::with_capacity(peers.len());
+        for peer in peers {
+            // Per-peer pulls, not a full latest_per_node fan-in: a peer
+            // that has not pushed yet simply contributes nothing.
+            if let Some(e) = ctx.store.latest_for_node(peer)? {
+                pulled.push(e);
+            }
+        }
+        ctx.record_pull(&pulled);
         let mut contribs = vec![Contribution {
             node_id: ctx.node_id,
             n_examples: ctx.n_examples,
@@ -79,23 +88,20 @@ impl FederationProtocol for Gossip {
             seq: own_seq,
             params: Arc::new(params.clone()),
         }];
-        for peer in peers {
-            // Per-peer pulls, not a full latest_per_node fan-in: a peer
-            // that has not pushed yet simply contributes nothing.
-            if let Some(e) = ctx.store.latest_for_node(peer)? {
-                contribs.push(Contribution {
-                    node_id: e.node_id,
-                    n_examples: e.n_examples,
-                    is_self: false,
-                    seq: e.seq,
-                    params: Arc::clone(&e.params),
-                });
-            }
+        for e in &pulled {
+            contribs.push(Contribution {
+                node_id: e.node_id,
+                n_examples: e.n_examples,
+                is_self: false,
+                seq: e.seq,
+                params: Arc::clone(&e.params),
+            });
         }
         if contribs.len() > 1 {
             if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
                 *params = new_params;
                 out.aggregations = 1;
+                ctx.adopt_aggregate(params, &pulled);
             }
         }
         ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());

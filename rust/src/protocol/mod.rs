@@ -48,10 +48,12 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::compress::CodecState;
 use crate::config::{ExperimentConfig, FederationMode};
 use crate::metrics::timeline::Timeline;
-use crate::store::{PushRequest, WeightStore};
+use crate::store::{PushRequest, WeightEntry, WeightStore};
 use crate::strategy::Strategy;
+use crate::tensor::codec::BlobMeta;
 use crate::tensor::FlatParams;
 use crate::time::Clock;
 
@@ -81,19 +83,57 @@ pub struct EpochCtx<'a> {
     /// and timeline span is measured on it, which is what lets a
     /// [`crate::time::VirtualClock`] run timing scenarios at CPU speed.
     pub clock: &'a dyn Clock,
+    /// This node's wire codec state ([`crate::compress`]): every push
+    /// goes through it (encode → wire blob → decoded reconstruction),
+    /// and aggregation results feed back into it as the delta base.
+    pub codec: &'a mut CodecState,
 }
 
 impl EpochCtx<'_> {
     /// Deposit `params` as this node's round-`round` entry; returns the
     /// store-assigned sequence number.
+    ///
+    /// The push runs through the configured [`crate::compress`] codec:
+    /// what lands in the store is the wire blob's *decoded
+    /// reconstruction* (bit-exact under `compress = none`), the entry's
+    /// [`WeightEntry::wire_bytes`] is the encoded blob size, and the
+    /// node's [`crate::metrics::TrafficMeter`] records the upload.
     pub fn push_weights(&mut self, params: &FlatParams, round: u64) -> Result<u64> {
-        self.store.push(PushRequest {
+        let meta = BlobMeta {
+            node_id: self.node_id as u32,
+            round,
+            epoch: round,
+            n_examples: self.n_examples,
+        };
+        let (wire_bytes, stored) = self.codec.encode_for_push(&meta, params)?;
+        let seq = self.store.push(PushRequest {
             node_id: self.node_id,
             round,
             epoch: round,
             n_examples: self.n_examples,
-            params: Arc::new(params.clone()),
-        })
+            wire_bytes,
+            params: Arc::new(stored),
+        })?;
+        self.timeline.traffic.record_push(wire_bytes);
+        Ok(seq)
+    }
+
+    /// Account downloaded entries against this node's traffic meter
+    /// (each entry's encoded wire bytes). Protocols call this on every
+    /// pull, including the sync barrier's incomplete-round re-pulls —
+    /// the wire carried those bytes whether or not the round was ready.
+    pub fn record_pull(&mut self, entries: &[WeightEntry]) {
+        for e in entries {
+            self.timeline.traffic.record_pull(e.wire_bytes);
+        }
+    }
+
+    /// Feed an adopted aggregate back into the codec as the delta base,
+    /// tagged with the newest store seq among `entries` (what
+    /// [`crate::compress::DeltaQ8`] deltas the next push against).
+    pub fn adopt_aggregate(&mut self, params: &FlatParams, entries: &[WeightEntry]) {
+        let version = entries.iter().map(|e| e.seq).max().unwrap_or(0);
+        self.codec.set_base(version, params);
     }
 }
 
@@ -203,6 +243,8 @@ pub(crate) mod protocol_tests {
         pub params: FlatParams,
         /// The clock this node's epochs run on.
         pub clock: Arc<dyn Clock>,
+        /// Wire codec state (from `cfg.compress`).
+        pub codec: CodecState,
     }
 
     impl TestNode {
@@ -223,6 +265,7 @@ pub(crate) mod protocol_tests {
                 // distinct starting weights per node so averaging is visible
                 params: FlatParams(vec![node_id as f32 * 10.0; 4]),
                 clock,
+                codec: CodecState::new(cfg.compress),
             }
         }
 
@@ -243,6 +286,7 @@ pub(crate) mod protocol_tests {
                 timeline: &mut self.timeline,
                 sync_timeout,
                 clock: self.clock.as_ref(),
+                codec: &mut self.codec,
             };
             self.protocol.after_epoch(&mut ctx, &mut self.params).unwrap()
         }

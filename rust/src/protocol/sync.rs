@@ -47,6 +47,8 @@ impl FederationProtocol for SyncBarrier {
             // missed one.
             let seen = ctx.store.version()?;
             let entries = ctx.store.entries_for_round(round)?;
+            // every re-pull downloaded these bytes, complete or not
+            ctx.record_pull(&entries);
             if entries.len() >= ctx.n_nodes {
                 break entries;
             }
@@ -74,6 +76,8 @@ impl FederationProtocol for SyncBarrier {
         if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
             *params = new_params;
             out.aggregations = 1;
+            // the adopted aggregate is the next push's delta base
+            ctx.adopt_aggregate(params, &entries);
         }
         ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());
         Ok(out)

@@ -47,6 +47,17 @@ impl ExperimentResult {
         let tls: Vec<&Timeline> = self.reports.iter().map(|r| &r.timeline).collect();
         render_ascii(&tls, width)
     }
+
+    /// Experiment-wide weight-store traffic: every node's
+    /// [`crate::metrics::TrafficMeter`] merged (encoded wire bytes,
+    /// blob headers included).
+    pub fn total_traffic(&self) -> crate::metrics::TrafficMeter {
+        let mut total = crate::metrics::TrafficMeter::default();
+        for r in &self.reports {
+            total.merge(&r.timeline.traffic);
+        }
+        total
+    }
 }
 
 /// Build the configured store stack on the experiment's clock, so change

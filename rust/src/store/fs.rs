@@ -6,6 +6,12 @@
 //! (`.tmp` + rename) so readers never observe torn files; the blob codec's
 //! payload hash catches anything that slips through (e.g. a copied
 //! partial file on a network mount).
+//!
+//! Files are always written in the self-contained v1 (raw f32) format so
+//! a directory never needs codec state to read back — the compression
+//! layer's wire accounting happens at the protocol boundary, and scanned
+//! entries report their actual on-disk byte size as `wire_bytes`. Both
+//! v1 and raw v2 blobs decode on scan (see [`crate::tensor::codec`]).
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -94,6 +100,9 @@ impl FsStore {
                     epoch: meta.epoch,
                     n_examples: meta.n_examples,
                     seq,
+                    // the file *is* the wire blob: its size is the
+                    // entry's wire cost, whatever version wrote it
+                    wire_bytes: bytes.len() as u64,
                     params: std::sync::Arc::new(params),
                 });
             }
@@ -315,16 +324,14 @@ mod tests {
     fn large_payload_roundtrip() {
         let (s, dir) = tmp_store("large");
         let params = Arc::new(FlatParams((0..500_000).map(|i| i as f32).collect()));
-        s.push(super::super::PushRequest {
-            node_id: 0,
-            round: 0,
-            epoch: 0,
-            n_examples: 1,
-            params: Arc::clone(&params),
-        })
-        .unwrap();
+        s.push(super::super::PushRequest::raw(0, 0, 0, 1, Arc::clone(&params))).unwrap();
         let latest = s.latest_per_node().unwrap();
         assert_eq!(latest[0].params.0, params.0);
+        assert_eq!(
+            latest[0].wire_bytes,
+            crate::tensor::codec::raw_wire_bytes(500_000),
+            "scanned entries report the on-disk blob size as wire cost"
+        );
         fs::remove_dir_all(dir).unwrap();
     }
 }

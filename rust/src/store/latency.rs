@@ -83,36 +83,50 @@ impl<S: WeightStore> LatencyStore<S> {
         &self.inner
     }
 
-    fn delay(&self, payload_bytes: usize) {
+    fn delay(&self, wire_bytes: u64) {
         let jit = {
             let mut rng = self.rng.lock().unwrap();
             self.cfg.jitter.mul_f64(rng.f64())
         };
         let mut d = self.cfg.base + jit;
-        if self.cfg.bytes_per_sec > 0 && payload_bytes > 0 {
-            d += Duration::from_secs_f64(payload_bytes as f64 / self.cfg.bytes_per_sec as f64);
+        if self.cfg.bytes_per_sec > 0 && wire_bytes > 0 {
+            d += Duration::from_secs_f64(wire_bytes as f64 / self.cfg.bytes_per_sec as f64);
         }
         self.clock.sleep(d);
+    }
+
+    /// Charge a multi-entry pull: one GET round-trip per downloaded
+    /// entry, each transferring that entry's *encoded* wire bytes
+    /// (header included) — an empty result still costs the LIST that
+    /// found nothing. The old behaviour (one summed delay on bare
+    /// `params.len() * 4`) undercounted both the per-entry RTTs and the
+    /// fixed blob header, and ignored compression entirely.
+    fn charge_entries(&self, entries: &[WeightEntry]) {
+        if entries.is_empty() {
+            self.delay(0);
+            return;
+        }
+        for e in entries {
+            self.delay(e.wire_bytes);
+        }
     }
 }
 
 impl<S: WeightStore> WeightStore for LatencyStore<S> {
     fn push(&self, req: PushRequest) -> Result<u64> {
-        self.delay(req.params.len() * 4);
+        self.delay(req.wire_bytes);
         self.inner.push(req)
     }
 
     fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
         let out = self.inner.latest_per_node()?;
-        let bytes: usize = out.iter().map(|e| e.params.len() * 4).sum();
-        self.delay(bytes);
+        self.charge_entries(&out);
         Ok(out)
     }
 
     fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
         let out = self.inner.entries_for_round(round)?;
-        let bytes: usize = out.iter().map(|e| e.params.len() * 4).sum();
-        self.delay(bytes);
+        self.charge_entries(&out);
         Ok(out)
     }
 
@@ -123,8 +137,7 @@ impl<S: WeightStore> WeightStore for LatencyStore<S> {
 
     fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
         let out = self.inner.latest_for_node(node_id)?;
-        let bytes = out.as_ref().map(|e| e.params.len() * 4).unwrap_or(0);
-        self.delay(bytes);
+        self.delay(out.as_ref().map(|e| e.wire_bytes).unwrap_or(0));
         Ok(out)
     }
 
@@ -187,15 +200,90 @@ mod tests {
         let s = LatencyStore::new(MemoryStore::new(), cfg, 1);
         let t0 = Instant::now();
         // 100k f32 = 400 KB -> ~400ms at 1MB/s
-        s.push(super::super::PushRequest {
-            node_id: 0,
-            round: 0,
-            epoch: 0,
-            n_examples: 1,
-            params: std::sync::Arc::new(crate::tensor::FlatParams(vec![0.0; 100_000])),
-        })
+        s.push(super::super::PushRequest::raw(
+            0,
+            0,
+            0,
+            1,
+            std::sync::Arc::new(crate::tensor::FlatParams(vec![0.0; 100_000])),
+        ))
         .unwrap();
         let dt = t0.elapsed();
         assert!(dt >= Duration::from_millis(350), "dt={dt:?}");
+    }
+
+    #[test]
+    fn charges_encoded_wire_bytes_header_included() {
+        use crate::tensor::codec::HEADER_LEN;
+        use crate::time::{Clock, VirtualClock};
+
+        // Deterministic accounting on a virtual clock: no base RTT, no
+        // jitter, 1 byte/sec -> simulated seconds == charged wire bytes.
+        let clock: std::sync::Arc<dyn Clock> = std::sync::Arc::new(VirtualClock::new());
+        clock.enter();
+        let _guard = crate::time::ParticipantGuard::adopt(std::sync::Arc::clone(&clock));
+        let cfg = LatencyConfig { base: Duration::ZERO, jitter: Duration::ZERO, bytes_per_sec: 1 };
+        let s = LatencyStore::with_clock(
+            MemoryStore::with_clock(std::sync::Arc::clone(&clock)),
+            cfg,
+            1,
+            std::sync::Arc::clone(&clock),
+        );
+
+        let t0 = clock.now();
+        s.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        let push_cost = (clock.now() - t0).as_secs();
+        // 8 f32 + v1 header: the fixed header is charged, not just the
+        // payload (the old code's `params.len() * 4`)
+        assert_eq!(push_cost, (HEADER_LEN + 8 * 4) as u64);
+
+        // a compressed entry charges its (smaller) encoded size
+        let t0 = clock.now();
+        s.push(super::super::PushRequest {
+            node_id: 1,
+            round: 0,
+            epoch: 0,
+            n_examples: 1,
+            wire_bytes: 10,
+            params: std::sync::Arc::new(crate::tensor::FlatParams(vec![0.0; 8])),
+        })
+        .unwrap();
+        assert_eq!((clock.now() - t0).as_secs(), 10);
+
+        // multi-entry pulls charge per entry: both wire sizes, summed
+        let t0 = clock.now();
+        let entries = s.latest_per_node().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!((clock.now() - t0).as_secs(), (HEADER_LEN + 32) as u64 + 10);
+
+        // single-entry pull charges exactly that entry's wire size
+        let t0 = clock.now();
+        let e = s.latest_for_node(1).unwrap().unwrap();
+        assert_eq!(e.wire_bytes, 10);
+        assert_eq!((clock.now() - t0).as_secs(), 10);
+    }
+
+    #[test]
+    fn multi_entry_pull_pays_one_rtt_per_entry() {
+        let cfg = LatencyConfig {
+            base: Duration::from_millis(10),
+            jitter: Duration::ZERO,
+            bytes_per_sec: 0,
+        };
+        let s = LatencyStore::new(MemoryStore::new(), cfg, 1);
+        for node in 0..3 {
+            s.push(store_tests::push_req(node, 0, 1.0)).unwrap();
+        }
+        let t0 = Instant::now();
+        assert_eq!(s.entries_for_round(0).unwrap().len(), 3);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(28),
+            "3 GETs must cost ~3 RTTs, took {:?}",
+            t0.elapsed()
+        );
+        // an empty pull still costs the LIST round-trip
+        let t0 = Instant::now();
+        assert!(s.entries_for_round(9).unwrap().is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(9));
     }
 }

@@ -57,6 +57,7 @@ impl WeightStore for MemoryStore {
             epoch: req.epoch,
             n_examples: req.n_examples,
             seq,
+            wire_bytes: req.wire_bytes,
             params: req.params,
         };
         self.entries.write().unwrap().push(entry);

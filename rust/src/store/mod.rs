@@ -71,6 +71,13 @@ pub struct WeightEntry {
     pub n_examples: u64,
     /// Store-assigned monotonically increasing sequence number.
     pub seq: u64,
+    /// Simulated wire size of this entry in bytes: the encoded blob,
+    /// header included (see [`crate::tensor::codec`]). Raw entries cost
+    /// [`crate::tensor::codec::raw_wire_bytes`]; codec-encoded entries
+    /// carry their actual compressed size. [`LatencyStore`] charges
+    /// bandwidth on this, and the protocol layer's
+    /// [`crate::metrics::TrafficMeter`] accounts it per node.
+    pub wire_bytes: u64,
     /// The deposited flat weight vector (shared, not copied, in-process).
     pub params: std::sync::Arc<FlatParams>,
 }
@@ -192,8 +199,27 @@ pub struct PushRequest {
     pub epoch: u64,
     /// Examples this client trained on (the FedAvg weight numerator n_k).
     pub n_examples: u64,
+    /// Simulated wire size of the encoded entry (blob header included);
+    /// copied onto the stored [`WeightEntry::wire_bytes`]. Use
+    /// [`PushRequest::raw`] when pushing uncompressed params.
+    pub wire_bytes: u64,
     /// The flat weight vector to deposit.
     pub params: std::sync::Arc<FlatParams>,
+}
+
+impl PushRequest {
+    /// A push of uncompressed params: `wire_bytes` is the raw v1 blob
+    /// size ([`crate::tensor::codec::raw_wire_bytes`]).
+    pub fn raw(
+        node_id: usize,
+        round: u64,
+        epoch: u64,
+        n_examples: u64,
+        params: std::sync::Arc<FlatParams>,
+    ) -> PushRequest {
+        let wire_bytes = crate::tensor::codec::raw_wire_bytes(params.len());
+        PushRequest { node_id, round, epoch, n_examples, wire_bytes, params }
+    }
 }
 
 /// `Arc<dyn WeightStore>` is itself a store, so wrappers generic over a
@@ -237,13 +263,8 @@ pub(crate) mod store_tests {
     use super::*;
 
     pub fn push_req(node: usize, round: u64, val: f32) -> PushRequest {
-        PushRequest {
-            node_id: node,
-            round,
-            epoch: round,
-            n_examples: 100 + node as u64,
-            params: Arc::new(FlatParams(vec![val; 8])),
-        }
+        let params = Arc::new(FlatParams(vec![val; 8]));
+        PushRequest::raw(node, round, round, 100 + node as u64, params)
     }
 
     pub fn conformance(store: &dyn WeightStore) {
@@ -277,6 +298,8 @@ pub(crate) mod store_tests {
         // payload integrity
         assert_eq!(e1.params.0, vec![2.0; 8]);
         assert_eq!(e1.n_examples, 101);
+        // wire accounting survives the store round-trip
+        assert_eq!(e1.wire_bytes, crate::tensor::codec::raw_wire_bytes(8));
 
         // single-node pull (the gossip protocol's per-peer read)
         let s0 = store.latest_for_node(0).unwrap().unwrap();

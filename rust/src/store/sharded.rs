@@ -101,6 +101,7 @@ impl WeightStore for ShardedStore {
             epoch: req.epoch,
             n_examples: req.n_examples,
             seq,
+            wire_bytes: req.wire_bytes,
             params: req.params,
         };
         let shard = self.shard_of(entry.node_id);

@@ -20,6 +20,11 @@ pub struct TrialMetrics {
     pub loss: f64,
     /// Trial wall-clock seconds.
     pub wall_clock_s: f64,
+    /// Encoded megabytes pushed across all nodes (the
+    /// [`crate::metrics::TrafficMeter`] totals).
+    pub mb_pushed: f64,
+    /// Encoded megabytes pulled across all nodes.
+    pub mb_pulled: f64,
     /// Whether every node ran all its epochs.
     pub all_completed: bool,
 }
@@ -52,6 +57,10 @@ pub struct CellSummary {
     pub loss: Option<Summary>,
     /// Wall-clock summary over successful trials.
     pub wall_clock: Option<Summary>,
+    /// Pushed-megabytes summary over successful trials.
+    pub mb_pushed: Option<Summary>,
+    /// Pulled-megabytes summary over successful trials.
+    pub mb_pulled: Option<Summary>,
     /// First error message, when any trial failed.
     pub first_error: Option<String>,
 }
@@ -91,6 +100,8 @@ impl SweepReport {
                 accuracy: None,
                 loss: None,
                 wall_clock: None,
+                mb_pushed: None,
+                mb_pulled: None,
                 first_error: None,
             })
             .collect();
@@ -98,6 +109,8 @@ impl SweepReport {
         let mut accs: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut losses: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut walls: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut pushed: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut pulled: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut n_failures = 0;
         for o in outcomes {
             let c = &mut cells[o.cell_index];
@@ -107,6 +120,8 @@ impl SweepReport {
                     accs[o.cell_index].push(m.accuracy);
                     losses[o.cell_index].push(m.loss);
                     walls[o.cell_index].push(m.wall_clock_s);
+                    pushed[o.cell_index].push(m.mb_pushed);
+                    pulled[o.cell_index].push(m.mb_pulled);
                 }
                 Err(e) => {
                     c.failures += 1;
@@ -122,6 +137,8 @@ impl SweepReport {
                 c.accuracy = Some(Summary::of(&accs[i]));
                 c.loss = Some(Summary::of(&losses[i]));
                 c.wall_clock = Some(Summary::of(&walls[i]));
+                c.mb_pushed = Some(Summary::of(&pushed[i]));
+                c.mb_pulled = Some(Summary::of(&pulled[i]));
             }
         }
 
@@ -153,16 +170,19 @@ impl SweepReport {
             }
         );
         out.push_str(
-            "| mode | strategy | skew | nodes | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s |\n",
+            "| mode | strategy | skew | nodes | compress | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
         );
         out.push_str(
-            "|------|----------|------|-------|--------|-----------------------|-------------------|--------------|\n",
+            "|------|----------|------|-------|----------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n",
         );
         for c in &self.cells {
             let trials = if c.failures > 0 {
                 format!("{}/{}", c.n_trials - c.failures, c.n_trials)
             } else {
                 format!("{}", c.n_trials)
+            };
+            let mb = |s: &Option<Summary>| {
+                s.as_ref().map(|x| format!("{:.2}", x.mean)).unwrap_or_else(|| "-".into())
             };
             let (acc, loss, wall) = match (&c.accuracy, &c.loss, &c.wall_clock) {
                 (Some(a), Some(l), Some(w)) => {
@@ -175,15 +195,18 @@ impl SweepReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
                 c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,
+                c.cell.compress.label(),
                 trials,
                 acc,
                 loss,
-                wall
+                wall,
+                mb(&c.mb_pushed),
+                mb(&c.mb_pulled)
             );
         }
         out
@@ -192,8 +215,9 @@ impl SweepReport {
     /// CSV with one row per grid cell (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "model,mode,strategy,skew,n_nodes,trials,failures,\
-             acc_mean,acc_std,loss_mean,loss_std,wall_mean,wall_std\n",
+            "model,mode,strategy,skew,n_nodes,compress,trials,failures,\
+             acc_mean,acc_std,loss_mean,loss_std,wall_mean,wall_std,\
+             mb_pushed_mean,mb_pulled_mean\n",
         );
         let num = |s: &Option<Summary>, f: fn(&Summary) -> f64| -> String {
             s.as_ref().map(|x| format!("{}", f(x))).unwrap_or_default()
@@ -201,12 +225,13 @@ impl SweepReport {
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,
+                c.cell.compress.label(),
                 c.n_trials,
                 c.failures,
                 num(&c.accuracy, |s| s.mean),
@@ -215,6 +240,8 @@ impl SweepReport {
                 num(&c.loss, |s| s.std),
                 num(&c.wall_clock, |s| s.mean),
                 num(&c.wall_clock, |s| s.std),
+                num(&c.mb_pushed, |s| s.mean),
+                num(&c.mb_pulled, |s| s.mean),
             );
         }
         out
@@ -249,6 +276,8 @@ mod tests {
                 accuracy: acc,
                 loss: 1.0 - acc,
                 wall_clock_s: 2.0,
+                mb_pushed: 1.5,
+                mb_pulled: 3.0,
                 all_completed: true,
             }),
         }
@@ -328,5 +357,30 @@ mod tests {
         assert!(lines[0].starts_with("model,mode,strategy"));
         let cols = lines[1].split(',').count();
         assert_eq!(cols, lines[0].split(',').count());
+    }
+
+    #[test]
+    fn traffic_and_compress_columns_render() {
+        let spec = SweepSpec::parse_json(
+            r#"{"compress": ["none", "q8"], "seeds": [1, 2]}"#,
+        )
+        .unwrap();
+        let outcomes = vec![
+            outcome(0, 0, 0.9),
+            outcome(0, 1, 0.9),
+            outcome(1, 2, 0.9),
+            outcome(1, 3, 0.9),
+        ];
+        let r = SweepReport::build(&spec, &outcomes, 1, 1.0);
+        assert!((r.cells[0].mb_pushed.unwrap().mean - 1.5).abs() < 1e-12);
+        assert!((r.cells[0].mb_pulled.unwrap().mean - 3.0).abs() < 1e-12);
+        let md = r.to_markdown();
+        assert!(md.contains("| MB pushed | MB pulled |"), "{md}");
+        assert!(md.contains("| none |"), "{md}");
+        assert!(md.contains("| q8 |"), "{md}");
+        assert!(md.contains("| 1.50 | 3.00 |"), "{md}");
+        let csv = r.to_csv();
+        assert!(csv.contains("mb_pushed_mean,mb_pulled_mean"), "{csv}");
+        assert!(csv.lines().nth(2).unwrap().contains(",q8,"), "{csv}");
     }
 }

@@ -93,12 +93,17 @@ where
                     runner(&trial.cfg)
                 }));
                 let result = match caught {
-                    Ok(Ok(res)) => Ok(TrialMetrics {
-                        accuracy: res.final_accuracy,
-                        loss: res.final_loss,
-                        wall_clock_s: res.wall_clock_s,
-                        all_completed: res.all_completed,
-                    }),
+                    Ok(Ok(res)) => {
+                        let traffic = res.total_traffic();
+                        Ok(TrialMetrics {
+                            accuracy: res.final_accuracy,
+                            loss: res.final_loss,
+                            wall_clock_s: res.wall_clock_s,
+                            mb_pushed: traffic.mb_pushed(),
+                            mb_pulled: traffic.mb_pulled(),
+                            all_completed: res.all_completed,
+                        })
+                    }
                     Ok(Err(e)) => Err(format!("{e:#}")),
                     Err(panic) => Err(format!("trial panicked: {}", panic_msg(&panic))),
                 };

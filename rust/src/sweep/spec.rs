@@ -15,14 +15,15 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::compress::CodecKind;
 use crate::config::{ExperimentConfig, FederationMode, StoreKind};
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 use crate::util::json::Json;
 
-/// One cell of the sweep grid: a unique (mode, strategy, skew, n_nodes)
-/// combination. Seeds are *trials within* a cell, not part of the key —
-/// the report aggregates across them.
+/// One cell of the sweep grid: a unique (mode, strategy, skew, n_nodes,
+/// compress) combination. Seeds are *trials within* a cell, not part of
+/// the key — the report aggregates across them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellKey {
     /// Federation protocol of this cell.
@@ -33,15 +34,22 @@ pub struct CellKey {
     pub skew: f64,
     /// Node count of this cell.
     pub n_nodes: usize,
+    /// Wire codec of this cell.
+    pub compress: CodecKind,
 }
 
 impl CellKey {
     /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`
-    /// (gossip cells carry the fanout — `gossip3_...` — so two fanouts
-    /// never share a store namespace or report row).
+    /// (gossip cells carry the fanout — `gossip3_...` — and compressed
+    /// cells the codec — `..._n2_q8` — so no two cells ever share a
+    /// store namespace or report row).
     pub fn label(&self) -> String {
+        let compress = match self.compress {
+            CodecKind::None => String::new(),
+            other => format!("_{}", other.label()),
+        };
         format!(
-            "{}_{}_s{}_n{}",
+            "{}_{}_s{}_n{}{compress}",
             self.mode.label(),
             self.strategy.name(),
             self.skew,
@@ -76,6 +84,9 @@ pub struct SweepSpec {
     pub skews: Vec<f64>,
     /// Node-count axis.
     pub node_counts: Vec<usize>,
+    /// Wire-codec axis (`"compress"` key: `none`, `q8`, `topk:<frac>`,
+    /// `delta-q8`).
+    pub compressions: Vec<CodecKind>,
     /// Seeds to run per cell (each seed is one trial).
     pub seeds: Vec<u64>,
     /// Worker threads for the scheduler; 0 = automatic
@@ -92,6 +103,7 @@ impl SweepSpec {
             strategies: vec![base.strategy],
             skews: vec![base.skew],
             node_counts: vec![base.n_nodes],
+            compressions: vec![base.compress],
             seeds: vec![base.seed],
             jobs: 0,
             base,
@@ -101,9 +113,10 @@ impl SweepSpec {
     /// Parse a JSON sweep spec.
     ///
     /// Recognized keys — axes (scalar or array): `modes`, `strategies`,
-    /// `skews`, `n_nodes`, `seeds`; `trials: T` is shorthand for `seeds =
-    /// [seed, seed + 1000, ...]` (the [`crate::sim::run_trials`] seed
-    /// schedule). Scalars forwarded to the base config: `model`, `epochs`,
+    /// `skews`, `n_nodes`, `compress` (wire codec: `"none"`, `"q8"`,
+    /// `"topk:0.1"`, `"delta-q8"`), `seeds`; `trials: T` is shorthand
+    /// for `seeds = [seed, seed + 1000, ...]` (the
+    /// [`crate::sim::run_trials`] seed schedule). Scalars forwarded to the base config: `model`, `epochs`,
     /// `steps_per_epoch`, `sample_prob`, `train_size`, `test_size`,
     /// `seed`, `store`, `latency`, `sync_timeout_s`, `clock` (`"virtual"`
     /// runs every trial on its own simulated clock — straggler/latency
@@ -119,7 +132,7 @@ impl SweepSpec {
         const KNOWN: &[&str] = &[
             "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
-            "modes", "strategies", "skews", "n_nodes", "seeds", "trials", "jobs",
+            "modes", "strategies", "skews", "n_nodes", "compress", "seeds", "trials", "jobs",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -192,6 +205,10 @@ impl SweepSpec {
             None => vec![base.n_nodes],
             Some(v) => axis(v, "n_nodes", |x| int_of(x).map(|n| n as usize))?,
         };
+        let compressions = match obj.get("compress") {
+            None => vec![base.compress],
+            Some(v) => axis(v, "compress", |x| x.as_str().and_then(CodecKind::parse))?,
+        };
 
         let seeds = match (obj.get("seeds"), obj.get("trials")) {
             (Some(_), Some(_)) => {
@@ -212,11 +229,11 @@ impl SweepSpec {
             Some(v) => req_usize(v, "jobs")?,
         };
 
-        Ok(SweepSpec { base, modes, strategies, skews, node_counts, seeds, jobs })
+        Ok(SweepSpec { base, modes, strategies, skews, node_counts, compressions, seeds, jobs })
     }
 
-    /// The grid cells in deterministic (mode, strategy, skew, n_nodes)
-    /// nested order — the row order of the report.
+    /// The grid cells in deterministic (mode, strategy, skew, n_nodes,
+    /// compress) nested order — the row order of the report.
     pub fn cells(&self) -> Vec<CellKey> {
         let mut out =
             Vec::with_capacity(self.modes.len() * self.strategies.len() * self.skews.len());
@@ -224,7 +241,9 @@ impl SweepSpec {
             for &strategy in &self.strategies {
                 for &skew in &self.skews {
                     for &n_nodes in &self.node_counts {
-                        out.push(CellKey { mode, strategy, skew, n_nodes });
+                        for &compress in &self.compressions {
+                            out.push(CellKey { mode, strategy, skew, n_nodes, compress });
+                        }
                     }
                 }
             }
@@ -265,6 +284,7 @@ impl SweepSpec {
                 cfg.strategy = cell.strategy;
                 cfg.skew = cell.skew;
                 cfg.n_nodes = cell.n_nodes;
+                cfg.compress = cell.compress;
                 cfg.seed = seed;
                 if let StoreKind::Fs(root) = &self.base.store {
                     cfg.store =
@@ -491,6 +511,42 @@ mod tests {
         assert_ne!(cells[0], cells[1]);
         assert!(cells[0].label().starts_with("gossip1_"));
         assert!(cells[1].label().starts_with("gossip2_"));
+    }
+
+    #[test]
+    fn compress_axis_expands_into_distinct_cells() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "async", "compress": ["none", "q8", "topk:0.1", "delta-q8"]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            spec.compressions,
+            vec![
+                CodecKind::None,
+                CodecKind::Q8,
+                CodecKind::TopK { frac: 0.1 },
+                CodecKind::DeltaQ8
+            ]
+        );
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        // the uncompressed cell keeps the legacy label; codec cells are
+        // suffixed, so no two cells share a store namespace
+        assert_eq!(cells[0].label(), "async_fedavg_s0_n2");
+        assert_eq!(cells[1].label(), "async_fedavg_s0_n2_q8");
+        assert_eq!(cells[2].label(), "async_fedavg_s0_n2_topk0.1");
+        assert_eq!(cells[3].label(), "async_fedavg_s0_n2_delta-q8");
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 4);
+        assert_eq!(trials[1].cfg.compress, CodecKind::Q8);
+        // scalar value and default also work
+        let spec = SweepSpec::parse_json(r#"{"compress": "q8"}"#).unwrap();
+        assert_eq!(spec.compressions, vec![CodecKind::Q8]);
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.compressions, vec![CodecKind::None]);
+        // bad values are rejected
+        assert!(SweepSpec::parse_json(r#"{"compress": "zip"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"compress": ["topk:0"]}"#).is_err());
     }
 
     #[test]

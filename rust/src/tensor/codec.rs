@@ -1,6 +1,9 @@
 //! Binary blob codec for weight-store entries (the wire/disk format).
 //!
-//! Layout (little-endian):
+//! Two format versions coexist:
+//!
+//! **v1** (raw f32, the original format — still written by [`FsStore`]
+//! and by `compress = none` pushes, still decoded everywhere):
 //! ```text
 //!   magic   u32   0x464C_5752  ("FLWR")
 //!   version u16   1
@@ -13,21 +16,64 @@
 //!   hash    u64   fnv1a64 of the payload bytes
 //!   payload len * 4 bytes of f32 LE
 //! ```
-//! The hash field makes torn/corrupt writes detectable — important for the
-//! `FsStore`, where concurrent readers may observe partially-written files
-//! (the same failure mode an S3 multipart PUT protects against).
+//!
+//! **v2** (codec-encoded, produced by the [`crate::compress`] layer):
+//! ```text
+//!   magic        u32   0x464C_5752  ("FLWR")
+//!   version      u16   2
+//!   flags        u16   reserved, 0
+//!   node_id      u32
+//!   round        u64
+//!   epoch        u64
+//!   n_examples   u64
+//!   codec        u16   codec id (crate::compress::CodecKind::id)
+//!   reserved     u16   0
+//!   base_version u64   base entry the payload deltas against (0 = none)
+//!   uncomp_len   u64   decoded element count (f32 elements)
+//!   enc_len      u64   encoded payload length in bytes
+//!   hash         u64   fnv1a64 of the whole blob with this field zeroed
+//!   payload      enc_len bytes (codec-specific)
+//! ```
+//!
+//! The v1 hash covers the payload only — enough to catch torn writes in
+//! [`FsStore`], the failure mode it was built for. The v2 hash covers
+//! header *and* payload (with the hash field itself zeroed), so any
+//! single corrupted byte anywhere in a v2 blob yields a clean decode
+//! error — never a silently wrong metadata field (exhaustively checked
+//! by the single-byte corruption sweep in this module's tests).
+//!
+//! [`FsStore`]: crate::store::FsStore
 
 use anyhow::{bail, Result};
 
 use super::FlatParams;
 use crate::util::fnv1a64;
+use crate::util::hash::fnv1a64_multi;
 
 /// Blob magic number ("FLWR" little-endian).
 pub const MAGIC: u32 = 0x464C_5752;
-/// Current blob format version.
+/// Raw-f32 blob format version.
 pub const VERSION: u16 = 1;
-/// Fixed header size in bytes (everything before the payload).
+/// Codec-encoded blob format version.
+pub const VERSION_V2: u16 = 2;
+/// Fixed v1 header size in bytes (everything before the payload).
 pub const HEADER_LEN: usize = 4 + 2 + 2 + 4 + 8 + 8 + 8 + 8 + 8;
+/// Fixed v2 header size in bytes (everything before the payload).
+pub const HEADER_LEN_V2: usize = 4 + 2 + 2 + 4 + 8 + 8 + 8 + 2 + 2 + 8 + 8 + 8 + 8;
+
+/// Wire size in bytes of an *uncompressed* (v1) entry of `n` f32
+/// elements, header included — what every push cost before the
+/// compression layer existed, and still the `compress = none` wire cost.
+pub fn raw_wire_bytes(n: usize) -> u64 {
+    (HEADER_LEN + n * 4) as u64
+}
+
+/// Largest element count a blob header may claim (2^28 ≈ 268M f32, ~1 GB
+/// raw — an order of magnitude above the biggest model here). Headers
+/// beyond it are rejected before any decode buffer is allocated from
+/// them; codecs whose payload size doesn't determine `n` (e.g. the topk
+/// sparsifier) enforce the same ceiling on their own decode path.
+pub const MAX_DECODE_ELEMS: usize = 1 << 28;
 
 /// Metadata attached to a serialized weight entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,17 +88,40 @@ pub struct BlobMeta {
     pub n_examples: u64,
 }
 
-/// Serialize params + metadata into a self-validating blob.
-pub fn encode_blob(meta: &BlobMeta, params: &FlatParams) -> Vec<u8> {
-    let payload_len = params.len() * 4;
-    let mut out = Vec::with_capacity(HEADER_LEN + payload_len);
+/// A parsed, integrity-checked blob of either version, with the payload
+/// still encoded. v1 blobs parse as `codec_id = 0` (raw) with the f32
+/// bytes as payload; materialize params with [`decode_blob`] (raw) or
+/// `crate::compress::CodecState::decode_wire` (any codec).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireBlob {
+    /// Entry metadata from the header.
+    pub meta: BlobMeta,
+    /// Which codec encoded the payload (`crate::compress::CodecKind::id`);
+    /// 0 = raw f32.
+    pub codec_id: u16,
+    /// Base entry version the payload deltas against (0 = self-contained).
+    pub base_version: u64,
+    /// Decoded element count.
+    pub uncomp_len: usize,
+    /// The encoded payload bytes.
+    pub payload: Vec<u8>,
+}
+
+fn push_common_header(out: &mut Vec<u8>, version: u16, meta: &BlobMeta) {
     out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&0u16.to_le_bytes());
     out.extend_from_slice(&meta.node_id.to_le_bytes());
     out.extend_from_slice(&meta.round.to_le_bytes());
     out.extend_from_slice(&meta.epoch.to_le_bytes());
     out.extend_from_slice(&meta.n_examples.to_le_bytes());
+}
+
+/// Serialize params + metadata into a self-validating v1 (raw f32) blob.
+pub fn encode_blob(meta: &BlobMeta, params: &FlatParams) -> Vec<u8> {
+    let payload_len = params.len() * 4;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload_len);
+    push_common_header(&mut out, VERSION, meta);
     out.extend_from_slice(&(params.len() as u64).to_le_bytes());
     // hash goes after len; fill payload first, then patch
     let hash_pos = out.len();
@@ -61,6 +130,35 @@ pub fn encode_blob(meta: &BlobMeta, params: &FlatParams) -> Vec<u8> {
         out.extend_from_slice(&x.to_le_bytes());
     }
     let h = fnv1a64(&out[HEADER_LEN..]);
+    out[hash_pos..hash_pos + 8].copy_from_slice(&h.to_le_bytes());
+    out
+}
+
+/// Serialize a codec-encoded payload into a self-validating v2 blob.
+///
+/// `codec_id` names the payload encoding (see
+/// `crate::compress::CodecKind::id`), `base_version` the entry the
+/// payload deltas against (0 = none), `uncomp_len` the decoded element
+/// count. The hash covers the whole blob (hash field zeroed), so any
+/// single-byte corruption is detected at [`read_blob`] time.
+pub fn encode_blob_v2(
+    meta: &BlobMeta,
+    codec_id: u16,
+    base_version: u64,
+    uncomp_len: usize,
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN_V2 + payload.len());
+    push_common_header(&mut out, VERSION_V2, meta);
+    out.extend_from_slice(&codec_id.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&base_version.to_le_bytes());
+    out.extend_from_slice(&(uncomp_len as u64).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let hash_pos = out.len();
+    out.extend_from_slice(&0u64.to_le_bytes());
+    out.extend_from_slice(payload);
+    let h = fnv1a64(&out); // hash field is still zeroed here
     out[hash_pos..hash_pos + 8].copy_from_slice(&h.to_le_bytes());
     out
 }
@@ -75,38 +173,123 @@ fn read_u64(b: &[u8], at: usize) -> u64 {
     u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
 }
 
-/// Decode and validate a blob produced by [`encode_blob`].
-pub fn decode_blob(bytes: &[u8]) -> Result<(BlobMeta, FlatParams)> {
-    if bytes.len() < HEADER_LEN {
+fn read_meta(bytes: &[u8]) -> BlobMeta {
+    BlobMeta {
+        node_id: read_u32(bytes, 8),
+        round: read_u64(bytes, 12),
+        epoch: read_u64(bytes, 20),
+        n_examples: read_u64(bytes, 28),
+    }
+}
+
+/// Parse and integrity-check a blob of either version without decoding
+/// the payload. All header-supplied lengths are validated against the
+/// actual byte count *before* any allocation, so a corrupt header can
+/// never request an absurd allocation.
+pub fn read_blob(bytes: &[u8]) -> Result<WireBlob> {
+    if bytes.len() < HEADER_LEN.min(HEADER_LEN_V2) {
         bail!("blob too short: {} bytes", bytes.len());
     }
     if read_u32(bytes, 0) != MAGIC {
         bail!("bad magic");
     }
-    let version = read_u16(bytes, 4);
-    if version != VERSION {
-        bail!("unsupported blob version {version}");
+    match read_u16(bytes, 4) {
+        VERSION => {
+            if bytes.len() < HEADER_LEN {
+                bail!("v1 blob too short: {} bytes", bytes.len());
+            }
+            let len = read_u64(bytes, 36) as usize;
+            let hash = read_u64(bytes, 44);
+            let payload = &bytes[HEADER_LEN..];
+            let expect = len
+                .checked_mul(4)
+                .filter(|&b| b == payload.len())
+                .is_some();
+            if !expect {
+                bail!("payload length {} != {} * 4 (torn write?)", payload.len(), len);
+            }
+            if fnv1a64(payload) != hash {
+                bail!("payload hash mismatch (corrupt or torn write)");
+            }
+            Ok(WireBlob {
+                meta: read_meta(bytes),
+                codec_id: 0,
+                base_version: 0,
+                uncomp_len: len,
+                payload: payload.to_vec(),
+            })
+        }
+        VERSION_V2 => {
+            if bytes.len() < HEADER_LEN_V2 {
+                bail!("v2 blob too short: {} bytes", bytes.len());
+            }
+            let codec_id = read_u16(bytes, 36);
+            let base_version = read_u64(bytes, 40);
+            let uncomp_len = read_u64(bytes, 48);
+            let enc_len = read_u64(bytes, 56) as usize;
+            let hash = read_u64(bytes, 64);
+            let payload = &bytes[HEADER_LEN_V2..];
+            if payload.len() != enc_len {
+                bail!(
+                    "encoded length {} != payload bytes {} (torn write?)",
+                    enc_len,
+                    payload.len()
+                );
+            }
+            // Reject absurd element counts before anything downstream
+            // allocates a decode buffer from this header field.
+            if uncomp_len > MAX_DECODE_ELEMS as u64 {
+                bail!("implausible uncompressed length {uncomp_len}");
+            }
+            // The v2 hash covers the whole blob with the hash field
+            // zeroed: header corruption is as detectable as payload
+            // corruption.
+            if fnv1a64_multi(&[&bytes[..64], &[0u8; 8], payload]) != hash {
+                bail!("blob hash mismatch (corrupt or torn write)");
+            }
+            Ok(WireBlob {
+                meta: read_meta(bytes),
+                codec_id,
+                base_version,
+                uncomp_len: uncomp_len as usize,
+                payload: payload.to_vec(),
+            })
+        }
+        other => bail!("unsupported blob version {other}"),
     }
-    let meta = BlobMeta {
-        node_id: read_u32(bytes, 8),
-        round: read_u64(bytes, 12),
-        epoch: read_u64(bytes, 20),
-        n_examples: read_u64(bytes, 28),
-    };
-    let len = read_u64(bytes, 36) as usize;
-    let hash = read_u64(bytes, 44);
-    let payload = &bytes[HEADER_LEN..];
-    if payload.len() != len * 4 {
-        bail!("payload length {} != {} * 4 (torn write?)", payload.len(), len);
+}
+
+/// Decode raw f32 payload bytes into params (shared by the v1 path and
+/// the raw v2 codec).
+pub fn decode_raw_payload(payload: &[u8], uncomp_len: usize) -> Result<FlatParams> {
+    let expect = uncomp_len
+        .checked_mul(4)
+        .filter(|&b| b == payload.len())
+        .is_some();
+    if !expect {
+        bail!("raw payload is {} bytes, want {} * 4", payload.len(), uncomp_len);
     }
-    if fnv1a64(payload) != hash {
-        bail!("payload hash mismatch (corrupt or torn write)");
-    }
-    let mut xs = Vec::with_capacity(len);
+    let mut xs = Vec::with_capacity(uncomp_len);
     for chunk in payload.chunks_exact(4) {
         xs.push(f32::from_le_bytes(chunk.try_into().unwrap()));
     }
-    Ok((meta, FlatParams(xs)))
+    Ok(FlatParams(xs))
+}
+
+/// Decode and validate a *self-contained* blob: v1, or v2 with the raw
+/// codec. Codec-encoded v2 blobs (quantized/sparse/delta payloads) need
+/// the [`crate::compress`] layer — use
+/// `crate::compress::CodecState::decode_wire` for those.
+pub fn decode_blob(bytes: &[u8]) -> Result<(BlobMeta, FlatParams)> {
+    let wire = read_blob(bytes)?;
+    if wire.codec_id != 0 {
+        bail!(
+            "blob payload uses codec id {} — decode via the compress layer",
+            wire.codec_id
+        );
+    }
+    let params = decode_raw_payload(&wire.payload, wire.uncomp_len)?;
+    Ok((wire.meta, params))
 }
 
 #[cfg(test)]
@@ -157,5 +340,121 @@ mod tests {
         let mut blob2 = encode_blob(&meta(), &FlatParams(vec![1.0]));
         blob2[4] = 99;
         assert!(decode_blob(&blob2).is_err());
+    }
+
+    #[test]
+    fn v1_corrupt_length_is_a_clean_error_not_an_allocation() {
+        // A header that claims ~2^62 elements used to hit `len * 4`
+        // unchecked arithmetic and a Vec::with_capacity of that size.
+        let mut blob = encode_blob(&meta(), &FlatParams(vec![1.0; 4]));
+        blob[36..44].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = decode_blob(&blob).unwrap_err();
+        assert!(format!("{err}").contains("payload length"), "{err}");
+        // A large-but-not-overflowing claimed length is also rejected
+        // before any allocation sized from the header.
+        let mut blob = encode_blob(&meta(), &FlatParams(vec![1.0; 4]));
+        blob[36..44].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(decode_blob(&blob).is_err());
+    }
+
+    #[test]
+    fn v2_round_trip_preserves_every_field() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let blob = encode_blob_v2(&meta(), 3, 17, 512, &payload);
+        assert_eq!(blob.len(), HEADER_LEN_V2 + payload.len());
+        let wire = read_blob(&blob).unwrap();
+        assert_eq!(wire.meta, meta());
+        assert_eq!(wire.codec_id, 3);
+        assert_eq!(wire.base_version, 17);
+        assert_eq!(wire.uncomp_len, 512);
+        assert_eq!(wire.payload, payload);
+    }
+
+    #[test]
+    fn v1_blobs_parse_through_read_blob() {
+        // v1 → v2-API compatibility: the old format reads as a raw-codec
+        // WireBlob with identical metadata and payload bytes.
+        let p = FlatParams(vec![4.25, -1.5, 0.0]);
+        let blob = encode_blob(&meta(), &p);
+        let wire = read_blob(&blob).unwrap();
+        assert_eq!(wire.meta, meta());
+        assert_eq!(wire.codec_id, 0);
+        assert_eq!(wire.base_version, 0);
+        assert_eq!(wire.uncomp_len, 3);
+        assert_eq!(decode_raw_payload(&wire.payload, wire.uncomp_len).unwrap(), p);
+    }
+
+    #[test]
+    fn v2_raw_blob_decodes_via_decode_blob() {
+        // a v2 blob whose payload is plain f32 bytes (codec id 0) is
+        // self-contained, so the v1 entry point accepts it
+        let p = FlatParams(vec![1.0, 2.0]);
+        let mut payload = Vec::new();
+        for x in p.as_slice() {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let blob = encode_blob_v2(&meta(), 0, 0, p.len(), &payload);
+        let (m2, p2) = decode_blob(&blob).unwrap();
+        assert_eq!(m2, meta());
+        assert_eq!(p2, p);
+    }
+
+    #[test]
+    fn v2_codec_blob_is_rejected_by_decode_blob() {
+        let blob = encode_blob_v2(&meta(), 1, 0, 8, &[0u8; 16]);
+        let err = decode_blob(&blob).unwrap_err();
+        assert!(format!("{err}").contains("compress layer"), "{err}");
+        // ...but parses fine through the version-aware entry point
+        assert!(read_blob(&blob).is_ok());
+    }
+
+    #[test]
+    fn v2_single_byte_corruption_sweep_always_errors() {
+        // Flip every byte of a small v2 blob, one at a time: every flip
+        // must yield Err — never a panic, and never a silent decode with
+        // wrong metadata (the v1 hash covered only the payload, so a
+        // flipped node_id byte used to decode "successfully").
+        let payload: Vec<u8> = vec![7, 8, 9, 10, 11];
+        let blob = encode_blob_v2(&meta(), 2, 5, 40, &payload);
+        let clean = read_blob(&blob).unwrap();
+        for i in 0..blob.len() {
+            for flip in [0xFFu8, 0x01] {
+                let mut bad = blob.clone();
+                bad[i] ^= flip;
+                match read_blob(&bad) {
+                    Err(_) => {}
+                    Ok(decoded) => panic!(
+                        "byte {i} flipped with {flip:#x} decoded silently: {decoded:?} vs {clean:?}"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v2_truncation_and_length_lies_error_cleanly() {
+        let blob = encode_blob_v2(&meta(), 1, 0, 64, &[3u8; 64]);
+        for cut in [0, 1, 10, HEADER_LEN_V2 - 1, HEADER_LEN_V2, blob.len() - 1] {
+            assert!(read_blob(&blob[..cut]).is_err(), "cut at {cut}");
+        }
+        // a header claiming an absurd uncompressed length is rejected
+        // even when the hash is recomputed to match (a hostile blob, not
+        // just a torn one)
+        let huge = (u32::MAX as u64 + 1).to_le_bytes();
+        let mut bad = blob.clone();
+        bad[48..56].copy_from_slice(&huge);
+        bad[64..72].copy_from_slice(&0u64.to_le_bytes());
+        let h = fnv1a64(&bad);
+        bad[64..72].copy_from_slice(&h.to_le_bytes());
+        let err = read_blob(&bad).unwrap_err();
+        assert!(format!("{err}").contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn raw_wire_bytes_matches_encoded_size() {
+        for n in [0usize, 1, 7, 1000] {
+            let blob = encode_blob(&meta(), &FlatParams(vec![0.5; n]));
+            assert_eq!(raw_wire_bytes(n), blob.len() as u64);
+        }
     }
 }

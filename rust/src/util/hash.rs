@@ -4,10 +4,19 @@
 
 /// FNV-1a over a byte slice.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_multi(&[bytes])
+}
+
+/// FNV-1a over the concatenation of several byte slices, without
+/// materializing the concatenation — used by the blob codec to hash a
+/// header with its hash field treated as zeroed.
+pub fn fnv1a64_multi(parts: &[&[u8]]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
     }
     h
 }
@@ -58,5 +67,11 @@ mod tests {
     #[test]
     fn combine_is_order_sensitive() {
         assert_ne!(combine(1, 2), combine(2, 1));
+    }
+
+    #[test]
+    fn multi_part_hash_matches_concatenation() {
+        assert_eq!(fnv1a64_multi(&[b"ab", b"", b"cd"]), fnv1a64(b"abcd"));
+        assert_eq!(fnv1a64_multi(&[]), fnv1a64(b""));
     }
 }

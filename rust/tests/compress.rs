@@ -1,0 +1,322 @@
+//! Compression end-to-end: the acceptance scenario for the codec
+//! subsystem. A 4-node async federation under `clock = virtual` with a
+//! bandwidth-limited simulated-S3 store must move ≥3× fewer wire bytes
+//! and finish in strictly less *simulated* wall-clock with `compress =
+//! q8` than with `compress = none`, at identical `bytes_per_sec` — and
+//! `compress = none` must keep the store contents bit-identical to the
+//! pre-codec behaviour.
+//!
+//! The protocol-level harness below needs no artifacts or PJRT runtime;
+//! the `run_experiment` end-to-end test skips itself when the artifacts
+//! are not built (same environment contract as
+//! `rust/tests/integration.rs`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fedless::compress::{CodecKind, CodecState};
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::metrics::timeline::Timeline;
+use fedless::metrics::TrafficMeter;
+use fedless::protocol::ProtocolKind;
+use fedless::store::{LatencyConfig, LatencyStore, MemoryStore, WeightStore};
+use fedless::strategy::StrategyKind;
+use fedless::tensor::codec::raw_wire_bytes;
+use fedless::tensor::FlatParams;
+use fedless::time::{Clock, ParticipantGuard, VirtualClock};
+
+const N_NODES: usize = 4;
+const EPOCHS: usize = 6;
+const PARAMS: usize = 4_096;
+
+/// What one simulated node reports back.
+struct SimNode {
+    finish: Duration,
+    traffic: TrafficMeter,
+    params: FlatParams,
+}
+
+/// Drive a 4-node async federation on a virtual clock over a
+/// bandwidth-limited store: each epoch is one `clock.sleep` ("training",
+/// distinct per node) followed by the protocol's `after_epoch`, with
+/// every push running through `compress`.
+fn run_sim(compress: CodecKind, bytes_per_sec: u64) -> (Duration, Vec<SimNode>) {
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig {
+        mode: FederationMode::Async,
+        n_nodes: N_NODES,
+        compress,
+        ..Default::default()
+    };
+    let lat = LatencyConfig {
+        base: Duration::from_millis(5),
+        jitter: Duration::ZERO,
+        bytes_per_sec,
+    };
+    let store: Arc<dyn WeightStore> = Arc::new(LatencyStore::with_clock(
+        MemoryStore::with_clock(Arc::clone(&clock)),
+        lat,
+        7,
+        Arc::clone(&clock),
+    ));
+    for _ in 0..N_NODES {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(N_NODES));
+    let nodes = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N_NODES)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let store = Arc::clone(&store);
+                let cfg = cfg.clone();
+                let start = Arc::clone(&start);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = StrategyKind::FedAvg.build();
+                    let mut codec = CodecState::new(cfg.compress);
+                    let mut timeline = Timeline::new(node_id);
+                    // distinct starting weights so averaging is visible,
+                    // in a training-like range
+                    let mut params = FlatParams(
+                        (0..PARAMS)
+                            .map(|i| ((i as f32) * 0.0113).sin() * 0.5 + node_id as f32 * 0.01)
+                            .collect(),
+                    );
+                    start.wait();
+                    for epoch in 0..EPOCHS {
+                        // distinct per-node train time so no two nodes
+                        // share a simulated instant
+                        clock.sleep(Duration::from_millis(40 + 7 * node_id as u64));
+                        let mut ctx = fedless::protocol::EpochCtx {
+                            node_id,
+                            n_nodes: N_NODES,
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout: Duration::from_secs(3600),
+                            clock: clock.as_ref(),
+                            codec: &mut codec,
+                        };
+                        protocol.after_epoch(&mut ctx, &mut params).unwrap();
+                    }
+                    SimNode { finish: clock.now(), traffic: timeline.traffic, params }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<SimNode>>()
+    });
+    let wall = nodes.iter().map(|n| n.finish).max().unwrap();
+    (wall, nodes)
+}
+
+fn total_traffic(nodes: &[SimNode]) -> TrafficMeter {
+    let mut t = TrafficMeter::default();
+    for n in nodes {
+        t.merge(&n.traffic);
+    }
+    t
+}
+
+/// The acceptance scenario, artifact-free: q8 moves ≥3× fewer wire
+/// bytes and finishes strictly sooner in simulated time at identical
+/// bandwidth, while staying close to the uncompressed weights.
+#[test]
+fn q8_cuts_wire_bytes_3x_and_simulated_wall_clock_at_equal_bandwidth() {
+    let bytes_per_sec = 1_000_000; // 1 MB/s: transfers dominate
+    let t_real = Instant::now();
+    let (wall_none, nodes_none) = run_sim(CodecKind::None, bytes_per_sec);
+    let (wall_q8, nodes_q8) = run_sim(CodecKind::Q8, bytes_per_sec);
+    assert!(
+        t_real.elapsed() < Duration::from_secs(30),
+        "virtual-clock runs must be CPU-bound, took {:?}",
+        t_real.elapsed()
+    );
+
+    let t_none = total_traffic(&nodes_none);
+    let t_q8 = total_traffic(&nodes_q8);
+    // same protocol schedule: identical push counts
+    assert_eq!(t_none.pushes, (N_NODES * EPOCHS) as u64);
+    assert_eq!(t_q8.pushes, t_none.pushes);
+    // uncompressed accounting is exact: every push is one v1 blob
+    assert_eq!(t_none.bytes_pushed, t_none.pushes * raw_wire_bytes(PARAMS));
+
+    // >= 3x fewer wire bytes in *each* direction and in total
+    assert!(
+        t_none.bytes_pushed as f64 >= 3.0 * t_q8.bytes_pushed as f64,
+        "push bytes: none {} vs q8 {}",
+        t_none.bytes_pushed,
+        t_q8.bytes_pushed
+    );
+    assert!(
+        t_none.total_bytes() as f64 >= 3.0 * t_q8.total_bytes() as f64,
+        "total bytes: none {} vs q8 {}",
+        t_none.total_bytes(),
+        t_q8.total_bytes()
+    );
+
+    // strictly lower simulated wall-clock at the same bytes_per_sec
+    assert!(
+        wall_q8 < wall_none,
+        "q8 must finish sooner: {wall_q8:?} vs {wall_none:?}"
+    );
+
+    // lossy but bounded: final weights stay close to the uncompressed
+    // run's (per-push error is (chunk range)/255/2; six epochs of
+    // averaging keep the accumulated drift far below this tolerance)
+    for (a, b) in nodes_none.iter().zip(&nodes_q8) {
+        let drift = a.params.max_abs_diff(&b.params);
+        assert!(drift < 0.05, "node drift {drift} too large for q8");
+        assert!(b.params.all_finite());
+    }
+}
+
+/// `compress = none` is the pre-codec system, bit for bit: entries
+/// deposited through the codec-threaded push path carry the identical
+/// params and the raw v1 wire size.
+#[test]
+fn compress_none_is_bit_identical_to_the_uncompressed_path() {
+    let (_, nodes) = run_sim(CodecKind::None, 0);
+    for n in &nodes {
+        assert_eq!(
+            n.traffic.bytes_pushed,
+            EPOCHS as u64 * raw_wire_bytes(PARAMS),
+            "every push costs exactly the v1 blob"
+        );
+    }
+
+    // and directly: a TestNode-shaped push deposits the exact input bits
+    let store = MemoryStore::new();
+    let cfg = ExperimentConfig {
+        mode: FederationMode::Async,
+        n_nodes: 2,
+        ..Default::default()
+    };
+    let mut protocol = ProtocolKind::from(cfg.mode).build(0, &cfg);
+    let mut strategy = StrategyKind::FedAvg.build();
+    let mut codec = CodecState::new(CodecKind::None);
+    let mut timeline = Timeline::new(0);
+    let mut params = FlatParams(vec![0.123456789, -7.25, 3.0e-20, 1.5e20]);
+    let clock = fedless::time::RealClock::shared();
+    let mut ctx = fedless::protocol::EpochCtx {
+        node_id: 0,
+        n_nodes: 2,
+        epoch: 0,
+        n_examples: 100,
+        store: &store,
+        strategy: strategy.as_mut(),
+        timeline: &mut timeline,
+        sync_timeout: Duration::from_secs(1),
+        clock: clock.as_ref(),
+        codec: &mut codec,
+    };
+    let expected = params.clone();
+    protocol.after_epoch(&mut ctx, &mut params).unwrap();
+    let e = store.latest_for_node(0).unwrap().unwrap();
+    for (a, b) in e.params.0.iter().zip(expected.0.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "stored bits must be the input bits");
+    }
+    assert_eq!(e.wire_bytes, raw_wire_bytes(4));
+}
+
+/// Delta-q8 costs exactly one flag byte per push over plain q8 (the
+/// tighter-reconstruction half of the trade is unit-tested in
+/// `compress/delta.rs`).
+#[test]
+fn delta_q8_wire_cost_is_q8_plus_flag_byte() {
+    let bytes_per_sec = 1_000_000;
+    let (_, nodes_q8) = run_sim(CodecKind::Q8, bytes_per_sec);
+    let (_, nodes_dq8) = run_sim(CodecKind::DeltaQ8, bytes_per_sec);
+    let t_q8 = total_traffic(&nodes_q8);
+    let t_dq8 = total_traffic(&nodes_dq8);
+    // same pushes; delta adds exactly one flag byte per push
+    assert_eq!(t_dq8.pushes, t_q8.pushes);
+    assert_eq!(t_dq8.bytes_pushed, t_q8.bytes_pushed + t_q8.pushes);
+    for n in &nodes_dq8 {
+        assert!(n.params.all_finite());
+    }
+}
+
+/// TopK sparsification shows up in the accounting with its own ratio.
+#[test]
+fn topk_wire_bytes_match_the_kept_fraction() {
+    let (_, nodes) = run_sim(CodecKind::TopK { frac: 0.1 }, 0);
+    let t = total_traffic(&nodes);
+    let k = (PARAMS as f64 * 0.1).ceil() as u64;
+    // per push: v2 header (72) + count (4) + 8k pair bytes
+    let per_push = 72 + 4 + 8 * k;
+    assert_eq!(t.bytes_pushed, t.pushes * per_push);
+    assert!(
+        t.bytes_pushed * 4 < t.pushes * raw_wire_bytes(PARAMS),
+        "topk:0.1 must be >4x smaller on the wire"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end through run_experiment (skipped without artifacts)
+
+fn have_artifacts() -> bool {
+    fedless::runtime::Manifest::discover().is_ok()
+}
+
+/// The full acceptance criterion through `run_experiment`: a 4-node
+/// async mnist run under `clock = virtual` with a bandwidth-limited
+/// store reports ≥3× fewer wire bytes via `TrafficMeter` and strictly
+/// lower simulated `wall_clock_s` with `compress = q8` than with
+/// `compress = none`, with the final-accuracy delta within the codec's
+/// conformance bound's reach.
+#[test]
+fn e2e_q8_beats_none_on_bytes_and_simulated_wall_clock() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let base = ExperimentConfig {
+        model: "mnist".into(),
+        n_nodes: 4,
+        mode: FederationMode::Async,
+        epochs: 3,
+        steps_per_epoch: 10,
+        train_size: 1_200,
+        test_size: 160,
+        seed: 11,
+        clock: fedless::config::ClockKind::Virtual,
+        latency: Some(LatencyConfig {
+            base: Duration::from_millis(10),
+            jitter: Duration::ZERO,
+            bytes_per_sec: 5_000_000,
+        }),
+        ..Default::default()
+    };
+
+    let none = fedless::sim::run_experiment(&base).unwrap();
+    let q8 = fedless::sim::run_experiment(&ExperimentConfig {
+        compress: CodecKind::Q8,
+        ..base.clone()
+    })
+    .unwrap();
+
+    assert!(none.all_completed && q8.all_completed);
+    let t_none = none.total_traffic();
+    let t_q8 = q8.total_traffic();
+    assert!(t_none.total_bytes() > 0);
+    assert!(
+        t_none.total_bytes() as f64 >= 3.0 * t_q8.total_bytes() as f64,
+        "wire bytes: none {} vs q8 {}",
+        t_none.total_bytes(),
+        t_q8.total_bytes()
+    );
+    assert!(
+        q8.wall_clock_s < none.wall_clock_s,
+        "simulated wall-clock: q8 {} vs none {}",
+        q8.wall_clock_s,
+        none.wall_clock_s
+    );
+    let acc_delta = (q8.final_accuracy - none.final_accuracy).abs();
+    assert!(
+        acc_delta < 0.1,
+        "q8 accuracy must track the uncompressed run: delta {acc_delta}"
+    );
+}

@@ -177,13 +177,7 @@ fn prop_store_latest_is_max_seq() {
             let node = rng.below(6);
             let val = rng.normal_f32();
             let seq = store
-                .push(PushRequest {
-                    node_id: node,
-                    round: 0,
-                    epoch: 0,
-                    n_examples: 1,
-                    params: Arc::new(FlatParams(vec![val; 3])),
-                })
+                .push(PushRequest::raw(node, 0, 0, 1, Arc::new(FlatParams(vec![val; 3]))))
                 .unwrap();
             expected.insert(node, (seq, val));
         }

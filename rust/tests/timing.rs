@@ -81,6 +81,7 @@ fn run_sim(
                     let _p = ParticipantGuard::adopt(Arc::clone(&clock));
                     let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
                     let mut strategy = StrategyKind::FedAvg.build();
+                    let mut codec = fedless::compress::CodecState::new(cfg.compress);
                     let mut timeline = Timeline::new(node_id);
                     // distinct starting weights so averaging is visible
                     let mut params = FlatParams(vec![node_id as f32; 4]);
@@ -103,6 +104,7 @@ fn run_sim(
                             timeline: &mut timeline,
                             sync_timeout,
                             clock: clock.as_ref(),
+                            codec: &mut codec,
                         };
                         let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
                         if out.stalled_at.is_some() {
@@ -276,13 +278,13 @@ fn store_wait_for_change_parks_in_simulated_time() {
                 let _p = ParticipantGuard::adopt(Arc::clone(&clock));
                 clock.sleep(ms(50));
                 store
-                    .push(fedless::store::PushRequest {
-                        node_id: 0,
-                        round: 0,
-                        epoch: 0,
-                        n_examples: 1,
-                        params: Arc::new(FlatParams(vec![1.0; 4])),
-                    })
+                    .push(fedless::store::PushRequest::raw(
+                        0,
+                        0,
+                        0,
+                        1,
+                        Arc::new(FlatParams(vec![1.0; 4])),
+                    ))
                     .unwrap();
             })
         };
@@ -405,12 +407,12 @@ fn golden_sweep_report_under_virtual_clock() {
     );
 
     let golden = "\n\
-| mode | strategy | skew | nodes | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s |\n\
-|------|----------|------|-------|--------|-----------------------|-------------------|--------------|\n\
-| sync | fedavg | 0 | 2 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 |\n\
-| sync | fedavg | 0.5 | 2 | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 |\n\
-| async | fedavg | 0 | 2 | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 |\n\
-| async | fedavg | 0.5 | 2 | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 |";
+| mode | strategy | skew | nodes | compress | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 2 | none | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0.5 | 2 | none | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 2 | none | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0.5 | 2 | none | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,
