@@ -42,7 +42,7 @@ fn measure(kind: CodecKind, n: usize, iters: usize) -> Row {
     state.set_base(1, &base);
     let meta = BlobMeta { node_id: 0, round: 0, epoch: 0, n_examples: 1 };
     let (wire_bytes, reconstruction) =
-        state.encode_for_push(&meta, &params).expect("encode_for_push");
+        state.encode_for_push(&meta, &params, fedless::par::ChunkPool::sequential()).expect("encode_for_push");
 
     // encode / decode payload throughput (codec only, no blob framing)
     let b = Some(&base);

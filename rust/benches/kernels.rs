@@ -1,0 +1,189 @@
+//! Hot-path kernel microbench — the perf trajectory of the [`fedless::par`]
+//! kernel layer. Measures GB/s for:
+//!
+//! * **aggregation** — the old K-sweep axpy loop vs the fused one-pass
+//!   `weighted_average` (sequential and pooled at 1/2/8 threads)
+//! * **codec** — q8 encode/decode, scalar vs chunk-parallel
+//! * **hash** — byte-at-a-time FNV (`hash_f32s`) vs the word-at-a-time
+//!   chunked hash (sequential and pooled)
+//!
+//! at mnist-/lm-/14M-sized parameter vectors. Results land in
+//! `BENCH_kernels.json` (re-run after kernel changes and compare; CI
+//! runs `--check` mode — tiny size, few iters, same artifact shape — and
+//! uploads the file). All variants compute bit-identical results; only
+//! the GB/s may move. Needs no artifacts or PJRT runtime.
+//!
+//! Run: `cargo bench --offline --bench kernels [-- --check]`
+
+use std::fmt::Write as _;
+use std::fs;
+use std::time::Instant;
+
+use fedless::compress::{Codec, Q8};
+use fedless::par::ChunkPool;
+use fedless::tensor::flat::{weighted_average_pooled, FlatParams};
+use fedless::util::hash::{chunked_hash_f32s_pooled, hash_f32s};
+use fedless::util::Rng;
+
+const K: usize = 5; // clients per aggregation (a paper-sized fan-in)
+
+struct Row {
+    kernel: &'static str,
+    params: usize,
+    threads: usize,
+    gbps: f64,
+}
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t.elapsed().as_secs_f64() / iters as f64
+}
+
+fn gbps(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn random_params(rng: &mut Rng, n: usize) -> FlatParams {
+    FlatParams((0..n).map(|_| rng.normal_f32()).collect())
+}
+
+/// The replaced aggregation: K full memory sweeps over the output.
+fn axpy_sweeps(xs: &[&FlatParams], weights: &[f32]) -> FlatParams {
+    let mut out = FlatParams::zeros(xs[0].len());
+    for (x, &w) in xs.iter().zip(weights) {
+        out.axpy(w, x);
+    }
+    out
+}
+
+fn bench_size(n: usize, iters: usize, threads: &[usize], rows: &mut Vec<Row>) {
+    let mut rng = Rng::new(n as u64 ^ 0xBEEF);
+    let clients: Vec<FlatParams> = (0..K).map(|_| random_params(&mut rng, n)).collect();
+    let refs: Vec<&FlatParams> = clients.iter().collect();
+    let w = vec![1.0 / K as f32; K];
+    let agg_bytes = n * 4 * K; // bytes read per aggregation
+
+    println!("\n--- {n} params ---");
+    let mut push = |kernel: &'static str, threads: usize, bytes: usize, secs: f64| {
+        let r = Row { kernel, params: n, threads, gbps: gbps(bytes, secs) };
+        println!("{:>24}  t={:<2}  {:>8.2} GB/s", r.kernel, r.threads, r.gbps);
+        rows.push(r);
+    };
+
+    // aggregation: K-sweep axpy baseline, then fused at each thread count
+    let s = time(iters, || {
+        std::hint::black_box(axpy_sweeps(&refs, &w));
+    });
+    push("agg_axpy_ksweep", 1, agg_bytes, s);
+    for &t in threads {
+        let pool = ChunkPool::new(t);
+        let s = time(iters, || {
+            std::hint::black_box(weighted_average_pooled(&refs, &w, pool));
+        });
+        push("agg_fused", t, agg_bytes, s);
+    }
+
+    // codec: q8 encode/decode, scalar vs pooled (bytes = raw f32 moved)
+    let p = &clients[0];
+    for &t in threads {
+        let pool = ChunkPool::new(t);
+        let s = time(iters, || {
+            std::hint::black_box(Q8.encode_pooled(p, None, pool));
+        });
+        push("q8_encode", t, n * 4, s);
+        let enc = Q8.encode_pooled(p, None, pool);
+        let s = time(iters, || {
+            std::hint::black_box(Q8.decode_pooled(&enc, n, None, pool).unwrap());
+        });
+        push("q8_decode", t, n * 4, s);
+    }
+
+    // hash: byte-at-a-time FNV baseline vs chunked word-at-a-time
+    let s = time(iters, || {
+        std::hint::black_box(hash_f32s(p.as_slice()));
+    });
+    push("hash_fnv_bytewise", 1, n * 4, s);
+    for &t in threads {
+        let pool = ChunkPool::new(t);
+        let s = time(iters, || {
+            std::hint::black_box(chunked_hash_f32s_pooled(p.as_slice(), pool));
+        });
+        push("hash_chunked", t, n * 4, s);
+    }
+}
+
+/// GB/s of `kernel` at (`params`, `threads`), if measured.
+fn lookup(rows: &[Row], kernel: &str, params: usize, threads: usize) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.kernel == kernel && r.params == params && r.threads == threads)
+        .map(|r| r.gbps)
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    // check mode: one small size and few iters — validates the bench
+    // end-to-end and keeps the artifact shape without burning minutes
+    let (sizes, iters): (Vec<usize>, usize) = if check {
+        (vec![20_490], 5)
+    } else {
+        (vec![20_490, 470_528, 14_000_000], 8)
+    };
+    let threads = [1usize, 2, 8];
+    println!(
+        "fedless kernel microbench ({} mode): fused agg vs axpy, parallel q8, chunked hash",
+        if check { "check" } else { "full" }
+    );
+
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        let it = if n > 1_000_000 { 3 } else { iters };
+        bench_size(n, it, &threads, &mut rows);
+    }
+
+    // headline speedups at the largest size (the acceptance ratios)
+    let big = *sizes.last().unwrap();
+    let ratio = |a: Option<f64>, b: Option<f64>| -> f64 {
+        match (a, b) {
+            (Some(a), Some(b)) if b > 0.0 => a / b,
+            _ => 0.0,
+        }
+    };
+    let agg_speedup =
+        ratio(lookup(&rows, "agg_fused", big, 8), lookup(&rows, "agg_axpy_ksweep", big, 1));
+    let q8_speedup = ratio(lookup(&rows, "q8_encode", big, 8), lookup(&rows, "q8_encode", big, 1));
+    let hash_speedup =
+        ratio(lookup(&rows, "hash_chunked", big, 8), lookup(&rows, "hash_fnv_bytewise", big, 1));
+    println!("\nheadline at {big} params:");
+    println!("  fused agg (8t) vs axpy K-sweep : {agg_speedup:.2}x");
+    println!("  parallel q8 encode (8t) vs 1t  : {q8_speedup:.2}x");
+    println!("  chunked hash (8t) vs FNV       : {hash_speedup:.2}x");
+
+    let mut json = String::from("{\n  \"bench\": \"hot_path_kernels\",\n");
+    let _ = writeln!(json, "  \"clients_per_agg\": {K},");
+    let _ = writeln!(json, "  \"check_mode\": {check},");
+    let _ = writeln!(json, "  \"provenance\": \"measured\",");
+    let _ = writeln!(
+        json,
+        "  \"headline\": {{\"params\": {big}, \"fused_agg_8t_vs_axpy\": {agg_speedup:.3}, \
+         \"q8_encode_8t_vs_1t\": {q8_speedup:.3}, \"chunked_hash_8t_vs_fnv\": {hash_speedup:.3}}},"
+    );
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"kernel\": \"{}\", \"params\": {}, \"threads\": {}, \"gbps\": {:.3}}}{}",
+            r.kernel,
+            r.params,
+            r.threads,
+            r.gbps,
+            if i + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    json.push_str("  ]\n}\n");
+    fs::write("BENCH_kernels.json", &json).expect("write BENCH_kernels.json");
+    println!("\nwrote BENCH_kernels.json");
+}

@@ -9,7 +9,8 @@
 //! fedbench all           every table at the chosen scale
 //! fedbench run [--mode sync|async|local|gossip[:m]] [--model M]
 //!              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]
-//!              [--compress none|q8|topk:<f>|delta-q8] [--virtual-clock]
+//!              [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N]
+//!              [--virtual-clock]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
 //!                        `fedbench run --mode gossip:2 --nodes 5` or a
@@ -398,6 +399,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 cfg.compress = CodecKind::parse(value)
                     .ok_or_else(|| format!("bad --compress {value:?}"))?;
             }
+            "--threads" => {
+                cfg.threads = fedless::config::parse_threads(value)
+                    .ok_or_else(|| format!("bad --threads {value:?} (auto or >= 1)"))?;
+            }
             "--scale" => {
                 scale = Scale::parse(value).ok_or_else(|| format!("bad --scale {value:?}"))?;
             }
@@ -428,10 +433,12 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("mode         : {}", cfg.mode.label());
     println!("clock        : {}", cfg.clock.name());
     println!("compress     : {}", cfg.compress.label());
+    println!("threads      : {}", fedless::config::threads_label(cfg.threads));
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
     println!("store pushes : {}", res.store_pushes);
+    println!("model digest : {:016x}", res.global_hash);
     println!(
         "wire pushed  : {:.3} MB ({} pushes)",
         traffic.mb_pushed(),
@@ -524,7 +531,8 @@ fn main() {
              [--virtual-clock]\n\
              \x20      fedbench run [--mode sync|async|local|gossip[:m]] [--model M] \
              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S] \
-             [--compress none|q8|topk:<f>|delta-q8] [--virtual-clock]\n\
+             [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N] \
+             [--virtual-clock]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);

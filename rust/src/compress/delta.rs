@@ -3,9 +3,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::par::ChunkPool;
+use crate::tensor::flat::PAR_CHUNK;
 use crate::tensor::FlatParams;
 
-use super::q8::{q8_decode, q8_encode, q8_error_bound};
+use super::q8::{q8_decode_pooled, q8_encode_pooled, q8_error_bound};
 use super::{Codec, CodecKind};
 
 /// Payload flag: self-contained full quantization (no base used).
@@ -24,6 +26,11 @@ const FLAG_DELTA: u8 = 1;
 /// plus the flag byte. Error bound (per element): half a quantization
 /// step of the *encoded* vector — the delta in delta mode, the raw
 /// params in fallback mode.
+///
+/// Both directions run chunk-parallel: the delta subtraction / base
+/// re-addition split on fixed [`PAR_CHUNK`] boundaries and the quantizer
+/// on its own fixed chunks, so payloads and reconstructions are
+/// bit-identical for any thread count.
 pub struct DeltaQ8;
 
 fn usable_base<'a>(params: &FlatParams, base: Option<&'a FlatParams>) -> Option<&'a FlatParams> {
@@ -35,29 +42,49 @@ impl Codec for DeltaQ8 {
         CodecKind::DeltaQ8
     }
 
-    fn encode(&self, params: &FlatParams, base: Option<&FlatParams>) -> Vec<u8> {
+    fn encode_pooled(
+        &self,
+        params: &FlatParams,
+        base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Vec<u8> {
         match usable_base(params, base) {
             Some(b) => {
-                let delta: Vec<f32> =
-                    params.as_slice().iter().zip(b.as_slice()).map(|(x, y)| x - y).collect();
-                let mut out = q8_encode(&delta);
+                let mut delta = vec![0.0f32; params.len()];
+                let items: Vec<((&mut [f32], &[f32]), &[f32])> = delta
+                    .chunks_mut(PAR_CHUNK)
+                    .zip(params.as_slice().chunks(PAR_CHUNK))
+                    .zip(b.as_slice().chunks(PAR_CHUNK))
+                    .collect();
+                pool.for_each(items, |_, ((d, x), y)| {
+                    for ((d, &x), &y) in d.iter_mut().zip(x).zip(y) {
+                        *d = x - y;
+                    }
+                });
+                let mut out = q8_encode_pooled(&delta, pool);
                 out.insert(0, FLAG_DELTA);
                 out
             }
             None => {
-                let mut out = q8_encode(params.as_slice());
+                let mut out = q8_encode_pooled(params.as_slice(), pool);
                 out.insert(0, FLAG_FULL);
                 out
             }
         }
     }
 
-    fn decode(&self, payload: &[u8], n: usize, base: Option<&FlatParams>) -> Result<FlatParams> {
+    fn decode_pooled(
+        &self,
+        payload: &[u8],
+        n: usize,
+        base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Result<FlatParams> {
         let Some((&flag, body)) = payload.split_first() else {
             bail!("delta-q8 payload is empty");
         };
         match flag {
-            FLAG_FULL => Ok(FlatParams(q8_decode(body, n)?)),
+            FLAG_FULL => Ok(FlatParams(q8_decode_pooled(body, n, pool)?)),
             FLAG_DELTA => {
                 let Some(b) = base.filter(|b| b.len() == n) else {
                     bail!(
@@ -66,10 +93,15 @@ impl Codec for DeltaQ8 {
                         base.map(FlatParams::len)
                     );
                 };
-                let delta = q8_decode(body, n)?;
-                Ok(FlatParams(
-                    b.as_slice().iter().zip(delta.iter()).map(|(y, d)| y + d).collect(),
-                ))
+                let mut delta = q8_decode_pooled(body, n, pool)?;
+                let items: Vec<(&mut [f32], &[f32])> =
+                    delta.chunks_mut(PAR_CHUNK).zip(b.as_slice().chunks(PAR_CHUNK)).collect();
+                pool.for_each(items, |_, (d, y)| {
+                    for (d, &y) in d.iter_mut().zip(y) {
+                        *d = y + *d;
+                    }
+                });
+                Ok(FlatParams(delta))
             }
             other => bail!("unknown delta-q8 flag byte {other}"),
         }
@@ -135,6 +167,29 @@ mod tests {
         // orders of magnitude
         let full_bound = DeltaQ8.error_bound(&p, None);
         assert!(bound < full_bound / 50.0, "delta {bound} vs full {full_bound}");
+    }
+
+    #[test]
+    fn pooled_delta_round_trip_matches_sequential_bitwise() {
+        let n = 2 * PAR_CHUNK + 77;
+        let base = params(n, 0.0);
+        let p = FlatParams(base.0.iter().map(|x| x + 2e-3).collect());
+        let enc_seq = DeltaQ8.encode(&p, Some(&base));
+        let dec_seq = DeltaQ8.decode(&enc_seq, n, Some(&base)).unwrap();
+        for threads in [2, 8] {
+            let pool = ChunkPool::new(threads);
+            assert_eq!(
+                DeltaQ8.encode_pooled(&p, Some(&base), pool),
+                enc_seq,
+                "threads={threads}"
+            );
+            let dec_par = DeltaQ8.decode_pooled(&enc_seq, n, Some(&base), pool).unwrap();
+            assert_eq!(
+                dec_seq.0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                dec_par.0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

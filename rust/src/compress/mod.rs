@@ -42,6 +42,7 @@ pub use topk::{TopK, DEFAULT_TOPK_FRACTION};
 
 use anyhow::{bail, Result};
 
+use crate::par::ChunkPool;
 use crate::tensor::codec::{encode_blob_v2, raw_wire_bytes, read_blob, BlobMeta, WireBlob};
 use crate::tensor::FlatParams;
 
@@ -49,24 +50,52 @@ use crate::tensor::FlatParams;
 /// payload bytes and back, optionally against a base vector (the
 /// delta family). Implementations are stateless; per-node state (the
 /// base) lives in [`CodecState`].
+///
+/// The required methods take a [`ChunkPool`]: every codec here splits
+/// its work on fixed chunk boundaries (never a function of the thread
+/// count), so the payload bytes and reconstructions are bit-identical
+/// for `threads = 1` and `threads = N` — the [`crate::par`] determinism
+/// contract, pinned by `rust/tests/determinism.rs`.
 pub trait Codec: Send + Sync {
     /// Which [`CodecKind`] this codec implements.
     fn kind(&self) -> CodecKind;
 
-    /// Encode `params` into payload bytes. `base` is the last-pulled
-    /// base vector; codecs that don't delta ignore it, [`DeltaQ8`]
-    /// falls back to a self-contained encoding when it is absent or
-    /// shape-mismatched.
-    fn encode(&self, params: &FlatParams, base: Option<&FlatParams>) -> Vec<u8>;
+    /// Encode `params` into payload bytes, running chunk-parallel work
+    /// on `pool`. `base` is the last-pulled base vector; codecs that
+    /// don't delta ignore it, [`DeltaQ8`] falls back to a
+    /// self-contained encoding when it is absent or shape-mismatched.
+    fn encode_pooled(
+        &self,
+        params: &FlatParams,
+        base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Vec<u8>;
 
     /// Decode `n` elements from payload bytes (against `base` for delta
-    /// payloads). Must return `Err` — never panic — on malformed input.
-    fn decode(&self, payload: &[u8], n: usize, base: Option<&FlatParams>) -> Result<FlatParams>;
+    /// payloads), running chunk-parallel work on `pool`. Must return
+    /// `Err` — never panic — on malformed input.
+    fn decode_pooled(
+        &self,
+        payload: &[u8],
+        n: usize,
+        base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Result<FlatParams>;
 
     /// Documented per-element reconstruction-error bound for encoding
     /// `params` (against `base`): `decode(encode(x)) - x` is bounded by
     /// this in absolute value, element-wise. `0.0` means bit-exact.
     fn error_bound(&self, params: &FlatParams, base: Option<&FlatParams>) -> f32;
+
+    /// Single-threaded [`Codec::encode_pooled`] (bit-identical).
+    fn encode(&self, params: &FlatParams, base: Option<&FlatParams>) -> Vec<u8> {
+        self.encode_pooled(params, base, ChunkPool::sequential())
+    }
+
+    /// Single-threaded [`Codec::decode_pooled`] (bit-identical).
+    fn decode(&self, payload: &[u8], n: usize, base: Option<&FlatParams>) -> Result<FlatParams> {
+        self.decode_pooled(payload, n, base, ChunkPool::sequential())
+    }
 }
 
 /// Which codec an experiment ships weights with (`compress = …`).
@@ -151,7 +180,9 @@ pub struct CodecState {
 
 impl CodecState {
     /// Fresh per-node state for `kind` (no base yet — the first push of
-    /// a delta codec self-contains).
+    /// a delta codec self-contains). The kernel pool is not state: it
+    /// rides in on each call (from [`crate::protocol::EpochCtx::pool`]),
+    /// so there is exactly one source of truth for the thread count.
     pub fn new(kind: CodecKind) -> CodecState {
         CodecState { kind, codec: kind.build(), base: None }
     }
@@ -172,15 +203,17 @@ impl CodecState {
         }
     }
 
-    /// Encode `params` for a push: returns the wire byte count of the
-    /// full blob (header included) and the decoded reconstruction the
-    /// store should deposit (bit-exact for `none`). The lossy path
+    /// Encode `params` for a push on `pool`: returns the wire byte
+    /// count of the full blob (header included) and the decoded
+    /// reconstruction the store should deposit (bit-exact for `none`,
+    /// and byte-identical for any thread count). The lossy path
     /// round-trips through the actual v2 wire format, so what peers
     /// aggregate is exactly what the wire carried.
     pub fn encode_for_push(
         &self,
         meta: &BlobMeta,
         params: &FlatParams,
+        pool: ChunkPool,
     ) -> Result<(u64, FlatParams)> {
         if self.kind == CodecKind::None {
             // v1 fast path: today's blob, byte-for-byte; no re-encode.
@@ -194,19 +227,19 @@ impl CodecState {
             Some((v, b)) => (*v, Some(b)),
             None => (0, None),
         };
-        let payload = self.codec.encode(params, base_params);
+        let payload = self.codec.encode_pooled(params, base_params, pool);
         let blob = encode_blob_v2(meta, self.kind.id(), base_version, params.len(), &payload);
         // Round-trip through the real wire format: any writer/reader
         // disagreement fails the push loudly instead of corrupting
         // training silently.
         let wire = read_blob(&blob)?;
-        let stored = self.decode_wire(&wire)?;
+        let stored = self.decode_wire(&wire, pool)?;
         Ok((blob.len() as u64, stored))
     }
 
-    /// Decode a parsed wire blob into params, resolving delta payloads
-    /// against this state's base.
-    pub fn decode_wire(&self, wire: &WireBlob) -> Result<FlatParams> {
+    /// Decode a parsed wire blob into params on `pool`, resolving delta
+    /// payloads against this state's base.
+    pub fn decode_wire(&self, wire: &WireBlob, pool: ChunkPool) -> Result<FlatParams> {
         if wire.codec_id != self.kind.id() {
             bail!(
                 "blob codec id {} does not match configured codec {} (id {})",
@@ -216,7 +249,7 @@ impl CodecState {
             );
         }
         let base = self.base.as_ref().map(|(_, b)| b);
-        self.codec.decode(&wire.payload, wire.uncomp_len, base)
+        self.codec.decode_pooled(&wire.payload, wire.uncomp_len, base, pool)
     }
 }
 
@@ -326,7 +359,7 @@ mod tests {
     fn none_push_is_bit_identical_to_todays_v1_blob() {
         let p = training_like_params(300);
         let state = CodecState::new(CodecKind::None);
-        let (wire_bytes, stored) = state.encode_for_push(&meta(), &p).unwrap();
+        let (wire_bytes, stored) = state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
         assert_eq!(stored.0, p.0, "no-compression reconstruction is the input");
         assert_eq!(
             wire_bytes,
@@ -339,7 +372,7 @@ mod tests {
     fn q8_push_shrinks_wire_at_least_3x_and_stays_in_bound() {
         let p = training_like_params(4_096);
         let state = CodecState::new(CodecKind::Q8);
-        let (wire, stored) = state.encode_for_push(&meta(), &p).unwrap();
+        let (wire, stored) = state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
         let raw = raw_wire_bytes(p.len());
         assert!(
             raw as f64 / wire as f64 >= 3.0,
@@ -356,11 +389,11 @@ mod tests {
         let mut state = CodecState::new(CodecKind::DeltaQ8);
 
         // cold start: no base, self-contained
-        let (w0, s0) = state.encode_for_push(&meta(), &p).unwrap();
+        let (w0, s0) = state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
         assert!(p.max_abs_diff(&s0) <= CodecKind::DeltaQ8.build().error_bound(&p, None));
 
         state.set_base(9, &base);
-        let (w1, s1) = state.encode_for_push(&meta(), &p).unwrap();
+        let (w1, s1) = state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
         assert_eq!(w0, w1, "delta flag keeps the wire size identical");
         // against a nearby base the reconstruction is far tighter
         let delta_bound = CodecKind::DeltaQ8.build().error_bound(&p, Some(&base));
@@ -369,7 +402,7 @@ mod tests {
 
         // a shape-mismatched base falls back to full encoding
         state.set_base(10, &training_like_params(100));
-        let (_, s2) = state.encode_for_push(&meta(), &p).unwrap();
+        let (_, s2) = state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
         assert!(p.max_abs_diff(&s2) <= CodecKind::DeltaQ8.build().error_bound(&p, None));
     }
 
@@ -384,14 +417,39 @@ mod tests {
     }
 
     #[test]
+    fn pooled_state_produces_identical_wire_blobs() {
+        // the threads config key must never change a byte on the wire
+        let p = training_like_params(4_096);
+        for kind in [
+            CodecKind::None,
+            CodecKind::Q8,
+            CodecKind::TopK { frac: 0.1 },
+            CodecKind::DeltaQ8,
+        ] {
+            let state = CodecState::new(kind);
+            let (wb_s, st_s) =
+                state.encode_for_push(&meta(), &p, ChunkPool::sequential()).unwrap();
+            let (wb_p, st_p) =
+                state.encode_for_push(&meta(), &p, crate::par::ChunkPool::new(8)).unwrap();
+            assert_eq!(wb_s, wb_p, "{}: wire bytes must match", kind.label());
+            assert_eq!(
+                st_s.0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                st_p.0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{}: stored reconstruction must be bit-identical",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
     fn decode_wire_rejects_codec_mismatch() {
         let p = training_like_params(128);
         let payload = Q8.encode(&p, None);
         let blob = encode_blob_v2(&meta(), CodecKind::Q8.id(), 0, p.len(), &payload);
         let wire = read_blob(&blob).unwrap();
         let state = CodecState::new(CodecKind::TopK { frac: 0.1 });
-        assert!(state.decode_wire(&wire).is_err());
+        assert!(state.decode_wire(&wire, ChunkPool::sequential()).is_err());
         let state = CodecState::new(CodecKind::Q8);
-        assert!(state.decode_wire(&wire).is_ok());
+        assert!(state.decode_wire(&wire, ChunkPool::sequential()).is_ok());
     }
 }

@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 use super::{Codec, CodecKind};
@@ -11,6 +12,12 @@ use super::{Codec, CodecKind};
 /// header (min + scale) stays ~3% overhead.
 pub const Q8_CHUNK: usize = 256;
 
+/// Quantization chunks per parallel work item (64 × 256 elements =
+/// 64 KiB of f32 input, the kernel layer's standard granularity). A
+/// constant of the wire-independent *work split* only — payload bytes
+/// are a pure function of the input either way.
+const PAR_GROUP: usize = 64;
+
 /// Affine int8 quantizer: each [`Q8_CHUNK`]-element chunk stores
 /// `(min: f32, scale: f32)` followed by one byte per element, with
 /// `x ≈ min + scale * q`, `q ∈ [0, 255]`, `scale = (max - min) / 255`.
@@ -19,13 +26,18 @@ pub const Q8_CHUNK: usize = 256;
 /// f32. Error bound (per element): half a quantization step,
 /// `(chunk_max - chunk_min) / 255 / 2`, plus f32 rounding slop (see
 /// [`Codec::error_bound`]).
+///
+/// Every 256-element chunk encodes and decodes independently, so both
+/// directions run chunk-parallel on a [`ChunkPool`] with byte-identical
+/// payloads for any thread count.
 pub struct Q8;
 
-/// Encode one chunk in place onto `out`. Quantizer arithmetic runs in
-/// f64 so a chunk spanning huge magnitudes (where `max - min` overflows
-/// f32 to inf) still yields a finite scale and finite reconstructions —
-/// a silent-NaN here would poison every peer's aggregation.
-fn encode_chunk(chunk: &[f32], out: &mut Vec<u8>) {
+/// Encode one chunk into its `8 + chunk.len()` output slot. Quantizer
+/// arithmetic runs in f64 so a chunk spanning huge magnitudes (where
+/// `max - min` overflows f32 to inf) still yields a finite scale and
+/// finite reconstructions — a silent-NaN here would poison every peer's
+/// aggregation.
+fn encode_chunk(chunk: &[f32], out: &mut [u8]) {
     let mut min = f32::INFINITY;
     let mut max = f32::NEG_INFINITY;
     for &x in chunk {
@@ -41,31 +53,67 @@ fn encode_chunk(chunk: &[f32], out: &mut Vec<u8>) {
     // f64 range never overflows for finite f32 inputs; the f32 scale is
     // finite (<= f32::MAX / 255 * 2).
     let scale = ((max as f64 - min as f64) / 255.0) as f32;
-    out.extend_from_slice(&min.to_le_bytes());
-    out.extend_from_slice(&scale.to_le_bytes());
-    for &x in chunk {
-        let q = if scale > 0.0 {
+    out[0..4].copy_from_slice(&min.to_le_bytes());
+    out[4..8].copy_from_slice(&scale.to_le_bytes());
+    for (slot, &x) in out[8..].iter_mut().zip(chunk) {
+        *slot = if scale > 0.0 {
             ((x as f64 - min as f64) / scale as f64).round().clamp(0.0, 255.0) as u8
         } else {
             0
         };
-        out.push(q);
     }
 }
 
 /// Quantize a full vector (shared with [`super::DeltaQ8`], which runs
-/// the same quantizer over a delta vector).
-pub(crate) fn q8_encode(xs: &[f32]) -> Vec<u8> {
+/// the same quantizer over a delta vector): each [`PAR_GROUP`]-chunk
+/// work item writes its own pre-sized output slot, so the payload is
+/// byte-identical for any thread count (a sequential pool runs it
+/// inline).
+pub(crate) fn q8_encode_pooled(xs: &[f32], pool: ChunkPool) -> Vec<u8> {
     let chunks = xs.len().div_ceil(Q8_CHUNK);
-    let mut out = Vec::with_capacity(xs.len() + 8 * chunks);
-    for chunk in xs.chunks(Q8_CHUNK) {
-        encode_chunk(chunk, &mut out);
-    }
+    let mut out = vec![0u8; xs.len() + 8 * chunks];
+    // Work-item boundaries fall on Q8_CHUNK multiples, so input and
+    // output groups stay aligned (a full group is PAR_GROUP chunks of
+    // exactly 8 + 256 bytes each; only the final group is ragged).
+    let in_stride = PAR_GROUP * Q8_CHUNK;
+    let out_stride = PAR_GROUP * (Q8_CHUNK + 8);
+    let items: Vec<(&[f32], &mut [u8])> =
+        xs.chunks(in_stride).zip(out.chunks_mut(out_stride)).collect();
+    pool.for_each(items, |_, (src, dst)| {
+        let mut at = 0;
+        for chunk in src.chunks(Q8_CHUNK) {
+            encode_chunk(chunk, &mut dst[at..at + 8 + chunk.len()]);
+            at += 8 + chunk.len();
+        }
+    });
     out
 }
 
-/// Dequantize `n` elements from a [`q8_encode`] payload.
-pub(crate) fn q8_decode(payload: &[u8], n: usize) -> Result<Vec<f32>> {
+/// Decode one work item's worth of chunks (validating each chunk header).
+fn decode_group(dst: &mut [f32], src: &[u8]) -> Result<()> {
+    let mut at = 0usize;
+    for chunk in dst.chunks_mut(Q8_CHUNK) {
+        let take = chunk.len();
+        let min = f32::from_le_bytes(src[at..at + 4].try_into().unwrap());
+        let scale = f32::from_le_bytes(src[at + 4..at + 8].try_into().unwrap());
+        if !min.is_finite() || !scale.is_finite() || scale < 0.0 {
+            bail!("q8 chunk header is not a finite (min, scale >= 0) pair");
+        }
+        at += 8;
+        for (d, &q) in chunk.iter_mut().zip(&src[at..at + take]) {
+            // f64 keeps min + scale * 255 finite even for chunks spanning
+            // the full f32 range (mirrors the encoder's arithmetic)
+            *d = (min as f64 + scale as f64 * q as f64) as f32;
+        }
+        at += take;
+    }
+    Ok(())
+}
+
+/// Dequantize `n` elements from a [`q8_encode_pooled`] payload; chunk
+/// boundaries are fixed by the wire layout, so the reconstruction is
+/// bit-identical for any thread count.
+pub(crate) fn q8_decode_pooled(payload: &[u8], n: usize, pool: ChunkPool) -> Result<Vec<f32>> {
     let chunks = n.div_ceil(Q8_CHUNK);
     let want = n
         .checked_add(chunks.checked_mul(8).ok_or_else(|| anyhow::anyhow!("q8 size overflow"))?)
@@ -73,29 +121,22 @@ pub(crate) fn q8_decode(payload: &[u8], n: usize) -> Result<Vec<f32>> {
     if payload.len() != want {
         bail!("q8 payload is {} bytes, want {} for {} elements", payload.len(), want, n);
     }
-    let mut out = Vec::with_capacity(n);
-    let mut at = 0usize;
-    let mut remaining = n;
-    while remaining > 0 {
-        let take = remaining.min(Q8_CHUNK);
-        let min = f32::from_le_bytes(payload[at..at + 4].try_into().unwrap());
-        let scale = f32::from_le_bytes(payload[at + 4..at + 8].try_into().unwrap());
-        if !min.is_finite() || !scale.is_finite() || scale < 0.0 {
-            bail!("q8 chunk header is not a finite (min, scale >= 0) pair");
-        }
-        at += 8;
-        for &q in &payload[at..at + take] {
-            // f64 keeps min + scale * 255 finite even for chunks spanning
-            // the full f32 range (mirrors the encoder's arithmetic)
-            out.push((min as f64 + scale as f64 * q as f64) as f32);
-        }
-        at += take;
-        remaining -= take;
+    let mut out = vec![0.0f32; n];
+    let in_stride = PAR_GROUP * Q8_CHUNK;
+    let pay_stride = PAR_GROUP * (Q8_CHUNK + 8);
+    // Equal group counts on both sides: a full group of PAR_GROUP chunks
+    // consumes exactly in_stride elements and pay_stride bytes, and the
+    // validated total sizes make the ragged tails line up too.
+    let items: Vec<(&mut [f32], &[u8])> =
+        out.chunks_mut(in_stride).zip(payload.chunks(pay_stride)).collect();
+    let results = pool.map(items, |_, (dst, src)| decode_group(dst, src));
+    for r in results {
+        r?;
     }
     Ok(out)
 }
 
-/// Documented per-element bound for [`q8_encode`]: half a quantization
+/// Documented per-element bound for [`q8_encode_pooled`]: half a quantization
 /// step on the widest chunk, with slop for the f32 arithmetic of the
 /// quantizer itself (a few ulps of the chunk magnitude, covered by the
 /// relative term, plus an absolute floor for near-zero ranges).
@@ -122,12 +163,23 @@ impl Codec for Q8 {
         CodecKind::Q8
     }
 
-    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
-        q8_encode(params.as_slice())
+    fn encode_pooled(
+        &self,
+        params: &FlatParams,
+        _base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Vec<u8> {
+        q8_encode_pooled(params.as_slice(), pool)
     }
 
-    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
-        Ok(FlatParams(q8_decode(payload, n)?))
+    fn decode_pooled(
+        &self,
+        payload: &[u8],
+        n: usize,
+        _base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Result<FlatParams> {
+        Ok(FlatParams(q8_decode_pooled(payload, n, pool)?))
     }
 
     fn error_bound(&self, params: &FlatParams, _base: Option<&FlatParams>) -> f32 {
@@ -173,6 +225,28 @@ mod tests {
     }
 
     #[test]
+    fn pooled_encode_decode_matches_sequential_bitwise() {
+        // spans several PAR_GROUP work items plus ragged chunk and group
+        // tails
+        for n in [0, 1, 255, 256, 257, PAR_GROUP * Q8_CHUNK, 2 * PAR_GROUP * Q8_CHUNK + 300] {
+            let p: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.071).sin()).collect();
+            let seq = ChunkPool::sequential();
+            let enc_seq = q8_encode_pooled(&p, seq);
+            for threads in [2, 8] {
+                let pool = ChunkPool::new(threads);
+                assert_eq!(q8_encode_pooled(&p, pool), enc_seq, "n={n} threads={threads}");
+                let dec_seq = q8_decode_pooled(&enc_seq, n, seq).unwrap();
+                let dec_par = q8_decode_pooled(&enc_seq, n, pool).unwrap();
+                assert_eq!(
+                    dec_seq.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    dec_par.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "n={n} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn full_f32_range_chunk_stays_finite() {
         // max - min overflows f32 to inf here; the f64 quantizer path
         // must still produce a finite scale and finite reconstructions
@@ -195,6 +269,8 @@ mod tests {
         let mut enc = Q8.encode(&p, None);
         enc[4..8].copy_from_slice(&f32::NAN.to_le_bytes()); // scale slot
         assert!(Q8.decode(&enc, 10, None).is_err());
+        // the parallel path reports the same corruption
+        assert!(Q8.decode_pooled(&enc, 10, None, ChunkPool::new(4)).is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use anyhow::Result;
 
+use crate::par::ChunkPool;
 use crate::tensor::codec::decode_raw_payload;
 use crate::tensor::FlatParams;
 
@@ -10,6 +11,8 @@ use super::{Codec, CodecKind};
 /// Identity codec: the payload is the little-endian f32 bytes, exactly
 /// as the v1 blob format stores them. Zero reconstruction error, zero
 /// compression — the baseline every lossy codec is measured against.
+/// Pure memcpy, so the pool is unused (and `compress = none` pushes
+/// skip this codec entirely via the v1 fast path).
 pub struct Raw;
 
 impl Codec for Raw {
@@ -17,7 +20,12 @@ impl Codec for Raw {
         CodecKind::None
     }
 
-    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
+    fn encode_pooled(
+        &self,
+        params: &FlatParams,
+        _base: Option<&FlatParams>,
+        _pool: ChunkPool,
+    ) -> Vec<u8> {
         let mut out = Vec::with_capacity(params.len() * 4);
         for x in params.as_slice() {
             out.extend_from_slice(&x.to_le_bytes());
@@ -25,7 +33,13 @@ impl Codec for Raw {
         out
     }
 
-    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
+    fn decode_pooled(
+        &self,
+        payload: &[u8],
+        n: usize,
+        _base: Option<&FlatParams>,
+        _pool: ChunkPool,
+    ) -> Result<FlatParams> {
         decode_raw_payload(payload, n)
     }
 

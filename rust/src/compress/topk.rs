@@ -1,13 +1,22 @@
 //! [`TopK`] — magnitude sparsification (codec id 2).
 
+use std::cmp::Ordering;
+
 use anyhow::{bail, Result};
 
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 use super::{Codec, CodecKind};
 
 /// Default kept fraction when `compress = topk` gives no explicit value.
 pub const DEFAULT_TOPK_FRACTION: f64 = 0.1;
+
+/// Elements per parallel selection chunk (64 KiB of f32s). Fixed — the
+/// candidate split never depends on the thread count, and the selected
+/// *set* is provably identical to the single-pass selection either way
+/// (see [`TopK`]).
+const SELECT_CHUNK: usize = 16 * 1024;
 
 /// Keep only the `frac · n` largest-magnitude elements, encoded as
 /// `(u32 index, f32 value)` pairs; everything else decodes to zero.
@@ -17,8 +26,35 @@ pub const DEFAULT_TOPK_FRACTION: f64 = 0.1;
 /// (per element): the largest dropped magnitude, i.e. the `(k+1)`-th
 /// largest `|x|` (zero when nothing is dropped). Ties at the threshold
 /// break by lower index, so the selection is deterministic.
+///
+/// Parallel selection works per fixed [`SELECT_CHUNK`]: each chunk
+/// selects its own top `min(k, chunk_len)` candidates under the same
+/// (magnitude desc, index asc) total order, and a final select over the
+/// merged candidates picks the global top k. The global top-k set can
+/// contain at most `k` elements of any one chunk, so every global
+/// winner survives its chunk's cut — and because the total order makes
+/// the kept set unique, the result is *identical* to the single-pass
+/// selection for any thread count.
 pub struct TopK {
     frac: f64,
+}
+
+/// The selection's total order over indices: magnitude descending, ties
+/// by ascending index — shared by the single-pass, per-chunk, and merge
+/// selects so they all agree on the unique kept set. `total_cmp` (not
+/// `partial_cmp`-with-an-Equal-fallback) keeps this a genuine total
+/// order even when a diverged client ships NaN weights: an intransitive
+/// comparator would let the per-chunk and single-pass selections keep
+/// *different* sets, breaking the thread-count-independence contract on
+/// the wire. (NaN magnitudes order above infinity, so they are kept —
+/// and faithfully shipped — rather than silently dropped.)
+#[inline]
+fn by_magnitude(xs: &[f32]) -> impl Fn(&u32, &u32) -> Ordering + '_ {
+    |&a, &b| {
+        let ma = xs[a as usize].abs();
+        let mb = xs[b as usize].abs();
+        mb.total_cmp(&ma).then(a.cmp(&b))
+    }
 }
 
 impl TopK {
@@ -42,16 +78,29 @@ impl TopK {
     /// total order, so the kept *set* is unique and deterministic.
     /// `select_nth_unstable_by` keeps this O(n) on the per-push hot
     /// path (a full sort of a 1M-param index vector per epoch is real
-    /// money).
-    fn select(&self, xs: &[f32]) -> Vec<u32> {
+    /// money). With a multi-threaded pool the candidate pass runs
+    /// chunk-parallel; either path returns the same set.
+    fn select(&self, xs: &[f32], pool: ChunkPool) -> Vec<u32> {
         let k = self.kept(xs.len());
-        let mut order: Vec<u32> = (0..xs.len() as u32).collect();
+        let mut order: Vec<u32> = if pool.threads() > 1 && xs.len() > SELECT_CHUNK {
+            // per-chunk candidates (each chunk's own top min(k, len)),
+            // then a global select over the merged candidate list
+            pool.map(xs.chunks(SELECT_CHUNK).collect(), |ci, chunk| {
+                let base = (ci * SELECT_CHUNK) as u32;
+                let kk = k.min(chunk.len());
+                let mut cand: Vec<u32> = (base..base + chunk.len() as u32).collect();
+                if kk < cand.len() {
+                    cand.select_nth_unstable_by(kk - 1, by_magnitude(xs));
+                    cand.truncate(kk);
+                }
+                cand
+            })
+            .concat()
+        } else {
+            (0..xs.len() as u32).collect()
+        };
         if k < order.len() {
-            order.select_nth_unstable_by(k - 1, |&a, &b| {
-                let ma = xs[a as usize].abs();
-                let mb = xs[b as usize].abs();
-                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-            });
+            order.select_nth_unstable_by(k - 1, by_magnitude(xs));
             order.truncate(k);
         }
         order.sort_unstable();
@@ -64,9 +113,14 @@ impl Codec for TopK {
         CodecKind::TopK { frac: self.frac }
     }
 
-    fn encode(&self, params: &FlatParams, _base: Option<&FlatParams>) -> Vec<u8> {
+    fn encode_pooled(
+        &self,
+        params: &FlatParams,
+        _base: Option<&FlatParams>,
+        pool: ChunkPool,
+    ) -> Vec<u8> {
         let xs = params.as_slice();
-        let kept = self.select(xs);
+        let kept = self.select(xs, pool);
         let mut out = Vec::with_capacity(4 + 8 * kept.len());
         out.extend_from_slice(&(kept.len() as u32).to_le_bytes());
         for &i in &kept {
@@ -76,7 +130,16 @@ impl Codec for TopK {
         out
     }
 
-    fn decode(&self, payload: &[u8], n: usize, _base: Option<&FlatParams>) -> Result<FlatParams> {
+    // decode stays sequential (trait default): it is a sparse scatter of
+    // k pairs into a zeroed vector, with no fixed chunk structure to
+    // parallelize over.
+    fn decode_pooled(
+        &self,
+        payload: &[u8],
+        n: usize,
+        _base: Option<&FlatParams>,
+        _pool: ChunkPool,
+    ) -> Result<FlatParams> {
         if payload.len() < 4 {
             bail!("topk payload too short: {} bytes", payload.len());
         }
@@ -113,11 +176,10 @@ impl Codec for TopK {
             return 0.0;
         }
         // the largest magnitude among dropped elements: the (k+1)-th
-        // largest overall (O(n) selection, like `select`)
+        // largest overall (O(n) selection, under `select`'s NaN-robust
+        // total order)
         let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
-        let (_, nth, _) = mags.select_nth_unstable_by(k, |a, b| {
-            b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        let (_, nth, _) = mags.select_nth_unstable_by(k, |a, b| b.total_cmp(a));
         *nth
     }
 }
@@ -166,6 +228,41 @@ mod tests {
         let dec = topk(0.3).decode(&a, 10, None).unwrap();
         assert_eq!(dec.0[..3], [1.0, 1.0, 1.0]);
         assert_eq!(dec.0[3..], [0.0; 7]);
+    }
+
+    #[test]
+    fn nan_inputs_select_identically_across_thread_counts() {
+        // a diverged client's NaN weights must not break the total
+        // order: parallel and single-pass selections must still agree
+        let n = 2 * SELECT_CHUNK + 50;
+        let mut xs: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin()).collect();
+        for i in [3, SELECT_CHUNK - 1, SELECT_CHUNK + 7, n - 2] {
+            xs[i] = f32::NAN;
+        }
+        let p = FlatParams(xs);
+        let seq = topk(0.05).encode(&p, None);
+        for threads in [2, 8] {
+            let par = topk(0.05).encode_pooled(&p, None, ChunkPool::new(threads));
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_select_matches_single_pass_bytewise() {
+        // larger than SELECT_CHUNK so the candidate-merge path engages;
+        // include heavy ties (quantized values) to stress the total
+        // order's tie-break
+        let n = 3 * SELECT_CHUNK + 123;
+        let p = FlatParams(
+            (0..n).map(|i| (((i * 37) % 19) as f32 - 9.0) * 0.125).collect(),
+        );
+        for frac in [0.01, 0.1, 0.9] {
+            let seq = topk(frac).encode(&p, None);
+            for threads in [2, 8] {
+                let par = topk(frac).encode_pooled(&p, None, ChunkPool::new(threads));
+                assert_eq!(par, seq, "frac={frac} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! crash = 1@2             # crash node 1 at epoch 2
 //! clock = virtual         # real (default) | virtual simulated time
 //! compress = q8           # none | q8 | topk:<frac> | delta-q8
+//! threads = auto          # kernel-pool workers: auto | N (default 1)
 //! ```
 
 use std::fmt;
@@ -124,6 +125,11 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                 cfg.compress = crate::compress::CodecKind::parse(value)
                     .ok_or_else(|| err(line_no, format!("unknown compress codec {value:?}")))?
             }
+            "threads" => {
+                cfg.threads = super::parse_threads(value).ok_or_else(|| {
+                    err(line_no, format!("threads must be `auto` or >= 1, got {value:?}"))
+                })?
+            }
             "log_dir" => cfg.log_dir = Some(value.into()),
             "verbose" => cfg.verbose = value == "true" || value == "1",
             _ => return Err(err(line_no, format!("unknown key {key:?}"))),
@@ -222,6 +228,18 @@ mod tests {
         assert_eq!(cfg.compress, CodecKind::None, "none is the default");
         assert!(parse_config_text("compress = zip\n").is_err());
         assert!(parse_config_text("compress = topk:2\n").is_err());
+    }
+
+    #[test]
+    fn threads_values() {
+        let cfg = parse_config_text("threads = auto\n").unwrap();
+        assert_eq!(cfg.threads, 0, "auto encodes as 0");
+        let cfg = parse_config_text("threads = 8\n").unwrap();
+        assert_eq!(cfg.threads, 8);
+        let cfg = parse_config_text("").unwrap();
+        assert_eq!(cfg.threads, 1, "single-threaded kernels are the default");
+        assert!(parse_config_text("threads = 0\n").is_err());
+        assert!(parse_config_text("threads = lots\n").is_err());
     }
 
     #[test]

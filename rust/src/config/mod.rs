@@ -17,6 +17,27 @@ pub use crate::time::ClockKind;
 /// Peers pulled per epoch when `mode = gossip` gives no explicit fanout.
 pub const DEFAULT_GOSSIP_FANOUT: usize = 2;
 
+/// Parse a `threads` config/CLI value: `auto` (one kernel-pool worker
+/// per hardware thread) or an explicit count ≥ 1. Returns the config
+/// encoding (`0` = auto); rejects `0` and non-numbers.
+pub fn parse_threads(s: &str) -> Option<usize> {
+    if s.eq_ignore_ascii_case("auto") {
+        return Some(0);
+    }
+    s.parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Canonical label for a `threads` value (inverse of [`parse_threads`]):
+/// `auto` for 0, the count otherwise. Used in sweep cell labels and
+/// report columns.
+pub fn threads_label(threads: usize) -> String {
+    if threads == 0 {
+        "auto".into()
+    } else {
+        threads.to_string()
+    }
+}
+
 /// How nodes federate (which [`crate::protocol::FederationProtocol`] each
 /// node runs after every local epoch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -201,6 +222,15 @@ pub struct ExperimentConfig {
     /// compression has real (not modeled) accuracy effects. `none`
     /// keeps today's v1 blobs byte-for-byte.
     pub compress: CodecKind,
+    /// Kernel-pool worker count (`threads = auto | N`; 0 = auto =
+    /// one worker per hardware thread — see
+    /// [`crate::par::ChunkPool::from_config`]). Drives the fused
+    /// aggregation, codec encode/decode, and content-hash kernels.
+    /// Results are bit-identical for every value (the [`crate::par`]
+    /// determinism contract), so this is a pure wall-clock knob; the
+    /// default of 1 keeps nested parallelism under the sweep
+    /// scheduler opt-in.
+    pub threads: usize,
     /// Write metrics.csv / events.jsonl here.
     pub log_dir: Option<PathBuf>,
     /// Print per-epoch progress.
@@ -228,6 +258,7 @@ impl Default for ExperimentConfig {
             sync_timeout: Duration::from_secs(120),
             clock: ClockKind::Real,
             compress: CodecKind::None,
+            threads: 1,
             log_dir: None,
             verbose: false,
         }
@@ -377,6 +408,22 @@ mod tests {
             ..Default::default()
         };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn threads_parse_label_and_default() {
+        assert_eq!(ExperimentConfig::default().threads, 1, "parallel kernels are opt-in");
+        assert_eq!(parse_threads("auto"), Some(0));
+        assert_eq!(parse_threads("AUTO"), Some(0));
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads("0"), None, "explicit 0 is rejected; use auto");
+        assert_eq!(parse_threads("-1"), None);
+        assert_eq!(parse_threads("many"), None);
+        assert_eq!(threads_label(0), "auto");
+        assert_eq!(threads_label(8), "8");
+        for v in ["auto", "1", "16"] {
+            assert_eq!(threads_label(parse_threads(v).unwrap()), v.to_lowercase());
+        }
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub mod config;
 pub mod data;
 pub mod metrics;
 pub mod node;
+pub mod par;
 pub mod protocol;
 pub mod runtime;
 pub mod sim;
@@ -64,6 +65,7 @@ pub mod prelude {
     pub use crate::data::{DatasetKind, Partitioner};
     pub use crate::metrics::stats::Summary;
     pub use crate::node::{NodeHandle, NodeReport};
+    pub use crate::par::ChunkPool;
     pub use crate::protocol::{FederationProtocol, ProtocolKind};
     pub use crate::runtime::{Engine, ModelBundle};
     pub use crate::sim::{run_experiment, run_trials, ExperimentResult};

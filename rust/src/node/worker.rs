@@ -122,6 +122,10 @@ fn run_node_inner(
     let params = bundle.init_params(cfg.seed)?;
     let mut state = TrainState::new(params);
     let mut protocol = ProtocolKind::from(cfg.mode).build(ctx.node_id, &cfg);
+    // the node's kernel pool (threads = auto | N): codec encode/decode
+    // and strategy aggregation below run chunk-parallel on it, with
+    // results bit-identical to threads = 1
+    let pool = crate::par::ChunkPool::from_config(cfg.threads);
     // per-node wire codec state (compress = none | q8 | topk:<f> |
     // delta-q8): every push below runs through it
     let mut codec = CodecState::new(cfg.compress);
@@ -196,6 +200,7 @@ fn run_node_inner(
             sync_timeout: cfg.sync_timeout,
             clock: clock.as_ref(),
             codec: &mut codec,
+            pool,
         };
         let out = protocol.after_epoch(&mut pctx, &mut state.params)?;
         report.pushes += out.pushes;

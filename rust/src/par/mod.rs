@@ -1,0 +1,243 @@
+//! The data-parallel kernel layer — [`ChunkPool`], the scoped worker
+//! pool behind every hot-path kernel in the coordinator.
+//!
+//! With the virtual clock (simulated waiting is free) and the codec
+//! layer (the wire is cheap) in place, the real-world cost of a sweep is
+//! CPU time in three kernels: weight aggregation
+//! ([`crate::tensor::flat::weighted_average_pooled`]), codec
+//! encode/decode ([`crate::compress`]), and content hashing
+//! ([`crate::util::hash::chunked_hash_f32s`]). This module gives them a
+//! shared parallel substrate with one non-negotiable contract:
+//!
+//! # The determinism contract
+//!
+//! **Chunk boundaries are fixed by constants, never by the thread
+//! count.** Every kernel splits its input into fixed-size chunks (each
+//! kernel documents its width — e.g. [`crate::tensor::flat::PAR_CHUNK`]),
+//! computes each chunk independently, and combines per-chunk results in
+//! chunk-index order. Threads only decide *who* computes a chunk, never
+//! *what* is computed — so results are bit-identical for `threads = 1`
+//! and `threads = N` (asserted by `rust/tests/determinism.rs`), and a
+//! `threads` sweep axis can never change a single experiment metric,
+//! only wall-clock speed.
+//!
+//! # Implementation
+//!
+//! `ChunkPool` is deliberately hand-rolled on `std::thread::scope` (the
+//! image vendors no rayon): a call-site-scoped fork/join in which
+//! workers drain a shared work queue (a mutexed iterator — chunks are
+//! tens of kilobytes, so one uncontended lock per chunk is noise) and
+//! write results into per-index slots. No threads persist between
+//! calls, so the pool composes safely with the sweep scheduler's own
+//! worker threads and with node threads parked on a virtual clock
+//! (compute takes zero simulated time regardless of `threads`).
+//!
+//! Configured per experiment via the `threads = auto | N` config key
+//! (default 1 — nested parallelism under a sweep is opt-in), the
+//! `"threads"` sweep axis, and `fedbench run --threads`.
+
+use std::sync::Mutex;
+
+/// A fixed-width chunk-parallel worker pool; see the module docs for the
+/// determinism contract. Copy-cheap (it is only a thread count): thread
+/// it by value through [`crate::protocol::EpochCtx`] and
+/// [`crate::compress::CodecState`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPool {
+    threads: usize,
+}
+
+impl Default for ChunkPool {
+    fn default() -> Self {
+        ChunkPool::sequential()
+    }
+}
+
+impl ChunkPool {
+    /// A pool running work items on `threads` scoped workers (>= 1).
+    pub fn new(threads: usize) -> ChunkPool {
+        assert!(threads >= 1, "ChunkPool needs at least one thread");
+        ChunkPool { threads }
+    }
+
+    /// The single-threaded pool: every kernel runs inline on the calling
+    /// thread. The default, and the reference the determinism suite
+    /// compares every other thread count against.
+    pub fn sequential() -> ChunkPool {
+        ChunkPool { threads: 1 }
+    }
+
+    /// One worker per available hardware thread (`threads = auto`).
+    pub fn auto() -> ChunkPool {
+        ChunkPool {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// Resolve the `threads` config value: `0` means `auto`, anything
+    /// else is an explicit worker count.
+    pub fn from_config(threads: usize) -> ChunkPool {
+        if threads == 0 {
+            ChunkPool::auto()
+        } else {
+            ChunkPool::new(threads)
+        }
+    }
+
+    /// Worker count this pool runs with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(index, item)` for every item, distributing items across up
+    /// to [`ChunkPool::threads`] scoped workers. `f` must only write
+    /// state owned by its item (e.g. the `&mut [f32]` chunk it was
+    /// handed) — that, plus caller-fixed chunk boundaries, is what makes
+    /// the result independent of the thread count.
+    pub fn for_each<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        let workers = self.threads.min(items.len());
+        if workers <= 1 {
+            for (i, item) in items.into_iter().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let queue = Mutex::new(items.into_iter().enumerate());
+        std::thread::scope(|scope| {
+            for _ in 1..workers {
+                scope.spawn(|| drain(&queue, &f));
+            }
+            drain(&queue, &f);
+        });
+    }
+
+    /// Like [`ChunkPool::for_each`], collecting `f`'s results in item
+    /// order (slot `i` holds `f(i, items[i])` no matter which worker ran
+    /// it) — the fork/join primitive behind per-chunk digests and
+    /// candidate lists.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.into_iter().enumerate().map(|(i, item)| f(i, item)).collect();
+        }
+        let queue = Mutex::new(items.into_iter().enumerate());
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+        let work = |queue: &Mutex<std::iter::Enumerate<std::vec::IntoIter<T>>>| loop {
+            let next = queue.lock().unwrap().next();
+            match next {
+                Some((i, item)) => {
+                    // compute outside the slot lock; store under it
+                    let r = f(i, item);
+                    slots.lock().unwrap()[i] = Some(r);
+                }
+                None => return,
+            }
+        };
+        std::thread::scope(|scope| {
+            for _ in 1..workers {
+                scope.spawn(|| work(&queue));
+            }
+            work(&queue);
+        });
+        slots
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every work item stores its slot"))
+            .collect()
+    }
+}
+
+/// Worker body for [`ChunkPool::for_each`]: pop-and-run until the queue
+/// is empty. The lock is released before `f` runs, so workers only
+/// contend for the (trivial) queue pop.
+fn drain<T, F>(queue: &Mutex<std::iter::Enumerate<std::vec::IntoIter<T>>>, f: &F)
+where
+    F: Fn(usize, T),
+{
+    loop {
+        let next = queue.lock().unwrap().next();
+        match next {
+            Some((i, item)) => f(i, item),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+
+    #[test]
+    fn from_config_resolves_auto_and_explicit() {
+        assert!(ChunkPool::from_config(0).threads() >= 1, "auto is at least one worker");
+        assert_eq!(ChunkPool::from_config(3).threads(), 3);
+        assert_eq!(ChunkPool::sequential().threads(), 1);
+        assert_eq!(ChunkPool::default(), ChunkPool::sequential());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one thread")]
+    fn zero_threads_is_rejected() {
+        ChunkPool::new(0);
+    }
+
+    #[test]
+    fn for_each_visits_every_item_exactly_once() {
+        for threads in [1, 2, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut out = vec![0u64; 100];
+            let items: Vec<&mut u64> = out.iter_mut().collect();
+            pool.for_each(items, |i, slot| *slot = (i as u64 + 1) * 3);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, (i as u64 + 1) * 3, "threads={threads} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_preserves_item_order() {
+        for threads in [1, 2, 8] {
+            let pool = ChunkPool::new(threads);
+            let items: Vec<usize> = (0..57).collect();
+            let out = pool.map(items, |i, x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(out, (0..57).map(|x| x * x).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_items_is_fine() {
+        let pool = ChunkPool::new(16);
+        assert_eq!(pool.map(vec![7usize], |_, x| x + 1), vec![8]);
+        assert_eq!(pool.map(Vec::<usize>::new(), |_, x| x), Vec::<usize>::new());
+        pool.for_each(Vec::<usize>::new(), |_, _| panic!("no items, no calls"));
+    }
+
+    #[test]
+    fn every_worker_sees_disjoint_items() {
+        // 8 threads over 1000 items: the visit count must be exactly one
+        // per item even under contention.
+        let pool = ChunkPool::new(8);
+        let visits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        let items: Vec<usize> = (0..1000).collect();
+        pool.for_each(items, |_, i| {
+            visits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(visits.iter().all(|v| v.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -111,7 +111,7 @@ impl FederationProtocol for AsyncHash {
                 });
             }
             if contribs.len() > 1 {
-                if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+                if let Some(new_params) = ctx.strategy.aggregate_pooled(&contribs, ctx.pool) {
                     *params = new_params;
                     out.aggregations = 1;
                     ctx.adopt_aggregate(params, &entries);
@@ -234,6 +234,7 @@ mod tests {
                 sync_timeout: Duration::from_secs(1),
                 clock: clock.as_ref(),
                 codec: &mut codec,
+                pool: crate::par::ChunkPool::sequential(),
             };
             proto.after_epoch(&mut ctx, params).unwrap()
         };

@@ -98,7 +98,7 @@ impl FederationProtocol for Gossip {
             });
         }
         if contribs.len() > 1 {
-            if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+            if let Some(new_params) = ctx.strategy.aggregate_pooled(&contribs, ctx.pool) {
                 *params = new_params;
                 out.aggregations = 1;
                 ctx.adopt_aggregate(params, &pulled);

@@ -51,6 +51,7 @@ use anyhow::Result;
 use crate::compress::CodecState;
 use crate::config::{ExperimentConfig, FederationMode};
 use crate::metrics::timeline::Timeline;
+use crate::par::ChunkPool;
 use crate::store::{PushRequest, WeightEntry, WeightStore};
 use crate::strategy::Strategy;
 use crate::tensor::codec::BlobMeta;
@@ -87,6 +88,12 @@ pub struct EpochCtx<'a> {
     /// goes through it (encode → wire blob → decoded reconstruction),
     /// and aggregation results feed back into it as the delta base.
     pub codec: &'a mut CodecState,
+    /// The kernel pool ([`crate::par`], from the `threads` config key):
+    /// protocols run every aggregation on it via
+    /// [`crate::strategy::Strategy::aggregate_pooled`]. Results are
+    /// bit-identical for any thread count, so `threads` is a pure
+    /// wall-clock knob.
+    pub pool: ChunkPool,
 }
 
 impl EpochCtx<'_> {
@@ -105,7 +112,7 @@ impl EpochCtx<'_> {
             epoch: round,
             n_examples: self.n_examples,
         };
-        let (wire_bytes, stored) = self.codec.encode_for_push(&meta, params)?;
+        let (wire_bytes, stored) = self.codec.encode_for_push(&meta, params, self.pool)?;
         let seq = self.store.push(PushRequest {
             node_id: self.node_id,
             round,
@@ -287,6 +294,7 @@ pub(crate) mod protocol_tests {
                 sync_timeout,
                 clock: self.clock.as_ref(),
                 codec: &mut self.codec,
+                pool: ChunkPool::sequential(),
             };
             self.protocol.after_epoch(&mut ctx, &mut self.params).unwrap()
         }

@@ -73,7 +73,7 @@ impl FederationProtocol for SyncBarrier {
                 params: Arc::clone(&e.params),
             })
             .collect();
-        if let Some(new_params) = ctx.strategy.aggregate(&contribs) {
+        if let Some(new_params) = ctx.strategy.aggregate_pooled(&contribs, ctx.pool) {
             *params = new_params;
             out.aggregations = 1;
             // the adopted aggregate is the next push's delta base

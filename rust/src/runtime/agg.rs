@@ -48,7 +48,10 @@ impl AggExecutor {
         for x in params {
             anyhow::ensure!(x.len() == p, "client param length mismatch");
         }
+        // Hoisted out of the chunk loop: the weights literal, the
+        // reshape dims, and the reusable host-side stack buffer.
         let w_lit = xla::Literal::vec1(weights);
+        let stack_dims = [self.k as i64, self.chunk as i64];
 
         let mut out = Vec::with_capacity(p);
         let mut stack = vec![0.0f32; self.k * self.chunk];
@@ -57,16 +60,17 @@ impl AggExecutor {
             let start = ci * self.chunk;
             let end = (start + self.chunk).min(p);
             let width = end - start;
-            // build the (K, chunk) stack, zero-padding the tail chunk
-            for (kk, x) in params.iter().enumerate() {
-                let row = &mut stack[kk * self.chunk..kk * self.chunk + width];
-                row.copy_from_slice(&x.as_slice()[start..end]);
-                if width < self.chunk {
-                    stack[kk * self.chunk + width..(kk + 1) * self.chunk].fill(0.0);
-                }
+            if width < self.chunk {
+                // tail chunk: zero the whole stack once (full chunks
+                // overwrite every row slot, so only the tail needs it —
+                // and only here, not once per client row)
+                stack.fill(0.0);
             }
-            let stack_lit =
-                xla::Literal::vec1(&stack).reshape(&[self.k as i64, self.chunk as i64])?;
+            for (kk, x) in params.iter().enumerate() {
+                stack[kk * self.chunk..kk * self.chunk + width]
+                    .copy_from_slice(&x.as_slice()[start..end]);
+            }
+            let stack_lit = xla::Literal::vec1(&stack).reshape(&stack_dims)?;
             let res = self.exe.execute(&[&stack_lit, &w_lit])?[0][0]
                 .to_literal_sync()?;
             let chunk_out = res.to_tuple1()?.to_vec::<f32>()?;

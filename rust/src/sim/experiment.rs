@@ -12,8 +12,9 @@ use crate::metrics::timeline::{render_ascii, Timeline};
 use crate::metrics::RunLogger;
 use crate::node::{spawn_node, NodeCtx, NodeReport, NodeStatus};
 use crate::runtime::{Engine, Manifest, ModelBundle};
+use crate::par::ChunkPool;
 use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
-use crate::tensor::flat::weighted_average;
+use crate::tensor::flat::weighted_average_pooled;
 use crate::tensor::FlatParams;
 use crate::time::Clock;
 
@@ -32,6 +33,14 @@ pub struct ExperimentResult {
     pub wall_clock_s: f64,
     /// Per-node reports (status, metrics, timeline), in node-id order.
     pub reports: Vec<NodeReport>,
+    /// Content digest of the aggregated global model
+    /// ([`crate::tensor::FlatParams::content_hash`], the chunked
+    /// change-detection hash): two runs replayed from the same config
+    /// produce the same digest, so a single u64 comparison detects any
+    /// weight-level divergence — the replay check `fedbench run` prints
+    /// and the determinism suite asserts across thread counts. `0` when
+    /// no global model was produced (synthetic trial runners).
+    pub global_hash: u64,
     /// Total pushes observed by the store.
     pub store_pushes: u64,
     /// Fraction of wall-clock the average node spent blocked on the sync
@@ -204,7 +213,13 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     let total: f32 = finals.iter().map(|(_, n)| n).sum();
     let weights: Vec<f32> = finals.iter().map(|(_, n)| n / total).collect();
     let params_refs: Vec<&FlatParams> = finals.iter().map(|(p, _)| *p).collect();
-    let global = weighted_average(&params_refs, &weights);
+    // same kernel pool as the node threads (threads = auto | N);
+    // bit-identical to the sequential average for any thread count
+    let pool = ChunkPool::from_config(cfg.threads);
+    let global = weighted_average_pooled(&params_refs, &weights, pool);
+    // replay digest: one u64 that detects any weight-level divergence
+    // between runs of the same config (chunked change-detection hash)
+    let global_hash = global.content_hash_pooled(pool);
 
     // ---- evaluate on the un-partitioned test set (paper §4.1)
     let engine = Engine::new()?;
@@ -226,6 +241,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
                 ("accuracy", format!("{final_accuracy:.4}")),
                 ("loss", format!("{final_loss:.4}")),
                 ("wall_clock_s", format!("{wall_clock_s:.2}")),
+                ("global_hash", format!("{global_hash:016x}")),
             ],
         );
     }
@@ -234,6 +250,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         final_accuracy,
         final_loss,
         wall_clock_s,
+        global_hash,
         store_pushes: store.push_count(),
         mean_idle_fraction,
         all_completed,

@@ -8,12 +8,15 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::{ChangeNotifier, PushRequest, WeightEntry, WeightStore};
+use super::{ChangeNotifier, EntryLog, PushRequest, WeightEntry, WeightStore};
 use crate::util::hash::combine;
 
 /// Shared-memory store; cheap Arc-based blob sharing, no serialization.
+/// The [`EntryLog`]'s maintained latest index makes async pulls O(nodes)
+/// — the log grows every epoch, so the scan it replaces made them
+/// O(epochs² · nodes) over a run.
 pub struct MemoryStore {
-    entries: RwLock<Vec<WeightEntry>>,
+    inner: RwLock<EntryLog>,
     seq: AtomicU64,
     pushes: AtomicU64,
     notify: ChangeNotifier,
@@ -40,7 +43,7 @@ impl MemoryStore {
 
     fn with_notifier(notify: ChangeNotifier) -> Self {
         MemoryStore {
-            entries: RwLock::new(Vec::new()),
+            inner: RwLock::new(EntryLog::default()),
             seq: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
             notify,
@@ -60,7 +63,7 @@ impl WeightStore for MemoryStore {
             wire_bytes: req.wire_bytes,
             params: req.params,
         };
-        self.entries.write().unwrap().push(entry);
+        self.inner.write().unwrap().push(entry);
         self.pushes.fetch_add(1, Ordering::Relaxed);
         // bump only after the entry is visible, so woken waiters see it
         self.notify.bump();
@@ -68,24 +71,17 @@ impl WeightStore for MemoryStore {
     }
 
     fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
-        let entries = self.entries.read().unwrap();
-        let mut latest: std::collections::BTreeMap<usize, &WeightEntry> = Default::default();
-        for e in entries.iter() {
-            match latest.get(&e.node_id) {
-                Some(prev) if prev.seq >= e.seq => {}
-                _ => {
-                    latest.insert(e.node_id, e);
-                }
-            }
-        }
-        Ok(latest.into_values().cloned().collect())
+        // O(nodes) off the maintained index (node-id order, like the
+        // BTreeMap merge the scan used to produce).
+        Ok(self.inner.read().unwrap().latest.values().cloned().collect())
     }
 
     fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
         Ok(self
-            .entries
+            .inner
             .read()
             .unwrap()
+            .log
             .iter()
             .filter(|e| e.round == round)
             .cloned()
@@ -93,21 +89,16 @@ impl WeightStore for MemoryStore {
     }
 
     fn state_hash(&self) -> Result<u64> {
-        let entries = self.entries.read().unwrap();
+        let inner = self.inner.read().unwrap();
         let mut h = 0xfeed_f00d_u64;
-        for e in entries.iter() {
+        for e in inner.log.iter() {
             h = combine(h, (e.node_id as u64) << 48 | e.seq);
         }
         Ok(h)
     }
 
     fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
-        let entries = self.entries.read().unwrap();
-        Ok(entries
-            .iter()
-            .filter(|e| e.node_id == node_id)
-            .max_by_key(|e| e.seq)
-            .cloned())
+        Ok(self.inner.read().unwrap().latest.get(&node_id).cloned())
     }
 
     fn version(&self) -> Result<u64> {
@@ -123,7 +114,7 @@ impl WeightStore for MemoryStore {
     }
 
     fn clear(&self) -> Result<()> {
-        self.entries.write().unwrap().clear();
+        self.inner.write().unwrap().clear();
         self.notify.bump();
         Ok(())
     }
@@ -160,5 +151,10 @@ mod tests {
         b.push(store_tests::push_req(1, 0, 1.0)).unwrap();
         b.push(store_tests::push_req(0, 0, 1.0)).unwrap();
         assert_ne!(a.state_hash().unwrap(), b.state_hash().unwrap());
+    }
+
+    #[test]
+    fn latest_index_matches_full_log_scan() {
+        store_tests::latest_index_matches_scan(&MemoryStore::new());
     }
 }

@@ -188,6 +188,44 @@ impl ChangeNotifier {
     }
 }
 
+/// Append-only entry log plus a per-node latest-entry index, kept
+/// consistent under the owner's lock — the shared storage core of
+/// [`MemoryStore`] (one behind its lock) and [`ShardedStore`] (one per
+/// shard; a node's entries all land in one shard, so its latest entry
+/// does too). The index makes `latest_per_node` / `latest_for_node`
+/// O(nodes) instead of an O(log-length) scan; entries share params via
+/// `Arc`, so the index clone is cheap.
+#[derive(Default)]
+pub(crate) struct EntryLog {
+    /// Every entry ever pushed (round queries, state hash).
+    pub(crate) log: Vec<WeightEntry>,
+    /// Latest entry per node, maintained on push.
+    pub(crate) latest: std::collections::BTreeMap<usize, WeightEntry>,
+}
+
+impl EntryLog {
+    /// Append an entry and update the latest index. The index update is
+    /// conditional on seq: seqs are assigned *before* the owner's lock,
+    /// so two pushes from one node can land out of order and the index
+    /// must keep the max — exactly like the scan it replaces
+    /// (regression-tested by `store_tests::latest_index_matches_scan`).
+    pub(crate) fn push(&mut self, entry: WeightEntry) {
+        match self.latest.get(&entry.node_id) {
+            Some(prev) if prev.seq >= entry.seq => {}
+            _ => {
+                self.latest.insert(entry.node_id, entry.clone());
+            }
+        }
+        self.log.push(entry);
+    }
+
+    /// Drop every entry and the index (between trials).
+    pub(crate) fn clear(&mut self) {
+        self.log.clear();
+        self.latest.clear();
+    }
+}
+
 /// Arguments to [`WeightStore::push`].
 #[derive(Clone, Debug)]
 pub struct PushRequest {
@@ -369,6 +407,55 @@ pub(crate) mod store_tests {
         conformance(&make_store());
         concurrent_pushes(Arc::new(make_store()));
         subscription(Arc::new(make_store()));
+    }
+
+    /// Regression for the maintained per-node latest index: after a
+    /// ragged multi-round push schedule, `latest_per_node` /
+    /// `latest_for_node` must agree with a full scan reconstructed from
+    /// the round queries, and `push_count` must stay exact.
+    pub fn latest_index_matches_scan(store: &dyn WeightStore) {
+        let mut expected: std::collections::BTreeMap<usize, (u64, f32)> = Default::default();
+        let mut pushes = 0u64;
+        for round in 0..7u64 {
+            for node in 0..5usize {
+                if (node + round as usize) % 3 == 0 {
+                    continue; // ragged participation, like async reality
+                }
+                let val = (node * 100 + round as usize) as f32;
+                let seq = store.push(push_req(node, round, val)).unwrap();
+                expected.insert(node, (seq, val));
+                pushes += 1;
+            }
+        }
+        assert_eq!(store.push_count(), pushes, "push_count must stay exact");
+
+        let latest = store.latest_per_node().unwrap();
+        assert_eq!(latest.len(), expected.len());
+        for e in &latest {
+            let (seq, val) = expected[&e.node_id];
+            assert_eq!(e.seq, seq, "node {} latest seq", e.node_id);
+            assert_eq!(e.params.0[0], val, "node {} latest payload", e.node_id);
+            let single = store.latest_for_node(e.node_id).unwrap().unwrap();
+            assert_eq!(single.seq, seq, "latest_for_node must agree");
+        }
+
+        // the index must equal a scan rebuilt from the full log
+        let mut scan: std::collections::BTreeMap<usize, WeightEntry> = Default::default();
+        for round in 0..7u64 {
+            for e in store.entries_for_round(round).unwrap() {
+                match scan.get(&e.node_id) {
+                    Some(prev) if prev.seq >= e.seq => {}
+                    _ => {
+                        scan.insert(e.node_id, e);
+                    }
+                }
+            }
+        }
+        let scanned: Vec<WeightEntry> = scan.into_values().collect();
+        assert_eq!(latest.len(), scanned.len());
+        for (a, b) in latest.iter().zip(&scanned) {
+            assert_eq!((a.node_id, a.seq), (b.node_id, b.seq), "index diverged from scan");
+        }
     }
 
     pub fn concurrent_pushes(store: Arc<dyn WeightStore>) {

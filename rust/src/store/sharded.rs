@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::{ChangeNotifier, PushRequest, WeightEntry, WeightStore};
+use super::{ChangeNotifier, EntryLog, PushRequest, WeightEntry, WeightStore};
 use crate::util::hash::combine;
 
 /// Default shard count: comfortably above the paper's node counts (2–5)
@@ -39,7 +39,7 @@ pub const DEFAULT_SHARDS: usize = 8;
 /// locked shards. Drop-in replacement for [`super::MemoryStore`] wherever
 /// push contention matters (8+ nodes, parallel sweep trials).
 pub struct ShardedStore {
-    shards: Vec<RwLock<Vec<WeightEntry>>>,
+    shards: Vec<RwLock<EntryLog>>,
     seq: AtomicU64,
     pushes: AtomicU64,
     /// Store-wide change notification: one counter for all shards (the
@@ -66,7 +66,7 @@ impl ShardedStore {
     fn with_notifier(n_shards: usize, notify: ChangeNotifier) -> Self {
         assert!(n_shards >= 1, "need at least one shard");
         ShardedStore {
-            shards: (0..n_shards).map(|_| RwLock::new(Vec::new())).collect(),
+            shards: (0..n_shards).map(|_| RwLock::new(EntryLog::default())).collect(),
             seq: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
             notify,
@@ -112,16 +112,13 @@ impl WeightStore for ShardedStore {
     }
 
     fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        // O(nodes): merge the per-shard latest indexes (each maintained
+        // on push) instead of scanning every shard's whole log.
         let mut latest: std::collections::BTreeMap<usize, WeightEntry> = Default::default();
         for shard in &self.shards {
-            let entries = shard.read().unwrap();
-            for e in entries.iter() {
-                match latest.get(&e.node_id) {
-                    Some(prev) if prev.seq >= e.seq => {}
-                    _ => {
-                        latest.insert(e.node_id, e.clone());
-                    }
-                }
+            let inner = shard.read().unwrap();
+            for (node, e) in inner.latest.iter() {
+                latest.insert(*node, e.clone());
             }
         }
         Ok(latest.into_values().collect())
@@ -130,8 +127,8 @@ impl WeightStore for ShardedStore {
     fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
         let mut out = Vec::new();
         for shard in &self.shards {
-            let entries = shard.read().unwrap();
-            out.extend(entries.iter().filter(|e| e.round == round).cloned());
+            let inner = shard.read().unwrap();
+            out.extend(inner.log.iter().filter(|e| e.round == round).cloned());
         }
         // Deterministic order regardless of shard layout.
         out.sort_by_key(|e| e.seq);
@@ -144,9 +141,9 @@ impl WeightStore for ShardedStore {
         // and therefore the merged hash.
         let mut h = 0xfeed_f00d_u64;
         for shard in &self.shards {
-            let entries = shard.read().unwrap();
+            let inner = shard.read().unwrap();
             let mut partial = 0x5A4D_ED51_u64;
-            for e in entries.iter() {
+            for e in inner.log.iter() {
                 partial = combine(partial, (e.node_id as u64) << 48 | e.seq);
             }
             h = combine(h, partial);
@@ -155,13 +152,9 @@ impl WeightStore for ShardedStore {
     }
 
     fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
-        // A node's entries all live in one shard: single-lock read.
+        // A node's entries all live in one shard: single-lock indexed read.
         let shard = self.shards[self.shard_of(node_id)].read().unwrap();
-        Ok(shard
-            .iter()
-            .filter(|e| e.node_id == node_id)
-            .max_by_key(|e| e.seq)
-            .cloned())
+        Ok(shard.latest.get(&node_id).cloned())
     }
 
     fn version(&self) -> Result<u64> {
@@ -244,11 +237,12 @@ mod tests {
             s.push(push_req(node, 0, node as f32)).unwrap();
         }
         for (i, shard) in s.shards.iter().enumerate() {
-            let entries = shard.read().unwrap();
-            assert_eq!(entries.len(), 2, "shard {i}");
-            for e in entries.iter() {
+            let inner = shard.read().unwrap();
+            assert_eq!(inner.log.len(), 2, "shard {i}");
+            for e in inner.log.iter() {
                 assert_eq!(e.node_id % 4, i);
             }
+            assert_eq!(inner.latest.len(), 2, "shard {i} latest index");
         }
     }
 
@@ -275,6 +269,14 @@ mod tests {
         s.push(push_req(1, 0, 4.0)).unwrap();
         let seqs: Vec<u64> = s.entries_for_round(0).unwrap().iter().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn latest_index_matches_full_log_scan_per_shard() {
+        // fewer shards than nodes: colliding shards must still keep
+        // exact per-node indexes
+        store_tests::latest_index_matches_scan(&ShardedStore::new(3));
+        store_tests::latest_index_matches_scan(&ShardedStore::new(1));
     }
 
     #[test]

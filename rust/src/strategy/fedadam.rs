@@ -5,6 +5,7 @@
 //!  w <- w_prev + lr * m / (sqrt(v) + τ)`
 
 use super::{fedavg_of, Contribution, Strategy};
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// Adam over the aggregation pseudo-gradient, with client-held moments.
@@ -31,11 +32,15 @@ impl Strategy for FedAdam {
         "fedadam"
     }
 
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
         if contribs.is_empty() {
             return None;
         }
-        let avg = fedavg_of(contribs);
+        let avg = fedavg_of(contribs, pool);
         let prev = match &self.prev {
             None => {
                 self.m = Some(vec![0.0; avg.len()]);

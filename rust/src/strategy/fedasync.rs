@@ -11,6 +11,7 @@
 //! `α_t = α (t - τ + 1)^{-a}` adapted to the serverless store).
 
 use super::{example_weights, Contribution, Strategy};
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// Staleness-attenuated asynchronous mixing toward the peer average.
@@ -36,30 +37,39 @@ impl Strategy for FedAsync {
         "fedasync"
     }
 
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
         let own = contribs.iter().find(|c| c.is_self)?;
         let peers: Vec<&Contribution> = contribs.iter().filter(|c| !c.is_self).collect();
         if peers.is_empty() {
-            return Some(own.params.as_ref().clone());
+            // None means "keep the caller's current weights" — no deep
+            // copy. Deliberate semantic choice: under a lossy codec the
+            // self *store entry* is the wire reconstruction, so the old
+            // `Some(own.params.clone())` would adopt quantized weights
+            // when training alone; keeping the local full-precision
+            // vector is both cheaper and strictly more faithful.
+            return None;
         }
 
-        // Example-weighted average of the peers only.
-        let peer_contribs: Vec<Contribution> = peers.iter().map(|&c| c.clone()).collect();
-        let w = example_weights(&peer_contribs);
-        let refs: Vec<&FlatParams> =
-            peer_contribs.iter().map(|c| c.params.as_ref()).collect();
-        let peer_avg = crate::tensor::flat::weighted_average(&refs, &w);
+        // Example-weighted average of the peers only — borrowed straight
+        // out of `contribs`; params are Arc'd, nothing is deep-copied.
+        let w = example_weights(peers.iter().copied());
+        let refs: Vec<&FlatParams> = peers.iter().map(|c| c.params.as_ref()).collect();
+        let peer_avg = crate::tensor::flat::weighted_average_pooled(&refs, &w, pool);
 
         // Staleness: how far the average peer entry lags the freshest seq
         // seen in this pull (own push is typically the freshest).
         let max_seq = contribs.iter().map(|c| c.seq).max().unwrap_or(0);
         let mean_peer_seq =
-            peer_contribs.iter().map(|c| c.seq as f64).sum::<f64>() / peer_contribs.len() as f64;
+            peers.iter().map(|c| c.seq as f64).sum::<f64>() / peers.len() as f64;
         let staleness = (max_seq as f64 - mean_peer_seq).max(0.0);
         let alpha_eff = self.alpha * (1.0 + staleness as f32).powf(-self.exponent);
 
         let mut next = own.params.as_ref().clone();
-        next.lerp(alpha_eff, &peer_avg);
+        next.lerp_pooled(alpha_eff, &peer_avg, pool);
         Some(next)
     }
 }
@@ -82,10 +92,11 @@ mod tests {
     }
 
     #[test]
-    fn no_peers_keeps_own() {
+    fn no_peers_keeps_own_without_copying() {
+        // None = "keep current weights" (the self contribution is the
+        // caller's current weights), avoiding a needless deep copy
         let mut s = FedAsync::new(0.6, 0.5);
-        let out = s.aggregate(&[contrib(0, 1, true, &[2.0])]).unwrap();
-        assert_eq!(out.0, vec![2.0]);
+        assert!(s.aggregate(&[contrib(0, 1, true, &[2.0])]).is_none());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! `w <- sum_k (n_k / n) * ω[k]`. Stateless.
 
 use super::{fedavg_of, Contribution, Strategy};
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// Stateless example-weighted averaging — the paper's default strategy.
@@ -20,11 +21,15 @@ impl Strategy for FedAvg {
         "fedavg"
     }
 
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
         if contribs.is_empty() {
             return None;
         }
-        Some(fedavg_of(contribs))
+        Some(fedavg_of(contribs, pool))
     }
 }
 

@@ -8,6 +8,7 @@
 //! strategy" (§3).
 
 use super::{fedavg_of, Contribution, Strategy};
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// FedAvg with a client-held server-momentum buffer.
@@ -32,11 +33,15 @@ impl Strategy for FedAvgM {
         "fedavgm"
     }
 
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
         if contribs.is_empty() {
             return None;
         }
-        let avg = fedavg_of(contribs);
+        let avg = fedavg_of(contribs, pool);
         let prev = match &self.prev {
             None => {
                 // first federation: adopt the average, momentum starts at 0
@@ -49,9 +54,9 @@ impl Strategy for FedAvgM {
         let delta = prev.delta_to(&avg);
         let v = self.velocity.as_mut().expect("velocity init'd with prev");
         v.scale(self.beta);
-        v.axpy(1.0, &delta);
+        v.axpy_pooled(1.0, &delta, pool);
         let mut next = prev;
-        next.axpy(self.lr, v);
+        next.axpy_pooled(self.lr, v, pool);
         self.prev = Some(next.clone());
         Some(next)
     }

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 
 use super::{fedavg_of, Contribution, Strategy};
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// Buffered asynchronous aggregation: wait for `buffer_size` fresh peer
@@ -40,7 +41,11 @@ impl Strategy for FedBuff {
         "fedbuff"
     }
 
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
         contribs.iter().find(|c| c.is_self)?;
         let fresh = self.count_new(contribs);
         if fresh < self.buffer_size {
@@ -49,7 +54,7 @@ impl Strategy for FedBuff {
         for c in contribs.iter().filter(|c| !c.is_self) {
             self.seen.insert(c.node_id, c.seq);
         }
-        Some(fedavg_of(contribs))
+        Some(fedavg_of(contribs, pool))
     }
 
     fn reset(&mut self) {

@@ -56,6 +56,7 @@ pub use fedbuff::FedBuff;
 
 use std::sync::Arc;
 
+use crate::par::ChunkPool;
 use crate::tensor::FlatParams;
 
 /// One client's weights entering an aggregation.
@@ -79,32 +80,52 @@ pub trait Strategy: Send {
     /// Canonical lowercase strategy name (matches [`StrategyKind::name`]).
     fn name(&self) -> &'static str;
 
-    /// Aggregate the contributions into new local weights. Returns `None`
-    /// when the strategy decides not to update (e.g. FedBuff's buffer has
-    /// not filled) — the caller then keeps its current weights.
+    /// Aggregate the contributions into new local weights, running the
+    /// data-parallel kernels (the fused weighted average, axpy, lerp) on
+    /// `pool`. Returns `None` when the strategy decides not to update
+    /// (e.g. FedBuff's buffer has not filled) — the caller then keeps
+    /// its current weights. Results are bit-identical for any thread
+    /// count (the [`crate::par`] determinism contract).
     ///
     /// `contribs` always contains exactly one `is_self` entry.
-    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams>;
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams>;
+
+    /// Single-threaded [`Strategy::aggregate_pooled`] (bit-identical).
+    fn aggregate(&mut self, contribs: &[Contribution]) -> Option<FlatParams> {
+        self.aggregate_pooled(contribs, ChunkPool::sequential())
+    }
 
     /// Reset per-node state (between trials).
     fn reset(&mut self) {}
 }
 
-/// `n_k / n` weights over the contributions (Eq. 1).
-pub(crate) fn example_weights(contribs: &[Contribution]) -> Vec<f32> {
-    let total: u64 = contribs.iter().map(|c| c.n_examples).sum();
+/// `n_k / n` weights over borrowed contributions (Eq. 1) — iterator-based
+/// so callers holding `&[Contribution]` *or* `&[&Contribution]` (e.g.
+/// FedAsync's peer filter) avoid deep-copying contributions just to
+/// compute their weights.
+pub(crate) fn example_weights<'a, I>(contribs: I) -> Vec<f32>
+where
+    I: ExactSizeIterator<Item = &'a Contribution> + Clone,
+{
+    let n = contribs.len();
+    let total: u64 = contribs.clone().map(|c| c.n_examples).sum();
     if total == 0 {
         // degenerate: fall back to uniform
-        return vec![1.0 / contribs.len() as f32; contribs.len()];
+        return vec![1.0 / n as f32; n];
     }
-    contribs.iter().map(|c| c.n_examples as f32 / total as f32).collect()
+    contribs.map(|c| c.n_examples as f32 / total as f32).collect()
 }
 
-/// Plain example-weighted average of the contributions.
-pub(crate) fn fedavg_of(contribs: &[Contribution]) -> FlatParams {
-    let weights = example_weights(contribs);
+/// Plain example-weighted average of the contributions, computed with
+/// the fused one-pass kernel on `pool`.
+pub(crate) fn fedavg_of(contribs: &[Contribution], pool: ChunkPool) -> FlatParams {
+    let weights = example_weights(contribs.iter());
     let refs: Vec<&FlatParams> = contribs.iter().map(|c| c.params.as_ref()).collect();
-    crate::tensor::flat::weighted_average(&refs, &weights)
+    crate::tensor::flat::weighted_average_pooled(&refs, &weights, pool)
 }
 
 /// Strategy selector used in configs / CLI (`--strategy fedavg`).
@@ -181,14 +202,17 @@ pub(crate) mod strategy_tests {
     #[test]
     fn example_weights_normalize() {
         let cs = [contrib(0, 300, true, &[0.0]), contrib(1, 100, false, &[0.0])];
-        let w = example_weights(&cs);
+        let w = example_weights(cs.iter());
         assert_eq!(w, vec![0.75, 0.25]);
+        // works over borrowed refs too (the FedAsync peer-filter shape)
+        let refs: Vec<&Contribution> = cs.iter().collect();
+        assert_eq!(example_weights(refs.iter().copied()), vec![0.75, 0.25]);
     }
 
     #[test]
     fn example_weights_zero_total_uniform() {
         let cs = [contrib(0, 0, true, &[0.0]), contrib(1, 0, false, &[0.0])];
-        let w = example_weights(&cs);
+        let w = example_weights(cs.iter());
         assert_eq!(w, vec![0.5, 0.5]);
     }
 

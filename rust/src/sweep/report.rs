@@ -170,10 +170,10 @@ impl SweepReport {
             }
         );
         out.push_str(
-            "| mode | strategy | skew | nodes | compress | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
+            "| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
         );
         out.push_str(
-            "|------|----------|------|-------|----------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n",
+            "|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n",
         );
         for c in &self.cells {
             let trials = if c.failures > 0 {
@@ -195,12 +195,13 @@ impl SweepReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
                 c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,
                 c.cell.compress.label(),
+                crate::config::threads_label(c.cell.threads),
                 trials,
                 acc,
                 loss,
@@ -215,7 +216,7 @@ impl SweepReport {
     /// CSV with one row per grid cell (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "model,mode,strategy,skew,n_nodes,compress,trials,failures,\
+            "model,mode,strategy,skew,n_nodes,compress,threads,trials,failures,\
              acc_mean,acc_std,loss_mean,loss_std,wall_mean,wall_std,\
              mb_pushed_mean,mb_pulled_mean\n",
         );
@@ -225,13 +226,14 @@ impl SweepReport {
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
                 c.cell.strategy.name(),
                 c.cell.skew,
                 c.cell.n_nodes,
                 c.cell.compress.label(),
+                crate::config::threads_label(c.cell.threads),
                 c.n_trials,
                 c.failures,
                 num(&c.accuracy, |s| s.mean),

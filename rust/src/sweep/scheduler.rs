@@ -163,6 +163,7 @@ mod tests {
             final_loss: 1.0 - acc,
             wall_clock_s: 0.01,
             reports: vec![],
+            global_hash: 0,
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: true,

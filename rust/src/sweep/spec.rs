@@ -16,14 +16,14 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::CodecKind;
-use crate::config::{ExperimentConfig, FederationMode, StoreKind};
+use crate::config::{threads_label, ExperimentConfig, FederationMode, StoreKind};
 use crate::store::LatencyConfig;
 use crate::strategy::StrategyKind;
 use crate::util::json::Json;
 
 /// One cell of the sweep grid: a unique (mode, strategy, skew, n_nodes,
-/// compress) combination. Seeds are *trials within* a cell, not part of
-/// the key — the report aggregates across them.
+/// compress, threads) combination. Seeds are *trials within* a cell, not
+/// part of the key — the report aggregates across them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellKey {
     /// Federation protocol of this cell.
@@ -36,20 +36,29 @@ pub struct CellKey {
     pub n_nodes: usize,
     /// Wire codec of this cell.
     pub compress: CodecKind,
+    /// Kernel-pool worker count of this cell (0 = auto). A pure
+    /// wall-clock axis: the [`crate::par`] determinism contract makes
+    /// every experiment metric identical across `threads` cells.
+    pub threads: usize,
 }
 
 impl CellKey {
     /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`
-    /// (gossip cells carry the fanout — `gossip3_...` — and compressed
-    /// cells the codec — `..._n2_q8` — so no two cells ever share a
-    /// store namespace or report row).
+    /// (gossip cells carry the fanout — `gossip3_...` — compressed
+    /// cells the codec — `..._n2_q8` — and multi-threaded cells the
+    /// worker count — `..._t8` / `..._tauto` — so no two cells ever
+    /// share a store namespace or report row).
     pub fn label(&self) -> String {
         let compress = match self.compress {
             CodecKind::None => String::new(),
             other => format!("_{}", other.label()),
         };
+        let threads = match self.threads {
+            1 => String::new(),
+            other => format!("_t{}", threads_label(other)),
+        };
         format!(
-            "{}_{}_s{}_n{}{compress}",
+            "{}_{}_s{}_n{}{compress}{threads}",
             self.mode.label(),
             self.strategy.name(),
             self.skew,
@@ -87,6 +96,10 @@ pub struct SweepSpec {
     /// Wire-codec axis (`"compress"` key: `none`, `q8`, `topk:<frac>`,
     /// `delta-q8`).
     pub compressions: Vec<CodecKind>,
+    /// Kernel-pool worker-count axis (`"threads"` key: integers or
+    /// `"auto"`; 0 encodes auto). Wall-clock only — results are
+    /// bit-identical across values.
+    pub threads: Vec<usize>,
     /// Seeds to run per cell (each seed is one trial).
     pub seeds: Vec<u64>,
     /// Worker threads for the scheduler; 0 = automatic
@@ -104,6 +117,7 @@ impl SweepSpec {
             skews: vec![base.skew],
             node_counts: vec![base.n_nodes],
             compressions: vec![base.compress],
+            threads: vec![base.threads],
             seeds: vec![base.seed],
             jobs: 0,
             base,
@@ -132,7 +146,8 @@ impl SweepSpec {
         const KNOWN: &[&str] = &[
             "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
-            "modes", "strategies", "skews", "n_nodes", "compress", "seeds", "trials", "jobs",
+            "modes", "strategies", "skews", "n_nodes", "compress", "threads", "seeds",
+            "trials", "jobs",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -209,6 +224,15 @@ impl SweepSpec {
             None => vec![base.compress],
             Some(v) => axis(v, "compress", |x| x.as_str().and_then(CodecKind::parse))?,
         };
+        let threads = match obj.get("threads") {
+            None => vec![base.threads],
+            // integers or the string "auto" (also accepted as a number
+            // is rejected: 0 must be spelled auto, like the config key)
+            Some(v) => axis(v, "threads", |x| match x.as_str() {
+                Some(s) => crate::config::parse_threads(s),
+                None => int_of(x).map(|n| n as usize).filter(|&n| n >= 1),
+            })?,
+        };
 
         let seeds = match (obj.get("seeds"), obj.get("trials")) {
             (Some(_), Some(_)) => {
@@ -229,11 +253,21 @@ impl SweepSpec {
             Some(v) => req_usize(v, "jobs")?,
         };
 
-        Ok(SweepSpec { base, modes, strategies, skews, node_counts, compressions, seeds, jobs })
+        Ok(SweepSpec {
+            base,
+            modes,
+            strategies,
+            skews,
+            node_counts,
+            compressions,
+            threads,
+            seeds,
+            jobs,
+        })
     }
 
     /// The grid cells in deterministic (mode, strategy, skew, n_nodes,
-    /// compress) nested order — the row order of the report.
+    /// compress, threads) nested order — the row order of the report.
     pub fn cells(&self) -> Vec<CellKey> {
         let mut out =
             Vec::with_capacity(self.modes.len() * self.strategies.len() * self.skews.len());
@@ -242,7 +276,16 @@ impl SweepSpec {
                 for &skew in &self.skews {
                     for &n_nodes in &self.node_counts {
                         for &compress in &self.compressions {
-                            out.push(CellKey { mode, strategy, skew, n_nodes, compress });
+                            for &threads in &self.threads {
+                                out.push(CellKey {
+                                    mode,
+                                    strategy,
+                                    skew,
+                                    n_nodes,
+                                    compress,
+                                    threads,
+                                });
+                            }
                         }
                     }
                 }
@@ -285,6 +328,7 @@ impl SweepSpec {
                 cfg.skew = cell.skew;
                 cfg.n_nodes = cell.n_nodes;
                 cfg.compress = cell.compress;
+                cfg.threads = cell.threads;
                 cfg.seed = seed;
                 if let StoreKind::Fs(root) = &self.base.store {
                     cfg.store =
@@ -547,6 +591,33 @@ mod tests {
         // bad values are rejected
         assert!(SweepSpec::parse_json(r#"{"compress": "zip"}"#).is_err());
         assert!(SweepSpec::parse_json(r#"{"compress": ["topk:0"]}"#).is_err());
+    }
+
+    #[test]
+    fn threads_axis_expands_with_auto_and_distinct_labels() {
+        let spec =
+            SweepSpec::parse_json(r#"{"threads": [1, 8, "auto"]}"#).unwrap();
+        assert_eq!(spec.threads, vec![1, 8, 0]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 3);
+        // the single-threaded cell keeps the legacy label; others are
+        // suffixed so no two cells share a store namespace
+        assert_eq!(cells[0].label(), "async_fedavg_s0_n2");
+        assert_eq!(cells[1].label(), "async_fedavg_s0_n2_t8");
+        assert_eq!(cells[2].label(), "async_fedavg_s0_n2_tauto");
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 3);
+        assert_eq!(trials[1].cfg.threads, 8);
+        assert_eq!(trials[2].cfg.threads, 0);
+        // scalar value and default also work
+        let spec = SweepSpec::parse_json(r#"{"threads": "auto"}"#).unwrap();
+        assert_eq!(spec.threads, vec![0]);
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.threads, vec![1]);
+        // bad values are rejected: 0 must be spelled auto
+        assert!(SweepSpec::parse_json(r#"{"threads": 0}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"threads": ["lots"]}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"threads": [2.5]}"#).is_err());
     }
 
     #[test]

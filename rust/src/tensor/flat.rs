@@ -1,7 +1,21 @@
 //! [`FlatParams`] — a flat `f32` parameter vector with the small amount of
 //! linear algebra the federation strategies need (axpy, scale, lerp).
+//!
+//! The aggregation entry points come in pairs: a plain sequential form
+//! (`weighted_average`, `axpy`, `lerp`) and a `_pooled` form running the
+//! same arithmetic chunk-parallel on a [`ChunkPool`]. Chunks are fixed
+//! [`PAR_CHUNK`] elements wide and every element's FP operation sequence
+//! is identical in both forms, so sequential and pooled results are
+//! bit-identical for any thread count (the [`crate::par`] determinism
+//! contract, pinned by `rust/tests/determinism.rs`).
 
-use crate::util::hash::hash_f32s;
+use crate::par::ChunkPool;
+use crate::util::hash::{chunked_hash_f32s, chunked_hash_f32s_pooled};
+
+/// Fixed element width of one parallel work chunk (16 Ki f32 = 64 KiB).
+/// A constant of the kernel, never a function of the thread count — the
+/// boundary independence that makes pooled results bit-identical.
+pub const PAR_CHUNK: usize = 16 * 1024;
 
 /// A model's full parameter (or optimizer-moment) vector.
 #[derive(Clone, Debug, PartialEq)]
@@ -31,18 +45,37 @@ impl FlatParams {
         &self.0
     }
 
-    /// Content hash (used in store entries and change detection).
+    /// Content hash for in-memory change detection (the chunked
+    /// word-at-a-time hash — [`crate::util::hash::chunked_hash_f32s`]).
+    /// Never persisted; the on-disk blob formats keep their frozen
+    /// FNV-1a integrity hash.
     pub fn content_hash(&self) -> u64 {
-        hash_f32s(&self.0)
+        chunked_hash_f32s(&self.0)
     }
 
-    /// `self += alpha * other` (fused multiply-add per element; the
-    /// aggregation hot path — see benches/microbench.rs).
+    /// [`FlatParams::content_hash`] with per-chunk digests computed on
+    /// `pool` (bit-identical for any thread count).
+    pub fn content_hash_pooled(&self, pool: ChunkPool) -> u64 {
+        chunked_hash_f32s_pooled(&self.0, pool)
+    }
+
+    /// `self += alpha * other` (fused multiply-add per element; part of
+    /// the aggregation hot path — see benches/kernels.rs).
     pub fn axpy(&mut self, alpha: f32, other: &FlatParams) {
+        self.axpy_pooled(alpha, other, ChunkPool::sequential());
+    }
+
+    /// [`FlatParams::axpy`] chunk-parallel on `pool`; same per-element
+    /// FMA, so bit-identical to the sequential form.
+    pub fn axpy_pooled(&mut self, alpha: f32, other: &FlatParams, pool: ChunkPool) {
         assert_eq!(self.len(), other.len(), "axpy length mismatch");
-        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
-            *a = b.mul_add(alpha, *a);
-        }
+        let items: Vec<(&mut [f32], &[f32])> =
+            self.0.chunks_mut(PAR_CHUNK).zip(other.0.chunks(PAR_CHUNK)).collect();
+        pool.for_each(items, |_, (dst, src)| {
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a = b.mul_add(alpha, *a);
+            }
+        });
     }
 
     /// `self *= alpha`.
@@ -55,10 +88,20 @@ impl FlatParams {
     /// `self = (1 - t) * self + t * other` — the staleness-mixing update
     /// used by FedAsync.
     pub fn lerp(&mut self, t: f32, other: &FlatParams) {
+        self.lerp_pooled(t, other, ChunkPool::sequential());
+    }
+
+    /// [`FlatParams::lerp`] chunk-parallel on `pool`; same per-element
+    /// arithmetic, so bit-identical to the sequential form.
+    pub fn lerp_pooled(&mut self, t: f32, other: &FlatParams, pool: ChunkPool) {
         assert_eq!(self.len(), other.len(), "lerp length mismatch");
-        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
-            *a = *a + t * (*b - *a);
-        }
+        let items: Vec<(&mut [f32], &[f32])> =
+            self.0.chunks_mut(PAR_CHUNK).zip(other.0.chunks(PAR_CHUNK)).collect();
+        pool.for_each(items, |_, (dst, src)| {
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a = *a + t * (*b - *a);
+            }
+        });
     }
 
     /// Element-wise difference `other - self` (pseudo-gradient for
@@ -100,7 +143,25 @@ impl FlatParams {
 /// every strategy; `runtime::agg` offers the same computation through the
 /// lowered Pallas artifact, and `rust/tests/artifact_parity.rs` checks they
 /// agree.
+///
+/// Sequential form of [`weighted_average_pooled`] (bit-identical).
 pub fn weighted_average(xs: &[&FlatParams], weights: &[f32]) -> FlatParams {
+    weighted_average_pooled(xs, weights, ChunkPool::sequential())
+}
+
+/// Fused one-pass weighted average: each [`PAR_CHUNK`]-wide output chunk
+/// reads the matching chunk of **all K** client vectors and accumulates
+/// every output element in a register before its single write — one
+/// memory sweep over the output instead of the old K-sweep axpy loop
+/// (kept as the baseline in `benches/kernels.rs`). Per element the FMA
+/// sequence is `acc_k = fma(x_k, w_k, acc_{k-1})` with `acc_0 = 0`,
+/// exactly the old loop's order, so fused, sequential, and pooled
+/// results are all bit-identical.
+pub fn weighted_average_pooled(
+    xs: &[&FlatParams],
+    weights: &[f32],
+    pool: ChunkPool,
+) -> FlatParams {
     assert_eq!(xs.len(), weights.len(), "weights/params arity mismatch");
     assert!(!xs.is_empty(), "cannot average zero clients");
     let n = xs[0].len();
@@ -108,9 +169,18 @@ pub fn weighted_average(xs: &[&FlatParams], weights: &[f32]) -> FlatParams {
         assert_eq!(x.len(), n, "client param length mismatch");
     }
     let mut out = FlatParams::zeros(n);
-    for (x, &w) in xs.iter().zip(weights.iter()) {
-        out.axpy(w, x);
-    }
+    let items: Vec<&mut [f32]> = out.0.chunks_mut(PAR_CHUNK).collect();
+    pool.for_each(items, |ci, dst| {
+        let start = ci * PAR_CHUNK;
+        let rows: Vec<&[f32]> = xs.iter().map(|x| &x.as_slice()[start..start + dst.len()]).collect();
+        for (j, d) in dst.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (row, &w) in rows.iter().zip(weights) {
+                acc = row[j].mul_add(w, acc);
+            }
+            *d = acc;
+        }
+    });
     out
 }
 
@@ -169,6 +239,50 @@ mod tests {
         weighted_average(&[&fp(&[1.0]), &fp(&[1.0, 2.0])], &[0.5, 0.5]);
     }
 
+    /// The fused one-pass form must equal the K-sweep axpy loop it
+    /// replaced bit-for-bit (same per-element FMA order).
+    #[test]
+    fn fused_average_matches_axpy_sweeps_bitwise() {
+        let n = 3 * PAR_CHUNK + 17; // several chunks + ragged tail
+        let clients: Vec<FlatParams> = (0..4)
+            .map(|k| FlatParams((0..n).map(|i| ((i + 137 * k) as f32 * 0.013).sin()).collect()))
+            .collect();
+        let refs: Vec<&FlatParams> = clients.iter().collect();
+        let w = [0.4, 0.3, 0.2, 0.1];
+        // the replaced implementation, verbatim
+        let mut old = FlatParams::zeros(n);
+        for (x, &wk) in clients.iter().zip(w.iter()) {
+            old.axpy(wk, x);
+        }
+        let fused = weighted_average(&refs, &w);
+        assert_eq!(fused.0, old.0, "fused one-pass must be bit-identical to K-sweep axpy");
+        for threads in [2, 8] {
+            let pooled = weighted_average_pooled(&refs, &w, ChunkPool::new(threads));
+            assert_eq!(pooled.0, old.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_axpy_and_lerp_match_sequential_bitwise() {
+        let n = 2 * PAR_CHUNK + 3;
+        let base = FlatParams((0..n).map(|i| (i as f32 * 0.017).cos()).collect());
+        let other = FlatParams((0..n).map(|i| (i as f32 * 0.011).sin()).collect());
+        for threads in [2, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut seq = base.clone();
+            seq.axpy(0.37, &other);
+            let mut par = base.clone();
+            par.axpy_pooled(0.37, &other, pool);
+            assert_eq!(seq.0, par.0, "axpy threads={threads}");
+
+            let mut seq = base.clone();
+            seq.lerp(0.21, &other);
+            let mut par = base.clone();
+            par.lerp_pooled(0.21, &other, pool);
+            assert_eq!(seq.0, par.0, "lerp threads={threads}");
+        }
+    }
+
     #[test]
     fn delta_and_norm() {
         let a = fp(&[1.0, 1.0]);
@@ -183,6 +297,7 @@ mod tests {
         let a = fp(&[1.0, 2.0]);
         let mut b = a.clone();
         assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), a.content_hash_pooled(ChunkPool::new(4)));
         b.0[0] = 1.0001;
         assert_ne!(a.content_hash(), b.content_hash());
     }

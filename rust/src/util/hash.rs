@@ -1,6 +1,20 @@
-//! FNV-1a 64-bit hashing — used for weight-store state hashes (the paper's
-//! "check if the remote server has changed state (as reported by a unique
-//! hash)") and for blob integrity headers in the on-disk codec.
+//! Hashing — two distinct families with two distinct contracts:
+//!
+//! * **FNV-1a 64-bit** ([`fnv1a64`], [`fnv1a64_multi`], [`hash_f32s`]) —
+//!   the *persisted* hash: v1/v2 blob integrity headers
+//!   ([`crate::tensor::codec`]) are FNV over the serialized bytes, and
+//!   on-disk compatibility pins these functions byte-for-byte. They are
+//!   frozen: a faster hash here would silently invalidate every stored
+//!   blob.
+//! * **Chunked word-at-a-time hash** ([`chunked_hash_f32s`]) — the
+//!   *in-memory* change-detection hash ([`crate::tensor::FlatParams::content_hash`],
+//!   weight-level store state checks). It mixes 8 bytes per multiply
+//!   instead of FNV's 1 and digests fixed [`HASH_CHUNK_ELEMS`]-element
+//!   chunks that combine in chunk order, so it parallelizes on a
+//!   [`ChunkPool`] with bit-identical results for any thread count. Its
+//!   value never touches disk, so it owes no compatibility to anything.
+
+use crate::par::ChunkPool;
 
 /// FNV-1a over a byte slice.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -21,7 +35,8 @@ pub fn fnv1a64_multi(parts: &[&[u8]]) -> u64 {
     h
 }
 
-/// Hash an f32 slice by its raw little-endian bytes.
+/// Hash an f32 slice by its raw little-endian bytes (sequential FNV-1a;
+/// see the module docs for when to prefer [`chunked_hash_f32s`]).
 pub fn hash_f32s(xs: &[f32]) -> u64 {
     // Safety-free path: serialize in chunks to avoid an extra allocation.
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -34,12 +49,65 @@ pub fn hash_f32s(xs: &[f32]) -> u64 {
     h
 }
 
-/// Combine hashes order-dependently (for store state hashes).
+/// Combine hashes order-dependently (for store state hashes and the
+/// chunk-digest combine of [`chunked_hash_f32s`]).
 pub fn combine(a: u64, b: u64) -> u64 {
     a ^ b
         .wrapping_add(0x9E37_79B9_7F4A_7C15)
         .wrapping_add(a << 6)
         .wrapping_add(a >> 2)
+}
+
+/// f32 elements per chunk of the chunked content hash: 16 Ki elements =
+/// 64 KiB, the kernel layer's standard chunk width. Fixed — never a
+/// function of the thread count (the [`crate::par`] determinism
+/// contract).
+pub const HASH_CHUNK_ELEMS: usize = 16 * 1024;
+
+/// One multiply-xorshift mixing step over a 64-bit word (two f32s per
+/// step vs FNV's one byte): the multiply diffuses low bits upward, the
+/// shift folds high bits back down, and both are bijective — any
+/// single-bit change in `w` changes the result.
+#[inline]
+fn mix64(h: u64, w: u64) -> u64 {
+    let m = (h ^ w).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    m ^ (m >> 33)
+}
+
+/// Word-at-a-time digest of one chunk (two f32 bit patterns packed per
+/// 64-bit mixing step; an odd trailing element mixes alone with a tag
+/// bit so `[x]` and `[x, 0.0]` digest differently).
+fn chunk_digest(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+    let mut pairs = xs.chunks_exact(2);
+    for p in pairs.by_ref() {
+        let w = (p[0].to_bits() as u64) | ((p[1].to_bits() as u64) << 32);
+        h = mix64(h, w);
+    }
+    if let [tail] = pairs.remainder() {
+        h = mix64(h, (1u64 << 63) | tail.to_bits() as u64);
+    }
+    h
+}
+
+/// Fast change-detection hash of an f32 slice: word-at-a-time digests
+/// over fixed [`HASH_CHUNK_ELEMS`]-element chunks, combined in chunk
+/// order. **Not** FNV-compatible and never persisted — the blob formats
+/// keep [`fnv1a64`] (module docs).
+pub fn chunked_hash_f32s(xs: &[f32]) -> u64 {
+    chunked_hash_f32s_pooled(xs, ChunkPool::sequential())
+}
+
+/// [`chunked_hash_f32s`] with the per-chunk digests computed on `pool`.
+/// Chunk boundaries and the combine order are fixed, so the result is
+/// bit-identical for any thread count.
+pub fn chunked_hash_f32s_pooled(xs: &[f32], pool: ChunkPool) -> u64 {
+    let digests = pool.map(xs.chunks(HASH_CHUNK_ELEMS).collect(), |_, chunk| chunk_digest(chunk));
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ xs.len() as u64;
+    for d in digests {
+        h = combine(h, d);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -73,5 +141,51 @@ mod tests {
     fn multi_part_hash_matches_concatenation() {
         assert_eq!(fnv1a64_multi(&[b"ab", b"", b"cd"]), fnv1a64(b"abcd"));
         assert_eq!(fnv1a64_multi(&[]), fnv1a64(b""));
+    }
+
+    fn training_like(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i as f32) * 0.0173).sin() * 0.8).collect()
+    }
+
+    #[test]
+    fn chunked_hash_is_thread_count_independent() {
+        // spans several chunks plus an odd tail
+        for n in [0, 1, 2, 3, HASH_CHUNK_ELEMS, HASH_CHUNK_ELEMS + 1, 3 * HASH_CHUNK_ELEMS + 7] {
+            let xs = training_like(n);
+            let reference = chunked_hash_f32s(&xs);
+            for threads in [1, 2, 8] {
+                assert_eq!(
+                    chunked_hash_f32s_pooled(&xs, ChunkPool::new(threads)),
+                    reference,
+                    "n={n} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_hash_sees_every_position() {
+        // flipping any single element (first, chunk-boundary, odd tail)
+        // must change the hash
+        let mut xs = training_like(2 * HASH_CHUNK_ELEMS + 5);
+        let h0 = chunked_hash_f32s(&xs);
+        for i in [0, 1, HASH_CHUNK_ELEMS - 1, HASH_CHUNK_ELEMS, 2 * HASH_CHUNK_ELEMS + 4] {
+            let old = xs[i];
+            xs[i] += 1.0e-4;
+            assert_ne!(chunked_hash_f32s(&xs), h0, "flip at {i} must change the hash");
+            xs[i] = old;
+        }
+        assert_eq!(chunked_hash_f32s(&xs), h0, "restored input restores the hash");
+    }
+
+    #[test]
+    fn chunked_hash_distinguishes_length_and_padding() {
+        assert_ne!(chunked_hash_f32s(&[1.0]), chunked_hash_f32s(&[1.0, 0.0]));
+        assert_ne!(chunked_hash_f32s(&[]), chunked_hash_f32s(&[0.0]));
+        // a zero tail after a chunk boundary is not invisible
+        let a = vec![0.5; HASH_CHUNK_ELEMS];
+        let mut b = a.clone();
+        b.push(0.0);
+        assert_ne!(chunked_hash_f32s(&a), chunked_hash_f32s(&b));
     }
 }

@@ -99,6 +99,7 @@ fn run_sim(compress: CodecKind, bytes_per_sec: u64) -> (Duration, Vec<SimNode>) 
                             sync_timeout: Duration::from_secs(3600),
                             clock: clock.as_ref(),
                             codec: &mut codec,
+                            pool: fedless::par::ChunkPool::from_config(cfg.threads),
                         };
                         protocol.after_epoch(&mut ctx, &mut params).unwrap();
                     }
@@ -211,6 +212,7 @@ fn compress_none_is_bit_identical_to_the_uncompressed_path() {
         sync_timeout: Duration::from_secs(1),
         clock: clock.as_ref(),
         codec: &mut codec,
+        pool: fedless::par::ChunkPool::sequential(),
     };
     let expected = params.clone();
     protocol.after_epoch(&mut ctx, &mut params).unwrap();

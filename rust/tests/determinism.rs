@@ -1,0 +1,312 @@
+//! Kernel-layer determinism suite — the contract that makes `threads` a
+//! pure wall-clock knob: every pooled kernel (fused weighted average,
+//! axpy/lerp, each codec's encode/decode, the chunked content hash)
+//! must produce **bit-identical** results for `threads = 1` and
+//! `threads = 8`, wire blobs must not change by a byte, and a golden
+//! sweep report under `threads = 4` + the virtual clock must show
+//! simulated timings unchanged by parallelism.
+//!
+//! Everything here is artifact-free (no PJRT runtime needed).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fedless::compress::{Codec, CodecKind, CodecState};
+use fedless::config::{ClockKind, ExperimentConfig, FederationMode};
+use fedless::metrics::timeline::Timeline;
+use fedless::par::ChunkPool;
+use fedless::protocol::ProtocolKind;
+use fedless::store::{MemoryStore, WeightStore};
+use fedless::strategy::StrategyKind;
+use fedless::tensor::codec::{encode_blob, raw_wire_bytes, BlobMeta};
+use fedless::tensor::flat::{weighted_average_pooled, FlatParams, PAR_CHUNK};
+use fedless::time::{Clock, ParticipantGuard, VirtualClock};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn training_like(n: usize, seed: u64) -> FlatParams {
+    FlatParams(
+        (0..n)
+            .map(|i| ((i as f32) * 0.0137 + seed as f32 * 0.11).sin() * 0.8)
+            .collect(),
+    )
+}
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+// ---------------------------------------------------------------------------
+// kernel-level bit-identity
+
+#[test]
+fn weighted_average_is_bit_identical_across_thread_counts() {
+    // ragged sizes straddling chunk boundaries; K from 1 to 6
+    for n in [1usize, 1000, PAR_CHUNK, PAR_CHUNK + 1, 3 * PAR_CHUNK + 17] {
+        for k in [1usize, 2, 6] {
+            let clients: Vec<FlatParams> =
+                (0..k).map(|c| training_like(n, c as u64)).collect();
+            let refs: Vec<&FlatParams> = clients.iter().collect();
+            let w: Vec<f32> = (1..=k).map(|i| i as f32 / (k * (k + 1) / 2) as f32).collect();
+            let reference = weighted_average_pooled(&refs, &w, ChunkPool::sequential());
+            for t in THREADS {
+                let out = weighted_average_pooled(&refs, &w, ChunkPool::new(t));
+                assert_eq!(bits(&out.0), bits(&reference.0), "n={n} k={k} threads={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_codec_round_trip_is_bit_identical_across_thread_counts() {
+    let n = 2 * PAR_CHUNK + 300;
+    let p = training_like(n, 3);
+    let base = training_like(n, 4);
+    for kind in [
+        CodecKind::None,
+        CodecKind::Q8,
+        CodecKind::TopK { frac: 0.1 },
+        CodecKind::TopK { frac: 1.0 },
+        CodecKind::DeltaQ8,
+    ] {
+        let codec = kind.build();
+        let b = Some(&base);
+        let enc_ref = codec.encode_pooled(&p, b, ChunkPool::sequential());
+        let dec_ref = codec.decode_pooled(&enc_ref, n, b, ChunkPool::sequential()).unwrap();
+        for t in THREADS {
+            let pool = ChunkPool::new(t);
+            assert_eq!(
+                codec.encode_pooled(&p, b, pool),
+                enc_ref,
+                "{}: payload bytes must not depend on threads={t}",
+                kind.label()
+            );
+            let dec = codec.decode_pooled(&enc_ref, n, b, pool).unwrap();
+            assert_eq!(
+                bits(&dec.0),
+                bits(&dec_ref.0),
+                "{}: reconstruction must not depend on threads={t}",
+                kind.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_hash_is_bit_identical_across_thread_counts() {
+    use fedless::util::hash::chunked_hash_f32s_pooled;
+    for n in [0usize, 7, PAR_CHUNK, 5 * PAR_CHUNK + 3] {
+        let p = training_like(n, 9);
+        let reference = chunked_hash_f32s_pooled(p.as_slice(), ChunkPool::sequential());
+        for t in THREADS {
+            assert_eq!(
+                chunked_hash_f32s_pooled(p.as_slice(), ChunkPool::new(t)),
+                reference,
+                "n={n} threads={t}"
+            );
+        }
+        assert_eq!(p.content_hash(), reference, "content_hash is the chunked hash");
+        assert_eq!(p.content_hash_pooled(ChunkPool::new(8)), reference);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire-format stability
+
+/// `compress = none` under any thread count keeps today's v1 blob
+/// byte-for-byte, and codec pushes keep their v2 blobs byte-for-byte —
+/// the on-disk/wire compatibility half of the determinism contract.
+#[test]
+fn wire_blobs_are_unchanged_by_the_thread_count() {
+    let meta = BlobMeta { node_id: 2, round: 5, epoch: 5, n_examples: 640 };
+    let p = training_like(4_096, 1);
+    let state = CodecState::new(CodecKind::None);
+    for t in THREADS {
+        let (wire, stored) = state.encode_for_push(&meta, &p, ChunkPool::new(t)).unwrap();
+        assert_eq!(wire, encode_blob(&meta, &p).len() as u64, "v1 blob size, threads={t}");
+        assert_eq!(wire, raw_wire_bytes(p.len()));
+        assert_eq!(bits(&stored.0), bits(&p.0), "v1 path is bit-exact, threads={t}");
+    }
+    for kind in [CodecKind::Q8, CodecKind::TopK { frac: 0.1 }, CodecKind::DeltaQ8] {
+        let reference = CodecState::new(kind)
+            .encode_for_push(&meta, &p, ChunkPool::sequential())
+            .unwrap();
+        for t in THREADS {
+            let state = CodecState::new(kind);
+            let (wire, stored) = state.encode_for_push(&meta, &p, ChunkPool::new(t)).unwrap();
+            assert_eq!(wire, reference.0, "{} v2 wire bytes, threads={t}", kind.label());
+            assert_eq!(
+                bits(&stored.0),
+                bits(&reference.1 .0),
+                "{} reconstruction, threads={t}",
+                kind.label()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol-level: a full federation replays bit-identically across
+// thread counts, and simulated timings don't move
+
+/// What one simulated node reports back.
+struct SimNode {
+    finish: Duration,
+    params: FlatParams,
+}
+
+/// Drive a 3-node federation on a virtual clock, with every kernel on a
+/// `threads`-wide pool (codec via `EpochCtx.pool`, aggregation
+/// via `EpochCtx.pool`) — the same harness shape as `tests/timing.rs`,
+/// plus compression so the parallel codec path is actually exercised.
+fn run_sim(mode: FederationMode, threads: usize, epochs: usize) -> Vec<SimNode> {
+    const N: usize = 3;
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig {
+        mode,
+        n_nodes: N,
+        compress: CodecKind::Q8,
+        threads,
+        ..Default::default()
+    };
+    let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    for _ in 0..N {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(N));
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let store = Arc::clone(&store);
+                let cfg = cfg.clone();
+                let start = Arc::clone(&start);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let pool = ChunkPool::from_config(cfg.threads);
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = StrategyKind::FedAvg.build();
+                    let mut codec = CodecState::new(cfg.compress);
+                    let mut timeline = Timeline::new(node_id);
+                    let mut params = training_like(PAR_CHUNK + 37, node_id as u64);
+                    start.wait();
+                    for epoch in 0..epochs {
+                        // distinct per-node "training" so no two events
+                        // share a simulated instant
+                        clock.sleep(Duration::from_millis(40 + 9 * node_id as u64));
+                        let mut ctx = fedless::protocol::EpochCtx {
+                            node_id,
+                            n_nodes: N,
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout: Duration::from_secs(3600),
+                            clock: clock.as_ref(),
+                            codec: &mut codec,
+                            pool,
+                        };
+                        protocol.after_epoch(&mut ctx, &mut params).unwrap();
+                    }
+                    SimNode { finish: clock.now(), params }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// The whole-federation determinism claim: weights AND simulated
+/// finish times are bit-identical whether the kernels run on 1 or 8
+/// threads (compute takes zero simulated time regardless of `threads`).
+#[test]
+fn federation_replays_bit_identically_across_thread_counts() {
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let reference = run_sim(mode, 1, 4);
+        for t in [4usize, 8] {
+            let run = run_sim(mode, t, 4);
+            for (a, b) in reference.iter().zip(&run) {
+                assert_eq!(
+                    a.finish, b.finish,
+                    "{mode:?}: simulated timing must not move with threads={t}"
+                );
+                assert_eq!(
+                    bits(&a.params.0),
+                    bits(&b.params.0),
+                    "{mode:?}: weights must be bit-identical with threads={t}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// golden sweep report under threads = 4 + virtual clock
+
+/// A tiny mode × threads sweep whose trial runner simulates the
+/// protocols on a fresh virtual clock per trial: the rendered report —
+/// including the wall-clock column — must match a golden snapshot, and
+/// the `threads = 4` rows must carry exactly the same simulated timings
+/// as `threads = 1` (parallelism is invisible to simulated time).
+#[test]
+fn golden_sweep_report_with_threads_axis_under_virtual_clock() {
+    use fedless::sweep::{run_sweep_with, SweepSpec};
+
+    let base = ExperimentConfig {
+        clock: ClockKind::Virtual,
+        n_nodes: 3,
+        epochs: 3,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut spec = SweepSpec::from_base(base);
+    spec.modes = vec![FederationMode::Sync, FederationMode::Async];
+    spec.threads = vec![1, 4];
+    spec.seeds = vec![42, 43];
+    spec.jobs = 1;
+
+    let runner = |cfg: &ExperimentConfig| -> anyhow::Result<fedless::sim::ExperimentResult> {
+        let nodes = run_sim(cfg.mode, cfg.threads, cfg.epochs);
+        let wall = nodes.iter().map(|n| n.finish).max().unwrap();
+        Ok(fedless::sim::ExperimentResult {
+            // deterministic stand-in metrics; exact *timing* is the point
+            final_accuracy: 0.9 - if cfg.mode == FederationMode::Async { 0.02 } else { 0.0 },
+            final_loss: 0.1,
+            wall_clock_s: wall.as_secs_f64(),
+            reports: vec![],
+            global_hash: 0,
+            store_pushes: 0,
+            mean_idle_fraction: 0.0,
+            all_completed: true,
+        })
+    };
+
+    let body = |md: &str| -> String {
+        // skip the header line: it carries the sweep's *real* wall-clock
+        md.lines().skip(1).collect::<Vec<_>>().join("\n")
+    };
+
+    let r1 = run_sweep_with(&spec, runner).unwrap();
+    let r2 = run_sweep_with(&spec, runner).unwrap();
+    assert_eq!(r1.n_failures, 0, "{}", r1.to_markdown());
+    assert_eq!(body(&r1.to_markdown()), body(&r2.to_markdown()), "must replay identically");
+
+    // sync: every epoch ends at the straggler's pace (40 + 9·2 = 58 ms);
+    // async: the slowest node still finishes at 3 × 58 ms = 174 ms.
+    // Identical numbers in the t=1 and t=4 rows ARE the proof that
+    // parallel kernels leave simulated time untouched.
+    let golden = "\n\
+| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 3 | none | 1 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0 | 3 | none | 4 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 1 | 2 | 0.880 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 4 | 2 | 0.880 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |";
+    assert_eq!(
+        body(&r1.to_markdown()),
+        golden,
+        "sweep body diverged from the golden snapshot:\n{}",
+        r1.to_markdown()
+    );
+}

@@ -105,6 +105,7 @@ fn run_sim(
                             sync_timeout,
                             clock: clock.as_ref(),
                             codec: &mut codec,
+                            pool: fedless::par::ChunkPool::from_config(cfg.threads),
                         };
                         let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
                         if out.stalled_at.is_some() {
@@ -386,6 +387,7 @@ fn golden_sweep_report_under_virtual_clock() {
             final_loss: 1.0 - accuracy,
             wall_clock_s: wall.as_secs_f64(),
             reports: vec![],
+            global_hash: 0,
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: !nodes.iter().any(|n| n.stalled),
@@ -407,12 +409,12 @@ fn golden_sweep_report_under_virtual_clock() {
     );
 
     let golden = "\n\
-| mode | strategy | skew | nodes | compress | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
-|------|----------|------|-------|----------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
-| sync | fedavg | 0 | 2 | none | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| sync | fedavg | 0.5 | 2 | none | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 2 | none | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0.5 | 2 | none | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
+| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 2 | none | 1 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0.5 | 2 | none | 1 | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 2 | none | 1 | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0.5 | 2 | none | 1 | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,
