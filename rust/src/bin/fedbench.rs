@@ -10,11 +10,16 @@
 //! fedbench run [--mode sync|async|local|gossip[:m]] [--model M]
 //!              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S]
 //!              [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N]
+//!              [--robust median|trimmed-mean[:f]|krum[:f]|trust-weighted]
+//!              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]]
 //!              [--virtual-clock]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
-//!                        `fedbench run --mode gossip:2 --nodes 5` or a
-//!                        codec: `fedbench run --compress q8`)
+//!                        `fedbench run --mode gossip:2 --nodes 5`, a
+//!                        codec: `fedbench run --compress q8`, or an
+//!                        attack scenario: `fedbench run --nodes 4
+//!                        --mode sync --robust krum:1 --adversary
+//!                        byzantine:1`)
 //! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
 //!                        run a custom experiment grid in parallel
 //! ```
@@ -399,6 +404,26 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 cfg.compress = CodecKind::parse(value)
                     .ok_or_else(|| format!("bad --compress {value:?}"))?;
             }
+            "--robust" => {
+                let kind = StrategyKind::parse(value)
+                    .filter(|k| k.is_robust())
+                    .ok_or_else(|| {
+                        format!(
+                            "bad --robust {value:?} (median, trimmed-mean[:f], \
+                             krum[:f], trust-weighted)"
+                        )
+                    })?;
+                cfg.strategy = kind;
+            }
+            "--adversary" => {
+                cfg.adversary = match value.as_str() {
+                    "none" => None,
+                    spec => Some(
+                        fedless::store::AdversarySpec::parse(spec)
+                            .ok_or_else(|| format!("bad --adversary {value:?}"))?,
+                    ),
+                };
+            }
             "--threads" => {
                 cfg.threads = fedless::config::parse_threads(value)
                     .ok_or_else(|| format!("bad --threads {value:?} (auto or >= 1)"))?;
@@ -434,6 +459,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("clock        : {}", cfg.clock.name());
     println!("compress     : {}", cfg.compress.label());
     println!("threads      : {}", fedless::config::threads_label(cfg.threads));
+    println!("strategy     : {}", cfg.strategy.label());
+    println!(
+        "adversary    : {}",
+        cfg.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into())
+    );
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
@@ -532,6 +562,8 @@ fn main() {
              \x20      fedbench run [--mode sync|async|local|gossip[:m]] [--model M] \
              [--nodes N] [--skew S] [--strategy S] [--scale S] [--seed S] \
              [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N] \
+             [--robust median|trimmed-mean[:f]|krum[:f]|trust-weighted] \
+             [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]] \
              [--virtual-clock]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );

@@ -13,6 +13,7 @@
 //! store = memory          # memory | sharded[:N] | fs:/path/to/dir
 //! node_delays_ms = 0,40   # per-node straggler delays
 //! crash = 1@2             # crash node 1 at epoch 2
+//! adversary = byzantine:1 # none | byzantine:k | scale:<f> | signflip:k | stale:<r>
 //! clock = virtual         # real (default) | virtual simulated time
 //! compress = q8           # none | q8 | topk:<frac> | delta-q8
 //! threads = auto          # kernel-pool workers: auto | N (default 1)
@@ -113,6 +114,14 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                     node: parse_usize(node.trim())?,
                     at_epoch: parse_usize(at.trim())?,
                 });
+            }
+            "adversary" => {
+                cfg.adversary = match value {
+                    "none" => None,
+                    spec => Some(crate::store::AdversarySpec::parse(spec).ok_or_else(
+                        || err(line_no, format!("unknown adversary {value:?}")),
+                    )?),
+                }
             }
             "sync_timeout_s" => {
                 cfg.sync_timeout = Duration::from_secs_f64(parse_f64(value)?)
@@ -240,6 +249,21 @@ mod tests {
         assert_eq!(cfg.threads, 1, "single-threaded kernels are the default");
         assert!(parse_config_text("threads = 0\n").is_err());
         assert!(parse_config_text("threads = lots\n").is_err());
+    }
+
+    #[test]
+    fn adversary_values() {
+        use crate::store::{AdversaryKind, AdversarySpec};
+        let cfg = parse_config_text("adversary = byzantine:2\n").unwrap();
+        assert_eq!(cfg.adversary, AdversarySpec::parse("byzantine:2"));
+        let cfg = parse_config_text("adversary = scale:5\n").unwrap();
+        assert_eq!(cfg.adversary.unwrap().kind, AdversaryKind::Scale { factor: 5.0 });
+        let cfg = parse_config_text("adversary = none\n").unwrap();
+        assert!(cfg.adversary.is_none());
+        let cfg = parse_config_text("").unwrap();
+        assert!(cfg.adversary.is_none(), "honest is the default");
+        assert!(parse_config_text("adversary = gremlin\n").is_err());
+        assert!(parse_config_text("adversary = stale:0\n").is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub use file::{parse_config_text, ConfigError};
 use std::path::PathBuf;
 use std::time::Duration;
 
-use crate::store::LatencyConfig;
+use crate::store::{AdversarySpec, LatencyConfig};
 use crate::strategy::StrategyKind;
 
 pub use crate::compress::CodecKind;
@@ -207,6 +207,14 @@ pub struct ExperimentConfig {
     pub node_delays_ms: Vec<f64>,
     /// Crash injection.
     pub crash: Option<CrashSpec>,
+    /// Content-level adversary injection (`adversary = byzantine:k |
+    /// scale:<f> | signflip:k | stale:<rounds>`): the configured number
+    /// of clients — always the *highest* node ids — have their pushed
+    /// weights rewritten by an [`crate::store::AdversaryStore`] wrapped
+    /// around the experiment's store stack. Pair with a robust
+    /// `strategy` (median / trimmed-mean / krum / trust-weighted) to
+    /// measure attack resilience; `None` = all clients honest.
+    pub adversary: Option<AdversarySpec>,
     /// Sync-barrier poll timeout before a node gives up on the round.
     pub sync_timeout: Duration,
     /// Time domain of the experiment (`clock = real | virtual`): under
@@ -255,6 +263,7 @@ impl Default for ExperimentConfig {
             latency: None,
             node_delays_ms: Vec::new(),
             crash: None,
+            adversary: None,
             sync_timeout: Duration::from_secs(120),
             clock: ClockKind::Real,
             compress: CodecKind::None,
@@ -283,6 +292,14 @@ impl ExperimentConfig {
         if let Some(c) = &self.crash {
             anyhow::ensure!(c.node < self.n_nodes, "crash.node out of range");
         }
+        if let Some(a) = &self.adversary {
+            anyhow::ensure!(
+                a.n_adversaries() < self.n_nodes,
+                "adversary count {} must leave at least one honest node (n_nodes = {})",
+                a.n_adversaries(),
+                self.n_nodes
+            );
+        }
         if let FederationMode::Gossip { fanout } = self.mode {
             anyhow::ensure!(fanout >= 1, "gossip fanout must be >= 1");
         }
@@ -290,18 +307,24 @@ impl ExperimentConfig {
     }
 
     /// Short run identifier, e.g. `mnist_async_fedavg_n2_s0.9_seed42`
-    /// (gossip runs carry the fanout, `mnist_gossip2_...`; compressed
-    /// runs carry the codec, `..._seed42_q8`).
+    /// (gossip runs carry the fanout, `mnist_gossip2_...`; parameterized
+    /// strategies carry their parameter, `..._krum1_...`; compressed
+    /// runs carry the codec, `..._seed42_q8`; attacked runs carry the
+    /// adversary label, `..._byz1`).
     pub fn run_name(&self) -> String {
         let compress = match self.compress {
             CodecKind::None => String::new(),
             other => format!("_{}", other.label()),
         };
+        let adversary = match &self.adversary {
+            None => String::new(),
+            Some(a) => format!("_{}", a.label()),
+        };
         format!(
-            "{}_{}_{}_n{}_s{}_seed{}{compress}",
+            "{}_{}_{}_n{}_s{}_seed{}{compress}{adversary}",
             self.model,
             self.mode.label(),
-            self.strategy.name(),
+            self.strategy.label(),
             self.n_nodes,
             self.skew,
             self.seed
@@ -398,6 +421,32 @@ mod tests {
         // compressed runs must land in distinct log/store namespaces
         let c = ExperimentConfig { compress: CodecKind::Q8, ..Default::default() };
         assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_q8");
+    }
+
+    #[test]
+    fn adversary_validates_and_suffixes_run_name() {
+        assert!(ExperimentConfig::default().adversary.is_none(), "honest by default");
+        let c = ExperimentConfig {
+            adversary: AdversarySpec::parse("byzantine:1"),
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_byz1");
+        // at least one honest node must remain
+        let c = ExperimentConfig {
+            adversary: AdversarySpec::parse("byzantine:2"),
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn run_name_carries_strategy_parameters() {
+        let c = ExperimentConfig {
+            strategy: StrategyKind::parse("krum:2").unwrap(),
+            ..Default::default()
+        };
+        assert_eq!(c.run_name(), "mnist_async_krum2_n2_s0_seed42");
     }
 
     #[test]

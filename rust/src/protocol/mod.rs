@@ -32,6 +32,14 @@
 //! All four report what happened through [`ProtocolOutcome`] (pushes,
 //! aggregations, barrier stalls), which the worker folds into its
 //! [`crate::node::NodeReport`].
+//!
+//! Protocols build their [`crate::strategy::Contribution`]s from *store
+//! entries* — including a node's own round entry. That is deliberate for
+//! the adversary model: when an [`crate::store::AdversaryStore`] rewrites
+//! a push, every node (the adversary included) aggregates the corrupted
+//! entry it finds in the store, exactly as with a malicious client and a
+//! real bucket. Robust strategies (`crate::strategy::robust`) defend at
+//! this aggregation point; the protocols themselves stay attack-agnostic.
 
 mod async_hash;
 mod gossip;

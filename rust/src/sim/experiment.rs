@@ -13,7 +13,9 @@ use crate::metrics::RunLogger;
 use crate::node::{spawn_node, NodeCtx, NodeReport, NodeStatus};
 use crate::runtime::{Engine, Manifest, ModelBundle};
 use crate::par::ChunkPool;
-use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
+use crate::store::{
+    AdversaryStore, FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore,
+};
 use crate::tensor::flat::weighted_average_pooled;
 use crate::tensor::FlatParams;
 use crate::time::Clock;
@@ -79,11 +81,20 @@ fn build_store(cfg: &ExperimentConfig, clock: &Arc<dyn Clock>) -> Result<Arc<dyn
         StoreKind::Sharded(n) => Arc::new(ShardedStore::with_clock(*n, Arc::clone(clock))),
         StoreKind::Fs(path) => Arc::new(FsStore::open_with_clock(path, Arc::clone(clock))?),
     };
-    Ok(match cfg.latency {
+    let wired: Arc<dyn WeightStore> = match cfg.latency {
         None => base,
         // Arc<dyn WeightStore> implements WeightStore, so wrappers stack.
         Some(lat) => {
             Arc::new(LatencyStore::with_clock(base, lat, cfg.seed, Arc::clone(clock)))
+        }
+    };
+    // The adversary wraps *outermost* (client side of the wire): a
+    // malicious client corrupts its update before upload, so the
+    // rewritten weights pay real latency/traffic like any honest push.
+    Ok(match cfg.adversary {
+        None => wired,
+        Some(spec) => {
+            Arc::new(AdversaryStore::new(wired, spec, cfg.n_nodes, cfg.seed))
         }
     })
 }

@@ -1,0 +1,441 @@
+//! Content-level adversary injection: a store wrapper that rewrites the
+//! *weights* of selected pushes, extending [`super::FaultStore`]'s op
+//! failures to the Byzantine-client threat model (any node that can
+//! write to the serverless store can poison the global model — the open
+//! security problem FedLess flags for serverless FL).
+//!
+//! The wrapper sits *outside* the wire stack (`run_experiment` stacks it
+//! over [`super::LatencyStore`]), which models a malicious client
+//! corrupting its update before upload: the rewritten weights travel the
+//! real codec/blob/wire path, get charged to traffic accounting like any
+//! honest push, and reach every peer's pull. All rewrites are
+//! length-preserving, so `wire_bytes` stays truthful.
+//!
+//! Like the fault wrapper, the subscription path
+//! (`version`/`wait_for_change`) and all read paths are forwarded
+//! untouched — an adversary corrupts content, it does not desert the
+//! barrier notification path (the PR-3 bug class; regression-tested
+//! below).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{PushRequest, WeightEntry, WeightStore};
+use crate::tensor::FlatParams;
+use crate::util::Rng;
+
+/// Standard deviation of the `byzantine` attack's Gaussian noise —
+/// large enough that a single corrupted vector dominates any plain mean.
+pub const BYZANTINE_SIGMA: f32 = 1.0e6;
+
+/// Which content attack the adversarial clients mount. Parsed from the
+/// `adversary = byzantine:k | scale:<f> | signflip:k | stale:<rounds>`
+/// config value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdversaryKind {
+    /// `byzantine[:k]` — `k` clients (default 1) replace every pushed
+    /// weight with seeded Gaussian noise of [`BYZANTINE_SIGMA`].
+    Byzantine {
+        /// Number of noise-pushing clients (0 = spec is a no-op).
+        k: usize,
+    },
+    /// `scale[:<f>]` — one client multiplies its update by `f` (default
+    /// 10; model-replacement / boosting attack).
+    Scale {
+        /// The multiplicative boost factor.
+        factor: f64,
+    },
+    /// `signflip[:k]` — `k` clients (default 1) negate their update.
+    SignFlip {
+        /// Number of sign-flipping clients (0 = spec is a no-op).
+        k: usize,
+    },
+    /// `stale[:<r>]` — one client replays the weights it pushed `r`
+    /// rounds earlier (default 1; free-rider / staleness attack).
+    Stale {
+        /// How many pushes back the replayed weights come from (>= 1).
+        rounds: usize,
+    },
+}
+
+/// A parsed per-experiment adversary configuration. Adversarial roles
+/// are assigned to the *highest* node ids (node 0, the conventional
+/// reference node, stays honest), deterministically in `(spec, n_nodes)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversarySpec {
+    /// The attack the adversarial clients mount.
+    pub kind: AdversaryKind,
+}
+
+impl AdversarySpec {
+    /// Parse an `adversary` config/CLI value; `None` on anything
+    /// malformed (including non-finite scale factors and `stale:0`).
+    pub fn parse(s: &str) -> Option<AdversarySpec> {
+        let lower = s.to_ascii_lowercase();
+        let (name, arg) = match lower.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        let kind = match name {
+            "byzantine" => AdversaryKind::Byzantine { k: parse_count(arg, 1)? },
+            "signflip" => AdversaryKind::SignFlip { k: parse_count(arg, 1)? },
+            "scale" => {
+                let factor = match arg {
+                    Some(a) => a.parse::<f64>().ok().filter(|f| f.is_finite())?,
+                    None => 10.0,
+                };
+                AdversaryKind::Scale { factor }
+            }
+            "stale" => {
+                let rounds = parse_count(arg, 1)?;
+                if rounds == 0 {
+                    return None;
+                }
+                AdversaryKind::Stale { rounds }
+            }
+            _ => return None,
+        };
+        Some(AdversarySpec { kind })
+    }
+
+    /// Filesystem/label-safe short form: `byz1`, `scale10`, `signflip2`,
+    /// `stale3`.
+    pub fn label(&self) -> String {
+        match self.kind {
+            AdversaryKind::Byzantine { k } => format!("byz{k}"),
+            AdversaryKind::Scale { factor } => format!("scale{factor}"),
+            AdversaryKind::SignFlip { k } => format!("signflip{k}"),
+            AdversaryKind::Stale { rounds } => format!("stale{rounds}"),
+        }
+    }
+
+    /// Number of adversarial clients this spec assigns.
+    pub fn n_adversaries(&self) -> usize {
+        match self.kind {
+            AdversaryKind::Byzantine { k } | AdversaryKind::SignFlip { k } => k,
+            AdversaryKind::Scale { .. } | AdversaryKind::Stale { .. } => 1,
+        }
+    }
+
+    /// True when `node_id` plays an adversarial role in an `n_nodes`
+    /// federation (the highest `n_adversaries()` ids).
+    pub fn is_adversary(&self, node_id: usize, n_nodes: usize) -> bool {
+        node_id < n_nodes && node_id >= n_nodes.saturating_sub(self.n_adversaries())
+    }
+}
+
+impl std::fmt::Display for AdversarySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+fn parse_count(arg: Option<&str>, default: usize) -> Option<usize> {
+    match arg {
+        Some(a) => a.parse().ok(),
+        None => Some(default),
+    }
+}
+
+/// Wraps an inner store; pushes from adversarial node ids get their
+/// decoded weights rewritten per the [`AdversarySpec`] before they land.
+/// Everything else — every read, the subscription path, wire accounting
+/// — is forwarded untouched.
+pub struct AdversaryStore<S> {
+    inner: S,
+    spec: AdversarySpec,
+    n_nodes: usize,
+    seed: u64,
+    corrupted: AtomicU64,
+    /// Per-node honest push history backing the `stale` replay attack.
+    history: Mutex<HashMap<usize, Vec<Arc<FlatParams>>>>,
+}
+
+impl<S: WeightStore> AdversaryStore<S> {
+    /// Wrap `inner`; `spec` picks the attack, `n_nodes` fixes which node
+    /// ids play adversary, `seed` drives the Byzantine noise.
+    pub fn new(inner: S, spec: AdversarySpec, n_nodes: usize, seed: u64) -> Self {
+        AdversaryStore {
+            inner,
+            spec,
+            n_nodes,
+            seed,
+            corrupted: Default::default(),
+            history: Default::default(),
+        }
+    }
+
+    /// Number of pushes whose content was rewritten so far.
+    pub fn corrupted(&self) -> u64 {
+        self.corrupted.load(Ordering::Relaxed)
+    }
+
+    /// The rewritten params for an adversarial push, or `None` when this
+    /// particular push passes through unchanged (e.g. `stale` before any
+    /// history exists).
+    fn corrupt(&self, req: &PushRequest) -> Option<Arc<FlatParams>> {
+        match self.spec.kind {
+            AdversaryKind::Byzantine { .. } => {
+                // The noise stream is derived from (seed, node, round)
+                // alone — not from a shared generator — so replays are
+                // bit-identical regardless of cross-node push ordering.
+                let mut rng = Rng::new(
+                    self.seed
+                        ^ (req.node_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ req.round.wrapping_mul(0xD1B5_4A32_D192_ED03),
+                );
+                let noise: Vec<f32> =
+                    (0..req.params.len()).map(|_| rng.normal_f32() * BYZANTINE_SIGMA).collect();
+                Some(Arc::new(FlatParams(noise)))
+            }
+            AdversaryKind::Scale { factor } => Some(Arc::new(FlatParams(
+                req.params.as_slice().iter().map(|x| (*x as f64 * factor) as f32).collect(),
+            ))),
+            AdversaryKind::SignFlip { .. } => {
+                Some(Arc::new(FlatParams(req.params.as_slice().iter().map(|x| -x).collect())))
+            }
+            AdversaryKind::Stale { rounds } => {
+                let mut history = self.history.lock().unwrap();
+                let entries = history.entry(req.node_id).or_default();
+                let replay = if entries.len() >= rounds {
+                    Some(Arc::clone(&entries[entries.len() - rounds]))
+                } else {
+                    None // nothing old enough yet: the push passes through
+                };
+                entries.push(Arc::clone(&req.params));
+                replay
+            }
+        }
+    }
+}
+
+impl<S: WeightStore> WeightStore for AdversaryStore<S> {
+    fn push(&self, mut req: PushRequest) -> Result<u64> {
+        if self.spec.is_adversary(req.node_id, self.n_nodes) {
+            if let Some(rewritten) = self.corrupt(&req) {
+                self.corrupted.fetch_add(1, Ordering::Relaxed);
+                req.params = rewritten;
+            }
+        }
+        self.inner.push(req)
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        self.inner.latest_per_node()
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        self.inner.entries_for_round(round)
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        self.inner.state_hash()
+    }
+
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        // Forwarded untouched: corruption happens at push time, so reads
+        // already observe whatever the adversary deposited.
+        self.inner.latest_for_node(node_id)
+    }
+
+    fn version(&self) -> Result<u64> {
+        // Never intercepted: `version`/`wait_for_change` are the barrier
+        // notification path (see FaultStore — the PR-3 desertion bug
+        // class). A content adversary corrupts weights, not wake-ups.
+        self.inner.version()
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        self.inner.wait_for_change(since, timeout)
+    }
+
+    fn push_count(&self) -> u64 {
+        self.inner.push_count()
+    }
+
+    fn clear(&self) -> Result<()> {
+        self.history.lock().unwrap().clear();
+        self.inner.clear()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{store_tests, MemoryStore};
+    use crate::tensor::codec::{encode_blob_v2, read_blob, BlobMeta};
+
+    fn spec(s: &str) -> AdversarySpec {
+        AdversarySpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        assert_eq!(spec("byzantine").kind, AdversaryKind::Byzantine { k: 1 });
+        assert_eq!(spec("byzantine:2").kind, AdversaryKind::Byzantine { k: 2 });
+        assert_eq!(spec("scale").kind, AdversaryKind::Scale { factor: 10.0 });
+        assert_eq!(spec("scale:2.5").kind, AdversaryKind::Scale { factor: 2.5 });
+        assert_eq!(spec("signflip:3").kind, AdversaryKind::SignFlip { k: 3 });
+        assert_eq!(spec("stale:4").kind, AdversaryKind::Stale { rounds: 4 });
+        assert_eq!(spec("byzantine:2").label(), "byz2");
+        assert_eq!(spec("scale:2.5").label(), "scale2.5");
+        assert_eq!(spec("signflip").label(), "signflip1");
+        assert_eq!(spec("stale").label(), "stale1");
+        assert!(AdversarySpec::parse("stale:0").is_none());
+        assert!(AdversarySpec::parse("scale:inf").is_none());
+        assert!(AdversarySpec::parse("gremlin").is_none());
+    }
+
+    #[test]
+    fn adversary_roles_take_highest_node_ids() {
+        let s = spec("byzantine:2");
+        assert!(!s.is_adversary(0, 4));
+        assert!(!s.is_adversary(1, 4));
+        assert!(s.is_adversary(2, 4));
+        assert!(s.is_adversary(3, 4));
+        assert!(!s.is_adversary(9, 4), "out-of-range ids are not adversaries");
+        assert!(!spec("byzantine:0").is_adversary(3, 4), "k = 0 is a no-op spec");
+    }
+
+    /// A no-op spec must be fully transparent — the whole conformance
+    /// suite (incl. subscription + concurrent pushes) over a wrapped
+    /// backend.
+    #[test]
+    fn noop_spec_is_transparent() {
+        store_tests::stack_conformance(|| {
+            AdversaryStore::new(MemoryStore::new(), spec("byzantine:0"), 8, 42)
+        });
+    }
+
+    #[test]
+    fn corrupts_only_configured_pushes() {
+        let s = AdversaryStore::new(MemoryStore::new(), spec("signflip:1"), 4, 7);
+        for node in 0..4 {
+            s.push(store_tests::push_req(node, 0, 2.0)).unwrap();
+        }
+        for node in 0..3 {
+            let e = s.latest_for_node(node).unwrap().unwrap();
+            assert_eq!(e.params.0, vec![2.0; 8], "honest node {node} untouched");
+        }
+        let e = s.latest_for_node(3).unwrap().unwrap();
+        assert_eq!(e.params.0, vec![-2.0; 8], "adversarial push sign-flipped");
+        assert_eq!(s.corrupted(), 1);
+    }
+
+    #[test]
+    fn scale_boosts_and_byzantine_replaces() {
+        let s = AdversaryStore::new(MemoryStore::new(), spec("scale:10"), 2, 7);
+        s.push(store_tests::push_req(1, 0, 1.5)).unwrap();
+        let e = s.latest_for_node(1).unwrap().unwrap();
+        assert_eq!(e.params.0, vec![15.0; 8]);
+
+        let s = AdversaryStore::new(MemoryStore::new(), spec("byzantine:1"), 2, 7);
+        s.push(store_tests::push_req(1, 0, 1.5)).unwrap();
+        let e = s.latest_for_node(1).unwrap().unwrap();
+        assert_ne!(e.params.0, vec![1.5; 8], "weights replaced by noise");
+        assert!(e.params.0.iter().any(|x| x.abs() > 1e3), "noise is large-variance");
+        // wire accounting is untouched by the rewrite
+        assert_eq!(e.wire_bytes, crate::tensor::codec::raw_wire_bytes(8));
+    }
+
+    #[test]
+    fn byzantine_noise_is_order_independent_and_seeded() {
+        let mk = || AdversaryStore::new(MemoryStore::new(), spec("byzantine:1"), 4, 42);
+        let (a, b) = (mk(), mk());
+        // same pushes, different arrival order
+        for node in [0, 1, 2, 3] {
+            a.push(store_tests::push_req(node, 0, 1.0)).unwrap();
+        }
+        for node in [3, 2, 1, 0] {
+            b.push(store_tests::push_req(node, 0, 1.0)).unwrap();
+        }
+        let pa = &a.latest_for_node(3).unwrap().unwrap().params.0;
+        let pb = &b.latest_for_node(3).unwrap().unwrap().params.0;
+        assert_eq!(pa, pb, "noise depends on (seed, node, round), not arrival order");
+        // a different seed draws different noise
+        let c = AdversaryStore::new(MemoryStore::new(), spec("byzantine:1"), 4, 43);
+        c.push(store_tests::push_req(3, 0, 1.0)).unwrap();
+        assert_ne!(pa, &c.latest_for_node(3).unwrap().unwrap().params.0);
+    }
+
+    #[test]
+    fn stale_replays_earlier_pushes() {
+        let s = AdversaryStore::new(MemoryStore::new(), spec("stale:1"), 2, 7);
+        for round in 0..3u64 {
+            s.push(store_tests::push_req(1, round, round as f32)).unwrap();
+        }
+        // round 0 had no history -> passed through; rounds 1, 2 replay
+        assert_eq!(s.entries_for_round(0).unwrap()[0].params.0[0], 0.0);
+        assert_eq!(s.entries_for_round(1).unwrap()[0].params.0[0], 0.0);
+        assert_eq!(s.entries_for_round(2).unwrap()[0].params.0[0], 1.0);
+        assert_eq!(s.corrupted(), 2, "the pass-through push does not count as corrupted");
+        // clear drops the replay history along with the entries
+        s.clear().unwrap();
+        s.push(store_tests::push_req(1, 0, 9.0)).unwrap();
+        assert_eq!(s.entries_for_round(0).unwrap()[0].params.0[0], 9.0);
+    }
+
+    /// Regression (PR-3 bug class): the subscription path must never be
+    /// intercepted — a waiter parked through the adversarial wrapper
+    /// still wakes on a peer's push landing on the shared inner store.
+    #[test]
+    fn subscription_path_is_never_intercepted() {
+        use std::time::Instant;
+
+        let inner: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let s = Arc::new(AdversaryStore::new(Arc::clone(&inner), spec("byzantine:4"), 4, 7));
+        let v0 = s.version().unwrap();
+        let waiter = {
+            let s = Arc::clone(&s);
+            std::thread::spawn(move || s.wait_for_change(v0, Duration::from_secs(20)).unwrap())
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        let t = Instant::now();
+        inner.push(store_tests::push_req(1, 0, 2.0)).unwrap();
+        assert!(waiter.join().unwrap() > v0, "waiter observes the push through the wrapper");
+        assert!(t.elapsed() < Duration::from_secs(10), "woken by the push, not the timeout");
+    }
+
+    /// Flip-sweep contrast: an adversarial rewrite *re-frames* a valid
+    /// v2 blob — decode, corrupt the weights, re-encode with the hash
+    /// recomputed — so integrity checking accepts it exactly like an
+    /// honest push (the store hash is a checksum, not a signature; only
+    /// robust aggregation defends against it). A hashless bit-flip, by
+    /// contrast, is rejected at read time.
+    #[test]
+    fn reframed_blob_is_indistinguishable_from_honest() {
+        let meta = BlobMeta { node_id: 3, round: 5, epoch: 5, n_examples: 100 };
+        let honest = FlatParams(vec![1.25; 16]);
+        let payload: Vec<u8> = honest.as_slice().iter().flat_map(|x| x.to_le_bytes()).collect();
+        let blob = encode_blob_v2(&meta, 0, 0, honest.len(), &payload);
+
+        // naive corruption: flip one payload bit without re-hashing
+        let mut torn = blob.clone();
+        let last = torn.len() - 1;
+        torn[last] ^= 0x01;
+        assert!(read_blob(&torn).is_err(), "hashless bit-flip is caught");
+
+        // adversarial re-framing: rewrite the decoded weights, rebuild
+        // the blob (encode_blob_v2 recomputes the whole-blob hash)
+        let parsed = read_blob(&blob).unwrap();
+        let decoded =
+            crate::tensor::codec::decode_raw_payload(&parsed.payload, parsed.uncomp_len).unwrap();
+        let corrupted = FlatParams(decoded.as_slice().iter().map(|x| -x).collect());
+        let evil_payload: Vec<u8> =
+            corrupted.as_slice().iter().flat_map(|x| x.to_le_bytes()).collect();
+        let evil = encode_blob_v2(&meta, 0, 0, corrupted.len(), &evil_payload);
+
+        let reparsed = read_blob(&evil).expect("re-framed blob passes every integrity check");
+        assert_eq!(reparsed.meta, meta, "header metadata identical to the honest push");
+        assert_eq!(reparsed.codec_id, parsed.codec_id);
+        assert_eq!(evil.len(), blob.len(), "same wire size as the honest blob");
+        let back =
+            crate::tensor::codec::decode_raw_payload(&reparsed.payload, reparsed.uncomp_len)
+                .unwrap();
+        assert_eq!(back.0, vec![-1.25; 16], "peers decode the corrupted weights");
+    }
+}

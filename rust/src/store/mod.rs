@@ -31,10 +31,15 @@
 //!   (simulated S3 RTT).
 //! * [`CachedStore`]  — read-through cache keyed by the state hash.
 //! * [`FaultStore`]   — wraps any store with seeded error injection.
+//! * [`AdversaryStore`] — wraps any store and rewrites the *content* of
+//!   selected pushes per an [`AdversarySpec`] (Byzantine noise, scaling,
+//!   sign-flips, stale replays) — the attack layer the robust
+//!   aggregators in `crate::strategy::robust` defend against.
 //!
 //! Wrappers compose: `FaultStore<CachedStore<ShardedStore>>` is a valid
 //! stack (and is exercised by this module's composition tests).
 
+mod adversary;
 mod cached;
 mod fault;
 mod fs;
@@ -42,6 +47,7 @@ mod latency;
 mod memory;
 mod sharded;
 
+pub use adversary::{AdversaryKind, AdversarySpec, AdversaryStore, BYZANTINE_SIGMA};
 pub use cached::CachedStore;
 pub use fault::FaultStore;
 pub use fs::FsStore;

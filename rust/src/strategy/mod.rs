@@ -4,7 +4,9 @@
 //! Implemented: the paper's three (FedAvg, FedAvgM, FedAdam — §4.2.2) plus
 //! the two asynchronous extensions its §5 lists as future work:
 //! staleness-aware FedAsync [Xie et al. 2019] and buffered FedBuff
-//! [Nguyen et al. 2022].
+//! [Nguyen et al. 2022] — and the [`robust`] family (coordinate-wise
+//! median/trimmed-mean, Krum, trust-weighted averaging) defending the
+//! serverless store against adversarial clients.
 //!
 //! A strategy is stateful *per node* (e.g. each node carries its own
 //! server-momentum buffer) — exactly what the serverless design implies.
@@ -47,12 +49,14 @@ mod fedasync;
 mod fedavg;
 mod fedavgm;
 mod fedbuff;
+pub mod robust;
 
 pub use fedadam::FedAdam;
 pub use fedasync::FedAsync;
 pub use fedavg::FedAvg;
 pub use fedavgm::FedAvgM;
 pub use fedbuff::FedBuff;
+pub use robust::{Krum, Median, TrimmedMean, TrustWeighted};
 
 use std::sync::Arc;
 
@@ -128,7 +132,17 @@ pub(crate) fn fedavg_of(contribs: &[Contribution], pool: ChunkPool) -> FlatParam
     crate::tensor::flat::weighted_average_pooled(&refs, &weights, pool)
 }
 
+/// Default per-tail trim fraction for `trimmed-mean` (as permille).
+const DEFAULT_TRIM_PERMILLE: u16 = 200;
+
+/// Default Byzantine tolerance for `krum`.
+const DEFAULT_KRUM_F: usize = 1;
+
 /// Strategy selector used in configs / CLI (`--strategy fedavg`).
+///
+/// Parameterized robust kinds carry their hyperparameter in an
+/// `Eq`-safe integer encoding (`trim_permille` = frac × 1000) so the
+/// selector stays `Copy + Eq` for sweep-cell keys and config equality.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StrategyKind {
     /// Example-weighted averaging (paper Eq. 1).
@@ -141,22 +155,59 @@ pub enum StrategyKind {
     FedAsync,
     /// Buffered asynchronous aggregation (Nguyen et al. 2022).
     FedBuff,
+    /// Coordinate-wise median (robust; `median`).
+    Median,
+    /// Coordinate-wise trimmed mean (robust; `trimmed-mean[:frac]`,
+    /// `trim_permille` = frac × 1000 per tail).
+    TrimmedMean {
+        /// Per-tail trim fraction in permille (`250` = trim 25% per tail).
+        trim_permille: u16,
+    },
+    /// Krum selection (robust; `krum[:f]` tolerating `f` Byzantine clients).
+    Krum {
+        /// Number of Byzantine clients tolerated.
+        f: usize,
+    },
+    /// EMA-of-residual trust weighting (robust; `trust-weighted`).
+    TrustWeighted,
 }
 
 impl StrategyKind {
-    /// Parse a config/CLI strategy name.
+    /// Parse a config/CLI strategy name. Robust kinds accept an optional
+    /// parameter suffix: `trimmed-mean:0.25` (per-tail trim fraction in
+    /// `(0, 0.5)`) and `krum:2` (Byzantine tolerance).
     pub fn parse(s: &str) -> Option<StrategyKind> {
-        match s.to_ascii_lowercase().as_str() {
+        let lower = s.to_ascii_lowercase();
+        if let Some(frac) = lower.strip_prefix("trimmed-mean:") {
+            let f: f64 = frac.parse().ok()?;
+            if !(f.is_finite() && f > 0.0 && f < 0.5) {
+                return None;
+            }
+            return Some(StrategyKind::TrimmedMean {
+                trim_permille: (f * 1000.0).round() as u16,
+            });
+        }
+        if let Some(f) = lower.strip_prefix("krum:") {
+            return f.parse().ok().map(|f| StrategyKind::Krum { f });
+        }
+        match lower.as_str() {
             "fedavg" => Some(StrategyKind::FedAvg),
             "fedavgm" => Some(StrategyKind::FedAvgM),
             "fedadam" => Some(StrategyKind::FedAdam),
             "fedasync" => Some(StrategyKind::FedAsync),
             "fedbuff" => Some(StrategyKind::FedBuff),
+            "median" => Some(StrategyKind::Median),
+            "trimmed-mean" => {
+                Some(StrategyKind::TrimmedMean { trim_permille: DEFAULT_TRIM_PERMILLE })
+            }
+            "krum" => Some(StrategyKind::Krum { f: DEFAULT_KRUM_F }),
+            "trust-weighted" | "trustweighted" => Some(StrategyKind::TrustWeighted),
             _ => None,
         }
     }
 
-    /// Canonical lowercase name (inverse of [`StrategyKind::parse`]).
+    /// Canonical lowercase family name (inverse of
+    /// [`StrategyKind::parse`] for the default hyperparameters).
     pub fn name(self) -> &'static str {
         match self {
             StrategyKind::FedAvg => "fedavg",
@@ -164,7 +215,35 @@ impl StrategyKind {
             StrategyKind::FedAdam => "fedadam",
             StrategyKind::FedAsync => "fedasync",
             StrategyKind::FedBuff => "fedbuff",
+            StrategyKind::Median => "median",
+            StrategyKind::TrimmedMean { .. } => "trimmed-mean",
+            StrategyKind::Krum { .. } => "krum",
+            StrategyKind::TrustWeighted => "trust-weighted",
         }
+    }
+
+    /// Parameter-distinct label for run names and sweep-cell labels
+    /// (`trimmed-mean0.25`, `krum2`; equals [`StrategyKind::name`] for
+    /// everything unparameterized).
+    pub fn label(self) -> String {
+        match self {
+            StrategyKind::TrimmedMean { trim_permille } => {
+                format!("trimmed-mean{}", trim_permille as f64 / 1000.0)
+            }
+            StrategyKind::Krum { f } => format!("krum{f}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// True for the robust-aggregation family (`rust/src/strategy/robust/`).
+    pub fn is_robust(self) -> bool {
+        matches!(
+            self,
+            StrategyKind::Median
+                | StrategyKind::TrimmedMean { .. }
+                | StrategyKind::Krum { .. }
+                | StrategyKind::TrustWeighted
+        )
     }
 
     /// Instantiate with default hyperparameters (paper-faithful).
@@ -175,6 +254,12 @@ impl StrategyKind {
             StrategyKind::FedAdam => Box::new(FedAdam::new(1e-2, 0.9, 0.999, 1e-3)),
             StrategyKind::FedAsync => Box::new(FedAsync::new(0.6, 0.5)),
             StrategyKind::FedBuff => Box::new(FedBuff::new(2)),
+            StrategyKind::Median => Box::new(Median::new()),
+            StrategyKind::TrimmedMean { trim_permille } => {
+                Box::new(TrimmedMean::new(trim_permille as f64 / 1000.0))
+            }
+            StrategyKind::Krum { f } => Box::new(Krum::new(f)),
+            StrategyKind::TrustWeighted => Box::new(TrustWeighted::default()),
         }
     }
 }
@@ -224,9 +309,46 @@ pub(crate) mod strategy_tests {
             StrategyKind::FedAdam,
             StrategyKind::FedAsync,
             StrategyKind::FedBuff,
+            StrategyKind::Median,
+            StrategyKind::TrimmedMean { trim_permille: 200 },
+            StrategyKind::Krum { f: 1 },
+            StrategyKind::TrustWeighted,
         ] {
             assert_eq!(StrategyKind::parse(k.name()), Some(k));
         }
         assert_eq!(StrategyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn robust_kinds_parse_parameters() {
+        assert_eq!(
+            StrategyKind::parse("trimmed-mean:0.25"),
+            Some(StrategyKind::TrimmedMean { trim_permille: 250 })
+        );
+        assert_eq!(StrategyKind::parse("krum:3"), Some(StrategyKind::Krum { f: 3 }));
+        assert_eq!(StrategyKind::parse("trimmed-mean:0.5"), None, "frac must be < 0.5");
+        assert_eq!(StrategyKind::parse("trimmed-mean:0"), None, "frac must be > 0");
+        assert_eq!(StrategyKind::parse("krum:x"), None);
+    }
+
+    #[test]
+    fn labels_distinguish_parameters() {
+        assert_eq!(StrategyKind::FedAvg.label(), "fedavg");
+        assert_eq!(StrategyKind::TrimmedMean { trim_permille: 250 }.label(), "trimmed-mean0.25");
+        assert_eq!(StrategyKind::Krum { f: 2 }.label(), "krum2");
+        assert!(StrategyKind::Krum { f: 2 }.is_robust());
+        assert!(!StrategyKind::FedAvg.is_robust());
+    }
+
+    #[test]
+    fn robust_kinds_build_their_strategy() {
+        for (kind, name) in [
+            (StrategyKind::Median, "median"),
+            (StrategyKind::TrimmedMean { trim_permille: 250 }, "trimmed-mean"),
+            (StrategyKind::Krum { f: 1 }, "krum"),
+            (StrategyKind::TrustWeighted, "trust-weighted"),
+        ] {
+            assert_eq!(kind.build().name(), name);
+        }
     }
 }

@@ -1,0 +1,170 @@
+//! [`Krum`] — single-update selection aggregation (Blanchard et al. 2017).
+
+use crate::par::ChunkPool;
+use crate::tensor::flat::PAR_CHUNK;
+use crate::tensor::FlatParams;
+
+use super::super::{Contribution, Strategy};
+use super::{by_node, common_len};
+
+/// Krum selection: score every update by the sum of its squared
+/// distances to its `n − f − 2` nearest peers and adopt the update with
+/// the smallest score verbatim. With `n ≥ f + 3` and at most `f`
+/// Byzantine clients, the selected update is always one pushed by an
+/// honest client. Ties break toward the lowest node id, so selection is
+/// invariant under client-order permutations.
+#[derive(Clone, Copy, Debug)]
+pub struct Krum {
+    f: usize,
+}
+
+impl Krum {
+    /// Tolerate up to `f` Byzantine clients.
+    pub fn new(f: usize) -> Self {
+        Krum { f }
+    }
+
+    /// The configured Byzantine tolerance.
+    pub fn f(&self) -> usize {
+        self.f
+    }
+
+    /// Index (into the node-id-sorted contributions) of the selected
+    /// update. Exposed for the property tests in `rust/tests/robust.rs`.
+    pub fn select(&self, sorted: &[&Contribution], pool: ChunkPool) -> usize {
+        let m = sorted.len();
+        if m == 1 {
+            return 0;
+        }
+        let dist = pairwise_sq_dists(sorted, pool);
+        // cohorts too small for the textbook n - f - 2 neighbourhood fall
+        // back to the nearest single peer
+        let k = m.saturating_sub(self.f + 2).clamp(1, m - 1);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for a in 0..m {
+            let mut to_others: Vec<f64> =
+                (0..m).filter(|b| *b != a).map(|b| dist[a * m + b]).collect();
+            to_others.sort_unstable_by(f64::total_cmp);
+            let score: f64 = to_others[..k].iter().sum();
+            // strict less-than keeps the earliest (lowest node id) winner
+            if score < best_score {
+                best_score = score;
+                best = a;
+            }
+        }
+        best
+    }
+}
+
+/// Symmetric `m × m` matrix of pairwise squared L2 distances, computed
+/// as fixed-[`PAR_CHUNK`] partial sums combined in chunk-index order
+/// (bit-identical for any thread count).
+fn pairwise_sq_dists(sorted: &[&Contribution], pool: ChunkPool) -> Vec<f64> {
+    let m = sorted.len();
+    let n = common_len(sorted);
+    let n_chunks = n.div_ceil(PAR_CHUNK).max(1);
+    let partials: Vec<Vec<f64>> = pool.map((0..n_chunks).collect(), |_, ci| {
+        let lo = ci * PAR_CHUNK;
+        let hi = (lo + PAR_CHUNK).min(n);
+        let mut d = vec![0.0f64; m * m];
+        for a in 0..m {
+            let xa = &sorted[a].params.as_slice()[lo..hi];
+            for b in (a + 1)..m {
+                let xb = &sorted[b].params.as_slice()[lo..hi];
+                let mut acc = 0.0f64;
+                for (p, q) in xa.iter().zip(xb) {
+                    let diff = (*p - *q) as f64;
+                    acc += diff * diff;
+                }
+                d[a * m + b] = acc;
+            }
+        }
+        d
+    });
+    let mut dist = vec![0.0f64; m * m];
+    for part in &partials {
+        for (acc, v) in dist.iter_mut().zip(part) {
+            *acc += *v;
+        }
+    }
+    for a in 0..m {
+        for b in (a + 1)..m {
+            dist[b * m + a] = dist[a * m + b];
+        }
+    }
+    dist
+}
+
+impl Strategy for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let sorted = by_node(contribs);
+        let best = self.select(&sorted, pool);
+        Some((*sorted[best].params).clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn selects_clustered_update_over_outlier() {
+        let cs = [
+            contrib(0, 100, true, &[1.0, 1.0]),
+            contrib(1, 100, false, &[1.1, 0.9]),
+            contrib(2, 100, false, &[0.9, 1.1]),
+            contrib(3, 100, false, &[500.0, -500.0]),
+        ];
+        let out = Krum::new(1).aggregate(&cs).unwrap();
+        // output is one of the clustered honest vectors, verbatim
+        assert!(cs[..3].iter().any(|c| *c.params == out), "picked {:?}", out.0);
+    }
+
+    #[test]
+    fn single_contribution_is_identity() {
+        let cs = [contrib(0, 100, true, &[7.0, -3.0])];
+        let out = Krum::new(1).aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![7.0, -3.0]);
+    }
+
+    #[test]
+    fn tie_breaks_toward_lowest_node_id() {
+        // two identical honest pairs: scores tie at 0, node 0 wins
+        let cs = [
+            contrib(1, 100, false, &[2.0]),
+            contrib(0, 100, true, &[2.0]),
+            contrib(2, 100, false, &[2.0]),
+        ];
+        let sorted = by_node(&cs);
+        assert_eq!(Krum::new(0).select(&sorted, ChunkPool::sequential()), 0);
+    }
+
+    #[test]
+    fn distances_are_thread_invariant() {
+        let n = PAR_CHUNK + 3;
+        let cs: Vec<Contribution> = (0..4)
+            .map(|k| {
+                let vals: Vec<f32> = (0..n).map(|i| ((i + 31 * k) as f32 * 0.007).cos()).collect();
+                contrib(k, 100, k == 0, &vals)
+            })
+            .collect();
+        let sorted = by_node(&cs);
+        let seq = pairwise_sq_dists(&sorted, ChunkPool::sequential());
+        for threads in [2, 8] {
+            assert_eq!(seq, pairwise_sq_dists(&sorted, ChunkPool::new(threads)), "threads={threads}");
+        }
+    }
+}

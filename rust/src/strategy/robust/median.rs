@@ -1,0 +1,93 @@
+//! [`Median`] — coordinate-wise median aggregation.
+
+use crate::par::ChunkPool;
+use crate::tensor::FlatParams;
+
+use super::super::{Contribution, Strategy};
+use super::{by_node, per_coordinate};
+
+/// Coordinate-wise median: each output coordinate is the median of that
+/// coordinate across all clients (even counts average the two central
+/// values). Breakdown point ⌊(n−1)/2⌋ — up to that many clients can push
+/// arbitrary vectors without moving a single output coordinate outside
+/// the honest range.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Median;
+
+impl Median {
+    /// Stateless constructor (parity with the other strategies).
+    pub fn new() -> Self {
+        Median
+    }
+}
+
+/// Median of a column already sorted by the `f32` total order.
+pub(crate) fn sorted_median(col: &[f32]) -> f32 {
+    let m = col.len();
+    if m % 2 == 1 {
+        col[m / 2]
+    } else {
+        let lo = col[m / 2 - 1];
+        let hi = col[m / 2];
+        lo + (hi - lo) * 0.5
+    }
+}
+
+impl Strategy for Median {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let sorted = by_node(contribs);
+        Some(per_coordinate(&sorted, pool, sorted_median))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn odd_count_picks_middle() {
+        let cs = [
+            contrib(0, 100, true, &[1.0, 10.0]),
+            contrib(1, 100, false, &[2.0, -5.0]),
+            contrib(2, 100, false, &[1000.0, 0.0]),
+        ];
+        let out = Median::new().aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn even_count_averages_central_pair() {
+        let cs = [
+            contrib(0, 100, true, &[0.0]),
+            contrib(1, 100, false, &[1.0]),
+            contrib(2, 100, false, &[3.0]),
+            contrib(3, 100, false, &[100.0]),
+        ];
+        let out = Median::new().aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![2.0]);
+    }
+
+    #[test]
+    fn ignores_example_counts() {
+        // a heavy adversary cannot buy weight with a large n_examples
+        let cs = [
+            contrib(0, 1, true, &[1.0]),
+            contrib(1, 1, false, &[1.0]),
+            contrib(2, 1_000_000, false, &[1e9]),
+        ];
+        let out = Median::new().aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![1.0]);
+    }
+}

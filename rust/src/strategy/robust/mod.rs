@@ -1,0 +1,191 @@
+//! Robust aggregation strategies — client-side defenses against
+//! adversarial peers (ROADMAP open item 2; the FedLess line of work flags
+//! unreliable/Byzantine clients as the open security problem for
+//! serverless FL, since any node that can write to the shared store can
+//! poison the global model).
+//!
+//! Four aggregators, all behind the ordinary [`Strategy`] trait so they
+//! ride the existing config/sweep/CLI plumbing:
+//!
+//! | strategy | defense | defeats |
+//! |----------|---------|---------|
+//! | [`Median`] | coordinate-wise median | up to ⌊(n−1)/2⌋ arbitrary vectors |
+//! | [`TrimmedMean`] | drop ⌊frac·n⌋ extremes per tail, average the rest | up to ⌊frac·n⌋ arbitrary vectors |
+//! | [`Krum`] | select the single update closest to its n−f−2 nearest peers | up to `f` Byzantine clients (n ≥ f+3) |
+//! | [`TrustWeighted`] | EMA-of-residual trust weights (DSFB-style) | persistent outlier pushers |
+//!
+//! # Determinism contract
+//!
+//! Every kernel here follows the [`crate::par`] rule: work splits into
+//! fixed [`PAR_CHUNK`]-wide coordinate chunks, each chunk is computed
+//! independently, and per-chunk partial results combine in chunk-index
+//! order — so results are bit-identical for `threads = 1` vs `N`. On top
+//! of that, robust aggregators canonicalize the *client* order (sort by
+//! node id) before any arithmetic, so unlike FedAvg's client-order FMA
+//! their output is also invariant under permutations of the contribution
+//! slice (pinned by `rust/tests/robust.rs`).
+//!
+//! Robust aggregators deliberately ignore `n_examples`: example-count
+//! weighting is itself attacker-controlled metadata, so each client
+//! counts once.
+
+mod krum;
+mod median;
+mod trimmed;
+mod trust;
+
+pub use krum::Krum;
+pub use median::Median;
+pub use trimmed::TrimmedMean;
+pub use trust::TrustWeighted;
+
+use crate::par::ChunkPool;
+use crate::tensor::flat::PAR_CHUNK;
+use crate::tensor::FlatParams;
+
+use super::Contribution;
+
+/// Contributions in canonical (node-id) order. All robust aggregators
+/// start here so client-order permutations cannot change a single bit of
+/// the result.
+pub(crate) fn by_node(contribs: &[Contribution]) -> Vec<&Contribution> {
+    let mut sorted: Vec<&Contribution> = contribs.iter().collect();
+    sorted.sort_by_key(|c| c.node_id);
+    sorted
+}
+
+/// Common length of the sorted contributions' parameter vectors.
+pub(crate) fn common_len(sorted: &[&Contribution]) -> usize {
+    let n = sorted[0].params.len();
+    for c in sorted {
+        assert_eq!(c.params.len(), n, "client param length mismatch");
+    }
+    n
+}
+
+/// Coordinate-wise robust reduction: for every output coordinate, gather
+/// that coordinate's value from all clients, sort the column with the
+/// `f32` total order, and reduce the sorted column with `f`. Chunked on
+/// [`PAR_CHUNK`] boundaries so pooled results are bit-identical to the
+/// sequential form.
+pub(crate) fn per_coordinate<F>(sorted: &[&Contribution], pool: ChunkPool, reduce: F) -> FlatParams
+where
+    F: Fn(&[f32]) -> f32 + Sync,
+{
+    let n = common_len(sorted);
+    let m = sorted.len();
+    let mut out = FlatParams::zeros(n);
+    let items: Vec<&mut [f32]> = out.0.chunks_mut(PAR_CHUNK).collect();
+    pool.for_each(items, |ci, dst| {
+        let start = ci * PAR_CHUNK;
+        let rows: Vec<&[f32]> =
+            sorted.iter().map(|c| &c.params.as_slice()[start..start + dst.len()]).collect();
+        let mut col = vec![0.0f32; m];
+        for (j, d) in dst.iter_mut().enumerate() {
+            for (slot, row) in col.iter_mut().zip(&rows) {
+                *slot = row[j];
+            }
+            col.sort_unstable_by(f32::total_cmp);
+            *d = reduce(&col);
+        }
+    });
+    out
+}
+
+/// Per-client RMS residual against a reference vector, computed as
+/// fixed-chunk partial sums combined in chunk-index order (bit-identical
+/// for any thread count).
+pub(crate) fn residual_rms(
+    sorted: &[&Contribution],
+    reference: &FlatParams,
+    pool: ChunkPool,
+) -> Vec<f64> {
+    let n = common_len(sorted);
+    let m = sorted.len();
+    let n_chunks = n.div_ceil(PAR_CHUNK).max(1);
+    let partials: Vec<Vec<f64>> = pool.map((0..n_chunks).collect(), |_, ci| {
+        let lo = ci * PAR_CHUNK;
+        let hi = (lo + PAR_CHUNK).min(n);
+        let base = &reference.as_slice()[lo..hi];
+        sorted
+            .iter()
+            .map(|c| {
+                let row = &c.params.as_slice()[lo..hi];
+                let mut acc = 0.0f64;
+                for (x, r) in row.iter().zip(base) {
+                    let d = (*x - *r) as f64;
+                    acc += d * d;
+                }
+                acc
+            })
+            .collect()
+    });
+    let mut sums = vec![0.0f64; m];
+    for part in &partials {
+        for (acc, v) in sums.iter_mut().zip(part) {
+            *acc += *v;
+        }
+    }
+    let denom = n.max(1) as f64;
+    sums.into_iter().map(|s| (s / denom).sqrt()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn by_node_sorts_and_common_len_checks() {
+        let cs = [contrib(2, 1, false, &[0.0]), contrib(0, 1, true, &[1.0]), contrib(1, 1, false, &[2.0])];
+        let sorted = by_node(&cs);
+        let ids: Vec<usize> = sorted.iter().map(|c| c.node_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(common_len(&sorted), 1);
+    }
+
+    #[test]
+    fn per_coordinate_min_reduction() {
+        let cs = [
+            contrib(0, 1, true, &[3.0, -1.0]),
+            contrib(1, 1, false, &[1.0, 5.0]),
+            contrib(2, 1, false, &[2.0, 0.0]),
+        ];
+        let sorted = by_node(&cs);
+        let out = per_coordinate(&sorted, ChunkPool::sequential(), |col| col[0]);
+        assert_eq!(out.0, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn residual_rms_matches_hand_computation() {
+        let cs = [contrib(0, 1, true, &[1.0, 1.0]), contrib(1, 1, false, &[4.0, 5.0])];
+        let sorted = by_node(&cs);
+        let reference = FlatParams(vec![1.0, 1.0]);
+        let r = residual_rms(&sorted, &reference, ChunkPool::sequential());
+        assert_eq!(r[0], 0.0);
+        // sqrt((9 + 16) / 2) = sqrt(12.5)
+        assert!((r[1] - 12.5f64.sqrt()).abs() < 1e-12, "{}", r[1]);
+    }
+
+    #[test]
+    fn kernels_are_thread_invariant() {
+        let n = PAR_CHUNK + 7;
+        let cs: Vec<Contribution> = (0..5)
+            .map(|k| {
+                let vals: Vec<f32> = (0..n).map(|i| ((i * (k + 2)) as f32 * 0.013).sin()).collect();
+                contrib(k, 1, k == 0, &vals)
+            })
+            .collect();
+        let sorted = by_node(&cs);
+        let seq = per_coordinate(&sorted, ChunkPool::sequential(), |col| col[col.len() / 2]);
+        let reference = seq.clone();
+        let rms_seq = residual_rms(&sorted, &reference, ChunkPool::sequential());
+        for threads in [2, 8] {
+            let pool = ChunkPool::new(threads);
+            let par = per_coordinate(&sorted, pool, |col| col[col.len() / 2]);
+            assert_eq!(seq.0, par.0, "per_coordinate threads={threads}");
+            let rms_par = residual_rms(&sorted, &reference, pool);
+            assert_eq!(rms_seq, rms_par, "residual_rms threads={threads}");
+        }
+    }
+}

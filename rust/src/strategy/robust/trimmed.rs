@@ -1,0 +1,95 @@
+//! [`TrimmedMean`] — coordinate-wise trimmed mean aggregation.
+
+use crate::par::ChunkPool;
+use crate::tensor::FlatParams;
+
+use super::super::{Contribution, Strategy};
+use super::{by_node, per_coordinate};
+
+/// Coordinate-wise trimmed mean: per coordinate, sort the n client
+/// values, drop the `⌊frac·n⌋` smallest and largest, and average what
+/// remains (uniformly — see the module note on `n_examples`). Robust to
+/// up to `⌊frac·n⌋` arbitrary vectors; `frac = 0` degrades to a plain
+/// uniform mean.
+#[derive(Clone, Copy, Debug)]
+pub struct TrimmedMean {
+    frac: f64,
+}
+
+impl TrimmedMean {
+    /// Trim fraction per tail; clamped into `[0, 0.5)`.
+    pub fn new(frac: f64) -> Self {
+        TrimmedMean { frac: frac.clamp(0.0, 0.4999) }
+    }
+
+    /// The configured per-tail trim fraction.
+    pub fn frac(&self) -> f64 {
+        self.frac
+    }
+}
+
+impl Strategy for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let sorted = by_node(contribs);
+        let m = sorted.len();
+        // keep at least one value: never trim past the central element(s)
+        let k = ((self.frac * m as f64).floor() as usize).min((m - 1) / 2);
+        Some(per_coordinate(&sorted, pool, |col| {
+            let kept = &col[k..m - k];
+            let mut acc = 0.0f64;
+            for v in kept {
+                acc += *v as f64;
+            }
+            (acc / kept.len() as f64) as f32
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::strategy_tests::contrib;
+    use super::*;
+
+    #[test]
+    fn trims_extremes_per_coordinate() {
+        let cs = [
+            contrib(0, 100, true, &[0.0]),
+            contrib(1, 100, false, &[2.0]),
+            contrib(2, 100, false, &[4.0]),
+            contrib(3, 100, false, &[1e9]),
+        ];
+        // n=4, frac=0.25 -> drop 1 per tail, average the central pair
+        let out = TrimmedMean::new(0.25).aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![3.0]);
+    }
+
+    #[test]
+    fn zero_frac_is_uniform_mean() {
+        let cs = [contrib(0, 100, true, &[1.0]), contrib(1, 100, false, &[3.0])];
+        let out = TrimmedMean::new(0.0).aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![2.0]);
+    }
+
+    #[test]
+    fn trim_never_empties_the_column() {
+        // frac near 0.5 on a tiny cohort still keeps the central element
+        let cs = [
+            contrib(0, 100, true, &[1.0]),
+            contrib(1, 100, false, &[5.0]),
+            contrib(2, 100, false, &[9.0]),
+        ];
+        let out = TrimmedMean::new(0.49).aggregate(&cs).unwrap();
+        assert_eq!(out.0, vec![5.0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! [`TrustWeighted`] — EMA-of-residual trust weighting (DSFB-style).
+
+use std::collections::BTreeMap;
+
+use crate::par::ChunkPool;
+use crate::tensor::flat::weighted_average_pooled;
+use crate::tensor::FlatParams;
+
+use super::super::{Contribution, Strategy};
+use super::median::sorted_median;
+use super::{by_node, per_coordinate, residual_rms};
+
+/// Trust-weighted averaging: each round, score every client by the RMS
+/// residual of its update against the coordinate-wise median of the
+/// cohort (a robust reference no single client controls), fold the
+/// residual into a per-client exponential moving average, and average
+/// the updates with weights proportional to `1 / (eps + ema)`,
+/// normalized to sum to one.
+///
+/// A client that keeps pushing outliers sees its EMA rise monotonically
+/// toward its residual, so its normalized weight *strictly decreases*
+/// round over round while honest clients (near-zero residual) keep full
+/// weight — the property test in `rust/tests/robust.rs` pins this. The
+/// EMA is applied *before* weighting, so a large outlier is down-weighted
+/// already in the round it first appears.
+///
+/// Per-node state (the EMA map) follows the serverless design: every
+/// node keeps its own trust ledger, there is no central scorer.
+#[derive(Clone, Debug)]
+pub struct TrustWeighted {
+    beta: f64,
+    eps: f64,
+    ema: BTreeMap<usize, f64>,
+    last_weights: Vec<(usize, f32)>,
+}
+
+impl TrustWeighted {
+    /// `beta` — EMA retention per round (0 = memoryless, 1 = frozen);
+    /// `eps` — residual floor that caps the trust of a perfect client.
+    pub fn new(beta: f64, eps: f64) -> Self {
+        TrustWeighted {
+            beta: beta.clamp(0.0, 1.0),
+            eps: eps.max(f64::MIN_POSITIVE),
+            ema: BTreeMap::new(),
+            last_weights: Vec::new(),
+        }
+    }
+
+    /// The normalized `(node_id, weight)` pairs used by the most recent
+    /// aggregation, in node-id order. Exposed for the trust property
+    /// tests in `rust/tests/robust.rs`.
+    pub fn last_weights(&self) -> &[(usize, f32)] {
+        &self.last_weights
+    }
+}
+
+impl Default for TrustWeighted {
+    fn default() -> Self {
+        TrustWeighted::new(0.5, 1e-3)
+    }
+}
+
+impl Strategy for TrustWeighted {
+    fn name(&self) -> &'static str {
+        "trust-weighted"
+    }
+
+    fn aggregate_pooled(
+        &mut self,
+        contribs: &[Contribution],
+        pool: ChunkPool,
+    ) -> Option<FlatParams> {
+        if contribs.is_empty() {
+            return None;
+        }
+        let sorted = by_node(contribs);
+        let reference = per_coordinate(&sorted, pool, sorted_median);
+        let residuals = residual_rms(&sorted, &reference, pool);
+        let mut trust = Vec::with_capacity(sorted.len());
+        for (c, r) in sorted.iter().zip(&residuals) {
+            let e = self.ema.entry(c.node_id).or_insert(0.0);
+            *e = self.beta * *e + (1.0 - self.beta) * *r;
+            trust.push(1.0 / (self.eps + *e));
+        }
+        let total: f64 = trust.iter().sum();
+        let weights: Vec<f32> = trust.iter().map(|t| (t / total) as f32).collect();
+        let refs: Vec<&FlatParams> = sorted.iter().map(|c| c.params.as_ref()).collect();
+        let out = weighted_average_pooled(&refs, &weights, pool);
+        self.last_weights =
+            sorted.iter().map(|c| c.node_id).zip(weights.iter().copied()).collect();
+        Some(out)
+    }
+
+    fn reset(&mut self) {
+        self.ema.clear();
+        self.last_weights.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::strategy_tests::contrib;
+    use super::*;
+
+    fn cohort(bad_val: f32) -> Vec<Contribution> {
+        vec![
+            contrib(0, 100, true, &[1.0, 1.0]),
+            contrib(1, 100, false, &[1.0, 1.0]),
+            contrib(2, 100, false, &[1.0, 1.0]),
+            contrib(3, 100, false, &[bad_val, bad_val]),
+        ]
+    }
+
+    #[test]
+    fn weights_normalize_and_downweight_outlier() {
+        let mut s = TrustWeighted::default();
+        let out = s.aggregate(&cohort(1000.0)).unwrap();
+        let sum: f32 = s.last_weights().iter().map(|(_, w)| w).sum();
+        assert!((sum - 1.0).abs() < 1e-4, "weights sum to 1, got {sum}");
+        let w_bad = s.last_weights().iter().find(|(n, _)| *n == 3).unwrap().1;
+        let w_good = s.last_weights().iter().find(|(n, _)| *n == 0).unwrap().1;
+        assert!(w_bad < w_good / 100.0, "outlier weight {w_bad} vs honest {w_good}");
+        // the aggregate stays near the honest cluster in round one
+        assert!((out.0[0] - 1.0).abs() < 0.1, "got {}", out.0[0]);
+    }
+
+    #[test]
+    fn honest_uniform_cohort_gets_uniform_weights() {
+        let mut s = TrustWeighted::default();
+        s.aggregate(&cohort(1.0)).unwrap();
+        for (_, w) in s.last_weights() {
+            assert!((w - 0.25).abs() < 1e-6, "uniform weight, got {w}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_the_trust_ledger() {
+        let mut s = TrustWeighted::default();
+        s.aggregate(&cohort(1000.0)).unwrap();
+        let w_bad_first = s.last_weights().iter().find(|(n, _)| *n == 3).unwrap().1;
+        s.aggregate(&cohort(1000.0)).unwrap();
+        let w_bad_second = s.last_weights().iter().find(|(n, _)| *n == 3).unwrap().1;
+        assert!(w_bad_second < w_bad_first, "EMA keeps decreasing trust");
+        s.reset();
+        s.aggregate(&cohort(1000.0)).unwrap();
+        let w_bad_reset = s.last_weights().iter().find(|(n, _)| *n == 3).unwrap().1;
+        assert_eq!(w_bad_reset, w_bad_first, "reset forgets the ledger");
+    }
+}

@@ -53,6 +53,15 @@ pub struct CellSummary {
     pub failures: usize,
     /// Accuracy summary over successful trials (`None` if all failed).
     pub accuracy: Option<Summary>,
+    /// Mean accuracy of this cell's *clean* run: for an honest cell
+    /// (`adversary = None`) its own mean, for an attacked cell the mean
+    /// of its clean sibling — the cell identical in every axis except
+    /// `adversary` — when that sibling is in the grid. The paired
+    /// `acc clean` / `acc attacked` report columns read attack damage
+    /// off one row.
+    pub acc_clean: Option<f64>,
+    /// Mean accuracy under attack: set only for attacked cells.
+    pub acc_attacked: Option<f64>,
     /// Loss summary over successful trials.
     pub loss: Option<Summary>,
     /// Wall-clock summary over successful trials.
@@ -98,6 +107,8 @@ impl SweepReport {
                 n_trials: 0,
                 failures: 0,
                 accuracy: None,
+                acc_clean: None,
+                acc_attacked: None,
                 loss: None,
                 wall_clock: None,
                 mb_pushed: None,
@@ -142,6 +153,28 @@ impl SweepReport {
             }
         }
 
+        // Pair every attacked cell with its clean sibling (identical key,
+        // `adversary = None`) so attack damage reads off a single row.
+        let clean_means: Vec<Option<f64>> = cells
+            .iter()
+            .map(|c| {
+                if c.cell.adversary.is_none() {
+                    return c.accuracy.as_ref().map(|a| a.mean);
+                }
+                let sibling = CellKey { adversary: None, ..c.cell.clone() };
+                cells
+                    .iter()
+                    .find(|other| other.cell == sibling)
+                    .and_then(|other| other.accuracy.as_ref().map(|a| a.mean))
+            })
+            .collect();
+        for (c, clean) in cells.iter_mut().zip(clean_means) {
+            c.acc_clean = clean;
+            if c.cell.adversary.is_some() {
+                c.acc_attacked = c.accuracy.as_ref().map(|a| a.mean);
+            }
+        }
+
         SweepReport {
             model: spec.base.model.clone(),
             cells,
@@ -170,10 +203,10 @@ impl SweepReport {
             }
         );
         out.push_str(
-            "| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
+            "| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
         );
         out.push_str(
-            "|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n",
+            "|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n",
         );
         for c in &self.cells {
             let trials = if c.failures > 0 {
@@ -183,6 +216,9 @@ impl SweepReport {
             };
             let mb = |s: &Option<Summary>| {
                 s.as_ref().map(|x| format!("{:.2}", x.mean)).unwrap_or_else(|| "-".into())
+            };
+            let acc3 = |v: &Option<f64>| {
+                v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
             };
             let (acc, loss, wall) = match (&c.accuracy, &c.loss, &c.wall_clock) {
                 (Some(a), Some(l), Some(w)) => {
@@ -195,15 +231,18 @@ impl SweepReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
                 c.cell.mode.label(),
-                c.cell.strategy.name(),
+                c.cell.strategy.label(),
                 c.cell.skew,
                 c.cell.n_nodes,
                 c.cell.compress.label(),
                 crate::config::threads_label(c.cell.threads),
+                c.cell.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
                 trials,
                 acc,
+                acc3(&c.acc_clean),
+                acc3(&c.acc_attacked),
                 loss,
                 wall,
                 mb(&c.mb_pushed),
@@ -216,28 +255,34 @@ impl SweepReport {
     /// CSV with one row per grid cell (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "model,mode,strategy,skew,n_nodes,compress,threads,trials,failures,\
-             acc_mean,acc_std,loss_mean,loss_std,wall_mean,wall_std,\
+            "model,mode,strategy,skew,n_nodes,compress,threads,adversary,trials,failures,\
+             acc_mean,acc_std,acc_clean,acc_attacked,loss_mean,loss_std,wall_mean,wall_std,\
              mb_pushed_mean,mb_pulled_mean\n",
         );
         let num = |s: &Option<Summary>, f: fn(&Summary) -> f64| -> String {
             s.as_ref().map(|x| format!("{}", f(x))).unwrap_or_default()
         };
+        let opt = |v: &Option<f64>| -> String {
+            v.map(|x| format!("{x}")).unwrap_or_default()
+        };
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
-                c.cell.strategy.name(),
+                c.cell.strategy.label(),
                 c.cell.skew,
                 c.cell.n_nodes,
                 c.cell.compress.label(),
                 crate::config::threads_label(c.cell.threads),
+                c.cell.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
                 c.n_trials,
                 c.failures,
                 num(&c.accuracy, |s| s.mean),
                 num(&c.accuracy, |s| s.std),
+                opt(&c.acc_clean),
+                opt(&c.acc_attacked),
                 num(&c.loss, |s| s.mean),
                 num(&c.loss, |s| s.std),
                 num(&c.wall_clock, |s| s.mean),
@@ -359,6 +404,53 @@ mod tests {
         assert!(lines[0].starts_with("model,mode,strategy"));
         let cols = lines[1].split(',').count();
         assert_eq!(cols, lines[0].split(',').count());
+    }
+
+    #[test]
+    fn adversary_cells_pair_with_their_clean_sibling() {
+        // adversary axis is innermost: cell 0 = clean, 1 = byz1 (fedavg),
+        // then 2 = clean, 3 = byz1 (median)
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "sync", "strategies": ["fedavg", "median"],
+                "adversary": ["none", "byzantine:1"], "n_nodes": 4}"#,
+        )
+        .unwrap();
+        let outcomes = vec![
+            outcome(0, 0, 0.9),
+            outcome(1, 1, 0.2),
+            outcome(2, 2, 0.88),
+            outcome(3, 3, 0.87),
+        ];
+        let r = SweepReport::build(&spec, &outcomes, 1, 1.0);
+        // clean cells: own mean in acc_clean, no attacked value
+        assert_eq!(r.cells[0].acc_clean, Some(0.9));
+        assert_eq!(r.cells[0].acc_attacked, None);
+        // attacked cells: sibling's clean mean paired with own mean
+        assert_eq!(r.cells[1].acc_clean, Some(0.9));
+        assert_eq!(r.cells[1].acc_attacked, Some(0.2));
+        assert_eq!(r.cells[3].acc_clean, Some(0.88));
+        assert_eq!(r.cells[3].acc_attacked, Some(0.87));
+        let md = r.to_markdown();
+        assert!(md.contains("| acc clean | acc attacked |"), "{md}");
+        assert!(md.contains("| byz1 |"), "{md}");
+        assert!(md.contains("| 0.900 | 0.200 |"), "{md}");
+        assert!(md.contains("| 0.900 | - |"), "{md}");
+        let csv = r.to_csv();
+        assert!(csv.contains("adversary,trials"), "{csv}");
+        assert!(csv.contains(",byz1,"), "{csv}");
+        assert!(csv.lines().nth(2).unwrap().contains(",0.9,0.2,"), "{csv}");
+    }
+
+    #[test]
+    fn attacked_cell_without_clean_sibling_renders_dash() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "sync", "adversary": "signflip:1", "n_nodes": 4}"#,
+        )
+        .unwrap();
+        let r = SweepReport::build(&spec, &[outcome(0, 0, 0.4)], 1, 1.0);
+        assert_eq!(r.cells[0].acc_clean, None, "no clean sibling in the grid");
+        assert_eq!(r.cells[0].acc_attacked, Some(0.4));
+        assert!(r.to_markdown().contains("| - | 0.400 |"));
     }
 
     #[test]

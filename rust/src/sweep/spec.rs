@@ -17,13 +17,13 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::compress::CodecKind;
 use crate::config::{threads_label, ExperimentConfig, FederationMode, StoreKind};
-use crate::store::LatencyConfig;
+use crate::store::{AdversarySpec, LatencyConfig};
 use crate::strategy::StrategyKind;
 use crate::util::json::Json;
 
 /// One cell of the sweep grid: a unique (mode, strategy, skew, n_nodes,
-/// compress, threads) combination. Seeds are *trials within* a cell, not
-/// part of the key — the report aggregates across them.
+/// compress, threads, adversary) combination. Seeds are *trials within* a
+/// cell, not part of the key — the report aggregates across them.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellKey {
     /// Federation protocol of this cell.
@@ -40,14 +40,21 @@ pub struct CellKey {
     /// wall-clock axis: the [`crate::par`] determinism contract makes
     /// every experiment metric identical across `threads` cells.
     pub threads: usize,
+    /// Content adversary of this cell (`None` = all clients honest). The
+    /// report pairs each attacked cell with its clean sibling — the cell
+    /// with the same key and `adversary = None` — in the
+    /// `acc clean` / `acc attacked` columns.
+    pub adversary: Option<AdversarySpec>,
 }
 
 impl CellKey {
     /// Filesystem- and table-safe label, e.g. `async_fedavg_s0.9_n2`
-    /// (gossip cells carry the fanout — `gossip3_...` — compressed
-    /// cells the codec — `..._n2_q8` — and multi-threaded cells the
-    /// worker count — `..._t8` / `..._tauto` — so no two cells ever
-    /// share a store namespace or report row).
+    /// (gossip cells carry the fanout — `gossip3_...` — parameterized
+    /// strategies their parameter — `..._krum2_...` — compressed
+    /// cells the codec — `..._n2_q8` — multi-threaded cells the
+    /// worker count — `..._t8` / `..._tauto` — and attacked cells the
+    /// adversary label — `..._byz1` — so no two cells ever share a
+    /// store namespace or report row).
     pub fn label(&self) -> String {
         let compress = match self.compress {
             CodecKind::None => String::new(),
@@ -57,10 +64,14 @@ impl CellKey {
             1 => String::new(),
             other => format!("_t{}", threads_label(other)),
         };
+        let adversary = match &self.adversary {
+            None => String::new(),
+            Some(a) => format!("_{}", a.label()),
+        };
         format!(
-            "{}_{}_s{}_n{}{compress}{threads}",
+            "{}_{}_s{}_n{}{compress}{threads}{adversary}",
             self.mode.label(),
-            self.strategy.name(),
+            self.strategy.label(),
             self.skew,
             self.n_nodes
         )
@@ -100,6 +111,10 @@ pub struct SweepSpec {
     /// `"auto"`; 0 encodes auto). Wall-clock only — results are
     /// bit-identical across values.
     pub threads: Vec<usize>,
+    /// Content-adversary axis (`"adversary"` key: `"none"` or specs like
+    /// `"byzantine:1"`). `None` cells run all-honest; the report pairs
+    /// attacked cells with their clean siblings.
+    pub adversaries: Vec<Option<AdversarySpec>>,
     /// Seeds to run per cell (each seed is one trial).
     pub seeds: Vec<u64>,
     /// Worker threads for the scheduler; 0 = automatic
@@ -118,6 +133,7 @@ impl SweepSpec {
             node_counts: vec![base.n_nodes],
             compressions: vec![base.compress],
             threads: vec![base.threads],
+            adversaries: vec![base.adversary],
             seeds: vec![base.seed],
             jobs: 0,
             base,
@@ -128,7 +144,11 @@ impl SweepSpec {
     ///
     /// Recognized keys — axes (scalar or array): `modes`, `strategies`,
     /// `skews`, `n_nodes`, `compress` (wire codec: `"none"`, `"q8"`,
-    /// `"topk:0.1"`, `"delta-q8"`), `seeds`; `trials: T` is shorthand
+    /// `"topk:0.1"`, `"delta-q8"`), `adversary` (content attack:
+    /// `"none"`, `"byzantine:k"`, `"scale:<f>"`, `"signflip:k"`,
+    /// `"stale:<r>"`), `robust` (robust strategies appended to the
+    /// strategy axis: `"median"`, `"trimmed-mean:<frac>"`, `"krum:f"`,
+    /// `"trust-weighted"`), `seeds`; `trials: T` is shorthand
     /// for `seeds = [seed, seed + 1000, ...]` (the
     /// [`crate::sim::run_trials`] seed schedule). Scalars forwarded to the base config: `model`, `epochs`,
     /// `steps_per_epoch`, `sample_prob`, `train_size`, `test_size`,
@@ -147,7 +167,7 @@ impl SweepSpec {
             "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
             "modes", "strategies", "skews", "n_nodes", "compress", "threads", "seeds",
-            "trials", "jobs",
+            "adversary", "robust", "trials", "jobs",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -208,10 +228,23 @@ impl SweepSpec {
                 x.as_str().and_then(FederationMode::parse)
             })?,
         };
-        let strategies = match obj.get("strategies") {
+        let mut strategies = match obj.get("strategies") {
             None => vec![base.strategy],
             Some(v) => axis(v, "strategies", |x| x.as_str().and_then(StrategyKind::parse))?,
         };
+        // `robust` appends robust strategies to the strategy axis (so
+        // attack grids read `"strategies": ["fedavg"], "robust":
+        // ["median", "krum:1"]`); every entry must actually be robust.
+        if let Some(v) = obj.get("robust") {
+            let extra = axis(v, "robust", |x| {
+                x.as_str().and_then(StrategyKind::parse).filter(|k| k.is_robust())
+            })?;
+            for kind in extra {
+                if !strategies.contains(&kind) {
+                    strategies.push(kind);
+                }
+            }
+        }
         let skews = match obj.get("skews") {
             None => vec![base.skew],
             Some(v) => axis(v, "skews", Json::as_f64)?,
@@ -231,6 +264,14 @@ impl SweepSpec {
             Some(v) => axis(v, "threads", |x| match x.as_str() {
                 Some(s) => crate::config::parse_threads(s),
                 None => int_of(x).map(|n| n as usize).filter(|&n| n >= 1),
+            })?,
+        };
+        let adversaries = match obj.get("adversary") {
+            None => vec![base.adversary],
+            Some(v) => axis(v, "adversary", |x| match x.as_str() {
+                Some("none") => Some(None),
+                Some(s) => AdversarySpec::parse(s).map(Some),
+                None => None,
             })?,
         };
 
@@ -261,13 +302,17 @@ impl SweepSpec {
             node_counts,
             compressions,
             threads,
+            adversaries,
             seeds,
             jobs,
         })
     }
 
     /// The grid cells in deterministic (mode, strategy, skew, n_nodes,
-    /// compress, threads) nested order — the row order of the report.
+    /// compress, threads, adversary) nested order — the row order of the
+    /// report. The adversary axis is innermost, so each attacked cell
+    /// sits right after its clean sibling when `"adversary"` starts with
+    /// `"none"`.
     pub fn cells(&self) -> Vec<CellKey> {
         let mut out =
             Vec::with_capacity(self.modes.len() * self.strategies.len() * self.skews.len());
@@ -277,14 +322,17 @@ impl SweepSpec {
                     for &n_nodes in &self.node_counts {
                         for &compress in &self.compressions {
                             for &threads in &self.threads {
-                                out.push(CellKey {
-                                    mode,
-                                    strategy,
-                                    skew,
-                                    n_nodes,
-                                    compress,
-                                    threads,
-                                });
+                                for &adversary in &self.adversaries {
+                                    out.push(CellKey {
+                                        mode,
+                                        strategy,
+                                        skew,
+                                        n_nodes,
+                                        compress,
+                                        threads,
+                                        adversary,
+                                    });
+                                }
                             }
                         }
                     }
@@ -329,6 +377,7 @@ impl SweepSpec {
                 cfg.n_nodes = cell.n_nodes;
                 cfg.compress = cell.compress;
                 cfg.threads = cell.threads;
+                cfg.adversary = cell.adversary;
                 cfg.seed = seed;
                 if let StoreKind::Fs(root) = &self.base.store {
                     cfg.store =
@@ -618,6 +667,55 @@ mod tests {
         assert!(SweepSpec::parse_json(r#"{"threads": 0}"#).is_err());
         assert!(SweepSpec::parse_json(r#"{"threads": ["lots"]}"#).is_err());
         assert!(SweepSpec::parse_json(r#"{"threads": [2.5]}"#).is_err());
+    }
+
+    #[test]
+    fn adversary_axis_expands_with_clean_sibling_first() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "sync", "adversary": ["none", "byzantine:1", "scale:10"], "n_nodes": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.adversaries.len(), 3);
+        assert_eq!(spec.adversaries[0], None);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 3);
+        // the clean cell keeps the legacy label; attacked cells are
+        // suffixed, and the adversary axis is innermost so the clean
+        // sibling leads its group
+        assert_eq!(cells[0].label(), "sync_fedavg_s0_n4");
+        assert_eq!(cells[1].label(), "sync_fedavg_s0_n4_byz1");
+        assert_eq!(cells[2].label(), "sync_fedavg_s0_n4_scale10");
+        let trials = spec.expand().unwrap();
+        assert!(trials[0].cfg.adversary.is_none());
+        assert_eq!(trials[1].cfg.adversary, AdversarySpec::parse("byzantine:1"));
+        // default is the honest singleton
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.adversaries, vec![None]);
+        // bad values are rejected
+        assert!(SweepSpec::parse_json(r#"{"adversary": "gremlin"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"adversary": [3]}"#).is_err());
+    }
+
+    #[test]
+    fn robust_key_appends_robust_strategies() {
+        let spec = SweepSpec::parse_json(
+            r#"{"strategies": "fedavg", "robust": ["median", "krum:2", "trimmed-mean:0.25"]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.strategies.len(), 4);
+        assert_eq!(spec.strategies[0], StrategyKind::FedAvg);
+        assert!(spec.strategies[1..].iter().all(|k| k.is_robust()));
+        // duplicates collapse; parameterized strategies get distinct labels
+        let spec = SweepSpec::parse_json(
+            r#"{"strategies": ["median"], "robust": ["median", "krum:1"]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.strategies.len(), 2);
+        let cells = spec.cells();
+        assert_eq!(cells[1].label(), "async_krum1_s0_n2");
+        // non-robust strategies are rejected under `robust`
+        assert!(SweepSpec::parse_json(r#"{"robust": ["fedavg"]}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"robust": ["gremlin"]}"#).is_err());
     }
 
     #[test]

@@ -297,12 +297,12 @@ fn golden_sweep_report_with_threads_axis_under_virtual_clock() {
     // Identical numbers in the t=1 and t=4 rows ARE the proof that
     // parallel kernels leave simulated time untouched.
     let golden = "\n\
-| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
-|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
-| sync | fedavg | 0 | 3 | none | 1 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| sync | fedavg | 0 | 3 | none | 4 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 3 | none | 1 | 2 | 0.880 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 3 | none | 4 | 2 | 0.880 ± 0.000 | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |";
+| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 3 | none | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0 | 3 | none | 4 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 4 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,

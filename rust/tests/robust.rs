@@ -1,0 +1,493 @@
+//! Robust aggregation under adversarial clients — the attack-scenario
+//! suite for the `strategy/robust/` family and the [`AdversaryStore`]
+//! content-fault layer.
+//!
+//! Every scenario runs the real protocol stack (sync barrier, shared
+//! store, per-node threads) on a [`fedless::time::VirtualClock`], so the
+//! whole grid — every adversary kind crossed with every aggregation
+//! strategy — finishes at CPU speed with *exact* assertions: FedAvg
+//! collapses under a single byzantine client while median, trimmed
+//! mean, Krum and trust-weighted averaging stay within tolerance of the
+//! clean run, bit-identically across replays and thread counts.
+//!
+//! The aggregator property tests (permutation invariance, breakdown
+//! points, Krum selection, trust-weight decay) drive the `Strategy`
+//! implementations directly through hand-built [`Contribution`]s.
+//!
+//! The golden sweep snapshot at `golden/robust_sweep.md` pins the full
+//! robust × adversary grid, including the paired `acc clean` /
+//! `acc attacked` report columns.
+//!
+//! CI runs this file inside the same hard real-time budget as
+//! `rust/tests/timing.rs` (see `.github/workflows/ci.yml`); a regression
+//! into real sleeping times the job out. No artifacts or PJRT runtime
+//! are needed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::metrics::timeline::Timeline;
+use fedless::par::ChunkPool;
+use fedless::protocol::ProtocolKind;
+use fedless::store::{AdversarySpec, AdversaryStore, MemoryStore, WeightStore};
+use fedless::strategy::{
+    Contribution, Krum, Median, Strategy, StrategyKind, TrimmedMean, TrustWeighted,
+};
+use fedless::tensor::FlatParams;
+use fedless::time::{Clock, ParticipantGuard, VirtualClock};
+
+fn ms(n: u64) -> Duration {
+    Duration::from_millis(n)
+}
+
+// ---------------------------------------------------------------------------
+// attack-scenario harness (no artifacts, no PJRT)
+
+/// Parameter dimension for the scenario grid — tiny on purpose: the
+/// interesting structure is *which* contributions survive aggregation,
+/// not their size. The thread-invariance test widens this past
+/// `PAR_CHUNK` to cross chunk boundaries.
+const DIM: usize = 8;
+
+/// Scenario node count; the adversary spec claims the highest node ids.
+const N_NODES: usize = 4;
+
+/// What one simulated node reports back.
+struct SimNode {
+    finish: Duration,
+    params: FlatParams,
+}
+
+/// The honest model after local epoch `e`: `1 − 2^{−(e+1)}`, an exact
+/// dyadic that converges toward 1.0 — so aggregation arithmetic over
+/// honest clients is exact in f32 and any drift in the final params is
+/// attributable to the adversary, not to rounding.
+fn honest(epoch: usize) -> f32 {
+    1.0 - 0.5f32.powi(epoch as i32 + 1)
+}
+
+/// Scalar "accuracy" of a model: `1 / (1 + ‖params − 1‖₂)` in f64 —
+/// 1.0 at the honest fixed point, falling toward 0 as an attack drags
+/// the aggregate away. Deterministic, so golden snapshots are safe.
+fn accuracy_of(params: &FlatParams) -> f64 {
+    let dist = params
+        .0
+        .iter()
+        .map(|x| {
+            let e = f64::from(*x) - 1.0;
+            e * e
+        })
+        .sum::<f64>()
+        .sqrt();
+    1.0 / (1.0 + dist)
+}
+
+/// Exact bit pattern of a parameter vector (for bit-identity claims —
+/// `==` on f32 would conflate `-0.0` and `0.0`).
+fn bits(p: &FlatParams) -> Vec<u32> {
+    p.0.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Drive [`N_NODES`] real threads through `epochs` sync-federated
+/// epochs on one shared virtual-clocked store, optionally wrapped in an
+/// [`AdversaryStore`]: each epoch is one `clock.sleep` ("training",
+/// node `i` takes `10·(i+1)` ms so pushes land in node order), an
+/// honest overwrite of the local params to [`honest`]`(epoch)`, then
+/// the sync protocol's `after_epoch`. The adversary rewrites the
+/// configured nodes' pushes *in the store layer* — the protocol code is
+/// attack-agnostic.
+fn run_attack_sim(
+    kind: StrategyKind,
+    adversary: Option<AdversarySpec>,
+    seed: u64,
+    threads: usize,
+    epochs: usize,
+    dim: usize,
+) -> Vec<SimNode> {
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig {
+        mode: FederationMode::Sync,
+        n_nodes: N_NODES,
+        strategy: kind,
+        adversary,
+        seed,
+        threads,
+        ..Default::default()
+    };
+    let base: Arc<dyn WeightStore> = Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    let store: Arc<dyn WeightStore> = match adversary {
+        None => base,
+        Some(spec) => Arc::new(AdversaryStore::new(base, spec, N_NODES, seed)),
+    };
+    // Register every node before any thread runs, so the clock never
+    // advances while some nodes are still spawning.
+    for _ in 0..N_NODES {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(N_NODES));
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N_NODES)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let store = Arc::clone(&store);
+                let cfg = cfg.clone();
+                let start = Arc::clone(&start);
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = cfg.strategy.build();
+                    let mut codec = fedless::compress::CodecState::new(cfg.compress);
+                    let mut timeline = Timeline::new(node_id);
+                    let mut params = FlatParams(vec![0.0; dim]);
+                    start.wait();
+                    for epoch in 0..epochs {
+                        clock.sleep(ms(10 * (node_id as u64 + 1)));
+                        // honest local training moves every client to
+                        // the same point; only the adversary deviates
+                        params = FlatParams(vec![honest(epoch); dim]);
+                        let mut ctx = fedless::protocol::EpochCtx {
+                            node_id,
+                            n_nodes: N_NODES,
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout: ms(60_000),
+                            clock: clock.as_ref(),
+                            codec: &mut codec,
+                            pool: ChunkPool::from_config(cfg.threads),
+                        };
+                        let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
+                        assert!(out.stalled_at.is_none(), "node {node_id} stalled");
+                    }
+                    SimNode { finish: clock.now(), params }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the headline scenario grid: every adversary × every strategy
+
+/// Plain FedAvg has no defense — one byzantine client costs it ≥30% of
+/// clean accuracy (here: effectively all of it) and every other attack
+/// drags it strictly below clean — while each robust aggregator holds
+/// ≥90% of its clean accuracy under *every* attack kind.
+#[test]
+fn fedavg_collapses_under_attack_while_robust_strategies_hold() {
+    let strategies = ["fedavg", "median", "trimmed-mean:0.25", "krum:1", "trust-weighted"];
+    let attacks = ["byzantine:1", "signflip:1", "scale:10", "stale:1"];
+    for name in strategies {
+        let kind = StrategyKind::parse(name).unwrap();
+        let clean = accuracy_of(&run_attack_sim(kind, None, 42, 1, 3, DIM)[0].params);
+        assert!(clean > 0.7, "{name}: clean accuracy {clean}");
+        for attack in attacks {
+            let spec = AdversarySpec::parse(attack).unwrap();
+            let got = accuracy_of(&run_attack_sim(kind, Some(spec), 42, 1, 3, DIM)[0].params);
+            if kind == StrategyKind::FedAvg {
+                if attack == "byzantine:1" {
+                    assert!(
+                        got <= 0.7 * clean,
+                        "fedavg must lose ≥30% under {attack}: {got} vs clean {clean}"
+                    );
+                }
+                assert!(got < clean, "fedavg under {attack}: {got} vs clean {clean}");
+            } else {
+                assert!(
+                    got >= 0.9 * clean,
+                    "{name} under {attack}: {got} vs clean {clean}"
+                );
+            }
+        }
+    }
+}
+
+/// Every node converges to the *same* aggregate: the corrupted push is
+/// in the shared store, so honest and adversarial nodes alike aggregate
+/// it — there is one global model per round, not per-node forks.
+#[test]
+fn all_nodes_agree_on_the_attacked_aggregate() {
+    let spec = AdversarySpec::parse("signflip:1").unwrap();
+    for name in ["fedavg", "median", "krum:1"] {
+        let kind = StrategyKind::parse(name).unwrap();
+        let nodes = run_attack_sim(kind, Some(spec), 42, 1, 3, DIM);
+        let first = bits(&nodes[0].params);
+        for node in &nodes[1..] {
+            assert_eq!(first, bits(&node.params), "{name}: nodes diverged");
+        }
+    }
+}
+
+/// A zero-strength spec (`byzantine:0`) is bitwise transparent: the
+/// wrapped run is indistinguishable from running without the wrapper.
+#[test]
+fn zero_strength_adversary_is_bitwise_transparent() {
+    let spec = AdversarySpec::parse("byzantine:0").unwrap();
+    let plain = run_attack_sim(StrategyKind::FedAvg, None, 42, 1, 3, DIM);
+    let wrapped = run_attack_sim(StrategyKind::FedAvg, Some(spec), 42, 1, 3, DIM);
+    for (a, b) in plain.iter().zip(&wrapped) {
+        assert_eq!(bits(&a.params), bits(&b.params));
+        assert_eq!(a.finish, b.finish);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// determinism: replays and thread counts
+
+/// The same (strategy, adversary, seed) replays bit-identically — the
+/// byzantine noise stream is a pure function of (seed, node, round), the
+/// stale history is per-node, and sync pushes land in virtual-time
+/// order, so nothing depends on OS scheduling.
+#[test]
+fn attack_scenarios_replay_bit_identically() {
+    for name in ["fedavg", "median", "trust-weighted"] {
+        let kind = StrategyKind::parse(name).unwrap();
+        for attack in ["byzantine:2", "stale:1"] {
+            let spec = AdversarySpec::parse(attack).unwrap();
+            let a = run_attack_sim(kind, Some(spec), 7, 1, 3, DIM);
+            let b = run_attack_sim(kind, Some(spec), 7, 1, 3, DIM);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(bits(&x.params), bits(&y.params), "{name} / {attack}");
+                assert_eq!(x.finish, y.finish, "{name} / {attack}");
+            }
+        }
+    }
+}
+
+/// `threads` stays a pure wall-clock knob under attack: with parameters
+/// wide enough to span several `PAR_CHUNK` chunks (so the per-coordinate
+/// sort kernels really do fan out), `threads = 1` and `threads = 8`
+/// produce bit-identical aggregates and identical simulated finish
+/// times for every robust strategy.
+#[test]
+fn thread_count_is_invisible_to_attacked_aggregates() {
+    let dim = 40_000;
+    assert!(dim > 2 * fedless::tensor::flat::PAR_CHUNK, "must span chunks");
+    let spec = AdversarySpec::parse("byzantine:1").unwrap();
+    for name in ["fedavg", "median", "trimmed-mean:0.25", "krum:1", "trust-weighted"] {
+        let kind = StrategyKind::parse(name).unwrap();
+        let t1 = run_attack_sim(kind, Some(spec), 42, 1, 2, dim);
+        let t8 = run_attack_sim(kind, Some(spec), 42, 8, 2, dim);
+        for (a, b) in t1.iter().zip(&t8) {
+            assert_eq!(bits(&a.params), bits(&b.params), "{name}: threads changed bits");
+            assert_eq!(a.finish, b.finish, "{name}: threads changed simulated time");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aggregator property tests (direct, no simulation)
+
+fn contrib(node_id: usize, vals: Vec<f32>) -> Contribution {
+    Contribution {
+        node_id,
+        n_examples: 100,
+        is_self: node_id == 0,
+        seq: node_id as u64 + 1,
+        params: Arc::new(FlatParams(vals)),
+    }
+}
+
+/// Robust aggregates are permutation-invariant *bit for bit*: the
+/// kernels canonicalize by node id, so arrival order cannot leak into
+/// the result (the property FedAvg's FMA order explicitly does not
+/// have).
+#[test]
+fn robust_aggregates_are_permutation_invariant() {
+    let dim = 33;
+    let contribs: Vec<Contribution> = (0..5)
+        .map(|node| {
+            let vals = (0..dim).map(|j| ((node * 31 + j * 7) % 17) as f32 * 0.125 - 1.0).collect();
+            contrib(node, vals)
+        })
+        .collect();
+    let reversed: Vec<Contribution> = contribs.iter().rev().cloned().collect();
+    let rotated: Vec<Contribution> = contribs[2..].iter().chain(&contribs[..2]).cloned().collect();
+    for name in ["median", "trimmed-mean:0.25", "krum:1", "trust-weighted"] {
+        let kind = StrategyKind::parse(name).unwrap();
+        let base = kind.build().aggregate(&contribs).unwrap();
+        for order in [&reversed, &rotated] {
+            let got = kind.build().aggregate(order).unwrap();
+            assert_eq!(bits(&base), bits(&got), "{name}: order leaked into aggregate");
+        }
+    }
+}
+
+/// Coordinate-wise median has breakdown point ⌊(n−1)/2⌋: with n = 5 it
+/// shrugs off 2 arbitrarily-placed outliers exactly, and the 3rd one
+/// captures it — both directions asserted.
+#[test]
+fn median_tolerates_up_to_half_minus_one_outliers() {
+    let make = |outliers: usize| -> Vec<Contribution> {
+        (0..5)
+            .map(|node| {
+                let v = if node < 5 - outliers { 1.0 } else { 1.0e9 };
+                contrib(node, vec![v; 4])
+            })
+            .collect()
+    };
+    let mut median = Median::new();
+    let held = median.aggregate(&make(2)).unwrap();
+    assert!(held.0.iter().all(|x| *x == 1.0), "2 of 5 outliers must not move the median");
+    let captured = median.aggregate(&make(3)).unwrap();
+    assert!(captured.0.iter().all(|x| *x > 1.0e8), "3 of 5 outliers must capture the median");
+}
+
+/// Trimmed mean with `frac = 0.25` trims ⌊0.25·n⌋ per side: at n = 8
+/// that absorbs exactly 2 outliers (result is the exact honest mean)
+/// and breaks on the 3rd (one outlier survives trimming).
+#[test]
+fn trimmed_mean_breaks_exactly_past_its_trim_budget() {
+    let make = |outliers: usize| -> Vec<Contribution> {
+        (0..8)
+            .map(|node| {
+                let v = if node < 8 - outliers { 2.0 } else { 1.0e9 };
+                contrib(node, vec![v; 4])
+            })
+            .collect()
+    };
+    let mut tm = TrimmedMean::new(0.25);
+    let held = tm.aggregate(&make(2)).unwrap();
+    assert!(held.0.iter().all(|x| *x == 2.0), "2 of 8 outliers fit the trim budget");
+    let captured = tm.aggregate(&make(3)).unwrap();
+    assert!(captured.0.iter().all(|x| *x > 1.0e6), "3rd outlier must survive trimming");
+}
+
+/// Krum with `f = 1` over one far-away outlier and a tied honest
+/// cluster selects the *lowest-id honest* update and returns it
+/// verbatim — selection is by score with a deterministic tie-break,
+/// never the outlier.
+#[test]
+fn krum_selects_the_lowest_id_honest_update() {
+    // the outlier sits at node 0, so "never index 0" is a real claim
+    let contribs: Vec<Contribution> = (0..4)
+        .map(|node| {
+            let v = if node == 0 { 100.0 } else { 0.5 };
+            contrib(node, vec![v; 6])
+        })
+        .collect();
+    let refs: Vec<&Contribution> = contribs.iter().collect();
+    let picked = Krum::new(1).select(&refs, ChunkPool::sequential());
+    assert_eq!(picked, 1, "lowest-id member of the honest cluster");
+    let agg = Krum::new(1).aggregate(&contribs).unwrap();
+    assert_eq!(bits(&agg), bits(&contribs[picked].params), "krum must return the pick verbatim");
+}
+
+/// Trust weights always form a distribution (sum to 1) and the weight
+/// of a persistently-deviating client *strictly* decreases round over
+/// round as its residual EMA accumulates.
+#[test]
+fn trust_weights_normalize_and_punish_a_persistent_outlier() {
+    let mut tw = TrustWeighted::default();
+    let mut last_bad = f32::MAX;
+    for round in 0..3 {
+        let contribs: Vec<Contribution> = (0..4)
+            .map(|node| contrib(node, vec![if node == 3 { 5.0 } else { 1.0 }; 8]))
+            .collect();
+        tw.aggregate(&contribs).unwrap();
+        let weights = tw.last_weights();
+        let sum: f32 = weights.iter().map(|(_, w)| w).sum();
+        assert!((sum - 1.0).abs() < 1e-5, "round {round}: weights must normalize, got {sum}");
+        let bad = weights.iter().find(|(n, _)| *n == 3).unwrap().1;
+        let good = weights.iter().find(|(n, _)| *n == 0).unwrap().1;
+        assert!(bad < good, "round {round}: outlier must weigh less than honest");
+        assert!(bad < last_bad, "round {round}: outlier weight must strictly decay");
+        last_bad = bad;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// golden robust × adversary sweep snapshot
+
+/// The full grid — {fedavg, median, trimmed-mean:0.25, krum:1} ×
+/// {none, byzantine:1, signflip:1, scale:10, stale:1} over two seeds —
+/// rendered through the sweep reporter must match the committed
+/// snapshot byte for byte, replay identically, and carry the ISSUE's
+/// acceptance numbers: fedavg loses ≥30% of clean accuracy under one
+/// byzantine client while every robust strategy retains ≥90% under
+/// every attack.
+#[test]
+fn golden_robust_adversary_sweep_report() {
+    use fedless::sweep::{run_sweep_with, SweepSpec};
+
+    let spec = SweepSpec::parse_json(
+        r#"{
+            "modes": "sync",
+            "strategies": "fedavg",
+            "robust": ["median", "trimmed-mean:0.25", "krum:1"],
+            "adversary": ["none", "byzantine:1", "signflip:1", "scale:10", "stale:1"],
+            "n_nodes": 4,
+            "epochs": 3,
+            "seeds": [42, 43],
+            "jobs": 1,
+            "clock": "virtual"
+        }"#,
+    )
+    .unwrap();
+
+    let runner = |cfg: &ExperimentConfig| -> anyhow::Result<fedless::sim::ExperimentResult> {
+        let nodes =
+            run_attack_sim(cfg.strategy, cfg.adversary, cfg.seed, cfg.threads, cfg.epochs, DIM);
+        let wall = nodes.iter().map(|n| n.finish).max().unwrap();
+        let acc = accuracy_of(&nodes[0].params);
+        Ok(fedless::sim::ExperimentResult {
+            final_accuracy: acc,
+            final_loss: 1.0 - acc,
+            wall_clock_s: wall.as_secs_f64(),
+            reports: vec![],
+            global_hash: 0,
+            store_pushes: 0,
+            mean_idle_fraction: 0.0,
+            all_completed: true,
+        })
+    };
+
+    let body = |md: &str| -> String {
+        // skip the header line: it carries the sweep's *real* wall-clock
+        md.lines().skip(1).collect::<Vec<_>>().join("\n")
+    };
+
+    let r1 = run_sweep_with(&spec, runner).unwrap();
+    let r2 = run_sweep_with(&spec, runner).unwrap();
+    assert_eq!(r1.n_failures, 0, "{}", r1.to_markdown());
+    assert_eq!(body(&r1.to_markdown()), body(&r2.to_markdown()), "must replay identically");
+
+    let acc_of = |strategy: &str, adversary: &str| -> f64 {
+        r1.cells
+            .iter()
+            .find(|c| {
+                c.cell.strategy.label() == strategy
+                    && c.cell.adversary.map_or("none".to_string(), |a| a.label()) == adversary
+            })
+            .and_then(|c| c.accuracy.as_ref())
+            .unwrap_or_else(|| panic!("missing cell {strategy}/{adversary}"))
+            .mean
+    };
+    let clean = acc_of("fedavg", "none");
+    assert!(
+        acc_of("fedavg", "byz1") <= 0.7 * clean,
+        "fedavg must lose ≥30% relative accuracy under byzantine:1"
+    );
+    for robust in ["median", "trimmed-mean0.25", "krum1"] {
+        let robust_clean = acc_of(robust, "none");
+        for adv in ["byz1", "signflip1", "scale10", "stale1"] {
+            let got = acc_of(robust, adv);
+            assert!(
+                got >= 0.9 * robust_clean,
+                "{robust} under {adv}: {got} vs clean {robust_clean}"
+            );
+        }
+    }
+
+    let golden = include_str!("golden/robust_sweep.md");
+    assert_eq!(
+        format!("{}\n", body(&r1.to_markdown())),
+        golden,
+        "sweep body diverged from the committed snapshot:\n{}",
+        r1.to_markdown()
+    );
+}

@@ -409,12 +409,12 @@ fn golden_sweep_report_under_virtual_clock() {
     );
 
     let golden = "\n\
-| mode | strategy | skew | nodes | compress | threads | trials | accuracy (mean ± std) | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
-|------|----------|------|-------|----------|---------|--------|-----------------------|-------------------|--------------|-----------|-----------|\n\
-| sync | fedavg | 0 | 2 | none | 1 | 2 | 0.900 ± 0.000 | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| sync | fedavg | 0.5 | 2 | none | 1 | 2 | 0.850 ± 0.000 | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 2 | none | 1 | 2 | 0.880 ± 0.000 | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0.5 | 2 | none | 1 | 2 | 0.830 ± 0.000 | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
+| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 2 | none | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0.5 | 2 | none | 1 | none | 2 | 0.850 ± 0.000 | 0.850 | - | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 2 | none | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0.5 | 2 | none | 1 | none | 2 | 0.830 ± 0.000 | 0.830 | - | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,
