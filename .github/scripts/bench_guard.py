@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Bench-trajectory guard: fail CI when headline kernel throughput
+regresses more than MAX_REGRESSION against the committed baseline.
+
+Usage: bench_guard.py <committed BENCH_kernels.json> <fresh BENCH_kernels.json>
+
+The committed file is snapshotted before the bench run overwrites it in
+place. While the committed baseline carries an estimated (non-measured)
+provenance, the guard prints the fresh numbers and exits 0 — the first
+measured run committed back to the repo arms the comparison.
+"""
+
+import json
+import sys
+
+# (kernel, threads) headline rows, compared at the smallest common size
+# (check mode measures only the smallest size).
+HEADLINES = [("q8_encode", 1), ("hash_chunked", 1)]
+MAX_REGRESSION = 0.30
+
+
+def rows(doc):
+    return {(r["kernel"], r["params"], r["threads"]): r["gbps"] for r in doc["results"]}
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return 2
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+
+    if base.get("provenance") != "measured":
+        prov = str(base.get("provenance", "<missing>"))
+        print(f"bench-guard: committed baseline is not measured (provenance: {prov[:60]}…)")
+        print("bench-guard: skipping comparison; commit a measured run to arm the guard")
+        return 0
+
+    b, f = rows(base), rows(fresh)
+    common = sorted({p for (_, p, _) in b} & {p for (_, p, _) in f})
+    if not common:
+        print("bench-guard: no common param size between baseline and fresh run; skipping")
+        return 0
+    size = common[0]
+
+    failed = False
+    for kernel, threads in HEADLINES:
+        old = b.get((kernel, size, threads))
+        new = f.get((kernel, size, threads))
+        if old is None or new is None:
+            print(f"bench-guard: {kernel} t={threads} @ {size}: row missing, skipping")
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        ok = ratio >= 1 - MAX_REGRESSION
+        verdict = "ok" if ok else "REGRESSION"
+        print(
+            f"bench-guard: {kernel} t={threads} @ {size} params: "
+            f"{old:.3f} -> {new:.3f} GB/s ({ratio:.2f}x) {verdict}"
+        )
+        failed = failed or not ok
+
+    if failed:
+        print(f"bench-guard: headline throughput regressed more than {MAX_REGRESSION:.0%}")
+        return 1
+    print("bench-guard: headline throughput within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,27 +3,79 @@
 //!
 //! * **aggregation** — the old K-sweep axpy loop vs the fused one-pass
 //!   `weighted_average` (sequential and pooled at 1/2/8 threads)
-//! * **codec** — q8 encode/decode, scalar vs chunk-parallel
-//! * **hash** — byte-at-a-time FNV (`hash_f32s`) vs the word-at-a-time
-//!   chunked hash (sequential and pooled)
+//! * **codec** — q8 encode/decode: scalar-forced (`*_scalar`, SIMD
+//!   dispatch off) vs the default runtime-dispatched kernels, sequential
+//!   and chunk-parallel
+//! * **hash** — byte-at-a-time FNV (bench-local reference for the
+//!   original implementation), the library's word-folding FNV
+//!   (`hash_f32s`), and the lane-parallel chunked hash
+//! * **allocation** — allocations per blob pull (raw v1 and q8 v2),
+//!   counted by a thread-local counting allocator; the zero-copy decode
+//!   contract in numbers
 //!
 //! at mnist-/lm-/14M-sized parameter vectors. Results land in
 //! `BENCH_kernels.json` (re-run after kernel changes and compare; CI
 //! runs `--check` mode — tiny size, few iters, same artifact shape — and
-//! uploads the file). All variants compute bit-identical results; only
-//! the GB/s may move. Needs no artifacts or PJRT runtime.
+//! uploads the file, then the bench-guard compares headline rows against
+//! the committed baseline). All variants compute bit-identical results;
+//! only the GB/s may move. Needs no artifacts or PJRT runtime.
 //!
 //! Run: `cargo bench --offline --bench kernels [-- --check]`
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::fmt::Write as _;
 use std::fs;
 use std::time::Instant;
 
-use fedless::compress::{Codec, Q8};
+use fedless::compress::{Codec, CodecKind, CodecState, Q8};
 use fedless::par::ChunkPool;
+use fedless::tensor::codec::{decode_blob, encode_blob, encode_blob_v2, read_blob, BlobMeta};
 use fedless::tensor::flat::{weighted_average_pooled, FlatParams};
 use fedless::util::hash::{chunked_hash_f32s_pooled, hash_f32s};
+use fedless::util::simd::set_simd_enabled;
 use fedless::util::Rng;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates to `System`; the thread-local Cell<u64> update never
+// allocates (no Drop, so no TLS destructor registration).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` on this thread.
+fn allocs_in<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOCS.with(|c| c.get());
+    let r = f();
+    (ALLOCS.with(|c| c.get()) - before, r)
+}
+
+/// The pre-rewrite byte-at-a-time FNV-1a over f32 bytes, kept bench-local
+/// so the `hash_fnv_bytewise` trajectory row keeps meaning the same
+/// computation forever (the library's `hash_f32s` now folds words).
+fn fnv1a64_bytewise_f32s(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325_u64;
+    for x in xs {
+        for b in x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
 
 const K: usize = 5; // clients per aggregation (a paper-sized fan-in)
 
@@ -87,8 +139,22 @@ fn bench_size(n: usize, iters: usize, threads: &[usize], rows: &mut Vec<Row>) {
         push("agg_fused", t, agg_bytes, s);
     }
 
-    // codec: q8 encode/decode, scalar vs pooled (bytes = raw f32 moved)
+    // codec: q8 with SIMD dispatch forced off (the scalar denominator of
+    // the SIMD speedup), then the default dispatched kernels at each
+    // thread count (bytes = raw f32 moved)
     let p = &clients[0];
+    let seq = ChunkPool::new(1);
+    set_simd_enabled(false);
+    let s = time(iters, || {
+        std::hint::black_box(Q8.encode_pooled(p, None, seq));
+    });
+    push("q8_encode_scalar", 1, n * 4, s);
+    let enc = Q8.encode_pooled(p, None, seq);
+    let s = time(iters, || {
+        std::hint::black_box(Q8.decode_pooled(&enc, n, None, seq).unwrap());
+    });
+    push("q8_decode_scalar", 1, n * 4, s);
+    set_simd_enabled(true); // dispatched: AVX2 where the CPU has it
     for &t in threads {
         let pool = ChunkPool::new(t);
         let s = time(iters, || {
@@ -102,11 +168,16 @@ fn bench_size(n: usize, iters: usize, threads: &[usize], rows: &mut Vec<Row>) {
         push("q8_decode", t, n * 4, s);
     }
 
-    // hash: byte-at-a-time FNV baseline vs chunked word-at-a-time
+    // hash: byte-at-a-time FNV reference, the library's word-folding
+    // FNV, then the lane-parallel chunked hash
+    let s = time(iters, || {
+        std::hint::black_box(fnv1a64_bytewise_f32s(p.as_slice()));
+    });
+    push("hash_fnv_bytewise", 1, n * 4, s);
     let s = time(iters, || {
         std::hint::black_box(hash_f32s(p.as_slice()));
     });
-    push("hash_fnv_bytewise", 1, n * 4, s);
+    push("hash_fnv_word", 1, n * 4, s);
     for &t in threads {
         let pool = ChunkPool::new(t);
         let s = time(iters, || {
@@ -114,6 +185,29 @@ fn bench_size(n: usize, iters: usize, threads: &[usize], rows: &mut Vec<Row>) {
         });
         push("hash_chunked", t, n * 4, s);
     }
+}
+
+/// Allocations per blob pull: `(raw v1 decode, q8 v2 decode_wire)`. The
+/// raw pull is the zero-copy contract's headline (≤1; also pinned by
+/// `rust/tests/wire.rs`); the q8 number tracks the lossy path's overhead.
+fn decode_alloc_counts() -> (u64, u64) {
+    let p = FlatParams((0..4096).map(|i| (i as f32) * 0.01 - 20.0).collect());
+    let meta = BlobMeta { node_id: 0, round: 0, epoch: 0, n_examples: 1 };
+    let pool = ChunkPool::new(1);
+
+    let v1 = encode_blob(&meta, &p);
+    let _ = decode_blob(&v1).unwrap(); // warm one-time TLS/anyhow costs
+    let (raw_pull, _) = allocs_in(|| decode_blob(&v1).unwrap());
+
+    let state = CodecState::new(CodecKind::Q8);
+    let payload = Q8.encode(&p, None);
+    let v2 = encode_blob_v2(&meta, CodecKind::Q8.id(), 0, p.len(), &payload);
+    let _ = state.decode_wire(&read_blob(&v2).unwrap(), pool).unwrap();
+    let (q8_pull, _) = allocs_in(|| {
+        let wire = read_blob(&v2).unwrap();
+        state.decode_wire(&wire, pool).unwrap()
+    });
+    (raw_pull, q8_pull)
 }
 
 /// GB/s of `kernel` at (`params`, `threads`), if measured.
@@ -157,10 +251,18 @@ fn main() {
     let q8_speedup = ratio(lookup(&rows, "q8_encode", big, 8), lookup(&rows, "q8_encode", big, 1));
     let hash_speedup =
         ratio(lookup(&rows, "hash_chunked", big, 8), lookup(&rows, "hash_fnv_bytewise", big, 1));
+    let simd_speedup =
+        ratio(lookup(&rows, "q8_encode", big, 1), lookup(&rows, "q8_encode_scalar", big, 1));
+    let word_speedup =
+        ratio(lookup(&rows, "hash_fnv_word", big, 1), lookup(&rows, "hash_fnv_bytewise", big, 1));
+    let (raw_pull_allocs, q8_pull_allocs) = decode_alloc_counts();
     println!("\nheadline at {big} params:");
     println!("  fused agg (8t) vs axpy K-sweep : {agg_speedup:.2}x");
     println!("  parallel q8 encode (8t) vs 1t  : {q8_speedup:.2}x");
     println!("  chunked hash (8t) vs FNV       : {hash_speedup:.2}x");
+    println!("  SIMD q8 encode (1t) vs scalar  : {simd_speedup:.2}x");
+    println!("  word FNV (1t) vs bytewise      : {word_speedup:.2}x");
+    println!("  allocations per pull           : raw {raw_pull_allocs}, q8 {q8_pull_allocs}");
 
     let mut json = String::from("{\n  \"bench\": \"hot_path_kernels\",\n");
     let _ = writeln!(json, "  \"clients_per_agg\": {K},");
@@ -169,7 +271,13 @@ fn main() {
     let _ = writeln!(
         json,
         "  \"headline\": {{\"params\": {big}, \"fused_agg_8t_vs_axpy\": {agg_speedup:.3}, \
-         \"q8_encode_8t_vs_1t\": {q8_speedup:.3}, \"chunked_hash_8t_vs_fnv\": {hash_speedup:.3}}},"
+         \"q8_encode_8t_vs_1t\": {q8_speedup:.3}, \"chunked_hash_8t_vs_fnv\": {hash_speedup:.3}, \
+         \"q8_encode_simd_vs_scalar_1t\": {simd_speedup:.3}, \
+         \"hash_word_vs_bytewise_1t\": {word_speedup:.3}}},"
+    );
+    let _ = writeln!(
+        json,
+        "  \"decode_allocs\": {{\"raw_pull\": {raw_pull_allocs}, \"q8_pull\": {q8_pull_allocs}}},"
     );
     json.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {

@@ -238,8 +238,10 @@ impl CodecState {
     }
 
     /// Decode a parsed wire blob into params on `pool`, resolving delta
-    /// payloads against this state's base.
-    pub fn decode_wire(&self, wire: &WireBlob, pool: ChunkPool) -> Result<FlatParams> {
+    /// payloads against this state's base. The blob borrows the pulled
+    /// wire buffer ([`read_blob`] is zero-copy), so decoding a raw
+    /// payload performs exactly one allocation — the output params.
+    pub fn decode_wire(&self, wire: &WireBlob<'_>, pool: ChunkPool) -> Result<FlatParams> {
         if wire.codec_id != self.kind.id() {
             bail!(
                 "blob codec id {} does not match configured codec {} (id {})",
@@ -249,7 +251,7 @@ impl CodecState {
             );
         }
         let base = self.base.as_ref().map(|(_, b)| b);
-        self.codec.decode_pooled(&wire.payload, wire.uncomp_len, base, pool)
+        self.codec.decode_pooled(wire.payload, wire.uncomp_len, base, pool)
     }
 }
 

@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use crate::par::ChunkPool;
-use crate::tensor::codec::decode_raw_payload;
+use crate::tensor::codec::{decode_raw_payload, extend_f32s_le};
 use crate::tensor::FlatParams;
 
 use super::{Codec, CodecKind};
@@ -27,9 +27,7 @@ impl Codec for Raw {
         _pool: ChunkPool,
     ) -> Vec<u8> {
         let mut out = Vec::with_capacity(params.len() * 4);
-        for x in params.as_slice() {
-            out.extend_from_slice(&x.to_le_bytes());
-        }
+        extend_f32s_le(&mut out, params.as_slice());
         out
     }
 

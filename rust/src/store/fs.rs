@@ -12,8 +12,33 @@
 //! layer's wire accounting happens at the protocol boundary, and scanned
 //! entries report their actual on-disk byte size as `wire_bytes`. Both
 //! v1 and raw v2 blobs decode on scan (see [`crate::tensor::codec`]).
+//!
+//! # Read-path I/O discipline
+//!
+//! Reads are tiered so each operation pays only what it needs (see
+//! ARCHITECTURE.md §11):
+//!
+//! * **polling** ([`WeightStore::state_hash`] / `version` /
+//!   `wait_for_change`) reads at most [`PEEK_LEN`] bytes per file — the
+//!   fixed-size blob header — never a payload;
+//! * **round filtering** (`entries_for_round`) peeks every header but
+//!   fully reads only the files whose header matches the round;
+//! * **latest reads** (`latest_per_node` / `latest_for_node`) read files
+//!   in descending filename-seq order per node and stop at the first one
+//!   that decodes, falling back past corrupt newer files;
+//! * full-file reads go through `fs::read`, or — with the non-default
+//!   `mmap` cargo feature on unix — a read-only private file mapping
+//!   with a transparent `fs::read` fallback. Safe here because store
+//!   files are immutable once renamed into place (never truncated).
+//!
+//! Every byte read from the directory is tallied in a per-handle counter
+//! exposed as [`FsStore::io_bytes`], which the regression tests use to
+//! pin the "polling is O(header) per file" contract.
 
-use std::fs;
+use std::collections::BTreeMap;
+use std::fs::{self, File};
+use std::io::Read;
+use std::ops::Deref;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -22,18 +47,20 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::{PushRequest, WeightEntry, WeightStore};
-use crate::tensor::codec::{decode_blob, encode_blob, BlobMeta};
+use crate::tensor::codec::{decode_blob, encode_blob, peek_blob_header, BlobMeta, PEEK_LEN};
 use crate::time::{Clock, RealClock};
-use crate::util::hash::combine;
+use crate::util::hash::{combine, fnv1a64};
 
 /// Weight store backed by a directory of blob files (sharable across OS
-/// processes; see the module docs for the layout).
+/// processes; see the module docs for the layout and read tiers).
 pub struct FsStore {
     root: PathBuf,
-    /// Sequence counter; files from other processes are merged by mtime
+    /// Sequence counter; files from other processes are merged by seq
     /// order at read time, so cross-process seq collisions are harmless.
     seq: AtomicU64,
     pushes: AtomicU64,
+    /// Cumulative bytes read from the directory by this handle.
+    io_bytes: AtomicU64,
     /// Serializes directory scans (cheap; pushes stay concurrent).
     scan_lock: Mutex<()>,
     /// Handle-local monotone version: `(last observed state hash, counter)`.
@@ -70,6 +97,7 @@ impl FsStore {
             root,
             seq: AtomicU64::new(max_seq),
             pushes: AtomicU64::new(0),
+            io_bytes: AtomicU64::new(0),
             scan_lock: Mutex::new(()),
             change: Mutex::new((0, 0)),
             clock,
@@ -81,34 +109,73 @@ impl FsStore {
         &self.root
     }
 
-    fn scan(&self) -> Result<Vec<WeightEntry>> {
-        let _g = self.scan_lock.lock().unwrap();
+    /// Cumulative bytes this handle has read from the directory (headers
+    /// and full blobs alike; mapped files count their full length). The
+    /// I/O-budget regression tests assert on deltas of this counter.
+    pub fn io_bytes(&self) -> u64 {
+        self.io_bytes.load(Ordering::Relaxed)
+    }
+
+    /// All parseable blob filenames: `(node, seq, path)`. No file I/O
+    /// beyond the directory listing itself.
+    fn list(&self) -> Result<Vec<(usize, u64, PathBuf)>> {
         let mut out = Vec::new();
         for f in fs::read_dir(&self.root)? {
             let path = f?.path();
-            let Some((_node, seq)) = parse_name(&path) else { continue };
-            let bytes = match fs::read(&path) {
-                Ok(b) => b,
-                Err(_) => continue, // racing a concurrent rename; skip
-            };
-            // A torn/corrupt blob is skipped, not fatal — eventual
-            // consistency, like listing a bucket mid-upload.
-            if let Ok((meta, params)) = decode_blob(&bytes) {
-                out.push(WeightEntry {
-                    node_id: meta.node_id as usize,
-                    round: meta.round,
-                    epoch: meta.epoch,
-                    n_examples: meta.n_examples,
-                    seq,
-                    // the file *is* the wire blob: its size is the
-                    // entry's wire cost, whatever version wrote it
-                    wire_bytes: bytes.len() as u64,
-                    params: std::sync::Arc::new(params),
-                });
+            if let Some((node, seq)) = parse_name(&path) {
+                out.push((node, seq, path));
             }
         }
-        out.sort_by_key(|e| e.seq);
         Ok(out)
+    }
+
+    /// Read at most `n` bytes from the start of `path`.
+    fn read_prefix(&self, path: &Path, n: usize) -> std::io::Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(n);
+        File::open(path)?.take(n as u64).read_to_end(&mut buf)?;
+        self.io_bytes.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    /// Whole-file read: a private read-only mapping when the `mmap`
+    /// feature is on (and the map succeeds), an owned `fs::read`
+    /// otherwise.
+    fn read_file(&self, path: &Path) -> std::io::Result<FileBytes> {
+        #[cfg(all(feature = "mmap", unix))]
+        if let Some(mapped) = self.try_map(path) {
+            return Ok(mapped);
+        }
+        let bytes = fs::read(path)?;
+        self.io_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(FileBytes::Owned(bytes))
+    }
+
+    #[cfg(all(feature = "mmap", unix))]
+    fn try_map(&self, path: &Path) -> Option<FileBytes> {
+        let file = File::open(path).ok()?;
+        let len = file.metadata().ok()?.len() as usize;
+        let map = mapped::Mmap::map(&file, len)?;
+        self.io_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        Some(FileBytes::Mapped(map))
+    }
+
+    /// Fully read and decode one blob file into an entry. `None` for a
+    /// racing rename or a torn/corrupt blob — eventual consistency, like
+    /// listing a bucket mid-upload.
+    fn load_entry(&self, seq: u64, path: &Path) -> Option<WeightEntry> {
+        let bytes = self.read_file(path).ok()?;
+        let (meta, params) = decode_blob(&bytes).ok()?;
+        Some(WeightEntry {
+            node_id: meta.node_id as usize,
+            round: meta.round,
+            epoch: meta.epoch,
+            n_examples: meta.n_examples,
+            seq,
+            // the file *is* the wire blob: its size is the entry's wire
+            // cost, whatever version wrote it
+            wire_bytes: bytes.len() as u64,
+            params: std::sync::Arc::new(params),
+        })
     }
 }
 
@@ -119,6 +186,97 @@ fn parse_name(path: &Path) -> Option<(usize, u64)> {
     let node = n.strip_prefix('n')?.parse().ok()?;
     let seq = s.parse().ok()?;
     Some((node, seq))
+}
+
+/// Bytes of one blob file: an owned buffer, or (with the `mmap` feature)
+/// a read-only file mapping. Derefs to `&[u8]` either way, so the decode
+/// path is agnostic.
+enum FileBytes {
+    Owned(Vec<u8>),
+    #[cfg(all(feature = "mmap", unix))]
+    Mapped(mapped::Mmap),
+}
+
+impl Deref for FileBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            FileBytes::Owned(v) => v,
+            #[cfg(all(feature = "mmap", unix))]
+            FileBytes::Mapped(m) => m,
+        }
+    }
+}
+
+#[cfg(all(feature = "mmap", unix))]
+mod mapped {
+    //! Minimal read-only `mmap` wrapper (the image vendors no mmap
+    //! crate, so this goes through `libc` directly). Store files are
+    //! immutable once renamed into place and never truncated, so a
+    //! mapping cannot observe a shrinking file (the SIGBUS hazard).
+
+    use std::fs::File;
+    use std::ops::Deref;
+    use std::os::unix::io::AsRawFd;
+
+    /// A read-only `MAP_PRIVATE` mapping of a whole file.
+    pub(super) struct Mmap {
+        ptr: *mut libc::c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and never mutated or aliased
+    // mutably; sharing the pointer across threads is sound.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `len` bytes of `file`; `None` on any failure (zero-length
+        /// files included — mmap rejects them), letting the caller fall
+        /// back to an owned read.
+        pub(super) fn map(file: &File, len: usize) -> Option<Mmap> {
+            if len == 0 {
+                return None;
+            }
+            // SAFETY: the fd is valid for the duration of the call; a
+            // read-only private mapping of a regular file has no aliasing
+            // requirements; failure returns MAP_FAILED, checked below.
+            let ptr = unsafe {
+                libc::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    libc::PROT_READ,
+                    libc::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == libc::MAP_FAILED {
+                None
+            } else {
+                Some(Mmap { ptr, len })
+            }
+        }
+    }
+
+    impl Deref for Mmap {
+        type Target = [u8];
+        fn deref(&self) -> &[u8] {
+            // SAFETY: ptr..ptr+len is a live PROT_READ mapping owned by
+            // `self` (unmapped only in Drop).
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: ptr/len came from a successful mmap and are
+            // unmapped exactly once.
+            unsafe {
+                libc::munmap(self.ptr, self.len);
+            }
+        }
+    }
 }
 
 impl WeightStore for FsStore {
@@ -141,45 +299,85 @@ impl WeightStore for FsStore {
     }
 
     fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
-        let mut latest: std::collections::BTreeMap<usize, WeightEntry> = Default::default();
-        for e in self.scan()? {
-            match latest.get(&e.node_id) {
-                Some(prev) if prev.seq >= e.seq => {}
-                _ => {
-                    latest.insert(e.node_id, e);
+        // Group by the filename's node and read newest-seq-first, so each
+        // node costs one full read in the common case; a corrupt or
+        // mid-rename newer file falls back to the next older seq.
+        let _g = self.scan_lock.lock().unwrap();
+        let mut by_node: BTreeMap<usize, Vec<(u64, PathBuf)>> = BTreeMap::new();
+        for (node, seq, path) in self.list()? {
+            by_node.entry(node).or_default().push((seq, path));
+        }
+        let mut out = Vec::new();
+        for mut files in by_node.into_values() {
+            files.sort_by_key(|(seq, _)| std::cmp::Reverse(*seq));
+            for (seq, path) in files {
+                if let Some(e) = self.load_entry(seq, &path) {
+                    out.push(e);
+                    break;
                 }
             }
         }
-        Ok(latest.into_values().collect())
+        Ok(out)
     }
 
     fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
-        Ok(self.scan()?.into_iter().filter(|e| e.round == round).collect())
+        // Header peek first: only files whose header claims the round pay
+        // a full read (the peek is not integrity-checked — decode still
+        // validates, and a lying header just costs one wasted read).
+        let _g = self.scan_lock.lock().unwrap();
+        let mut out = Vec::new();
+        for (_node, seq, path) in self.list()? {
+            let Ok(prefix) = self.read_prefix(&path, PEEK_LEN) else { continue };
+            let Ok(peek) = peek_blob_header(&prefix) else { continue };
+            if peek.meta.round != round {
+                continue;
+            }
+            if let Some(e) = self.load_entry(seq, &path) {
+                out.push(e);
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        Ok(out)
     }
 
     fn state_hash(&self) -> Result<u64> {
-        // hash filenames only — no blob reads, mirroring a LIST request
+        // Header-only poll: hash the sorted filename keys plus the first
+        // PEEK_LEN bytes of each file. Unlike a pure-LIST hash this
+        // notices an in-place rewrite under a reused name, and unlike a
+        // full scan it never reads a payload — polling I/O stays
+        // O(header) per file (pinned by a regression test below).
         let _g = self.scan_lock.lock().unwrap();
-        let mut names: Vec<(usize, u64)> = Vec::new();
-        for f in fs::read_dir(&self.root)? {
-            if let Some(ns) = parse_name(&f?.path()) {
-                names.push(ns);
-            }
-        }
-        names.sort();
+        let mut names = self.list()?;
+        names.sort_by_key(|&(node, seq, _)| (node, seq));
         let mut h = 0xfeed_f00d_u64;
-        for (node, seq) in names {
+        for (node, seq, path) in names {
             h = combine(h, (node as u64) << 48 | seq);
+            // A vanished file (racing rename) simply contributes no
+            // header bytes this poll; the next poll converges.
+            if let Ok(prefix) = self.read_prefix(&path, PEEK_LEN) {
+                h = combine(h, fnv1a64(&prefix));
+            }
         }
         Ok(h)
     }
 
     fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
-        Ok(self
-            .scan()?
+        // Newest filename seq first, falling back past corrupt files —
+        // the gossip per-peer pull reads exactly one blob when healthy.
+        let _g = self.scan_lock.lock().unwrap();
+        let mut files: Vec<(u64, PathBuf)> = self
+            .list()?
             .into_iter()
-            .filter(|e| e.node_id == node_id)
-            .max_by_key(|e| e.seq))
+            .filter(|&(node, _, _)| node == node_id)
+            .map(|(_, seq, path)| (seq, path))
+            .collect();
+        files.sort_by_key(|(seq, _)| std::cmp::Reverse(*seq));
+        for (seq, path) in files {
+            if let Some(e) = self.load_entry(seq, &path) {
+                return Ok(Some(e));
+            }
+        }
+        Ok(None)
     }
 
     fn version(&self) -> Result<u64> {
@@ -308,6 +506,25 @@ mod tests {
     }
 
     #[test]
+    fn latest_falls_back_past_a_corrupt_newer_seq() {
+        // A corrupt file with a HIGHER seq for the same node must not
+        // shadow the older good entry (the descending-read fallback).
+        let (s, dir) = tmp_store("fallback");
+        s.push(store_tests::push_req(3, 1, 7.0)).unwrap();
+        fs::write(dir.join("n3_s999.flwr"), b"garbage").unwrap();
+        let e = s
+            .latest_for_node(3)
+            .unwrap()
+            .expect("falls back to the older good seq");
+        assert_eq!(e.round, 1);
+        assert_eq!(e.params.0[0], 7.0);
+        let all = s.latest_per_node().unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].round, 1);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
     fn two_handles_share_the_directory() {
         // Two FsStore handles on one root = two "processes" sharing a bucket.
         let (a, dir) = tmp_store("share");
@@ -331,6 +548,55 @@ mod tests {
             latest[0].wire_bytes,
             crate::tensor::codec::raw_wire_bytes(500_000),
             "scanned entries report the on-disk blob size as wire cost"
+        );
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn polling_io_stays_header_sized_per_file() {
+        // Satellite regression: the poll hash must never read payloads.
+        // Three ~400 KB blobs; a full-scan regression would read
+        // megabytes below, while the header budget is a few KB.
+        let (s, dir) = tmp_store("pollio");
+        let params = Arc::new(FlatParams(vec![0.5f32; 100_000]));
+        for node in 0..3 {
+            s.push(super::super::PushRequest::raw(node, 0, 0, 1, Arc::clone(&params)))
+                .unwrap();
+        }
+        let before = s.io_bytes();
+        let polls = 10u64;
+        for _ in 0..polls {
+            s.state_hash().unwrap();
+            s.version().unwrap(); // also one state_hash internally
+        }
+        let delta = s.io_bytes() - before;
+        assert!(delta > 0, "the poll hash does read file headers");
+        assert!(
+            delta <= 2 * polls * 3 * PEEK_LEN as u64,
+            "polling read {delta} bytes across {polls} polls of 3 files; \
+             the budget is O(PEEK_LEN={PEEK_LEN}) per file per poll"
+        );
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn latest_read_costs_one_blob_not_the_history() {
+        // Five generations for one node: the per-peer pull must read
+        // exactly the newest blob, not all five.
+        let (s, dir) = tmp_store("latestio");
+        let params = Arc::new(FlatParams(vec![1.0f32; 50_000]));
+        for round in 0..5 {
+            s.push(super::super::PushRequest::raw(0, round, 0, 1, Arc::clone(&params)))
+                .unwrap();
+        }
+        let before = s.io_bytes();
+        let e = s.latest_for_node(0).unwrap().unwrap();
+        assert_eq!(e.round, 4);
+        let delta = s.io_bytes() - before;
+        assert_eq!(
+            delta,
+            crate::tensor::codec::raw_wire_bytes(50_000),
+            "latest_for_node read exactly one on-disk blob"
         );
         fs::remove_dir_all(dir).unwrap();
     }

@@ -92,8 +92,14 @@ pub struct BlobMeta {
 /// still encoded. v1 blobs parse as `codec_id = 0` (raw) with the f32
 /// bytes as payload; materialize params with [`decode_blob`] (raw) or
 /// `crate::compress::CodecState::decode_wire` (any codec).
+///
+/// The payload **borrows** the wire buffer ([`read_blob`] is zero-copy):
+/// parsing a pulled blob allocates nothing, and the raw-codec decode
+/// path can view the payload as `&[f32]` in place ([`view_raw_payload`])
+/// so a whole pull costs at most the one allocation that materializes
+/// the `FlatParams`.
 #[derive(Clone, Debug, PartialEq)]
-pub struct WireBlob {
+pub struct WireBlob<'a> {
     /// Entry metadata from the header.
     pub meta: BlobMeta,
     /// Which codec encoded the payload (`crate::compress::CodecKind::id`);
@@ -103,8 +109,110 @@ pub struct WireBlob {
     pub base_version: u64,
     /// Decoded element count.
     pub uncomp_len: usize,
-    /// The encoded payload bytes.
-    pub payload: Vec<u8>,
+    /// The encoded payload bytes, borrowed from the wire buffer.
+    pub payload: &'a [u8],
+}
+
+/// Append `xs` to `out` as little-endian f32 bytes in one bulk slab
+/// write (the write-side twin of [`view_raw_payload`]). On little-endian
+/// hosts this is a single `memcpy`; elsewhere it falls back to the
+/// per-element loop it replaced, so the produced bytes are identical
+/// everywhere (pinned by the wire test suite's byte-for-byte regression
+/// against the old loop).
+pub fn extend_f32s_le(out: &mut Vec<u8>, xs: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: any f32 is plain old data; on a little-endian host its
+        // in-memory bytes are exactly its `to_le_bytes` serialization.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// A decoded f32 view over payload bytes: borrowed straight from the
+/// wire buffer when the platform and alignment allow, copied otherwise.
+/// Both forms hold bit-identical element values; only the allocation
+/// count differs (pinned by the unaligned-buffer wire tests).
+#[derive(Debug)]
+pub enum F32View<'a> {
+    /// An aligned little-endian view into the wire buffer (zero-copy).
+    Borrowed(&'a [f32]),
+    /// A materialized copy (misaligned buffer or big-endian host).
+    Owned(Vec<f32>),
+}
+
+impl std::ops::Deref for F32View<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        match self {
+            F32View::Borrowed(s) => s,
+            F32View::Owned(v) => v,
+        }
+    }
+}
+
+impl F32View<'_> {
+    /// True when this view borrows the wire buffer (no copy was made).
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, F32View::Borrowed(_))
+    }
+
+    /// Materialize as owned params (the view's only allocation when it
+    /// was borrowed; free when it already owns the copy).
+    pub fn into_params(self) -> FlatParams {
+        FlatParams(match self {
+            F32View::Borrowed(s) => s.to_vec(),
+            F32View::Owned(v) => v,
+        })
+    }
+}
+
+/// View raw f32 payload bytes without copying when possible: on a
+/// little-endian host with a 4-byte-aligned payload this is a pointer
+/// cast (the bytemuck-style checked cast); otherwise the bytes are
+/// bulk-copied once. Length is validated against `uncomp_len` first,
+/// exactly like [`decode_raw_payload`].
+pub fn view_raw_payload(payload: &[u8], uncomp_len: usize) -> Result<F32View<'_>> {
+    let expect = uncomp_len
+        .checked_mul(4)
+        .filter(|&b| b == payload.len())
+        .is_some();
+    if !expect {
+        bail!("raw payload is {} bytes, want {} * 4", payload.len(), uncomp_len);
+    }
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY (of the transmute inside align_to): every 4-byte
+        // pattern is a valid f32; the prefix/suffix emptiness check
+        // below is what guarantees the middle is 4-byte aligned and
+        // covers the whole payload.
+        let (prefix, mid, suffix) = unsafe { payload.align_to::<f32>() };
+        if prefix.is_empty() && suffix.is_empty() {
+            return Ok(F32View::Borrowed(mid));
+        }
+    }
+    let mut xs = vec![0.0f32; uncomp_len];
+    #[cfg(target_endian = "little")]
+    // SAFETY: dst spans exactly uncomp_len * 4 == payload.len() bytes,
+    // and a bulk byte copy of LE bytes into f32 storage is exactly
+    // per-element from_le_bytes on this endianness.
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            payload.as_ptr(),
+            xs.as_mut_ptr() as *mut u8,
+            payload.len(),
+        );
+    }
+    #[cfg(not(target_endian = "little"))]
+    for (x, chunk) in xs.iter_mut().zip(payload.chunks_exact(4)) {
+        *x = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(F32View::Owned(xs))
 }
 
 fn push_common_header(out: &mut Vec<u8>, version: u16, meta: &BlobMeta) {
@@ -126,9 +234,7 @@ pub fn encode_blob(meta: &BlobMeta, params: &FlatParams) -> Vec<u8> {
     // hash goes after len; fill payload first, then patch
     let hash_pos = out.len();
     out.extend_from_slice(&0u64.to_le_bytes());
-    for x in params.as_slice() {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    extend_f32s_le(&mut out, params.as_slice());
     let h = fnv1a64(&out[HEADER_LEN..]);
     out[hash_pos..hash_pos + 8].copy_from_slice(&h.to_le_bytes());
     out
@@ -183,10 +289,11 @@ fn read_meta(bytes: &[u8]) -> BlobMeta {
 }
 
 /// Parse and integrity-check a blob of either version without decoding
-/// the payload. All header-supplied lengths are validated against the
+/// — or copying — the payload (the returned [`WireBlob`] borrows
+/// `bytes`). All header-supplied lengths are validated against the
 /// actual byte count *before* any allocation, so a corrupt header can
 /// never request an absurd allocation.
-pub fn read_blob(bytes: &[u8]) -> Result<WireBlob> {
+pub fn read_blob(bytes: &[u8]) -> Result<WireBlob<'_>> {
     if bytes.len() < HEADER_LEN.min(HEADER_LEN_V2) {
         bail!("blob too short: {} bytes", bytes.len());
     }
@@ -216,7 +323,7 @@ pub fn read_blob(bytes: &[u8]) -> Result<WireBlob> {
                 codec_id: 0,
                 base_version: 0,
                 uncomp_len: len,
-                payload: payload.to_vec(),
+                payload,
             })
         }
         VERSION_V2 => {
@@ -252,7 +359,7 @@ pub fn read_blob(bytes: &[u8]) -> Result<WireBlob> {
                 codec_id,
                 base_version,
                 uncomp_len: uncomp_len as usize,
-                payload: payload.to_vec(),
+                payload,
             })
         }
         other => bail!("unsupported blob version {other}"),
@@ -260,20 +367,10 @@ pub fn read_blob(bytes: &[u8]) -> Result<WireBlob> {
 }
 
 /// Decode raw f32 payload bytes into params (shared by the v1 path and
-/// the raw v2 codec).
+/// the raw v2 codec): [`view_raw_payload`] materialized, so it costs one
+/// bulk copy instead of the per-element loop it replaced.
 pub fn decode_raw_payload(payload: &[u8], uncomp_len: usize) -> Result<FlatParams> {
-    let expect = uncomp_len
-        .checked_mul(4)
-        .filter(|&b| b == payload.len())
-        .is_some();
-    if !expect {
-        bail!("raw payload is {} bytes, want {} * 4", payload.len(), uncomp_len);
-    }
-    let mut xs = Vec::with_capacity(uncomp_len);
-    for chunk in payload.chunks_exact(4) {
-        xs.push(f32::from_le_bytes(chunk.try_into().unwrap()));
-    }
-    Ok(FlatParams(xs))
+    Ok(view_raw_payload(payload, uncomp_len)?.into_params())
 }
 
 /// Decode and validate a *self-contained* blob: v1, or v2 with the raw
@@ -288,8 +385,57 @@ pub fn decode_blob(bytes: &[u8]) -> Result<(BlobMeta, FlatParams)> {
             wire.codec_id
         );
     }
-    let params = decode_raw_payload(&wire.payload, wire.uncomp_len)?;
+    let params = decode_raw_payload(wire.payload, wire.uncomp_len)?;
     Ok((wire.meta, params))
+}
+
+/// Bytes a header-only peek needs: covers the larger (v2) fixed header,
+/// and is more than a whole minimal v1 blob — so reading
+/// `min(file_len, PEEK_LEN)` always captures the full header of a valid
+/// blob of either version.
+pub const PEEK_LEN: usize = HEADER_LEN_V2;
+
+/// Header fields recoverable without the payload (see
+/// [`peek_blob_header`]). A peek is *not* integrity-checked — both blob
+/// hashes cover the payload, which a peek deliberately never reads — so
+/// use it only to decide *whether* to do a full [`read_blob`], never as
+/// a substitute for one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlobPeek {
+    /// Entry metadata from the header.
+    pub meta: BlobMeta,
+    /// Blob format version ([`VERSION`] or [`VERSION_V2`]).
+    pub version: u16,
+    /// Payload codec id (0 for v1 blobs).
+    pub codec_id: u16,
+}
+
+/// Parse the fixed-size header prefix of a blob (the first
+/// [`PEEK_LEN`]-or-fewer bytes of the file) without touching the
+/// payload. This is what lets [`crate::store::FsStore`] poll a directory
+/// for changes and filter entries by round with O(header) I/O per file
+/// instead of full-blob reads.
+pub fn peek_blob_header(prefix: &[u8]) -> Result<BlobPeek> {
+    if prefix.len() < HEADER_LEN {
+        bail!("blob prefix too short for a header: {} bytes", prefix.len());
+    }
+    if read_u32(prefix, 0) != MAGIC {
+        bail!("bad magic");
+    }
+    match read_u16(prefix, 4) {
+        VERSION => Ok(BlobPeek { meta: read_meta(prefix), version: VERSION, codec_id: 0 }),
+        VERSION_V2 => {
+            if prefix.len() < HEADER_LEN_V2 {
+                bail!("blob prefix too short for a v2 header: {} bytes", prefix.len());
+            }
+            Ok(BlobPeek {
+                meta: read_meta(prefix),
+                version: VERSION_V2,
+                codec_id: read_u16(prefix, 36),
+            })
+        }
+        other => bail!("unsupported blob version {other}"),
+    }
 }
 
 #[cfg(test)]
@@ -448,6 +594,85 @@ mod tests {
         bad[64..72].copy_from_slice(&h.to_le_bytes());
         let err = read_blob(&bad).unwrap_err();
         assert!(format!("{err}").contains("implausible"), "{err}");
+    }
+
+    #[test]
+    fn peek_reads_both_versions_headers_only() {
+        let p = FlatParams(vec![1.5, -2.0, 0.25]);
+        let v1 = encode_blob(&meta(), &p);
+        let peek = peek_blob_header(&v1[..PEEK_LEN.min(v1.len())]).unwrap();
+        assert_eq!(peek.meta, meta());
+        assert_eq!(peek.version, VERSION);
+        assert_eq!(peek.codec_id, 0);
+
+        let v2 = encode_blob_v2(&meta(), 3, 0, 8, &[1u8; 9]);
+        let peek2 = peek_blob_header(&v2[..PEEK_LEN]).unwrap();
+        assert_eq!(peek2.meta, meta());
+        assert_eq!(peek2.version, VERSION_V2);
+        assert_eq!(peek2.codec_id, 3);
+
+        // a minimal v1 blob is itself shorter than PEEK_LEN and peeks fine
+        let tiny = encode_blob(&meta(), &FlatParams(vec![]));
+        assert!(tiny.len() < PEEK_LEN);
+        assert_eq!(peek_blob_header(&tiny).unwrap().meta, meta());
+
+        // junk and truncated prefixes error instead of parsing
+        assert!(peek_blob_header(b"not a blob").is_err());
+        assert!(peek_blob_header(&v2[..HEADER_LEN_V2 - 1]).is_err());
+        let mut bad = v1.clone();
+        bad[0] ^= 1;
+        assert!(peek_blob_header(&bad).is_err());
+    }
+
+    #[test]
+    fn read_blob_borrows_and_view_is_zero_copy_when_aligned() {
+        let p = FlatParams((0..64).map(|i| i as f32 * 0.5).collect());
+        let blob = encode_blob(&meta(), &p);
+        let wire = read_blob(&blob).unwrap();
+        // the payload is a slice of the input buffer, not a copy
+        let blob_range = blob.as_ptr() as usize..blob.as_ptr() as usize + blob.len();
+        assert!(blob_range.contains(&(wire.payload.as_ptr() as usize)));
+        // Whether the view borrows depends on the buffer's base
+        // alignment (controlled alignment cases are pinned in
+        // rust/tests/wire.rs); the values must be right either way.
+        let view = view_raw_payload(wire.payload, wire.uncomp_len).unwrap();
+        assert_eq!(&*view, p.as_slice());
+        assert_eq!(view.into_params(), p);
+    }
+
+    #[test]
+    fn bulk_slab_write_matches_per_element_loop() {
+        // byte-for-byte regression against the replaced loop, over
+        // adversarial bit patterns (NaN payloads, -0.0, denormals, inf)
+        let xs = [
+            0.0f32,
+            -0.0,
+            1.0,
+            f32::NAN,
+            f32::from_bits(0x7F80_0001), // signaling-NaN pattern
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1), // denormal
+            -3.25e-38,
+        ];
+        let mut bulk = vec![0xAAu8; 3]; // non-empty prefix must be preserved
+        extend_f32s_le(&mut bulk, &xs);
+        let mut reference = vec![0xAAu8; 3];
+        for x in &xs {
+            reference.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(bulk, reference);
+        // and the whole v1 encode (which now uses the slab write)
+        // matches a reference blob built with the old loop
+        let p = FlatParams(xs.to_vec());
+        let blob = encode_blob(&meta(), &p);
+        let mut old = Vec::new();
+        old.extend_from_slice(&blob[..HEADER_LEN]); // header unchanged
+        for x in &xs {
+            old.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(blob, old);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod simd;
 
 pub use hash::fnv1a64;
 pub use rng::Rng;

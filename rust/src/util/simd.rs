@@ -1,0 +1,70 @@
+//! Runtime SIMD dispatch for the wire-path kernels.
+//!
+//! One rule, applied everywhere a kernel has a vector body
+//! ([`crate::compress::q8`]'s quantizer, dequantizer): the scalar
+//! expression is the *specification*, and a SIMD body is only ever an
+//! alternative evaluation order of bit-identical arithmetic. Dispatch is
+//! a runtime CPU check — never a compile-time `target-feature` bet — so
+//! one binary runs correctly from a feature-poor VM to an AVX2 host, and
+//! the `rust/tests/determinism.rs` thread-invariance contract holds on
+//! all of them (chunk boundaries are constants; lane width, like thread
+//! count, never leaks into results).
+//!
+//! Setting the `FEDLESS_NO_SIMD` environment variable (any value) before
+//! first use forces the scalar bodies — the escape hatch for A/B
+//! debugging and for the bench baselines in `rust/benches/kernels.rs`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide override: `true` disables SIMD bodies even where the CPU
+/// supports them (see [`set_simd_enabled`]).
+static SIMD_DISABLED: AtomicBool = AtomicBool::new(false);
+
+fn avx2_detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static DETECTED: OnceLock<bool> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            std::env::var_os("FEDLESS_NO_SIMD").is_none() && is_x86_feature_detected!("avx2")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when kernels should take their AVX2 bodies: the CPU supports
+/// AVX2, `FEDLESS_NO_SIMD` is unset, and [`set_simd_enabled`] hasn't
+/// turned them off. Kernels produce bit-identical results either way —
+/// this only selects an evaluation order.
+#[inline]
+pub fn simd_enabled() -> bool {
+    avx2_detected() && !SIMD_DISABLED.load(Ordering::Relaxed)
+}
+
+/// Force-disable (`false`) or re-allow (`true`) the SIMD bodies at
+/// runtime. A process-wide toggle for benches measuring the scalar
+/// baseline and for bisecting a suspected codegen issue; results are
+/// bit-identical either way, so flipping it mid-run is safe but changes
+/// only throughput.
+pub fn set_simd_enabled(on: bool) {
+    SIMD_DISABLED.store(!on, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toggle_round_trips() {
+        // Never assert on the detection result (CI may run anywhere);
+        // only that the override always forces scalar.
+        let initial = simd_enabled();
+        set_simd_enabled(false);
+        assert!(!simd_enabled());
+        set_simd_enabled(true);
+        assert_eq!(simd_enabled(), initial, "re-enabling restores detection");
+    }
+}

@@ -1,0 +1,228 @@
+//! Wire-path contract tests: unaligned wire buffers, the bulk
+//! little-endian slab write, and the zero-copy pull allocation budget.
+//!
+//! The codec layer promises (see `rust/src/tensor/codec.rs` and
+//! ARCHITECTURE.md §11):
+//!
+//! * blob bytes decode bit-identically at **any** buffer alignment —
+//!   the borrowed fast path and the misaligned copy fallback are
+//!   indistinguishable except in allocation count;
+//! * the v1 payload slab write is byte-for-byte the old per-element
+//!   `to_le_bytes` loop;
+//! * a raw pull (parse + materialize params) performs at most one
+//!   allocation.
+//!
+//! The allocation assertions use a counting global allocator with a
+//! thread-local counter, so parallel test threads don't pollute each
+//! other's counts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use fedless::compress::{Codec, CodecKind, CodecState};
+use fedless::par::ChunkPool;
+use fedless::tensor::codec::{
+    decode_blob, encode_blob, encode_blob_v2, read_blob, view_raw_payload, BlobMeta, HEADER_LEN,
+};
+use fedless::tensor::FlatParams;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the counter update has
+// no side effect on allocation behavior (Cell<u64> TLS access never
+// allocates — no Drop, so no destructor registration).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` on this thread.
+fn allocs_in<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOCS.with(|c| c.get());
+    let r = f();
+    (ALLOCS.with(|c| c.get()) - before, r)
+}
+
+fn meta() -> BlobMeta {
+    BlobMeta { node_id: 2, round: 9, epoch: 4, n_examples: 1280 }
+}
+
+fn training_like(n: usize) -> FlatParams {
+    FlatParams((0..n).map(|i| ((i as f32) * 0.071).sin() * 0.8).collect())
+}
+
+/// 8-byte-aligned byte storage (backed by `Vec<u64>`), so placing a blob
+/// at byte offset `o` gives its payload a *known* alignment — `Vec<u8>`
+/// alone doesn't let a test control the base address.
+struct AlignedBuf {
+    storage: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Place `bytes` at byte offset `offset` from an 8-aligned base.
+    fn place(bytes: &[u8], offset: usize) -> AlignedBuf {
+        let len = offset + bytes.len();
+        let mut buf = AlignedBuf { storage: vec![0u64; len.div_ceil(8)], len };
+        buf.as_mut()[offset..].copy_from_slice(bytes);
+        buf
+    }
+
+    fn as_mut(&mut self) -> &mut [u8] {
+        let n = self.len;
+        // SAFETY: the u64 storage covers n bytes; u8 has no alignment
+        // or validity requirements.
+        unsafe { std::slice::from_raw_parts_mut(self.storage.as_mut_ptr() as *mut u8, n) }
+    }
+
+    /// The placed bytes, starting at `offset` from the 8-aligned base.
+    fn slice(&self, offset: usize) -> &[u8] {
+        // SAFETY: as above, shared view.
+        let all =
+            unsafe { std::slice::from_raw_parts(self.storage.as_ptr() as *const u8, self.len) };
+        &all[offset..]
+    }
+}
+
+fn bits(p: &FlatParams) -> Vec<u32> {
+    p.as_slice().iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn every_codec_decodes_bit_identically_at_every_alignment() {
+    let p = training_like(1000);
+    for kind in [
+        CodecKind::None, // exercised as a raw-payload v2 blob
+        CodecKind::Q8,
+        CodecKind::TopK { frac: 0.1 },
+        CodecKind::DeltaQ8, // no base set: self-contained delta blob
+    ] {
+        let codec = kind.build();
+        let payload = codec.encode(&p, None);
+        let blob = encode_blob_v2(&meta(), kind.id(), 0, p.len(), &payload);
+        let state = CodecState::new(kind);
+        let reference = state
+            .decode_wire(&read_blob(&blob).unwrap(), ChunkPool::sequential())
+            .unwrap();
+        for offset in 0..8 {
+            let buf = AlignedBuf::place(&blob, offset);
+            let wire = read_blob(buf.slice(offset)).unwrap();
+            let dec = state.decode_wire(&wire, ChunkPool::sequential()).unwrap();
+            assert_eq!(
+                bits(&dec),
+                bits(&reference),
+                "{} at offset {offset} must decode bit-identically",
+                kind.label()
+            );
+        }
+    }
+    // and the v1 format through its own entry point
+    let blob = encode_blob(&meta(), &p);
+    let reference = decode_blob(&blob).unwrap().1;
+    for offset in 0..8 {
+        let buf = AlignedBuf::place(&blob, offset);
+        let (m, dec) = decode_blob(buf.slice(offset)).unwrap();
+        assert_eq!(m, meta(), "v1 meta at offset {offset}");
+        assert_eq!(bits(&dec), bits(&reference), "v1 at offset {offset}");
+    }
+}
+
+#[test]
+fn raw_view_borrows_when_aligned_and_copies_when_not() {
+    let p = training_like(256);
+    let blob = encode_blob(&meta(), &p);
+    assert_eq!(HEADER_LEN % 4, 0, "payload alignment is the buffer base's");
+    for offset in 0..8 {
+        let buf = AlignedBuf::place(&blob, offset);
+        let wire = read_blob(buf.slice(offset)).unwrap();
+        let view = view_raw_payload(wire.payload, wire.uncomp_len).unwrap();
+        if cfg!(target_endian = "little") {
+            assert_eq!(
+                view.is_borrowed(),
+                offset % 4 == 0,
+                "offset {offset}: borrow exactly when the payload is 4-aligned"
+            );
+        } else {
+            assert!(!view.is_borrowed(), "big-endian never borrows");
+        }
+        assert_eq!(
+            view.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            p.as_slice().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "offset {offset}: values identical through either path"
+        );
+    }
+}
+
+#[test]
+fn bulk_slab_write_is_byte_identical_to_the_old_loop() {
+    // Adversarial bit patterns: NaNs (quiet and signaling patterns),
+    // signed zeros, denormals, infinities — the slab write must move
+    // them untouched, exactly like the replaced per-element loop.
+    let xs = vec![
+        f32::NAN,
+        f32::from_bits(0xFFC0_0001),
+        f32::from_bits(0x7F80_0001),
+        -0.0,
+        0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::from_bits(1),
+        f32::MIN_POSITIVE,
+        3.25e37,
+        -1.0e-40,
+    ];
+    let p = FlatParams(xs.clone());
+    let blob = encode_blob(&meta(), &p);
+    // reference: the old encode loop, reconstructed
+    let mut old = blob[..HEADER_LEN].to_vec();
+    for x in &xs {
+        old.extend_from_slice(&x.to_le_bytes());
+    }
+    assert_eq!(blob, old, "v1 payload bytes must match the old per-element loop");
+    // the Raw codec shares the slab write
+    let raw_payload = CodecKind::None.build().encode(&p, None);
+    assert_eq!(raw_payload, old[HEADER_LEN..], "raw codec payload matches too");
+}
+
+#[test]
+fn raw_pull_costs_at_most_one_allocation() {
+    let p = training_like(4096);
+    let blob = encode_blob(&meta(), &p);
+    // warm up anyhow/TLS one-time costs outside the measured window
+    let _ = decode_blob(&blob).unwrap();
+
+    for offset in [0usize, 1] {
+        let buf = AlignedBuf::place(&blob, offset);
+        let slice = buf.slice(offset);
+
+        // parse + view: zero allocations when the buffer is aligned
+        // (borrowed view), exactly one when the fallback has to copy
+        let (n_view, view) = allocs_in(|| {
+            let wire = read_blob(slice).unwrap();
+            view_raw_payload(wire.payload, wire.uncomp_len).unwrap()
+        });
+        let aligned_borrow = cfg!(target_endian = "little") && offset % 4 == 0;
+        assert_eq!(
+            n_view,
+            u64::from(!aligned_borrow),
+            "offset {offset}: parse+view allocation count"
+        );
+
+        // materializing params brings the total for a full pull to one
+        let (n_total, params) = allocs_in(|| view.into_params());
+        assert_eq!(n_view + n_total, 1, "offset {offset}: a raw pull is one allocation");
+        assert_eq!(bits(&params), bits(&p));
+    }
+}
