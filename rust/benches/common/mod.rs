@@ -3,6 +3,8 @@
 
 use std::time::{Duration, Instant};
 
+use fedless::metrics::stats::percentile;
+
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -33,8 +35,15 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     samples.sort();
     let mean = samples.iter().sum::<Duration>() / iters as u32;
-    let p50 = samples[iters / 2];
-    let p95 = samples[(iters * 95 / 100).min(iters - 1)];
+    // shared nearest-rank percentile (errors on an empty sample instead
+    // of panicking; a zero-iteration bench is a harness misconfiguration)
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let p50 = Duration::from_secs_f64(
+        percentile(&secs, 50.0).unwrap_or_else(|e| panic!("bench {name}: {e}")),
+    );
+    let p95 = Duration::from_secs_f64(
+        percentile(&secs, 95.0).unwrap_or_else(|e| panic!("bench {name}: {e}")),
+    );
     let r = BenchResult { name: name.to_string(), iters, mean, p50, p95 };
     println!("{}", r.row());
     r

@@ -19,6 +19,7 @@ use std::fs;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use fedless::metrics::stats::percentile;
 use fedless::store::{MemoryStore, PushRequest, ShardedStore, WeightStore};
 use fedless::tensor::FlatParams;
 
@@ -93,7 +94,8 @@ fn measure(store: Arc<dyn WeightStore>, store_name: &'static str, notify: bool) 
         store: store_name,
         waiter: if notify { "notify" } else { "poll_200us" },
         mean_wake_us: mean(&wakes_us),
-        p95_wake_us: wakes_us[(wakes_us.len() * 95 / 100).min(wakes_us.len() - 1)],
+        p95_wake_us: percentile(&wakes_us, 95.0)
+            .unwrap_or_else(|e| panic!("{store_name} wake samples: {e}")),
         mean_reads: mean(&reads),
     };
     println!(

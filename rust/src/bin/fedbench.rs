@@ -12,6 +12,8 @@
 //!              [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N]
 //!              [--robust median|trimmed-mean[:f]|krum[:f]|trust-weighted]
 //!              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]]
+//!              [--scheduler threads|events] [--participation F]
+//!              [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>]
 //!              [--virtual-clock]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
@@ -428,6 +430,24 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                 cfg.threads = fedless::config::parse_threads(value)
                     .ok_or_else(|| format!("bad --threads {value:?} (auto or >= 1)"))?;
             }
+            "--scheduler" => {
+                cfg.scheduler = fedless::config::SchedulerKind::parse(value)
+                    .ok_or_else(|| format!("bad --scheduler {value:?} (threads or events)"))?;
+            }
+            "--participation" => {
+                cfg.participation = value
+                    .parse()
+                    .map_err(|_| format!("bad --participation {value:?} (fraction in (0, 1])"))?;
+            }
+            "--availability" => {
+                cfg.availability =
+                    fedless::config::AvailabilitySpec::parse(value).ok_or_else(|| {
+                        format!(
+                            "bad --availability {value:?} (none, churn:<p>, \
+                             diurnal:<period>, stragglers:<frac>:<mult>)"
+                        )
+                    })?;
+            }
             "--scale" => {
                 scale = Scale::parse(value).ok_or_else(|| format!("bad --scale {value:?}"))?;
             }
@@ -459,6 +479,16 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("clock        : {}", cfg.clock.name());
     println!("compress     : {}", cfg.compress.label());
     println!("threads      : {}", fedless::config::threads_label(cfg.threads));
+    println!("scheduler    : {}", cfg.scheduler.name());
+    println!("participation: {}", cfg.participation);
+    println!(
+        "availability : {}",
+        if cfg.availability == fedless::config::AvailabilitySpec::None {
+            "none".into()
+        } else {
+            cfg.availability.label()
+        }
+    );
     println!("strategy     : {}", cfg.strategy.label());
     println!(
         "adversary    : {}",
@@ -564,6 +594,8 @@ fn main() {
              [--compress none|q8|topk:<f>|delta-q8] [--threads auto|N] \
              [--robust median|trimmed-mean[:f]|krum[:f]|trust-weighted] \
              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]] \
+             [--scheduler threads|events] [--participation F] \
+             [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>] \
              [--virtual-clock]\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );

@@ -17,6 +17,9 @@
 //! clock = virtual         # real (default) | virtual simulated time
 //! compress = q8           # none | q8 | topk:<frac> | delta-q8
 //! threads = auto          # kernel-pool workers: auto | N (default 1)
+//! scheduler = events      # threads (default) | events (10k-client DES)
+//! participation = 0.1     # per-round client sampling fraction in (0,1]
+//! availability = churn:0.3 # none | churn:<p> | diurnal:<period> | stragglers:<frac>:<mult>
 //! ```
 
 use std::fmt;
@@ -138,6 +141,15 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                 cfg.threads = super::parse_threads(value).ok_or_else(|| {
                     err(line_no, format!("threads must be `auto` or >= 1, got {value:?}"))
                 })?
+            }
+            "scheduler" => {
+                cfg.scheduler = super::SchedulerKind::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown scheduler {value:?}")))?
+            }
+            "participation" => cfg.participation = parse_f64(value)?,
+            "availability" => {
+                cfg.availability = super::AvailabilitySpec::parse(value)
+                    .ok_or_else(|| err(line_no, format!("unknown availability {value:?}")))?
             }
             "log_dir" => cfg.log_dir = Some(value.into()),
             "verbose" => cfg.verbose = value == "true" || value == "1",
@@ -264,6 +276,28 @@ mod tests {
         assert!(cfg.adversary.is_none(), "honest is the default");
         assert!(parse_config_text("adversary = gremlin\n").is_err());
         assert!(parse_config_text("adversary = stale:0\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_participation_availability_values() {
+        use super::super::{AvailabilitySpec, SchedulerKind};
+        let cfg = parse_config_text(
+            "scheduler = events\nclock = virtual\nparticipation = 0.1\navailability = churn:0.3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::Events);
+        assert_eq!(cfg.participation, 0.1);
+        assert_eq!(cfg.availability, AvailabilitySpec::Churn { p: 0.3 });
+        cfg.validate().unwrap();
+
+        let cfg = parse_config_text("").unwrap();
+        assert_eq!(cfg.scheduler, SchedulerKind::Threads, "threads is the default");
+        assert_eq!(cfg.participation, 1.0, "full participation is the default");
+        assert_eq!(cfg.availability, AvailabilitySpec::None);
+
+        assert!(parse_config_text("scheduler = fibers\n").is_err());
+        assert!(parse_config_text("participation = lots\n").is_err());
+        assert!(parse_config_text("availability = weekly:3\n").is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::store::{AdversarySpec, LatencyConfig};
 use crate::strategy::StrategyKind;
 
 pub use crate::compress::CodecKind;
+pub use crate::sched::{AvailabilitySpec, SchedulerKind};
 pub use crate::time::ClockKind;
 
 /// Peers pulled per epoch when `mode = gossip` gives no explicit fanout.
@@ -239,6 +240,27 @@ pub struct ExperimentConfig {
     /// default of 1 keeps nested parallelism under the sweep
     /// scheduler opt-in.
     pub threads: usize,
+    /// Node scheduler (`scheduler = threads | events`): `threads` (the
+    /// default) runs one OS thread per node with an isolated PJRT engine;
+    /// `events` steps every node as a resumable task on one
+    /// discrete-event executor thread with a single shared engine — the
+    /// 10k-client regime. Requires `clock = virtual`; simulated timelines
+    /// and model digests match the threaded scheduler bit-for-bit, so
+    /// this is a capacity knob, not an experiment variable (and run names
+    /// carry no scheduler suffix).
+    pub scheduler: SchedulerKind,
+    /// Per-round client sampling fraction (`participation = <frac>` in
+    /// (0, 1]): each round a seeded cohort of `max(1, round(frac * N))`
+    /// of the online nodes trains and federates; the rest skip the round
+    /// entirely (no training, no push, no simulated time). 1.0 = full
+    /// participation (today's behavior, zero overhead).
+    pub participation: f64,
+    /// Per-node availability trace (`availability = none | churn:<p> |
+    /// diurnal:<period> | stragglers:<frac>:<mult>`): seeded round-level
+    /// churn, phase-shifted day/night cycles, or a persistently slow
+    /// device fraction. Composes with `participation` — cohorts are
+    /// sampled from the currently *online* nodes.
+    pub availability: AvailabilitySpec,
     /// Write metrics.csv / events.jsonl here.
     pub log_dir: Option<PathBuf>,
     /// Print per-epoch progress.
@@ -268,6 +290,9 @@ impl Default for ExperimentConfig {
             clock: ClockKind::Real,
             compress: CodecKind::None,
             threads: 1,
+            scheduler: SchedulerKind::Threads,
+            participation: 1.0,
+            availability: AvailabilitySpec::None,
             log_dir: None,
             verbose: false,
         }
@@ -303,6 +328,31 @@ impl ExperimentConfig {
         if let FederationMode::Gossip { fanout } = self.mode {
             anyhow::ensure!(fanout >= 1, "gossip fanout must be >= 1");
         }
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation in (0, 1]"
+        );
+        if self.scheduler == SchedulerKind::Events {
+            // the event executor *is* a discrete-event simulator; there
+            // is no real-time variant of it
+            anyhow::ensure!(
+                self.clock == ClockKind::Virtual,
+                "scheduler = events requires clock = virtual"
+            );
+        }
+        match self.availability {
+            AvailabilitySpec::None => {}
+            AvailabilitySpec::Churn { p } => {
+                anyhow::ensure!((0.0..1.0).contains(&p), "churn probability in [0, 1)");
+            }
+            AvailabilitySpec::Diurnal { period } => {
+                anyhow::ensure!(period >= 2, "diurnal period must be >= 2 rounds");
+            }
+            AvailabilitySpec::Stragglers { frac, mult } => {
+                anyhow::ensure!((0.0..=1.0).contains(&frac), "straggler fraction in [0, 1]");
+                anyhow::ensure!(mult >= 1.0, "straggler multiplier must be >= 1");
+            }
+        }
         Ok(())
     }
 
@@ -310,7 +360,10 @@ impl ExperimentConfig {
     /// (gossip runs carry the fanout, `mnist_gossip2_...`; parameterized
     /// strategies carry their parameter, `..._krum1_...`; compressed
     /// runs carry the codec, `..._seed42_q8`; attacked runs carry the
-    /// adversary label, `..._byz1`).
+    /// adversary label, `..._byz1`; partial-participation runs carry the
+    /// fraction, `..._p0.1`, and availability traces their label,
+    /// `..._churn0.3`). The scheduler adds **no** suffix: both schedulers
+    /// replay the same timelines and digests, so they are the same run.
     pub fn run_name(&self) -> String {
         let compress = match self.compress {
             CodecKind::None => String::new(),
@@ -320,8 +373,17 @@ impl ExperimentConfig {
             None => String::new(),
             Some(a) => format!("_{}", a.label()),
         };
+        let participation = if self.participation < 1.0 {
+            format!("_p{}", self.participation)
+        } else {
+            String::new()
+        };
+        let availability = match self.availability.label() {
+            l if l.is_empty() => String::new(),
+            l => format!("_{l}"),
+        };
         format!(
-            "{}_{}_{}_n{}_s{}_seed{}{compress}{adversary}",
+            "{}_{}_{}_n{}_s{}_seed{}{compress}{adversary}{participation}{availability}",
             self.model,
             self.mode.label(),
             self.strategy.label(),
@@ -473,6 +535,67 @@ mod tests {
         for v in ["auto", "1", "16"] {
             assert_eq!(threads_label(parse_threads(v).unwrap()), v.to_lowercase());
         }
+    }
+
+    #[test]
+    fn participation_validates_and_suffixes_run_name() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.participation, 1.0, "full participation by default");
+        assert_eq!(d.scheduler, SchedulerKind::Threads);
+        assert_eq!(d.availability, AvailabilitySpec::None);
+
+        let c = ExperimentConfig { participation: 0.1, ..Default::default() };
+        c.validate().unwrap();
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_p0.1");
+
+        for bad in [0.0, -0.5, 1.5] {
+            let c = ExperimentConfig { participation: bad, ..Default::default() };
+            assert!(c.validate().is_err(), "participation {bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn availability_validates_and_suffixes_run_name() {
+        let c = ExperimentConfig {
+            availability: AvailabilitySpec::parse("churn:0.3").unwrap(),
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_churn0.3");
+
+        // churn p = 1 would take every node offline every round
+        let c = ExperimentConfig {
+            availability: AvailabilitySpec::Churn { p: 1.0 },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            availability: AvailabilitySpec::Diurnal { period: 1 },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            availability: AvailabilitySpec::Stragglers { frac: 0.2, mult: 0.5 },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn events_scheduler_requires_virtual_clock_and_keeps_run_name() {
+        let c = ExperimentConfig {
+            scheduler: SchedulerKind::Events,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "events on a real clock is rejected");
+        let c = ExperimentConfig {
+            scheduler: SchedulerKind::Events,
+            clock: ClockKind::Virtual,
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        // same run identity as the threaded scheduler: bit-identical replay
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub mod node;
 pub mod par;
 pub mod protocol;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod store;
 pub mod strategy;
@@ -68,6 +69,7 @@ pub mod prelude {
     pub use crate::par::ChunkPool;
     pub use crate::protocol::{FederationProtocol, ProtocolKind};
     pub use crate::runtime::{Engine, ModelBundle};
+    pub use crate::sched::{AvailabilitySpec, ParticipationPlan, SchedulerKind};
     pub use crate::sim::{run_experiment, run_trials, ExperimentResult};
     pub use crate::store::{FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore};
     pub use crate::strategy::StrategyKind;

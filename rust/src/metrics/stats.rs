@@ -75,11 +75,27 @@ impl std::fmt::Display for Summary {
     }
 }
 
-/// Percentile of a sample (nearest-rank); used by the bench harness.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
-    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
-    sorted[rank.min(sorted.len()) - 1]
+/// Percentile of a non-empty ascending-sorted sample (nearest-rank);
+/// used by the bench report paths.
+///
+/// Boundary ranks are defined explicitly: `p = 0` is the sample minimum
+/// (first element) and `p = 100` the maximum (last element); in between
+/// the value at rank `ceil(p / 100 · n)` is returned. An empty sample or
+/// a `p` outside `[0, 100]` is an *error*, not a panic — report
+/// generators aggregate whatever samples a run produced, and a
+/// degenerate run must surface a message instead of aborting the
+/// harness.
+pub fn percentile(sorted: &[f64], p: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(!sorted.is_empty(), "percentile of an empty sample");
+    anyhow::ensure!(
+        (0.0..=100.0).contains(&p),
+        "percentile p = {p} outside [0, 100]"
+    );
+    if p == 0.0 {
+        return Ok(sorted[0]);
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    Ok(sorted[rank.min(sorted.len()) - 1])
 }
 
 #[cfg(test)]
@@ -130,9 +146,34 @@ mod tests {
     #[test]
     fn percentiles() {
         let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
-        assert_eq!(percentile(&xs, 50.0), 5.0);
-        assert_eq!(percentile(&xs, 99.0), 10.0);
-        assert_eq!(percentile(&xs, 1.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0).unwrap(), 5.0);
+        assert_eq!(percentile(&xs, 99.0).unwrap(), 10.0);
+        assert_eq!(percentile(&xs, 1.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn percentile_boundary_ranks() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        // p = 0 / p = 100 are pinned to min / max
+        assert_eq!(percentile(&xs, 0.0).unwrap(), 1.0);
+        assert_eq!(percentile(&xs, 100.0).unwrap(), 5.0);
+        // the smallest positive p still lands on the first rank
+        assert_eq!(percentile(&xs, 1e-9).unwrap(), 1.0);
+        // just below 100 stays on the last rank (ceil rounds up)
+        assert_eq!(percentile(&xs, 99.999).unwrap(), 5.0);
+        // single-element samples answer every p with that element
+        assert_eq!(percentile(&[7.0], 0.0).unwrap(), 7.0);
+        assert_eq!(percentile(&[7.0], 50.0).unwrap(), 7.0);
+        assert_eq!(percentile(&[7.0], 100.0).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn percentile_rejects_empty_and_out_of_range() {
+        assert!(percentile(&[], 50.0).is_err(), "empty sample is an error");
+        let xs = [1.0, 2.0];
+        assert!(percentile(&xs, -0.1).is_err());
+        assert!(percentile(&xs, 100.1).is_err());
+        assert!(percentile(&xs, f64::NAN).is_err());
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Federated nodes — the serverless clients.
 //!
-//! Each node runs on its own OS thread with an isolated PJRT engine (the
-//! paper simulated clients with Python threads; real threads + isolated
-//! runtimes are strictly closer to independent processes, §5). A node:
+//! A node's lifecycle is one [`NodeRunner`] state machine, driven by
+//! either scheduler: under `scheduler = threads` (the default) each node
+//! runs on its own OS thread with an isolated PJRT engine (the paper
+//! simulated clients with Python threads; real threads + isolated
+//! runtimes are strictly closer to independent processes, §5); under
+//! `scheduler = events` the same machines are stepped by the
+//! [`crate::sched::EventExecutor`] on one thread, which is how trials
+//! scale to 10k clients. A node:
 //!
 //! 1. trains `steps_per_epoch` local steps via the AOT train artifact,
 //! 2. federates through the weight store by calling its
@@ -38,8 +43,10 @@
 //! data shard — and calling [`spawn_node`]; see `sim/experiment.rs` for
 //! the canonical wiring.
 
+mod runner;
 mod worker;
 
+pub use runner::NodeRunner;
 pub use worker::{spawn_node, NodeCtx};
 
 use std::time::Duration;

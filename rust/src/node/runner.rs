@@ -1,0 +1,310 @@
+//! [`NodeRunner`] — one federated node as a resumable state machine.
+//!
+//! The epoch loop that used to live inline in the worker thread body is
+//! now a [`Task`]: train → federate → repeat, suspending at protocol
+//! wait points instead of blocking. Both schedulers drive the same
+//! machine — the threaded worker ([`super::spawn_node`]) parks on
+//! [`crate::store::WeightStore::wait_for_change`] between steps, the
+//! event executor ([`crate::sched::EventExecutor`]) queues a deadline —
+//! so node behavior (store call sequence, timeline spans, metrics,
+//! crash/stall/participation handling) is defined once, here.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::compress::CodecState;
+use crate::config::ExperimentConfig;
+use crate::data::BatchLoader;
+use crate::metrics::timeline::{SpanKind, Timeline};
+use crate::metrics::RunLogger;
+use crate::protocol::{EpochCtx, EpochStep, FederationProtocol, ProtocolKind};
+use crate::runtime::{ModelBundle, TrainState};
+use crate::sched::{ParticipationPlan, StepOutcome, Task};
+use crate::store::WeightStore;
+use crate::strategy::Strategy;
+use crate::time::Clock;
+
+use super::{NodeReport, NodeStatus};
+
+enum Phase {
+    Train,
+    Federate,
+    Done,
+}
+
+/// A node's whole lifecycle as a resumable task. Borrows the (expensive,
+/// immutable) [`ModelBundle`]: the threaded worker loads one per node
+/// thread as before, while the event executor shares a single bundle
+/// across every runner in the fleet — the allocation that makes
+/// 10k-client trials feasible.
+pub struct NodeRunner<'a> {
+    node_id: usize,
+    cfg: Arc<ExperimentConfig>,
+    store: Arc<dyn WeightStore>,
+    clock: Arc<dyn Clock>,
+    logger: Option<Arc<RunLogger>>,
+    plan: Arc<ParticipationPlan>,
+    bundle: &'a ModelBundle,
+    loader: BatchLoader,
+    strategy: Box<dyn Strategy>,
+    protocol: Box<dyn FederationProtocol>,
+    state: TrainState,
+    codec: CodecState,
+    pool: crate::par::ChunkPool,
+    step_delay: Duration,
+    epoch: usize,
+    phase: Phase,
+    report: NodeReport,
+    timeline: Timeline,
+}
+
+impl<'a> NodeRunner<'a> {
+    /// Build a runner ready for epoch 0: initial weights from the shared
+    /// seed ("initialize w_0", Algorithm 1), protocol and codec state
+    /// from the config, straggler delay from `node_delays_ms` scaled by
+    /// the availability trace's persistent multiplier.
+    #[allow(clippy::too_many_arguments)] // one-time wiring, named fields at both call sites
+    pub fn new(
+        node_id: usize,
+        cfg: Arc<ExperimentConfig>,
+        store: Arc<dyn WeightStore>,
+        clock: Arc<dyn Clock>,
+        logger: Option<Arc<RunLogger>>,
+        plan: Arc<ParticipationPlan>,
+        strategy: Box<dyn Strategy>,
+        loader: BatchLoader,
+        bundle: &'a ModelBundle,
+    ) -> Result<NodeRunner<'a>> {
+        let params = bundle.init_params(cfg.seed)?;
+        let protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+        // the node's kernel pool (threads = auto | N): codec encode/decode
+        // and strategy aggregation run chunk-parallel on it, with results
+        // bit-identical to threads = 1
+        let pool = crate::par::ChunkPool::from_config(cfg.threads);
+        let step_delay = cfg
+            .node_delays_ms
+            .get(node_id)
+            .copied()
+            .map(|ms| Duration::from_secs_f64(ms / 1000.0))
+            .unwrap_or(Duration::ZERO)
+            .mul_f64(plan.delay_multiplier(node_id));
+        let report = NodeReport {
+            node_id,
+            status: NodeStatus::Completed,
+            epochs_done: 0,
+            final_params: None,
+            // n_k: examples this node trains on per epoch (the FedAvg
+            // weight numerator), from the manifest's authoritative batch
+            // size carried by the bundle
+            n_examples_per_epoch: (cfg.steps_per_epoch * bundle.info.batch_size) as u64,
+            epoch_losses: vec![],
+            epoch_accs: vec![],
+            aggregations: 0,
+            pushes: 0,
+            timeline: Timeline::new(node_id),
+            train_time: Duration::ZERO,
+            wait_time: Duration::ZERO,
+        };
+        Ok(NodeRunner {
+            node_id,
+            state: TrainState::new(params),
+            codec: CodecState::new(cfg.compress),
+            cfg,
+            store,
+            clock,
+            logger,
+            plan,
+            bundle,
+            loader,
+            strategy,
+            protocol,
+            pool,
+            step_delay,
+            epoch: 0,
+            phase: Phase::Train,
+            report,
+            timeline: Timeline::new(node_id),
+        })
+    }
+
+    /// Record a driver-side error (e.g. a failed store wait) the same
+    /// way an internal one is recorded: `Failed` status, task over.
+    pub fn fail(&mut self, err: &anyhow::Error) {
+        if self.report.status == NodeStatus::Completed {
+            self.report.status = NodeStatus::Failed(format!("{err:#}"));
+        }
+        self.phase = Phase::Done;
+    }
+
+    /// Finalize and hand back the node's report.
+    pub fn into_report(mut self) -> NodeReport {
+        self.report.train_time = self.timeline.total(SpanKind::Train);
+        self.report.wait_time = self.timeline.total(SpanKind::Wait);
+        self.report.timeline = self.timeline;
+        self.report
+    }
+
+    fn step_inner(&mut self) -> Result<StepOutcome> {
+        match self.phase {
+            Phase::Done => Ok(StepOutcome::Done),
+            Phase::Train => {
+                // Zero-time transitions (completion, crash, off-cohort
+                // rounds) loop inline; training ends the step because it
+                // advances the clock.
+                loop {
+                    if self.epoch >= self.cfg.epochs {
+                        self.report.final_params = Some(self.state.params.clone());
+                        self.phase = Phase::Done;
+                        return Ok(StepOutcome::Done);
+                    }
+                    if let Some(crash) = &self.cfg.crash {
+                        // crash fires by epoch index whether or not the
+                        // node is in that round's cohort — a device dies
+                        // on its own schedule
+                        if crash.node == self.node_id && crash.at_epoch == self.epoch {
+                            self.report.status =
+                                NodeStatus::Crashed { at_epoch: self.epoch };
+                            if let Some(lg) = &self.logger {
+                                let _ = lg.log_event(
+                                    "node_crash",
+                                    &[
+                                        ("node", self.node_id.to_string()),
+                                        ("epoch", self.epoch.to_string()),
+                                    ],
+                                );
+                            }
+                            let t = self.clock.now();
+                            self.timeline.record(SpanKind::Crashed, t, t);
+                            self.phase = Phase::Done;
+                            return Ok(StepOutcome::Done);
+                        }
+                    }
+                    if !self.plan.participates(self.node_id, self.epoch) {
+                        // off-cohort round: no training, no push, no
+                        // simulated time, no metrics row
+                        self.epoch += 1;
+                        continue;
+                    }
+                    break;
+                }
+                self.train_epoch()?;
+                self.phase = Phase::Federate;
+                Ok(StepOutcome::Yield)
+            }
+            Phase::Federate => {
+                let mut pctx = EpochCtx {
+                    node_id: self.node_id,
+                    n_nodes: self.cfg.n_nodes,
+                    round_k: self.plan.round_k(self.epoch),
+                    epoch: self.epoch,
+                    n_examples: self.report.n_examples_per_epoch,
+                    store: self.store.as_ref(),
+                    strategy: self.strategy.as_mut(),
+                    timeline: &mut self.timeline,
+                    sync_timeout: self.cfg.sync_timeout,
+                    clock: self.clock.as_ref(),
+                    codec: &mut self.codec,
+                    pool: self.pool,
+                };
+                match self.protocol.poll_epoch(&mut pctx, &mut self.state.params)? {
+                    EpochStep::Wait { since, timeout } => {
+                        Ok(StepOutcome::Wait { since, timeout })
+                    }
+                    EpochStep::Done(out) => {
+                        self.report.pushes += out.pushes;
+                        self.report.aggregations += out.aggregations;
+                        if let Some(round) = out.stalled_at {
+                            // The node is stuck at the barrier, not dead:
+                            // its current weights still exist (and were
+                            // pushed), so report them — the driver can
+                            // evaluate what training achieved before the
+                            // stall.
+                            self.report.status = NodeStatus::Stalled { at_round: round };
+                            if let Some(lg) = &self.logger {
+                                let _ = lg.log_event(
+                                    "sync_stall",
+                                    &[
+                                        ("node", self.node_id.to_string()),
+                                        ("round", round.to_string()),
+                                    ],
+                                );
+                            }
+                            self.report.final_params = Some(self.state.params.clone());
+                            self.phase = Phase::Done;
+                            return Ok(StepOutcome::Done);
+                        }
+                        self.epoch += 1;
+                        self.phase = Phase::Train;
+                        Ok(StepOutcome::Yield)
+                    }
+                }
+            }
+        }
+    }
+
+    fn train_epoch(&mut self) -> Result<()> {
+        let clock = Arc::clone(&self.clock);
+        let step_delay = self.step_delay;
+        let t_train = clock.now();
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut steps_run = 0usize;
+        let mut acc_steps = 0usize;
+        self.bundle.run_steps(
+            &mut self.state,
+            &mut self.loader,
+            self.cfg.steps_per_epoch,
+            |_i, m| {
+                steps_run += 1;
+                loss_sum += m.loss as f64;
+                // a batch with no labeled predictions contributes no
+                // accuracy sample instead of a NaN that poisons the mean
+                if m.n_preds > 0 {
+                    acc_sum += m.acc_count as f64 / m.n_preds as f64;
+                    acc_steps += 1;
+                }
+                // Straggler simulation: per-step delay on the experiment
+                // clock (instant real time under a virtual clock).
+                clock.sleep(step_delay);
+            },
+        )?;
+        self.timeline.record(SpanKind::Train, t_train, clock.now());
+        // divide by the steps actually run, not the configured count: a
+        // short epoch (exhausted loader) must not deflate the mean
+        let mean_loss = loss_sum / steps_run.max(1) as f64;
+        let mean_acc = if acc_steps > 0 { acc_sum / acc_steps as f64 } else { 0.0 };
+        self.report.epoch_losses.push(mean_loss);
+        self.report.epoch_accs.push(mean_acc);
+        self.report.epochs_done = self.epoch + 1;
+        if let Some(lg) = &self.logger {
+            let _ = lg.log_metrics(&[
+                ("node", self.node_id as f64),
+                ("epoch", self.epoch as f64),
+                ("train_loss", mean_loss),
+                ("train_acc", mean_acc),
+                ("elapsed_s", clock.now().as_secs_f64()),
+            ]);
+        }
+        if self.cfg.verbose {
+            eprintln!(
+                "[node {} epoch {}] loss={mean_loss:.4} acc={mean_acc:.4}",
+                self.node_id, self.epoch
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Task for NodeRunner<'_> {
+    fn step(&mut self) -> StepOutcome {
+        match self.step_inner() {
+            Ok(out) => out,
+            Err(e) => {
+                self.fail(&e);
+                StepOutcome::Done
+            }
+        }
+    }
+}

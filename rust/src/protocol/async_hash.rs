@@ -226,6 +226,7 @@ mod tests {
             let mut ctx = EpochCtx {
                 node_id: 0,
                 n_nodes: 2,
+                round_k: 2,
                 epoch,
                 n_examples: 100,
                 store: &store,

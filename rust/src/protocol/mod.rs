@@ -72,8 +72,14 @@ use crate::time::Clock;
 pub struct EpochCtx<'a> {
     /// This node's id.
     pub node_id: usize,
-    /// Total nodes in the experiment (the sync barrier's fan-in K).
+    /// Total nodes in the experiment (sizes the gossip peer universe and
+    /// the async `latest_per_node` fan-in).
     pub n_nodes: usize,
+    /// Entries that complete this round's sync barrier — `n_nodes` under
+    /// full participation, the sampled cohort size under
+    /// `participation < 1` (every cohort member computes the same seeded
+    /// cohort, so they agree on this fan-in without a coordinator).
+    pub round_k: usize,
     /// The just-finished 0-based local epoch (doubles as the sync round).
     pub epoch: usize,
     /// Examples this node trains on per epoch (the FedAvg numerator n_k).
@@ -164,12 +170,45 @@ pub struct ProtocolOutcome {
     pub stalled_at: Option<u64>,
 }
 
+/// One resumable federation step: either the epoch finished, or the
+/// protocol needs the store to change before it can make progress.
+///
+/// This is the non-blocking face of the protocol layer: a blocking
+/// driver (the threaded node worker) turns `Wait` into a
+/// [`WeightStore::wait_for_change`] park, while the event-driven
+/// executor ([`crate::sched`]) suspends the node task and re-polls it
+/// when a peer's push advances the store version (or the timeout
+/// deadline arrives) — same protocol state machine, no thread.
+#[derive(Debug)]
+pub enum EpochStep {
+    /// The epoch's federation completed (or stalled) with this outcome.
+    Done(ProtocolOutcome),
+    /// No progress until the store version exceeds `since` or `timeout`
+    /// of clock time elapses; then poll again.
+    Wait {
+        /// Store version token observed *before* the blocked predicate
+        /// was checked (the lost-wakeup-free subscription protocol).
+        since: u64,
+        /// Remaining clock time before the protocol will declare a stall.
+        timeout: Duration,
+    },
+}
+
 /// A federation protocol: per-node state plus the epoch-end hook.
 ///
 /// Implementations own whatever per-node state the scenario needs (the
 /// async change token, sampling RNG, gossip seed, …); one instance is
 /// built per node via [`ProtocolKind::build`] and lives for the whole
 /// trial.
+///
+/// The two hooks are mutual defaults: [`FederationProtocol::after_epoch`]
+/// drives [`FederationProtocol::poll_epoch`] to completion by blocking on
+/// the store between polls, and `poll_epoch` falls back to a one-shot
+/// `after_epoch` for protocols that never block. **Every implementation
+/// must override at least one of the two** — non-blocking protocols
+/// (local / async / gossip) implement `after_epoch`, blocking ones (the
+/// sync barrier) implement `poll_epoch` so the same state machine serves
+/// both the threaded and the event-driven scheduler.
 pub trait FederationProtocol: Send {
     /// Canonical lowercase protocol name (matches
     /// [`FederationMode::name`]).
@@ -178,11 +217,40 @@ pub trait FederationProtocol: Send {
     /// Federate after a finished local epoch, possibly replacing
     /// `params` with aggregated weights (the node's optimizer moments
     /// stay local, as in the paper: only weights travel).
+    ///
+    /// Default: poll [`FederationProtocol::poll_epoch`], parking on
+    /// [`WeightStore::wait_for_change`] whenever it asks to wait — the
+    /// exact store call sequence the pre-poll blocking implementations
+    /// made.
     fn after_epoch(
         &mut self,
         ctx: &mut EpochCtx<'_>,
         params: &mut FlatParams,
-    ) -> Result<ProtocolOutcome>;
+    ) -> Result<ProtocolOutcome> {
+        loop {
+            match self.poll_epoch(ctx, params)? {
+                EpochStep::Done(out) => return Ok(out),
+                EpochStep::Wait { since, timeout } => {
+                    ctx.store.wait_for_change(since, timeout)?;
+                }
+            }
+        }
+    }
+
+    /// One non-blocking federation step. Returns
+    /// [`EpochStep::Wait`] instead of blocking; callers re-poll after
+    /// the store changes (or the timeout elapses). Protocol state must
+    /// survive across polls of the same epoch.
+    ///
+    /// Default: delegate to [`FederationProtocol::after_epoch`] and wrap
+    /// the outcome — correct for protocols that never block.
+    fn poll_epoch(
+        &mut self,
+        ctx: &mut EpochCtx<'_>,
+        params: &mut FlatParams,
+    ) -> Result<EpochStep> {
+        self.after_epoch(ctx, params).map(EpochStep::Done)
+    }
 }
 
 /// Protocol selector — the protocol-layer resolution of the config-level
@@ -228,7 +296,7 @@ impl ProtocolKind {
     pub fn build(self, node_id: usize, cfg: &ExperimentConfig) -> Box<dyn FederationProtocol> {
         match self {
             ProtocolKind::Local => Box::new(LocalOnly),
-            ProtocolKind::Sync => Box::new(SyncBarrier),
+            ProtocolKind::Sync => Box::new(SyncBarrier::new()),
             ProtocolKind::Async => Box::new(AsyncHash::new(cfg.sample_prob, cfg.seed, node_id)),
             ProtocolKind::Gossip { fanout } => Box::new(Gossip::new(fanout, cfg.seed)),
         }
@@ -294,6 +362,7 @@ pub(crate) mod protocol_tests {
             let mut ctx = EpochCtx {
                 node_id: self.node_id,
                 n_nodes,
+                round_k: n_nodes,
                 epoch,
                 n_examples: 100,
                 store,

@@ -1,7 +1,9 @@
-//! [`SyncBarrier`] — the synchronous serverless protocol (§3), now
-//! blocking on store change notification instead of sleep-polling.
+//! [`SyncBarrier`] — the synchronous serverless protocol (§3), now a
+//! resumable state machine polled via
+//! [`FederationProtocol::poll_epoch`] instead of blocking inline.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -9,58 +11,95 @@ use crate::metrics::timeline::SpanKind;
 use crate::strategy::Contribution;
 use crate::tensor::FlatParams;
 
-use super::{EpochCtx, FederationProtocol, ProtocolOutcome};
+use super::{EpochCtx, EpochStep, FederationProtocol, ProtocolOutcome};
 
-/// Synchronous serverless federation: push for round `r`, park on
-/// [`crate::store::WeightStore::wait_for_change`] until all K round-`r`
-/// entries exist, aggregate the identical set client-side (so all nodes
-/// compute bit-identical weights — `rust/tests/protocol_invariants.rs`).
+/// A barrier wait in flight: the round we pushed for and when (on the
+/// experiment clock) the wait began — carried across polls so elapsed
+/// time and the Wait span survive suspension.
+struct PendingRound {
+    round: u64,
+    wait_start: Duration,
+}
+
+/// Synchronous serverless federation: push for round `r`, wait until all
+/// `round_k` round-`r` entries exist, aggregate the identical set
+/// client-side (so all nodes compute bit-identical weights —
+/// `rust/tests/protocol_invariants.rs`).
 ///
-/// The barrier is event-driven: a waiting node wakes only when a peer's
-/// push (or any store mutation) advances the store version, never on a
-/// sleep timer. A `sync_timeout` still bounds the wait so a crashed peer
-/// turns the node's status into `Stalled` instead of hanging (§4.2.1).
-pub struct SyncBarrier;
+/// The barrier is event-driven: the protocol never blocks itself — it
+/// returns [`EpochStep::Wait`] and the *driver* parks. The threaded
+/// worker parks on [`crate::store::WeightStore::wait_for_change`] (woken
+/// only when a peer's push advances the store version, never on a sleep
+/// timer); the event executor suspends the node task until the store
+/// version moves or the timeout deadline fires. A `sync_timeout` still
+/// bounds the wait so a crashed peer turns the node's status into
+/// `Stalled` instead of hanging (§4.2.1).
+pub struct SyncBarrier {
+    pending: Option<PendingRound>,
+}
+
+impl SyncBarrier {
+    /// A barrier with no round in flight.
+    pub fn new() -> SyncBarrier {
+        SyncBarrier { pending: None }
+    }
+}
+
+impl Default for SyncBarrier {
+    fn default() -> Self {
+        SyncBarrier::new()
+    }
+}
 
 impl FederationProtocol for SyncBarrier {
     fn name(&self) -> &'static str {
         "sync"
     }
 
-    fn after_epoch(
+    fn poll_epoch(
         &mut self,
         ctx: &mut EpochCtx<'_>,
         params: &mut FlatParams,
-    ) -> Result<ProtocolOutcome> {
+    ) -> Result<EpochStep> {
         let round = ctx.epoch as u64;
-        ctx.push_weights(params, round)?;
-        let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
-
-        // barrier: park until all K entries of this round exist; elapsed
-        // time and the stall timeout are measured on the experiment
-        // clock, so a crashed peer releases survivors within *simulated*
-        // timeout under a virtual clock — no real-time wait.
-        let t_wait = ctx.clock.now();
-        let entries = loop {
-            // Read the version token *before* listing: a push landing
-            // between the two can only cause a spurious wake-up, never a
-            // missed one.
-            let seen = ctx.store.version()?;
-            let entries = ctx.store.entries_for_round(round)?;
-            // every re-pull downloaded these bytes, complete or not
-            ctx.record_pull(&entries);
-            if entries.len() >= ctx.n_nodes {
-                break entries;
+        // First poll of this round pushes and starts the wait clock;
+        // re-polls resume the pending wait without pushing again.
+        let wait_start = match &self.pending {
+            Some(p) if p.round == round => p.wait_start,
+            _ => {
+                ctx.push_weights(params, round)?;
+                let t = ctx.clock.now();
+                self.pending = Some(PendingRound { round, wait_start: t });
+                t
             }
-            let elapsed = ctx.clock.now().saturating_sub(t_wait);
-            if elapsed >= ctx.sync_timeout {
-                ctx.timeline.record(SpanKind::Wait, t_wait, ctx.clock.now());
-                out.stalled_at = Some(round);
-                return Ok(out);
-            }
-            ctx.store.wait_for_change(seen, ctx.sync_timeout - elapsed)?;
         };
-        ctx.timeline.record(SpanKind::Wait, t_wait, ctx.clock.now());
+
+        // Read the version token *before* listing: a push landing
+        // between the two can only cause a spurious wake-up, never a
+        // missed one.
+        let seen = ctx.store.version()?;
+        let entries = ctx.store.entries_for_round(round)?;
+        // every re-pull downloaded these bytes, complete or not
+        ctx.record_pull(&entries);
+        if entries.len() < ctx.round_k {
+            // barrier still open: elapsed time and the stall timeout are
+            // measured on the experiment clock, so a crashed peer
+            // releases survivors within *simulated* timeout under a
+            // virtual clock — no real-time wait.
+            let elapsed = ctx.clock.now().saturating_sub(wait_start);
+            if elapsed < ctx.sync_timeout {
+                return Ok(EpochStep::Wait { since: seen, timeout: ctx.sync_timeout - elapsed });
+            }
+            ctx.timeline.record(SpanKind::Wait, wait_start, ctx.clock.now());
+            self.pending = None;
+            return Ok(EpochStep::Done(ProtocolOutcome {
+                pushes: 1,
+                stalled_at: Some(round),
+                ..Default::default()
+            }));
+        }
+        self.pending = None;
+        ctx.timeline.record(SpanKind::Wait, wait_start, ctx.clock.now());
 
         let t_agg = ctx.clock.now();
         let contribs: Vec<Contribution> = entries
@@ -73,6 +112,7 @@ impl FederationProtocol for SyncBarrier {
                 params: Arc::clone(&e.params),
             })
             .collect();
+        let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
         if let Some(new_params) = ctx.strategy.aggregate_pooled(&contribs, ctx.pool) {
             *params = new_params;
             out.aggregations = 1;
@@ -80,6 +120,6 @@ impl FederationProtocol for SyncBarrier {
             ctx.adopt_aggregate(params, &entries);
         }
         ctx.timeline.record(SpanKind::Aggregate, t_agg, ctx.clock.now());
-        Ok(out)
+        Ok(EpochStep::Done(out))
     }
 }

@@ -1,0 +1,171 @@
+//! [`TaskClock`] — the event executor's time source.
+//!
+//! The [`crate::time::VirtualClock`] advances simulated time by
+//! negotiation: it waits until every registered participant *thread* is
+//! blocked, then jumps to the earliest deadline. With one task per
+//! client that negotiation is pure overhead — the executor already knows
+//! the next deadline, because it owns the event queue. `TaskClock` is
+//! the degenerate clock for that world: `set` is called by the executor
+//! between task steps, and the blocking primitives never block — a
+//! `sleep` advances time inline and a condition wait charges its full
+//! timeout, exactly the zero-participant semantics the virtual clock
+//! documents ("with zero registered participants any blocking call
+//! advances immediately").
+//!
+//! The inline-advance semantics are also why `TaskClock` is *not* run
+//! through `clock_tests::conformance`: that suite asserts a parked
+//! waiter wakes on a peer thread's notify, which presumes blocking
+//! primitives. `TaskClock` has no waiters by construction — protocols
+//! running under the executor return [`crate::protocol::EpochStep::Wait`]
+//! instead of touching a condition, and the executor turns that into a
+//! queued deadline. The unit tests below pin the semantics it does have.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::time::{Clock, Condition};
+
+/// Duration → nanos as u64 (u64 holds ~584 years of nanoseconds; every
+/// simulated duration in the stack is far below that).
+fn nanos(d: Duration) -> u64 {
+    d.as_nanos() as u64
+}
+
+/// A clock whose time is set by the [`super::EventExecutor`] between
+/// task steps. See the module docs for why its blocking primitives
+/// advance time inline instead of parking.
+pub struct TaskClock {
+    now_ns: Arc<AtomicU64>,
+}
+
+impl TaskClock {
+    /// A task clock at origin zero.
+    pub fn new() -> TaskClock {
+        TaskClock { now_ns: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Set the current simulated instant. Executor-only: between task
+    /// steps this may move *backward* (the heap dispatches by deadline,
+    /// and a task seeded earlier can be stepped after a later one
+    /// finishes), which is fine because no task ever observes another
+    /// task's instants — `now()` is only read inside a step, where it is
+    /// monotone.
+    pub fn set(&self, t: Duration) {
+        self.now_ns.store(nanos(t), Ordering::Relaxed);
+    }
+}
+
+impl Default for TaskClock {
+    fn default() -> Self {
+        TaskClock::new()
+    }
+}
+
+impl Clock for TaskClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.now_ns.load(Ordering::Relaxed))
+    }
+
+    fn sleep(&self, d: Duration) {
+        // Inline advance: the sleeping task is the only runner, so the
+        // sleep completes "immediately" at a later simulated instant.
+        self.now_ns.fetch_add(nanos(d), Ordering::Relaxed);
+    }
+
+    fn condition(&self) -> Arc<dyn Condition> {
+        Arc::new(TaskCondition {
+            now_ns: Arc::clone(&self.now_ns),
+            epoch: AtomicU64::new(0),
+        })
+    }
+
+    fn enter(&self) {}
+
+    fn exit(&self) {}
+}
+
+/// Condition in [`TaskClock`] time: an un-notified wait charges its full
+/// timeout inline (zero-participant semantics); a stale token returns
+/// immediately. Protocols under the executor never reach this path —
+/// they return `EpochStep::Wait` — but stores built on the clock
+/// ([`crate::store::WeightStore::wait_for_change`]) do, and must not
+/// deadlock the single-threaded loop.
+struct TaskCondition {
+    now_ns: Arc<AtomicU64>,
+    epoch: AtomicU64,
+}
+
+impl Condition for TaskCondition {
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    fn wait_past(&self, seen: u64, timeout: Duration) {
+        if self.epoch.load(Ordering::SeqCst) > seen {
+            return; // pre-wait notify: not lost
+        }
+        // No other runner can notify while this task holds the thread:
+        // ride out the timeout in simulated time and return.
+        self.now_ns.fetch_add(nanos(timeout), Ordering::Relaxed);
+    }
+
+    fn notify_all(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_now_round_trip() {
+        let clock = TaskClock::new();
+        assert_eq!(clock.now(), Duration::ZERO);
+        clock.set(Duration::from_millis(1500));
+        assert_eq!(clock.now(), Duration::from_millis(1500));
+        // executor may rewind between steps
+        clock.set(Duration::from_millis(200));
+        assert_eq!(clock.now(), Duration::from_millis(200));
+    }
+
+    #[test]
+    fn sleep_advances_inline() {
+        let clock = TaskClock::new();
+        clock.set(Duration::from_secs(1));
+        clock.sleep(Duration::from_millis(250));
+        assert_eq!(clock.now(), Duration::from_millis(1250));
+        clock.sleep(Duration::ZERO);
+        assert_eq!(clock.now(), Duration::from_millis(1250));
+    }
+
+    #[test]
+    fn condition_charges_timeout_unless_pre_notified() {
+        let clock = TaskClock::new();
+        let cond = clock.condition();
+        let tok = cond.epoch();
+
+        // un-notified wait consumes its full timeout of simulated time
+        cond.wait_past(tok, Duration::from_millis(40));
+        assert_eq!(clock.now(), Duration::from_millis(40));
+
+        // a notify before the wait returns immediately (token protocol)
+        let tok = cond.epoch();
+        cond.notify_all();
+        cond.wait_past(tok, Duration::from_secs(60));
+        assert_eq!(clock.now(), Duration::from_millis(40), "no time charged");
+        assert_eq!(cond.epoch(), tok + 1);
+    }
+
+    #[test]
+    fn participant_slots_are_no_ops() {
+        let clock = TaskClock::new();
+        clock.enter();
+        clock.attach();
+        clock.sleep(Duration::from_millis(5));
+        clock.detach();
+        clock.exit();
+        assert_eq!(clock.now(), Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,376 @@
+//! [`EventExecutor`] — the discrete-event loop that replaces
+//! thread-per-node.
+//!
+//! Each node becomes a resumable [`Task`]; the executor owns a min-heap
+//! of `(deadline, task)` events and steps exactly one task at a time,
+//! setting the shared [`TaskClock`] to the event's instant first. A step
+//! that returns [`StepOutcome::Wait`] parks its task until the weight
+//! store's version moves past the step's token (the same
+//! lost-wakeup-free subscription protocol the threaded barrier uses) or
+//! the timeout deadline fires — whichever comes first. Compute inside a
+//! step takes zero simulated time; only [`crate::time::Clock::sleep`]
+//! calls (which [`TaskClock`] advances inline) and wait timeouts move
+//! the clock, exactly the [`crate::time::VirtualClock`] semantics.
+//!
+//! # Determinism
+//!
+//! Events are ordered by `(deadline, task id)` — ties dispatch in task-id
+//! order — and every wake is scheduled at a deterministic instant (a
+//! peer's push instant, or the timeout deadline), so the whole schedule
+//! is a pure function of the tasks' behavior. That is strictly stronger
+//! than the threaded path, where same-instant store operations race in
+//! real time (the documented VirtualClock caveat); on scenarios with
+//! distinct per-node delays the two paths produce bit-identical
+//! timelines, which the conformance tests in `rust/tests/timing.rs` and
+//! `rust/tests/determinism.rs` pin.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::store::WeightStore;
+
+use super::TaskClock;
+
+/// What a task's step asks the executor to do next.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// More work at the current instant: reschedule at the step's end
+    /// time (which includes any inline clock sleeps the step made).
+    Yield,
+    /// Park until the store version exceeds `since` or `timeout` of
+    /// simulated time elapses — the executor-level twin of
+    /// [`crate::protocol::EpochStep::Wait`].
+    Wait {
+        /// Store version token read before the blocked predicate check.
+        since: u64,
+        /// Deadline after which the task is re-polled regardless.
+        timeout: Duration,
+    },
+    /// The task is finished and must not be stepped again.
+    Done,
+}
+
+/// A resumable node: one `step` runs to the next suspension point.
+/// Steps are infallible — a node that hits an internal error records a
+/// failed status in its own report and returns [`StepOutcome::Done`],
+/// mirroring how the threaded worker folds errors into the
+/// [`crate::node::NodeReport`] instead of tearing down the experiment.
+pub trait Task {
+    /// Advance to the next suspension point.
+    fn step(&mut self) -> StepOutcome;
+}
+
+/// A scheduled dispatch. Ordered by `(at, id, gen)` so the heap breaks
+/// same-instant ties by task id — the deterministic dispatch order.
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    at: Duration,
+    id: usize,
+    gen: u64,
+}
+
+/// A parked task: the version token it is waiting past and when it
+/// parked (its wake must never be scheduled before that instant).
+struct Park {
+    since: u64,
+    parked_at: Duration,
+}
+
+/// The single-threaded discrete-event scheduler. Owns the clock it sets
+/// and the store whose version token drives wake-ups.
+pub struct EventExecutor {
+    clock: Arc<TaskClock>,
+    store: Arc<dyn WeightStore>,
+}
+
+impl EventExecutor {
+    /// An executor over `clock` and `store`; tasks must use the same
+    /// clock for their timestamps and the same store for federation, or
+    /// wake-ups and timelines will not line up.
+    pub fn new(clock: Arc<TaskClock>, store: Arc<dyn WeightStore>) -> EventExecutor {
+        EventExecutor { clock, store }
+    }
+
+    /// Run every task to completion. Only store `version()` errors
+    /// propagate; task-internal failures surface through the tasks' own
+    /// reports (see [`Task`]).
+    pub fn run(&self, tasks: &mut [&mut dyn Task]) -> Result<()> {
+        let n = tasks.len();
+        let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::with_capacity(n * 2);
+        // Per-task generation counter: every (re)schedule bumps it, and
+        // an event carrying a stale generation is a cancelled timeout or
+        // superseded wake — skipped on pop. This is how a wake-up
+        // invalidates the pending timeout event without heap surgery.
+        let mut gen = vec![0u64; n];
+        let mut parked: Vec<Option<Park>> = (0..n).map(|_| None).collect();
+        let mut done = vec![false; n];
+        // Latest instant any task reached; the clock lands here at exit
+        // so the driver's wall_clock reads the trial's simulated length.
+        let mut end_max = Duration::ZERO;
+
+        // All tasks start at t = 0 (the threaded path's start barrier),
+        // seeded in id order.
+        for (id, g) in gen.iter().enumerate() {
+            heap.push(Reverse(Event { at: Duration::ZERO, id, gen: *g }));
+        }
+
+        while let Some(Reverse(ev)) = heap.pop() {
+            if done[ev.id] || ev.gen != gen[ev.id] {
+                continue; // cancelled timeout / superseded wake
+            }
+            parked[ev.id] = None;
+            self.clock.set(ev.at);
+            let outcome = tasks[ev.id].step();
+            // inline sleeps advanced the clock; this is the step's end
+            let t_end = self.clock.now();
+            end_max = end_max.max(t_end);
+            gen[ev.id] += 1;
+            match outcome {
+                StepOutcome::Yield => {
+                    heap.push(Reverse(Event { at: t_end, id: ev.id, gen: gen[ev.id] }));
+                }
+                StepOutcome::Wait { since, timeout } => {
+                    parked[ev.id] = Some(Park { since, parked_at: t_end });
+                    heap.push(Reverse(Event {
+                        at: t_end + timeout,
+                        id: ev.id,
+                        gen: gen[ev.id],
+                    }));
+                }
+                StepOutcome::Done => done[ev.id] = true,
+            }
+
+            // Wake pass: if this step advanced the store, re-poll every
+            // parked task whose token it passed — at the notifying
+            // step's end instant, the exact moment a threaded waiter's
+            // condvar would have fired.
+            let version = self.store.version()?;
+            for (pid, slot) in parked.iter_mut().enumerate() {
+                let wake = matches!(slot, Some(p) if version > p.since);
+                if wake {
+                    let p = slot.take().expect("checked Some above");
+                    gen[pid] += 1;
+                    heap.push(Reverse(Event {
+                        at: t_end.max(p.parked_at),
+                        id: pid,
+                        gen: gen[pid],
+                    }));
+                }
+            }
+        }
+        self.clock.set(end_max);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::store::{MemoryStore, PushRequest};
+    use crate::tensor::FlatParams;
+    use crate::time::Clock;
+
+    use super::*;
+
+    /// Script-driven test task: each entry is one step — an action run
+    /// against the clock/store plus the outcome to return.
+    struct Scripted<F: FnMut(usize) -> StepOutcome> {
+        step_no: usize,
+        f: F,
+    }
+
+    impl<F: FnMut(usize) -> StepOutcome> Task for Scripted<F> {
+        fn step(&mut self) -> StepOutcome {
+            let n = self.step_no;
+            self.step_no += 1;
+            (self.f)(n)
+        }
+    }
+
+    fn scripted<F: FnMut(usize) -> StepOutcome>(f: F) -> Scripted<F> {
+        Scripted { step_no: 0, f }
+    }
+
+    fn push(store: &Arc<dyn WeightStore>, node: usize) {
+        store
+            .push(PushRequest::raw(node, 0, 0, 100, Arc::new(FlatParams(vec![1.0; 4]))))
+            .unwrap();
+    }
+
+    #[test]
+    fn dispatches_in_deadline_order_with_id_tie_break() {
+        let clock = Arc::new(TaskClock::new());
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let log: Rc<RefCell<Vec<(usize, u64)>>> = Rc::new(RefCell::new(vec![]));
+
+        // task 0 sleeps 30ms/step, task 1 sleeps 10ms/step, 2 steps each;
+        // expected instants: t0 steps at 0,30; t1 at 0,10. Seeding and
+        // ties are id-ordered: (0,0) (1,0) (1,10) (0,30).
+        let mk = |id: usize, ms: u64| {
+            let clock = Arc::clone(&clock);
+            let log = Rc::clone(&log);
+            scripted(move |n| {
+                log.borrow_mut().push((id, clock.now().as_millis() as u64));
+                if n < 2 {
+                    clock.sleep(Duration::from_millis(ms));
+                    StepOutcome::Yield
+                } else {
+                    StepOutcome::Done
+                }
+            })
+        };
+        let mut t0 = mk(0, 30);
+        let mut t1 = mk(1, 10);
+        EventExecutor::new(Arc::clone(&clock), store)
+            .run(&mut [&mut t0, &mut t1])
+            .unwrap();
+        assert_eq!(
+            *log.borrow(),
+            vec![(0, 0), (1, 0), (1, 10), (1, 20), (0, 30), (0, 60)],
+        );
+        // clock lands on the trial's end: task 0's last step at 60ms
+        assert_eq!(clock.now(), Duration::from_millis(60));
+    }
+
+    #[test]
+    fn wait_wakes_on_peer_push_at_the_push_instant() {
+        let clock = Arc::new(TaskClock::new());
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let woken_at: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(vec![]));
+
+        // waiter: parks immediately with a long timeout, records when it
+        // is re-polled
+        let mut waiter = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            let woken_at = Rc::clone(&woken_at);
+            scripted(move |n| {
+                if n == 0 {
+                    let since = store.version().unwrap();
+                    StepOutcome::Wait { since, timeout: Duration::from_secs(60) }
+                } else {
+                    woken_at.borrow_mut().push(clock.now().as_millis() as u64);
+                    StepOutcome::Done
+                }
+            })
+        };
+        // pusher: sleeps 30ms, pushes, finishes
+        let mut pusher = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            scripted(move |_| {
+                clock.sleep(Duration::from_millis(30));
+                push(&store, 1);
+                StepOutcome::Done
+            })
+        };
+        EventExecutor::new(Arc::clone(&clock), Arc::clone(&store))
+            .run(&mut [&mut waiter, &mut pusher])
+            .unwrap();
+        assert_eq!(*woken_at.borrow(), vec![30], "woken at the push instant");
+    }
+
+    #[test]
+    fn wait_times_out_at_the_deadline_without_a_push() {
+        let clock = Arc::new(TaskClock::new());
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let polls: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(vec![]));
+
+        let mut waiter = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            let polls = Rc::clone(&polls);
+            scripted(move |n| {
+                polls.borrow_mut().push(clock.now().as_millis() as u64);
+                if n == 0 {
+                    let since = store.version().unwrap();
+                    StepOutcome::Wait { since, timeout: Duration::from_millis(50) }
+                } else {
+                    StepOutcome::Done
+                }
+            })
+        };
+        EventExecutor::new(Arc::clone(&clock), store).run(&mut [&mut waiter]).unwrap();
+        assert_eq!(*polls.borrow(), vec![0, 50], "re-polled exactly at the deadline");
+        assert_eq!(clock.now(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn a_wake_cancels_the_pending_timeout_event() {
+        let clock = Arc::new(TaskClock::new());
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let steps: Rc<RefCell<u32>> = Rc::new(RefCell::new(0));
+
+        // waiter parks with a 40ms timeout but a peer pushes at 10ms; the
+        // stale 40ms timeout event must NOT produce a third step.
+        let mut waiter = {
+            let store = Arc::clone(&store);
+            let steps = Rc::clone(&steps);
+            scripted(move |n| {
+                *steps.borrow_mut() += 1;
+                if n == 0 {
+                    let since = store.version().unwrap();
+                    StepOutcome::Wait { since, timeout: Duration::from_millis(40) }
+                } else {
+                    StepOutcome::Done
+                }
+            })
+        };
+        let mut pusher = {
+            let clock = Arc::clone(&clock);
+            let store = Arc::clone(&store);
+            scripted(move |_| {
+                clock.sleep(Duration::from_millis(10));
+                push(&store, 1);
+                StepOutcome::Done
+            })
+        };
+        EventExecutor::new(Arc::clone(&clock), Arc::clone(&store))
+            .run(&mut [&mut waiter, &mut pusher])
+            .unwrap();
+        assert_eq!(*steps.borrow(), 2, "park step + wake step, no timeout replay");
+    }
+
+    #[test]
+    fn many_tasks_complete_and_the_schedule_replays() {
+        // 64 tasks with distinct delays: the dispatch log must replay
+        // bit-identically run-to-run (pure function of the task set).
+        let run = || {
+            let clock = Arc::new(TaskClock::new());
+            let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+            let log: Rc<RefCell<Vec<(usize, u64)>>> = Rc::new(RefCell::new(vec![]));
+            let mut tasks: Vec<_> = (0..64)
+                .map(|id| {
+                    let clock = Arc::clone(&clock);
+                    let log = Rc::clone(&log);
+                    scripted(move |n| {
+                        log.borrow_mut().push((id, clock.now().as_millis() as u64));
+                        if n < 3 {
+                            clock.sleep(Duration::from_millis(1 + id as u64 * 7));
+                            StepOutcome::Yield
+                        } else {
+                            StepOutcome::Done
+                        }
+                    })
+                })
+                .collect();
+            let mut refs: Vec<&mut dyn Task> =
+                tasks.iter_mut().map(|t| t as &mut dyn Task).collect();
+            EventExecutor::new(Arc::clone(&clock), store).run(&mut refs).unwrap();
+            (log.borrow().clone(), clock.now())
+        };
+        let (log_a, end_a) = run();
+        let (log_b, end_b) = run();
+        assert_eq!(log_a.len(), 64 * 4, "every task stepped to completion");
+        assert_eq!(log_a, log_b, "deterministic schedule");
+        assert_eq!(end_a, end_b);
+        // slowest task: 3 sleeps of (1 + 63*7) = 442ms
+        assert_eq!(end_a, Duration::from_millis(3 * 442));
+    }
+}

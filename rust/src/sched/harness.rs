@@ -1,0 +1,342 @@
+//! Artifact-free trial harness for the event executor — the
+//! protocol-level twin of the threaded `run_sim` harness in
+//! `rust/tests/timing.rs`.
+//!
+//! Each simulated node is a [`Task`] that per epoch: checks its crash
+//! and participation schedule, "trains" by sleeping its per-node delay
+//! on the [`TaskClock`], then drives its protocol's
+//! [`crate::protocol::FederationProtocol::poll_epoch`] until the epoch
+//! federates or stalls. No PJRT, no artifacts — pure protocol + store +
+//! clock, which is what the conformance tests compare against the
+//! threaded harness and what the 10k-client scale test runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::compress::{CodecKind, CodecState};
+use crate::config::{ExperimentConfig, FederationMode};
+use crate::metrics::timeline::{Span, SpanKind, Timeline};
+use crate::protocol::{EpochCtx, EpochStep, FederationProtocol, ProtocolKind};
+use crate::store::{MemoryStore, WeightStore};
+use crate::strategy::{Strategy, StrategyKind};
+use crate::tensor::FlatParams;
+use crate::time::Clock;
+
+use super::{
+    AvailabilitySpec, EventExecutor, ParticipationPlan, StepOutcome, Task, TaskClock,
+};
+
+/// One executor-harness trial: `delays.len()` simulated nodes, FedAvg
+/// aggregation, a fresh in-memory store on a fresh [`TaskClock`].
+pub struct TrialSpec {
+    /// Federation mode (drives [`ProtocolKind`]).
+    pub mode: FederationMode,
+    /// Per-node per-epoch training delay; its length is the fleet size.
+    pub delays: Vec<Duration>,
+    /// Epochs per node.
+    pub epochs: usize,
+    /// Sync-barrier stall timeout.
+    pub sync_timeout: Duration,
+    /// `(node, epoch)`: that node exits at the start of that epoch
+    /// without pushing (the §4.2.1 crash scenario).
+    pub crash: Option<(usize, usize)>,
+    /// Per-round cohort fraction in `(0, 1]`.
+    pub participation: f64,
+    /// Availability trace.
+    pub availability: AvailabilitySpec,
+    /// Trial seed (cohorts, availability, gossip schedules).
+    pub seed: u64,
+    /// Wire codec for pushes.
+    pub compress: CodecKind,
+    /// Initial weights per node (the threaded harness uses
+    /// `FlatParams(vec![node_id as f32; 4])` so averaging is visible).
+    pub init: fn(usize) -> FlatParams,
+}
+
+impl TrialSpec {
+    /// The conformance-default spec: full participation, no crash, no
+    /// compression, the threaded harness's initial weights, seed from
+    /// the default config.
+    pub fn new(mode: FederationMode, delays: Vec<Duration>, epochs: usize) -> TrialSpec {
+        TrialSpec {
+            mode,
+            delays,
+            epochs,
+            sync_timeout: Duration::from_secs(3600),
+            crash: None,
+            participation: 1.0,
+            availability: AvailabilitySpec::None,
+            seed: ExperimentConfig::default().seed,
+            compress: CodecKind::default(),
+            init: |node_id| FlatParams(vec![node_id as f32; 4]),
+        }
+    }
+}
+
+/// What one simulated node reports back (mirrors the threaded harness's
+/// `SimNode`).
+pub struct SimNodeResult {
+    /// The node's id.
+    pub node_id: usize,
+    /// Simulated instant the node finished (completion, crash or stall).
+    pub finish: Duration,
+    /// The node's recorded timeline spans.
+    pub spans: Vec<Span>,
+    /// Final local weights.
+    pub params: FlatParams,
+    /// Whether the node stalled at a sync barrier.
+    pub stalled: bool,
+}
+
+enum Phase {
+    Train,
+    Federate,
+}
+
+struct SimNode {
+    node_id: usize,
+    cfg: Arc<ExperimentConfig>,
+    store: Arc<dyn WeightStore>,
+    clock: Arc<TaskClock>,
+    plan: Arc<ParticipationPlan>,
+    delay: Duration,
+    protocol: Box<dyn FederationProtocol>,
+    strategy: Box<dyn Strategy>,
+    codec: CodecState,
+    timeline: Timeline,
+    params: FlatParams,
+    epoch: usize,
+    phase: Phase,
+    stalled: bool,
+    finish: Duration,
+}
+
+impl SimNode {
+    fn finish_now(&mut self) -> StepOutcome {
+        self.finish = self.clock.now();
+        StepOutcome::Done
+    }
+}
+
+impl Task for SimNode {
+    fn step(&mut self) -> StepOutcome {
+        match self.phase {
+            Phase::Train => {
+                // Zero-time skips (finished epochs, crash, off-cohort
+                // rounds) loop inline; anything that advances the clock
+                // or touches the store ends the step so the executor can
+                // interleave peers.
+                loop {
+                    if self.epoch >= self.cfg.epochs {
+                        return self.finish_now();
+                    }
+                    if self.cfg.crash.as_ref().is_some_and(|c| {
+                        c.node == self.node_id && c.at_epoch == self.epoch
+                    }) {
+                        return self.finish_now(); // dies without pushing
+                    }
+                    if !self.plan.participates(self.node_id, self.epoch) {
+                        self.epoch += 1; // off-cohort: zero simulated time
+                        continue;
+                    }
+                    break;
+                }
+                let t = self.clock.now();
+                self.clock
+                    .sleep(self.delay.mul_f64(self.plan.delay_multiplier(self.node_id)));
+                self.timeline.record(SpanKind::Train, t, self.clock.now());
+                self.phase = Phase::Federate;
+                StepOutcome::Yield
+            }
+            Phase::Federate => {
+                let mut ctx = EpochCtx {
+                    node_id: self.node_id,
+                    n_nodes: self.cfg.n_nodes,
+                    round_k: self.plan.round_k(self.epoch),
+                    epoch: self.epoch,
+                    n_examples: 100,
+                    store: self.store.as_ref(),
+                    strategy: self.strategy.as_mut(),
+                    timeline: &mut self.timeline,
+                    sync_timeout: self.cfg.sync_timeout,
+                    clock: self.clock.as_ref() as &dyn Clock,
+                    codec: &mut self.codec,
+                    pool: crate::par::ChunkPool::from_config(self.cfg.threads),
+                };
+                match self
+                    .protocol
+                    .poll_epoch(&mut ctx, &mut self.params)
+                    .expect("in-memory harness protocols cannot fail")
+                {
+                    EpochStep::Wait { since, timeout } => StepOutcome::Wait { since, timeout },
+                    EpochStep::Done(out) => {
+                        if out.stalled_at.is_some() {
+                            self.stalled = true;
+                            return self.finish_now();
+                        }
+                        self.epoch += 1;
+                        self.phase = Phase::Train;
+                        StepOutcome::Yield
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run one trial on the event executor and return per-node results in
+/// node-id order.
+pub fn run_events_trial(spec: &TrialSpec) -> Result<Vec<SimNodeResult>> {
+    let n = spec.delays.len();
+    let clock = Arc::new(TaskClock::new());
+    let cfg = Arc::new(ExperimentConfig {
+        mode: spec.mode,
+        n_nodes: n,
+        epochs: spec.epochs,
+        sync_timeout: spec.sync_timeout,
+        seed: spec.seed,
+        compress: spec.compress,
+        crash: spec.crash.map(|(node, at_epoch)| crate::config::CrashSpec { node, at_epoch }),
+        ..Default::default()
+    });
+    let store: Arc<dyn WeightStore> =
+        Arc::new(MemoryStore::with_clock(Arc::clone(&clock) as Arc<dyn Clock>));
+    let plan = Arc::new(ParticipationPlan::new(
+        spec.participation,
+        spec.availability,
+        spec.seed,
+        n,
+    ));
+    let mut nodes: Vec<SimNode> = (0..n)
+        .map(|node_id| SimNode {
+            node_id,
+            cfg: Arc::clone(&cfg),
+            store: Arc::clone(&store),
+            clock: Arc::clone(&clock),
+            plan: Arc::clone(&plan),
+            delay: spec.delays[node_id],
+            protocol: ProtocolKind::from(cfg.mode).build(node_id, &cfg),
+            strategy: StrategyKind::FedAvg.build(),
+            codec: CodecState::new(cfg.compress),
+            timeline: Timeline::new(node_id),
+            params: (spec.init)(node_id),
+            epoch: 0,
+            phase: Phase::Train,
+            stalled: false,
+            finish: Duration::ZERO,
+        })
+        .collect();
+
+    let executor = EventExecutor::new(Arc::clone(&clock), Arc::clone(&store));
+    let mut tasks: Vec<&mut dyn Task> =
+        nodes.iter_mut().map(|t| t as &mut dyn Task).collect();
+    executor.run(&mut tasks)?;
+
+    Ok(nodes
+        .into_iter()
+        .map(|node| SimNodeResult {
+            node_id: node.node_id,
+            finish: node.finish,
+            spans: node.timeline.spans,
+            params: node.params,
+            stalled: node.stalled,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn async_straggler_finishes_on_analytic_schedule() {
+        let spec = TrialSpec::new(FederationMode::Async, vec![ms(50), ms(500)], 5);
+        let nodes = run_events_trial(&spec).unwrap();
+        assert_eq!(nodes[0].finish, ms(250), "fast node: 5 × 50ms");
+        assert_eq!(nodes[1].finish, ms(2500), "straggler: 5 × 500ms");
+        assert!(!nodes[0].stalled && !nodes[1].stalled);
+    }
+
+    #[test]
+    fn sync_barrier_drags_everyone_to_the_straggler_and_converges() {
+        let spec = TrialSpec::new(FederationMode::Sync, vec![ms(50), ms(500)], 3);
+        let nodes = run_events_trial(&spec).unwrap();
+        // both nodes finish at the straggler's pace, exactly
+        assert_eq!(nodes[0].finish, ms(1500));
+        assert_eq!(nodes[1].finish, ms(1500));
+        // FedAvg over identical-weight contributions: (0 + 1)/2
+        assert_eq!(nodes[0].params.0, vec![0.5; 4]);
+        assert_eq!(nodes[0].params.0, nodes[1].params.0);
+    }
+
+    #[test]
+    fn crash_stalls_sync_survivors_after_the_simulated_timeout() {
+        let mut spec =
+            TrialSpec::new(FederationMode::Sync, vec![ms(50), ms(70), ms(230)], 3);
+        spec.sync_timeout = Duration::from_secs(300);
+        spec.crash = Some((2, 1));
+        let nodes = run_events_trial(&spec).unwrap();
+        for survivor in &nodes[0..2] {
+            assert!(survivor.stalled);
+            let wait: Duration = survivor
+                .spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Wait)
+                .map(|s| s.end - s.start)
+                .sum();
+            assert!(wait >= Duration::from_secs(300), "waited {wait:?}");
+        }
+        assert!(!nodes[2].stalled);
+        assert_eq!(nodes[2].finish, ms(230), "crashed at round 0's completion");
+    }
+
+    #[test]
+    fn partial_participation_trains_only_the_cohort() {
+        let mut spec =
+            TrialSpec::new(FederationMode::Async, vec![ms(10); 20], 4);
+        spec.participation = 0.25;
+        let nodes = run_events_trial(&spec).unwrap();
+        let plan = ParticipationPlan::new(0.25, AvailabilitySpec::None, spec.seed, 20);
+        for node in &nodes {
+            let rounds_in: usize =
+                (0..4).filter(|&r| plan.participates(node.node_id, r)).count();
+            let trained =
+                node.spans.iter().filter(|s| s.kind == SpanKind::Train).count();
+            assert_eq!(trained, rounds_in, "node {} trains cohort rounds only", node.node_id);
+            assert_eq!(node.finish, ms(10) * rounds_in as u32, "skips cost zero time");
+        }
+        let total: usize = nodes
+            .iter()
+            .map(|n| n.spans.iter().filter(|s| s.kind == SpanKind::Train).count())
+            .sum();
+        assert_eq!(total, 4 * 5, "4 rounds × cohort of 5");
+    }
+
+    #[test]
+    fn churn_trace_replays_bit_identically() {
+        let mk = || {
+            let mut spec = TrialSpec::new(
+                FederationMode::Async,
+                (0..12).map(|i| ms(20 + i)).collect(),
+                5,
+            );
+            spec.availability = AvailabilitySpec::Churn { p: 0.3 };
+            spec.seed = 1234;
+            run_events_trial(&spec).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish, y.finish);
+            assert_eq!(x.spans, y.spans, "node {}", x.node_id);
+            assert_eq!(x.params.0, y.params.0);
+            assert_eq!(x.stalled, y.stalled);
+        }
+    }
+}

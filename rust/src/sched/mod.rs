@@ -1,0 +1,97 @@
+//! Event-driven node scheduling — the 10k-client regime.
+//!
+//! The thread-per-node worker ([`crate::node::spawn_node`]) is faithful
+//! but caps out at tens of nodes: every simulated client costs an OS
+//! thread, a PJRT engine, and a VirtualClock participant slot. The
+//! paper's cross-device claims ("millions of users") need trials three
+//! orders of magnitude larger. This module supplies that regime:
+//!
+//! * [`TaskClock`] — a single-threaded clock whose time is *set* by the
+//!   executor between task steps instead of negotiated between blocked
+//!   threads. Same [`crate::time::Clock`] interface, so stores,
+//!   protocols, and timelines are reused unchanged.
+//! * [`EventExecutor`] — a discrete-event loop over resumable
+//!   [`Task`]s: a binary heap of `(deadline, task)` events, one step per
+//!   event, [`StepOutcome::Wait`] parking a task until the weight-store
+//!   version moves or its timeout deadline arrives.
+//! * [`ParticipationPlan`] — seeded per-round cohort sampling
+//!   (`participation = <frac>`) and per-node availability traces
+//!   (`availability = churn:<p> | diurnal:<period> |
+//!   stragglers:<frac>:<mult>`), the FedLess/syft-flwr-style partial
+//!   participation that only makes sense at this scale.
+//! * [`run_events_trial`] — an artifact-free trial harness (synthetic
+//!   params, no PJRT) used by the conformance and scale tests.
+//!
+//! Select with the `scheduler = threads | events` config key (or
+//! `fedbench run --scheduler events`). The threaded path remains the
+//! conformance baseline: on the existing 4–10 node timing/determinism
+//! suites both schedulers produce bit-identical simulated timelines and
+//! model digests (`rust/tests/timing.rs`, `rust/tests/determinism.rs`).
+//!
+//! # Caveat
+//!
+//! Under a [`crate::store::LatencyStore`], store operations *inside* one
+//! task step happen at interpolated instants on the threaded path but at
+//! the step's start instant here; scenarios that depend on sub-step
+//! interleaving of store latency can diverge between schedulers. All
+//! shipped goldens use latency-free stores, where the schedules are
+//! provably identical (see ARCHITECTURE.md §12).
+
+mod clock;
+mod executor;
+mod harness;
+mod participation;
+
+pub use clock::TaskClock;
+pub use executor::{EventExecutor, StepOutcome, Task};
+pub use harness::{run_events_trial, SimNodeResult, TrialSpec};
+pub use participation::{AvailabilitySpec, ParticipationPlan};
+
+/// Which node scheduler drives an experiment — the config-level selector
+/// (`scheduler = threads | events`), parallel to `ClockKind` for clocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// One OS thread per node on a shared [`crate::time::Clock`]; the
+    /// default, and the conformance baseline for the event path.
+    #[default]
+    Threads,
+    /// Resumable node tasks on a single-threaded [`EventExecutor`] —
+    /// requires `clock = virtual` semantics (enforced at config
+    /// validation) and scales to tens of thousands of clients.
+    Events,
+}
+
+impl SchedulerKind {
+    /// Parse a config/CLI value: `threads` or `events`.
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "threads" => Some(SchedulerKind::Threads),
+            "events" => Some(SchedulerKind::Events),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (inverse of [`SchedulerKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Threads => "threads",
+            SchedulerKind::Events => "events",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_kind_parse_and_name() {
+        assert_eq!(SchedulerKind::parse("threads"), Some(SchedulerKind::Threads));
+        assert_eq!(SchedulerKind::parse("EVENTS"), Some(SchedulerKind::Events));
+        assert_eq!(SchedulerKind::parse("fibers"), None);
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Threads);
+        for kind in [SchedulerKind::Threads, SchedulerKind::Events] {
+            assert_eq!(SchedulerKind::parse(kind.name()), Some(kind));
+        }
+    }
+}

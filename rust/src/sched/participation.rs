@@ -1,0 +1,367 @@
+//! Partial participation and availability traces — which clients take
+//! part in which round.
+//!
+//! Cross-device FL never sees the whole fleet at once: FedLess-style
+//! serverless clients are *sampled* into per-round cohorts, and
+//! syft-flwr-style device fleets churn offline, follow diurnal cycles,
+//! and harbor persistent stragglers. Both effects are modeled here as
+//! pure seeded functions of `(seed, node, round)` so every node — and
+//! every replay — computes the identical schedule with no coordinator,
+//! preserving the serverless narrative *and* bit-exact determinism.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::Rng;
+
+/// Mixing constants for keying per-node / per-round RNG streams (the
+/// same idiom as [`crate::protocol::gossip_peers`]).
+const MIX_NODE: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX_ROUND: u64 = 0xD1B5_4A32_D192_ED03;
+/// Tag separating the straggler-assignment stream from churn/diurnal.
+const TAG_STRAGGLER: u64 = 0x5EED_5EED_5EED_5EED;
+
+/// Per-node availability over rounds (`availability = <spec>` config
+/// key). All variants are pure functions of `(seed, node, round)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum AvailabilitySpec {
+    /// Everyone is always online (the default).
+    #[default]
+    None,
+    /// I.i.d. churn: each node is independently offline in each round
+    /// with probability `p`.
+    Churn {
+        /// Per-round offline probability, in `[0, 1)`.
+        p: f64,
+    },
+    /// Diurnal cycle: each node gets a seeded phase offset and is online
+    /// for the first half of every `period`-round cycle — a fleet
+    /// spread over time zones.
+    Diurnal {
+        /// Cycle length in rounds (>= 2).
+        period: usize,
+    },
+    /// Persistent stragglers: a seeded `frac` of nodes run every
+    /// training step `mult`× slower; everyone stays online.
+    Stragglers {
+        /// Fraction of the fleet that straggles, in `[0, 1]`.
+        frac: f64,
+        /// Step-delay multiplier for straggler nodes (>= 1).
+        mult: f64,
+    },
+}
+
+impl AvailabilitySpec {
+    /// Parse a config/CLI value: `none`, `churn:<p>`, `diurnal:<period>`
+    /// or `stragglers:<frac>:<mult>`. Range checks live in config
+    /// validation, not here.
+    pub fn parse(s: &str) -> Option<AvailabilitySpec> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "none" {
+            return Some(AvailabilitySpec::None);
+        }
+        if let Some(p) = s.strip_prefix("churn:") {
+            return p.parse().ok().map(|p| AvailabilitySpec::Churn { p });
+        }
+        if let Some(period) = s.strip_prefix("diurnal:") {
+            return period.parse().ok().map(|period| AvailabilitySpec::Diurnal { period });
+        }
+        if let Some(rest) = s.strip_prefix("stragglers:") {
+            let (frac, mult) = rest.split_once(':')?;
+            return Some(AvailabilitySpec::Stragglers {
+                frac: frac.parse().ok()?,
+                mult: mult.parse().ok()?,
+            });
+        }
+        None
+    }
+
+    /// Run-name fragment: empty for [`AvailabilitySpec::None`], else
+    /// `churn<p>` / `diurnal<period>` / `strag<frac>x<mult>`.
+    pub fn label(&self) -> String {
+        match self {
+            AvailabilitySpec::None => String::new(),
+            AvailabilitySpec::Churn { p } => format!("churn{p}"),
+            AvailabilitySpec::Diurnal { period } => format!("diurnal{period}"),
+            AvailabilitySpec::Stragglers { frac, mult } => format!("strag{frac}x{mult}"),
+        }
+    }
+
+    /// Is `node` reachable in `round`? Pure in `(seed, node, round)`.
+    pub fn is_online(&self, seed: u64, node: usize, round: usize) -> bool {
+        match *self {
+            AvailabilitySpec::None | AvailabilitySpec::Stragglers { .. } => true,
+            AvailabilitySpec::Churn { p } => {
+                let mut rng = Rng::new(
+                    seed ^ (node as u64 + 1).wrapping_mul(MIX_NODE)
+                        ^ (round as u64 + 1).wrapping_mul(MIX_ROUND),
+                );
+                !rng.chance(p)
+            }
+            AvailabilitySpec::Diurnal { period } => {
+                let phase = Rng::new(seed ^ (node as u64 + 1).wrapping_mul(MIX_NODE))
+                    .below(period.max(1));
+                (round + phase) % period.max(1) < period.max(1).div_ceil(2)
+            }
+        }
+    }
+
+    /// Step-delay multiplier for `node` (>= 1; persistent across the
+    /// trial). Only [`AvailabilitySpec::Stragglers`] deviates from 1.
+    pub fn delay_multiplier(&self, seed: u64, node: usize) -> f64 {
+        match *self {
+            AvailabilitySpec::Stragglers { frac, mult } => {
+                let mut rng = Rng::new(
+                    seed ^ (node as u64 + 1).wrapping_mul(MIX_NODE) ^ TAG_STRAGGLER,
+                );
+                if rng.chance(frac) {
+                    mult
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
+        }
+    }
+}
+
+/// One round's sampled cohort: sorted member list plus a membership
+/// bitmap for O(1) `participates` checks.
+struct CohortInfo {
+    members: Vec<usize>,
+    member_set: Vec<bool>,
+}
+
+/// The trial's participation schedule: a seeded per-round cohort of
+/// `k = round(participation · n)` online clients.
+///
+/// The cohort is a pure function of `(seed, round)` — every node
+/// computes the same answer, so the fleet agrees on each round's barrier
+/// fan-in ([`crate::protocol::EpochCtx::round_k`]) without any
+/// coordinator. The `Mutex` cache is purely an implementation detail of
+/// that pure function: one `Arc<ParticipationPlan>` is shared by all
+/// node runners so the O(n) shuffle runs once per round instead of once
+/// per node per round (3·10⁸ ops at 10k nodes).
+pub struct ParticipationPlan {
+    participation: f64,
+    availability: AvailabilitySpec,
+    seed: u64,
+    n_nodes: usize,
+    cohorts: Mutex<HashMap<usize, Arc<CohortInfo>>>,
+}
+
+impl ParticipationPlan {
+    /// A plan for `n_nodes` clients; `participation` in `(0, 1]` (config
+    /// validation enforces the range).
+    pub fn new(
+        participation: f64,
+        availability: AvailabilitySpec,
+        seed: u64,
+        n_nodes: usize,
+    ) -> ParticipationPlan {
+        ParticipationPlan {
+            participation,
+            availability,
+            seed,
+            n_nodes,
+            cohorts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Does the whole fleet participate in every round? (The default
+    /// config; lets the hot paths skip cohort computation entirely.)
+    fn is_full(&self) -> bool {
+        self.participation >= 1.0 && self.availability == AvailabilitySpec::None
+    }
+
+    fn cohort(&self, round: usize) -> Arc<CohortInfo> {
+        let mut cache = self.cohorts.lock().expect("cohort cache poisoned");
+        if let Some(c) = cache.get(&round) {
+            return Arc::clone(c);
+        }
+        // available set under the trace, then a seeded k-of-available
+        // sample (shuffle + truncate + sort, the gossip_peers idiom)
+        let mut available: Vec<usize> = (0..self.n_nodes)
+            .filter(|&n| self.availability.is_online(self.seed, n, round))
+            .collect();
+        let k = ((self.participation * self.n_nodes as f64).round() as usize)
+            .max(1)
+            .min(available.len());
+        let mut rng =
+            Rng::new(self.seed ^ (round as u64 + 1).wrapping_mul(MIX_ROUND));
+        rng.shuffle(&mut available);
+        available.truncate(k);
+        available.sort_unstable();
+        let mut member_set = vec![false; self.n_nodes];
+        for &m in &available {
+            member_set[m] = true;
+        }
+        let info = Arc::new(CohortInfo { members: available, member_set });
+        cache.insert(round, Arc::clone(&info));
+        info
+    }
+
+    /// Is `node` in `round`'s cohort?
+    pub fn participates(&self, node: usize, round: usize) -> bool {
+        if self.is_full() {
+            return true;
+        }
+        self.cohort(round).member_set.get(node).copied().unwrap_or(false)
+    }
+
+    /// This round's cohort size — the sync barrier's fan-in
+    /// ([`crate::protocol::EpochCtx::round_k`]).
+    pub fn round_k(&self, round: usize) -> usize {
+        if self.is_full() {
+            return self.n_nodes;
+        }
+        self.cohort(round).members.len()
+    }
+
+    /// Sorted member list of `round`'s cohort (tests, reporting).
+    pub fn members(&self, round: usize) -> Vec<usize> {
+        if self.is_full() {
+            return (0..self.n_nodes).collect();
+        }
+        self.cohort(round).members.clone()
+    }
+
+    /// The node's persistent step-delay multiplier (straggler traces).
+    pub fn delay_multiplier(&self, node: usize) -> f64 {
+        self.availability.delay_multiplier(self.seed, node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_and_label_round_trip() {
+        assert_eq!(AvailabilitySpec::parse("none"), Some(AvailabilitySpec::None));
+        assert_eq!(
+            AvailabilitySpec::parse("churn:0.3"),
+            Some(AvailabilitySpec::Churn { p: 0.3 })
+        );
+        assert_eq!(
+            AvailabilitySpec::parse("diurnal:8"),
+            Some(AvailabilitySpec::Diurnal { period: 8 })
+        );
+        assert_eq!(
+            AvailabilitySpec::parse("stragglers:0.2:10"),
+            Some(AvailabilitySpec::Stragglers { frac: 0.2, mult: 10.0 })
+        );
+        assert_eq!(AvailabilitySpec::parse("weekly:3"), None);
+        assert_eq!(AvailabilitySpec::parse("churn:x"), None);
+        assert_eq!(AvailabilitySpec::parse("stragglers:0.2"), None);
+
+        assert_eq!(AvailabilitySpec::None.label(), "");
+        assert_eq!(AvailabilitySpec::Churn { p: 0.3 }.label(), "churn0.3");
+        assert_eq!(AvailabilitySpec::Diurnal { period: 8 }.label(), "diurnal8");
+        assert_eq!(
+            AvailabilitySpec::Stragglers { frac: 0.2, mult: 10.0 }.label(),
+            "strag0.2x10"
+        );
+        assert_eq!(AvailabilitySpec::default(), AvailabilitySpec::None);
+    }
+
+    #[test]
+    fn full_participation_short_circuits() {
+        let plan = ParticipationPlan::new(1.0, AvailabilitySpec::None, 42, 5);
+        for round in 0..4 {
+            assert_eq!(plan.round_k(round), 5);
+            assert_eq!(plan.members(round), vec![0, 1, 2, 3, 4]);
+            for node in 0..5 {
+                assert!(plan.participates(node, round));
+                assert_eq!(plan.delay_multiplier(node), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cohorts_are_seeded_sized_and_vary_by_round() {
+        let plan = ParticipationPlan::new(0.3, AvailabilitySpec::None, 42, 100);
+        let twin = ParticipationPlan::new(0.3, AvailabilitySpec::None, 42, 100);
+        let mut distinct = false;
+        for round in 0..6 {
+            let a = plan.members(round);
+            assert_eq!(a, twin.members(round), "pure in (seed, round)");
+            assert_eq!(a.len(), 30, "k = round(0.3 * 100)");
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+            assert_eq!(plan.round_k(round), 30);
+            for &m in &a {
+                assert!(plan.participates(m, round));
+            }
+            let in_cohort = (0..100).filter(|&n| plan.participates(n, round)).count();
+            assert_eq!(in_cohort, 30, "bitmap agrees with member list");
+            if round > 0 && a != plan.members(0) {
+                distinct = true;
+            }
+        }
+        assert!(distinct, "cohorts must vary across rounds");
+        let other_seed = ParticipationPlan::new(0.3, AvailabilitySpec::None, 43, 100);
+        assert_ne!(plan.members(0), other_seed.members(0), "seed matters");
+    }
+
+    #[test]
+    fn tiny_fractions_keep_at_least_one_client() {
+        let plan = ParticipationPlan::new(0.001, AvailabilitySpec::None, 7, 50);
+        assert_eq!(plan.round_k(0), 1, "k is floored at 1");
+    }
+
+    #[test]
+    fn churn_thins_the_cohort_and_is_deterministic() {
+        let avail = AvailabilitySpec::Churn { p: 0.5 };
+        let plan = ParticipationPlan::new(1.0, avail, 42, 200);
+        let twin = ParticipationPlan::new(1.0, avail, 42, 200);
+        let mut sizes = Vec::new();
+        for round in 0..5 {
+            let m = plan.members(round);
+            assert_eq!(m, twin.members(round), "churn trace must replay");
+            assert!(m.len() < 200, "some nodes must drop offline");
+            assert!(!m.is_empty());
+            for &n in &m {
+                assert!(avail.is_online(42, n, round));
+            }
+            sizes.push(m.len());
+        }
+        // p = 0.5 over 200 nodes: survivor counts hug the binomial mean
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        assert!((mean - 100.0).abs() < 25.0, "mean online {mean} far from 100");
+    }
+
+    #[test]
+    fn diurnal_nodes_alternate_with_per_node_phase() {
+        let avail = AvailabilitySpec::Diurnal { period: 4 };
+        for node in 0..16 {
+            let online: Vec<bool> =
+                (0..8).map(|r| avail.is_online(9, node, r)).collect();
+            // online exactly half of each 4-round cycle, cycle-periodic
+            assert_eq!(online.iter().filter(|&&b| b).count(), 4);
+            assert_eq!(&online[..4], &online[4..], "period-4 cycle repeats");
+        }
+        // phases differ across the fleet: not all nodes share a schedule
+        let first: Vec<bool> = (0..4).map(|r| avail.is_online(9, 0, r)).collect();
+        assert!(
+            (1..16).any(|n| (0..4).map(|r| avail.is_online(9, n, r)).collect::<Vec<_>>() != first),
+            "at least one node must be phase-shifted"
+        );
+    }
+
+    #[test]
+    fn stragglers_slow_a_seeded_fraction() {
+        let avail = AvailabilitySpec::Stragglers { frac: 0.25, mult: 10.0 };
+        let plan = ParticipationPlan::new(1.0, avail, 42, 400);
+        let slow = (0..400).filter(|&n| plan.delay_multiplier(n) == 10.0).count();
+        let fast = (0..400).filter(|&n| plan.delay_multiplier(n) == 1.0).count();
+        assert_eq!(slow + fast, 400, "multiplier is 1 or mult, nothing else");
+        assert!((50..=150).contains(&slow), "~25% stragglers, got {slow}");
+        // stragglers stay online and in cohorts
+        assert_eq!(plan.round_k(0), 400);
+        // assignment is persistent and replayable
+        let twin = ParticipationPlan::new(1.0, avail, 42, 400);
+        for n in 0..400 {
+            assert_eq!(plan.delay_multiplier(n), twin.delay_multiplier(n));
+        }
+    }
+}

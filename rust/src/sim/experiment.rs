@@ -10,9 +10,10 @@ use crate::data::{
 };
 use crate::metrics::timeline::{render_ascii, Timeline};
 use crate::metrics::RunLogger;
-use crate::node::{spawn_node, NodeCtx, NodeReport, NodeStatus};
-use crate::runtime::{Engine, Manifest, ModelBundle};
+use crate::node::{spawn_node, NodeCtx, NodeReport, NodeRunner, NodeStatus};
+use crate::runtime::{Engine, Manifest, ModelBundle, ModelInfo};
 use crate::par::ChunkPool;
+use crate::sched::{EventExecutor, ParticipationPlan, SchedulerKind, Task, TaskClock};
 use crate::store::{
     AdversaryStore, FsStore, LatencyStore, MemoryStore, ShardedStore, WeightStore,
 };
@@ -174,6 +175,9 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     cfg.validate()?;
     let manifest = Arc::new(Manifest::discover()?);
     let info = manifest.model(&cfg.model)?.clone();
+    if cfg.scheduler == SchedulerKind::Events {
+        return run_experiment_events(cfg, &info);
+    }
 
     // The experiment's time domain (`clock = real | virtual`): one fresh
     // clock per trial, shared by nodes, stores, and timelines.
@@ -188,6 +192,15 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         None => None,
     };
 
+    // one shared participation schedule so the per-round cohort shuffle
+    // runs once, not once per node
+    let plan = Arc::new(ParticipationPlan::new(
+        cfg.participation,
+        cfg.availability,
+        cfg.seed,
+        cfg.n_nodes,
+    ));
+
     let t0 = clock.now();
     let start = Arc::new(std::sync::Barrier::new(cfg.n_nodes));
     let mut handles = Vec::new();
@@ -200,6 +213,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
             strategy: cfg.strategy.build(),
             loader,
             clock: Arc::clone(&clock),
+            plan: Arc::clone(&plan),
             start: Arc::clone(&start),
             logger: logger.clone(),
         };
@@ -208,6 +222,88 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     let reports: Vec<NodeReport> = handles.into_iter().map(NodeHandleExt::wait_report).collect();
     let wall_clock_s = clock.now().saturating_sub(t0).as_secs_f64();
 
+    // evaluation engine + bundle are built fresh here (node engines live
+    // on their own threads)
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, &info)?;
+    assemble_result(cfg, &bundle, &test_loader, &store, &logger, reports, wall_clock_s)
+}
+
+/// The `scheduler = events` path: every node is a [`NodeRunner`] task on
+/// one [`EventExecutor`] thread, sharing a single PJRT engine + model
+/// bundle — the allocation profile that lets one process hold a
+/// 10k-client fleet. Simulated timelines and model digests are
+/// bit-identical to the threaded path on latency-free scenarios with
+/// distinct per-node delays (the conformance goldens).
+fn run_experiment_events(cfg: &ExperimentConfig, info: &ModelInfo) -> Result<ExperimentResult> {
+    // validation enforced clock = virtual; the TaskClock *is* the
+    // executor's virtual time domain, with identical reported timelines
+    let task_clock = Arc::new(TaskClock::new());
+    let clock: Arc<dyn Clock> = Arc::clone(&task_clock) as Arc<dyn Clock>;
+
+    let (loaders, test_loader) = build_data(cfg, info)?;
+    let store = build_store(cfg, &clock)?;
+    store.clear()?;
+
+    let logger = match &cfg.log_dir {
+        Some(dir) => Some(Arc::new(RunLogger::create(dir.join(cfg.run_name()))?)),
+        None => None,
+    };
+
+    // ONE engine + bundle for the whole fleet (and the final evaluation):
+    // the runners borrow it, so it must outlive them
+    let engine = Engine::new()?;
+    let bundle = ModelBundle::load(&engine, info)?;
+
+    let cfg_arc = Arc::new(cfg.clone());
+    let plan = Arc::new(ParticipationPlan::new(
+        cfg.participation,
+        cfg.availability,
+        cfg.seed,
+        cfg.n_nodes,
+    ));
+    let t0 = clock.now();
+    let mut runners: Vec<NodeRunner> = loaders
+        .into_iter()
+        .enumerate()
+        .map(|(node_id, loader)| {
+            NodeRunner::new(
+                node_id,
+                Arc::clone(&cfg_arc),
+                Arc::clone(&store),
+                Arc::clone(&clock),
+                logger.clone(),
+                Arc::clone(&plan),
+                cfg.strategy.build(),
+                loader,
+                &bundle,
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    let executor = EventExecutor::new(Arc::clone(&task_clock), Arc::clone(&store));
+    let mut tasks: Vec<&mut dyn Task> =
+        runners.iter_mut().map(|r| r as &mut dyn Task).collect();
+    executor.run(&mut tasks)?;
+    drop(tasks);
+
+    let reports: Vec<NodeReport> = runners.into_iter().map(NodeRunner::into_report).collect();
+    let wall_clock_s = clock.now().saturating_sub(t0).as_secs_f64();
+    assemble_result(cfg, &bundle, &test_loader, &store, &logger, reports, wall_clock_s)
+}
+
+/// Shared result assembly: aggregate the global model, evaluate it, fold
+/// the per-node reports into the experiment-level metrics. Identical for
+/// both schedulers, so the two paths cannot drift apart.
+fn assemble_result(
+    cfg: &ExperimentConfig,
+    bundle: &ModelBundle,
+    test_loader: &BatchLoader,
+    store: &Arc<dyn WeightStore>,
+    logger: &Option<Arc<RunLogger>>,
+    reports: Vec<NodeReport>,
+    wall_clock_s: f64,
+) -> Result<ExperimentResult> {
     // ---- global model = example-weighted average of the nodes' final
     // weights (what the store would converge to; identical to any node's
     // last sync aggregation in sync mode, and the one-shot average of
@@ -233,8 +329,6 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     let global_hash = global.content_hash_pooled(pool);
 
     // ---- evaluate on the un-partitioned test set (paper §4.1)
-    let engine = Engine::new()?;
-    let bundle = ModelBundle::load(&engine, &info)?;
     let batches = test_loader.full_batches();
     let (final_loss, final_accuracy) = bundle.evaluate(&global, &batches)?;
 

@@ -203,10 +203,10 @@ impl SweepReport {
             }
         );
         out.push_str(
-            "| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
+            "| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
         );
         out.push_str(
-            "|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n",
+            "|------|----------|------|-------|----------|---------|------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n",
         );
         for c in &self.cells {
             let trials = if c.failures > 0 {
@@ -231,13 +231,14 @@ impl SweepReport {
             };
             let _ = writeln!(
                 out,
-                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
                 c.cell.mode.label(),
                 c.cell.strategy.label(),
                 c.cell.skew,
                 c.cell.n_nodes,
                 c.cell.compress.label(),
                 crate::config::threads_label(c.cell.threads),
+                c.cell.participation,
                 c.cell.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
                 trials,
                 acc,
@@ -255,7 +256,8 @@ impl SweepReport {
     /// CSV with one row per grid cell (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "model,mode,strategy,skew,n_nodes,compress,threads,adversary,trials,failures,\
+            "model,mode,strategy,skew,n_nodes,compress,threads,participation,adversary,\
+             trials,failures,\
              acc_mean,acc_std,acc_clean,acc_attacked,loss_mean,loss_std,wall_mean,wall_std,\
              mb_pushed_mean,mb_pulled_mean\n",
         );
@@ -268,7 +270,7 @@ impl SweepReport {
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
                 c.cell.strategy.label(),
@@ -276,6 +278,7 @@ impl SweepReport {
                 c.cell.n_nodes,
                 c.cell.compress.label(),
                 crate::config::threads_label(c.cell.threads),
+                c.cell.participation,
                 c.cell.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
                 c.n_trials,
                 c.failures,
@@ -432,7 +435,8 @@ mod tests {
         assert_eq!(r.cells[3].acc_attacked, Some(0.87));
         let md = r.to_markdown();
         assert!(md.contains("| acc clean | acc attacked |"), "{md}");
-        assert!(md.contains("| byz1 |"), "{md}");
+        assert!(md.contains("| part | adversary |"), "{md}");
+        assert!(md.contains("| 1 | byz1 |"), "{md}");
         assert!(md.contains("| 0.900 | 0.200 |"), "{md}");
         assert!(md.contains("| 0.900 | - |"), "{md}");
         let csv = r.to_csv();

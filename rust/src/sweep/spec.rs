@@ -40,6 +40,9 @@ pub struct CellKey {
     /// wall-clock axis: the [`crate::par`] determinism contract makes
     /// every experiment metric identical across `threads` cells.
     pub threads: usize,
+    /// Per-round client sampling fraction of this cell (1.0 = full
+    /// participation, the legacy behavior and label).
+    pub participation: f64,
     /// Content adversary of this cell (`None` = all clients honest). The
     /// report pairs each attacked cell with its clean sibling — the cell
     /// with the same key and `adversary = None` — in the
@@ -64,12 +67,17 @@ impl CellKey {
             1 => String::new(),
             other => format!("_t{}", threads_label(other)),
         };
+        let participation = if self.participation < 1.0 {
+            format!("_p{}", self.participation)
+        } else {
+            String::new()
+        };
         let adversary = match &self.adversary {
             None => String::new(),
             Some(a) => format!("_{}", a.label()),
         };
         format!(
-            "{}_{}_s{}_n{}{compress}{threads}{adversary}",
+            "{}_{}_s{}_n{}{compress}{threads}{participation}{adversary}",
             self.mode.label(),
             self.strategy.label(),
             self.skew,
@@ -111,6 +119,9 @@ pub struct SweepSpec {
     /// `"auto"`; 0 encodes auto). Wall-clock only — results are
     /// bit-identical across values.
     pub threads: Vec<usize>,
+    /// Per-round client-sampling axis (`"participation"` key: fractions
+    /// in (0, 1]; 1.0 cells run the legacy full-participation path).
+    pub participations: Vec<f64>,
     /// Content-adversary axis (`"adversary"` key: `"none"` or specs like
     /// `"byzantine:1"`). `None` cells run all-honest; the report pairs
     /// attacked cells with their clean siblings.
@@ -133,6 +144,7 @@ impl SweepSpec {
             node_counts: vec![base.n_nodes],
             compressions: vec![base.compress],
             threads: vec![base.threads],
+            participations: vec![base.participation],
             adversaries: vec![base.adversary],
             seeds: vec![base.seed],
             jobs: 0,
@@ -167,7 +179,8 @@ impl SweepSpec {
             "model", "epochs", "steps_per_epoch", "sample_prob", "train_size", "test_size",
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
             "modes", "strategies", "skews", "n_nodes", "compress", "threads", "seeds",
-            "adversary", "robust", "trials", "jobs",
+            "adversary", "robust", "trials", "jobs", "participation", "availability",
+            "scheduler",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -212,6 +225,16 @@ impl SweepSpec {
             let s = req_str(v, "clock")?;
             base.clock = crate::time::ClockKind::parse(s)
                 .ok_or_else(|| anyhow!("sweep spec: unknown clock {s:?}"))?;
+        }
+        if let Some(v) = obj.get("scheduler") {
+            let s = req_str(v, "scheduler")?;
+            base.scheduler = crate::sched::SchedulerKind::parse(s)
+                .ok_or_else(|| anyhow!("sweep spec: unknown scheduler {s:?}"))?;
+        }
+        if let Some(v) = obj.get("availability") {
+            let s = req_str(v, "availability")?;
+            base.availability = crate::sched::AvailabilitySpec::parse(s)
+                .ok_or_else(|| anyhow!("sweep spec: unknown availability {s:?}"))?;
         }
         if let Some(v) = obj.get("log_dir") {
             base.log_dir = Some(req_str(v, "log_dir")?.into());
@@ -266,6 +289,10 @@ impl SweepSpec {
                 None => int_of(x).map(|n| n as usize).filter(|&n| n >= 1),
             })?,
         };
+        let participations = match obj.get("participation") {
+            None => vec![base.participation],
+            Some(v) => axis(v, "participation", Json::as_f64)?,
+        };
         let adversaries = match obj.get("adversary") {
             None => vec![base.adversary],
             Some(v) => axis(v, "adversary", |x| match x.as_str() {
@@ -302,6 +329,7 @@ impl SweepSpec {
             node_counts,
             compressions,
             threads,
+            participations,
             adversaries,
             seeds,
             jobs,
@@ -309,10 +337,10 @@ impl SweepSpec {
     }
 
     /// The grid cells in deterministic (mode, strategy, skew, n_nodes,
-    /// compress, threads, adversary) nested order — the row order of the
-    /// report. The adversary axis is innermost, so each attacked cell
-    /// sits right after its clean sibling when `"adversary"` starts with
-    /// `"none"`.
+    /// compress, threads, participation, adversary) nested order — the
+    /// row order of the report. The adversary axis is innermost, so each
+    /// attacked cell sits right after its clean sibling when
+    /// `"adversary"` starts with `"none"`.
     pub fn cells(&self) -> Vec<CellKey> {
         let mut out =
             Vec::with_capacity(self.modes.len() * self.strategies.len() * self.skews.len());
@@ -322,16 +350,19 @@ impl SweepSpec {
                     for &n_nodes in &self.node_counts {
                         for &compress in &self.compressions {
                             for &threads in &self.threads {
-                                for &adversary in &self.adversaries {
-                                    out.push(CellKey {
-                                        mode,
-                                        strategy,
-                                        skew,
-                                        n_nodes,
-                                        compress,
-                                        threads,
-                                        adversary,
-                                    });
+                                for &participation in &self.participations {
+                                    for &adversary in &self.adversaries {
+                                        out.push(CellKey {
+                                            mode,
+                                            strategy,
+                                            skew,
+                                            n_nodes,
+                                            compress,
+                                            threads,
+                                            participation,
+                                            adversary,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -377,6 +408,7 @@ impl SweepSpec {
                 cfg.n_nodes = cell.n_nodes;
                 cfg.compress = cell.compress;
                 cfg.threads = cell.threads;
+                cfg.participation = cell.participation;
                 cfg.adversary = cell.adversary;
                 cfg.seed = seed;
                 if let StoreKind::Fs(root) = &self.base.store {
@@ -694,6 +726,47 @@ mod tests {
         // bad values are rejected
         assert!(SweepSpec::parse_json(r#"{"adversary": "gremlin"}"#).is_err());
         assert!(SweepSpec::parse_json(r#"{"adversary": [3]}"#).is_err());
+    }
+
+    #[test]
+    fn participation_axis_expands_with_distinct_cells() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "async", "participation": [1.0, 0.5, 0.1], "n_nodes": 10}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.participations, vec![1.0, 0.5, 0.1]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 3);
+        // the full-participation cell keeps the legacy label; sampled
+        // cells are suffixed so no two cells share a store namespace
+        assert_eq!(cells[0].label(), "async_fedavg_s0_n10");
+        assert_eq!(cells[1].label(), "async_fedavg_s0_n10_p0.5");
+        assert_eq!(cells[2].label(), "async_fedavg_s0_n10_p0.1");
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 3);
+        assert_eq!(trials[1].cfg.participation, 0.5);
+        // out-of-range fractions die at expand via config validation
+        let spec = SweepSpec::parse_json(r#"{"participation": [0.0]}"#).unwrap();
+        assert!(spec.expand().is_err());
+        // scalar value and default also work
+        let spec = SweepSpec::parse_json(r#"{"participation": 0.25}"#).unwrap();
+        assert_eq!(spec.participations, vec![0.25]);
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.participations, vec![1.0]);
+    }
+
+    #[test]
+    fn scheduler_and_availability_are_base_scalars() {
+        use crate::sched::{AvailabilitySpec, SchedulerKind};
+        let spec = SweepSpec::parse_json(
+            r#"{"scheduler": "events", "clock": "virtual", "availability": "churn:0.2"}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.base.scheduler, SchedulerKind::Events);
+        assert_eq!(spec.base.availability, AvailabilitySpec::Churn { p: 0.2 });
+        spec.expand().unwrap();
+        assert!(SweepSpec::parse_json(r#"{"scheduler": "fibers"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"availability": "weekly"}"#).is_err());
     }
 
     #[test]

@@ -91,6 +91,7 @@ fn run_sim(compress: CodecKind, bytes_per_sec: u64) -> (Duration, Vec<SimNode>) 
                         let mut ctx = fedless::protocol::EpochCtx {
                             node_id,
                             n_nodes: N_NODES,
+                            round_k: N_NODES,
                             epoch,
                             n_examples: 100,
                             store: store.as_ref(),
@@ -204,6 +205,7 @@ fn compress_none_is_bit_identical_to_the_uncompressed_path() {
     let mut ctx = fedless::protocol::EpochCtx {
         node_id: 0,
         n_nodes: 2,
+        round_k: 2,
         epoch: 0,
         n_examples: 100,
         store: &store,

@@ -197,6 +197,7 @@ fn run_sim(mode: FederationMode, threads: usize, epochs: usize) -> Vec<SimNode> 
                         let mut ctx = fedless::protocol::EpochCtx {
                             node_id,
                             n_nodes: N,
+                            round_k: N,
                             epoch,
                             n_examples: 100,
                             store: store.as_ref(),
@@ -237,6 +238,45 @@ fn federation_replays_bit_identically_across_thread_counts() {
                     "{mode:?}: weights must be bit-identical with threads={t}"
                 );
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor-vs-threads conformance with compressed pushes
+
+/// The event executor replays the threaded Q8 federation bit-for-bit:
+/// same finish instants, same weights, same content digests — the
+/// global-digest half of the scheduler-conformance contract
+/// (`rust/tests/timing.rs` pins the timeline half).
+#[test]
+fn event_executor_matches_threads_under_q8_compression() {
+    use fedless::sched::{run_events_trial, TrialSpec};
+
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let threaded = run_sim(mode, 1, 4);
+        let mut spec = TrialSpec::new(
+            mode,
+            (0..3).map(|i| Duration::from_millis(40 + 9 * i)).collect(),
+            4,
+        );
+        spec.compress = CodecKind::Q8;
+        spec.init = |node_id| training_like(PAR_CHUNK + 37, node_id as u64);
+        let events = run_events_trial(&spec).unwrap();
+        for (t, e) in threaded.iter().zip(&events) {
+            assert_eq!(t.finish, e.finish, "{mode:?}: node {} finish", e.node_id);
+            assert_eq!(
+                bits(&t.params.0),
+                bits(&e.params.0),
+                "{mode:?}: node {} weights",
+                e.node_id
+            );
+            assert_eq!(
+                t.params.content_hash(),
+                e.params.content_hash(),
+                "{mode:?}: node {} digest",
+                e.node_id
+            );
         }
     }
 }
@@ -297,12 +337,12 @@ fn golden_sweep_report_with_threads_axis_under_virtual_clock() {
     // Identical numbers in the t=1 and t=4 rows ARE the proof that
     // parallel kernels leave simulated time untouched.
     let golden = "\n\
-| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
-|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
-| sync | fedavg | 0 | 3 | none | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| sync | fedavg | 0 | 3 | none | 4 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 3 | none | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 3 | none | 4 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |";
+| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 3 | none | 1 | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0 | 3 | none | 4 | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 1 | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 3 | none | 4 | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.100 ± 0.000 | 0.174 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,

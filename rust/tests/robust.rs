@@ -149,6 +149,7 @@ fn run_attack_sim(
                         let mut ctx = fedless::protocol::EpochCtx {
                             node_id,
                             n_nodes: N_NODES,
+                            round_k: N_NODES,
                             epoch,
                             n_examples: 100,
                             store: store.as_ref(),

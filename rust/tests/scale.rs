@@ -1,0 +1,164 @@
+//! Scale suite — the event scheduler's reason to exist: trials with
+//! thousands to tens of thousands of simulated clients in seconds of
+//! real time, which thread-per-node cannot touch (10k OS threads and
+//! VirtualClock participant slots).
+//!
+//! Everything here runs the artifact-free [`fedless::sched`] harness
+//! (synthetic weights, no PJRT) with partial participation, so per-round
+//! work is the *cohort's*, not the fleet's. The 10k-client acceptance
+//! trial is `#[ignore]`d to keep the default debug test run lean; CI
+//! runs it `--release --include-ignored` inside the timing job's hard
+//! real-time budget (`.github/workflows/ci.yml`).
+
+use std::time::{Duration, Instant};
+
+use fedless::config::FederationMode;
+use fedless::metrics::timeline::SpanKind;
+use fedless::sched::{
+    run_events_trial, AvailabilitySpec, ParticipationPlan, SimNodeResult, TrialSpec,
+};
+
+fn ms(n: u64) -> Duration {
+    Duration::from_millis(n)
+}
+
+/// Order-sensitive digest over every node's final weights — the trial's
+/// global model fingerprint for replay assertions.
+fn fleet_digest(nodes: &[SimNodeResult]) -> u64 {
+    nodes
+        .iter()
+        .fold(0u64, |acc, n| acc.rotate_left(1) ^ n.params.content_hash())
+}
+
+fn trains(node: &SimNodeResult) -> usize {
+    node.spans.iter().filter(|s| s.kind == SpanKind::Train).count()
+}
+
+/// The headline acceptance trial: 10 000 async clients, 3 rounds, 1%
+/// participation — completes in seconds of real time, does exactly the
+/// cohorts' work, and replays to the same fleet digest.
+#[test]
+#[ignore = "scale smoke: run with --release --include-ignored (CI timing job)"]
+fn ten_thousand_client_async_trial_runs_in_seconds() {
+    let n = 10_000;
+    let epochs = 3;
+    let mk = || {
+        let mut spec = TrialSpec::new(
+            FederationMode::Async,
+            (0..n).map(|i| ms(10 + (i % 97) as u64)).collect(),
+            epochs,
+        );
+        spec.participation = 0.01;
+        run_events_trial(&spec).unwrap()
+    };
+
+    let t_real = Instant::now();
+    let a = mk();
+    let real = t_real.elapsed();
+    assert!(
+        real < Duration::from_secs(30),
+        "a 10k-client trial must take seconds, took {real:?}"
+    );
+
+    // cohort accounting: k = round(0.01 * 10_000) = 100 per round, and
+    // only cohort members ever train
+    let seed = fedless::config::ExperimentConfig::default().seed;
+    let plan = ParticipationPlan::new(0.01, AvailabilitySpec::None, seed, n);
+    let total: usize = a.iter().map(trains).sum();
+    assert_eq!(total, epochs * 100, "3 rounds x cohort of 100");
+    for node in &a {
+        let rounds_in =
+            (0..epochs).filter(|&r| plan.participates(node.node_id, r)).count();
+        assert_eq!(trains(node), rounds_in, "node {}", node.node_id);
+        if rounds_in == 0 {
+            assert_eq!(node.finish, Duration::ZERO, "never-sampled nodes cost zero time");
+        }
+        assert!(!node.stalled, "async never stalls");
+    }
+
+    // replay bit-identity at full scale
+    let b = mk();
+    assert_eq!(fleet_digest(&a), fleet_digest(&b), "10k-client replay must be bit-identical");
+}
+
+/// A 1000-client trial small enough for the default debug run: fast,
+/// cohort-exact, and bit-identical on replay.
+#[test]
+fn thousand_client_async_trial_is_fast_and_replays() {
+    let n = 1000;
+    let mk = || {
+        let mut spec = TrialSpec::new(
+            FederationMode::Async,
+            (0..n).map(|i| ms(5 + (i % 31) as u64)).collect(),
+            3,
+        );
+        spec.participation = 0.1;
+        run_events_trial(&spec).unwrap()
+    };
+    let t_real = Instant::now();
+    let a = mk();
+    let b = mk();
+    assert!(
+        t_real.elapsed() < Duration::from_secs(60),
+        "two 1k-client trials must be fast even in debug, took {:?}",
+        t_real.elapsed()
+    );
+    let total: usize = a.iter().map(trains).sum();
+    assert_eq!(total, 3 * 100, "3 rounds x cohort of 100");
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.finish, y.finish, "node {}", x.node_id);
+        assert_eq!(x.spans, y.spans, "node {}", x.node_id);
+        assert_eq!(x.params.0, y.params.0, "node {}", x.node_id);
+    }
+}
+
+/// Partial participation under the sync barrier: the fan-in is the
+/// *cohort* size, so k-member rounds close without the other N - k
+/// clients — nobody stalls and only cohort members ever wait.
+#[test]
+fn partial_participation_sync_barrier_uses_the_cohort_fan_in() {
+    let n = 200;
+    let epochs = 3;
+    let mut spec = TrialSpec::new(
+        FederationMode::Sync,
+        (0..n).map(|i| ms(10 + i as u64)).collect(),
+        epochs,
+    );
+    spec.participation = 0.05; // k = 10 of 200
+    spec.sync_timeout = Duration::from_secs(60);
+    let nodes = run_events_trial(&spec).unwrap();
+    for node in &nodes {
+        assert!(!node.stalled, "node {}: a cohort barrier must close", node.node_id);
+    }
+    let total: usize = nodes.iter().map(trains).sum();
+    assert_eq!(total, epochs * 10, "3 rounds x cohort of 10");
+}
+
+/// A churning 2000-client fleet replays bit-identically: the whole
+/// availability trace is a pure function of `(seed, node, round)`, so
+/// rerunning the trial reproduces every span and every weight.
+#[test]
+fn churn_trace_at_scale_replays_bit_identically() {
+    let n = 2000;
+    let mk = || {
+        let mut spec = TrialSpec::new(
+            FederationMode::Async,
+            (0..n).map(|i| ms(5 + (i % 53) as u64)).collect(),
+            4,
+        );
+        spec.participation = 0.05;
+        spec.availability = AvailabilitySpec::Churn { p: 0.3 };
+        spec.seed = 1234;
+        run_events_trial(&spec).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert!(a.iter().any(|node| trains(node) > 0), "someone must have trained");
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.finish, y.finish, "node {}", x.node_id);
+        assert_eq!(x.spans, y.spans, "node {}", x.node_id);
+        assert_eq!(x.params.0, y.params.0, "node {}", x.node_id);
+        assert_eq!(x.stalled, y.stalled, "node {}", x.node_id);
+    }
+    assert_eq!(fleet_digest(&a), fleet_digest(&b));
+}

@@ -97,6 +97,7 @@ fn run_sim(
                         let mut ctx = fedless::protocol::EpochCtx {
                             node_id,
                             n_nodes: n,
+                            round_k: n,
                             epoch,
                             n_examples: 100,
                             store: store.as_ref(),
@@ -248,6 +249,54 @@ fn crashed_peer_releases_sync_survivors_within_simulated_timeout() {
     assert!(!nodes[2].stalled, "the crashed node never reached a barrier");
     // the crashed node stopped at round 0's completion instant
     assert_eq!(nodes[2].finish, ms(230));
+}
+
+// ---------------------------------------------------------------------------
+// executor-vs-threads conformance: the event scheduler is a drop-in
+// replacement for thread-per-node, proven bit-for-bit
+
+/// Assert a threaded run and an event-executor run observed the same
+/// federation: same finish instants, same timeline spans, same weights,
+/// same stall flags — the full observable surface of the protocol
+/// harness.
+fn assert_schedulers_agree(threaded: &[SimNode], events: &[fedless::sched::SimNodeResult]) {
+    assert_eq!(threaded.len(), events.len());
+    for (t, e) in threaded.iter().zip(events) {
+        assert_eq!(t.finish, e.finish, "node {}: finish instant", e.node_id);
+        assert_eq!(t.spans, e.spans, "node {}: timeline spans", e.node_id);
+        assert_eq!(t.params.0, e.params.0, "node {}: weights", e.node_id);
+        assert_eq!(t.stalled, e.stalled, "node {}: stall flag", e.node_id);
+    }
+}
+
+/// Sync and async 10-node straggler grids replay bit-identically under
+/// both schedulers (distinct per-node delays, so the threaded schedule
+/// is itself deterministic — see module docs).
+#[test]
+fn event_executor_matches_threads_on_the_straggler_grid() {
+    use fedless::sched::{run_events_trial, TrialSpec};
+    for mode in [FederationMode::Sync, FederationMode::Async] {
+        let delays: Vec<Duration> = (0..10).map(|i| ms(500 + i)).collect();
+        let threaded = run_sim(mode, &delays, 4, Duration::from_secs(3600), None);
+        let events = run_events_trial(&TrialSpec::new(mode, delays, 4)).unwrap();
+        assert_schedulers_agree(&threaded, &events);
+    }
+}
+
+/// The §4.2.1 crash scenario: survivors stall at the same simulated
+/// instants with the same Wait spans under both schedulers, and the
+/// crashed node stops at the same round-0 completion instant.
+#[test]
+fn event_executor_matches_threads_on_the_crash_scenario() {
+    use fedless::sched::{run_events_trial, TrialSpec};
+    let delays = [ms(50), ms(70), ms(230)];
+    let timeout = Duration::from_secs(300);
+    let threaded = run_sim(FederationMode::Sync, &delays, 3, timeout, Some((2, 1)));
+    let mut spec = TrialSpec::new(FederationMode::Sync, delays.to_vec(), 3);
+    spec.sync_timeout = timeout;
+    spec.crash = Some((2, 1));
+    let events = run_events_trial(&spec).unwrap();
+    assert_schedulers_agree(&threaded, &events);
 }
 
 // ---------------------------------------------------------------------------
@@ -409,12 +458,12 @@ fn golden_sweep_report_under_virtual_clock() {
     );
 
     let golden = "\n\
-| mode | strategy | skew | nodes | compress | threads | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
-|------|----------|------|-------|----------|---------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
-| sync | fedavg | 0 | 2 | none | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| sync | fedavg | 0.5 | 2 | none | 1 | none | 2 | 0.850 ± 0.000 | 0.850 | - | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0 | 2 | none | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
-| async | fedavg | 0.5 | 2 | none | 1 | none | 2 | 0.830 ± 0.000 | 0.830 | - | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
+| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n\
+|------|----------|------|-------|----------|---------|------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n\
+| sync | fedavg | 0 | 2 | none | 1 | 1 | none | 2 | 0.900 ± 0.000 | 0.900 | - | 0.100 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| sync | fedavg | 0.5 | 2 | none | 1 | 1 | none | 2 | 0.850 ± 0.000 | 0.850 | - | 0.150 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0 | 2 | none | 1 | 1 | none | 2 | 0.880 ± 0.000 | 0.880 | - | 0.120 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |\n\
+| async | fedavg | 0.5 | 2 | none | 1 | 1 | none | 2 | 0.830 ± 0.000 | 0.830 | - | 0.170 ± 0.000 | 0.690 ± 0.000 | 0.00 | 0.00 |";
     assert_eq!(
         body(&r1.to_markdown()),
         golden,
