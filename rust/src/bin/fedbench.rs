@@ -14,14 +14,23 @@
 //!              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]]
 //!              [--scheduler threads|events] [--participation F]
 //!              [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>]
-//!              [--virtual-clock]
+//!              [--virtual-clock] [--trace|--no-trace] [--synthetic]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
 //!                        `fedbench run --mode gossip:2 --nodes 5`, a
 //!                        codec: `fedbench run --compress q8`, or an
 //!                        attack scenario: `fedbench run --nodes 4
 //!                        --mode sync --robust krum:1 --adversary
-//!                        byzantine:1`)
+//!                        byzantine:1`). Tracing is on by default:
+//!                        the run exports `trace.jsonl`,
+//!                        `trace_chrome.json` (Perfetto-loadable) and
+//!                        `analysis.json` under `runs/<name>/`.
+//!                        `--synthetic` runs the protocol layer on
+//!                        synthetic weights (no datasets, no PJRT) —
+//!                        the quickest way to produce a trace.
+//! fedbench inspect <run-dir>
+//!                        per-round divergence tables + per-node span
+//!                        shares from a traced run's `analysis.json`
 //! fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]
 //!                        run a custom experiment grid in parallel
 //! ```
@@ -373,6 +382,9 @@ fn run_one(name: &str, o: &Opts) -> Option<TableOut> {
 /// protocol end-to-end.
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut cfg = base_cfg("mnist", Scale::Small);
+    // tracing is on by default for `fedbench run` (opt out: --no-trace)
+    cfg.trace = true;
+    let mut synthetic = false;
     let mut scale = Scale::Small;
     let mut model = String::from("mnist");
     let mut i = 0;
@@ -381,6 +393,18 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         i += 1;
         if flag == "--virtual-clock" {
             cfg.clock = ClockKind::Virtual;
+            continue;
+        }
+        if flag == "--trace" {
+            cfg.trace = true;
+            continue;
+        }
+        if flag == "--no-trace" {
+            cfg.trace = false;
+            continue;
+        }
+        if flag == "--synthetic" {
+            synthetic = true;
             continue;
         }
         let value = args
@@ -465,7 +489,19 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     cfg.steps_per_epoch = chosen.steps_per_epoch;
     cfg.train_size = chosen.train_size;
     cfg.test_size = chosen.test_size;
+    if cfg.trace && cfg.log_dir.is_none() {
+        // traced runs need somewhere to put the exports
+        cfg.log_dir = Some("runs".into());
+    }
+    if synthetic {
+        // the synthetic path is always simulated time (no PJRT, no
+        // datasets) — protocol + store + clock only
+        cfg.clock = ClockKind::Virtual;
+    }
     cfg.validate().map_err(|e| format!("{e:#}"))?;
+    if synthetic {
+        return run_synthetic_cmd(&cfg);
+    }
 
     eprintln!(
         "running {} (scale={}, clock={})...",
@@ -474,7 +510,6 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         cfg.clock.name()
     );
     let res = run_experiment(&cfg).map_err(|e| format!("{e:#}"))?;
-    let traffic = res.total_traffic();
     println!("mode         : {}", cfg.mode.label());
     println!("clock        : {}", cfg.clock.name());
     println!("compress     : {}", cfg.compress.label());
@@ -497,30 +532,66 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
-    println!("store pushes : {}", res.store_pushes);
-    println!("model digest : {:016x}", res.global_hash);
-    println!(
-        "wire pushed  : {:.3} MB ({} pushes)",
-        traffic.mb_pushed(),
-        traffic.pushes
-    );
-    println!(
-        "wire pulled  : {:.3} MB ({} entries)",
-        traffic.mb_pulled(),
-        traffic.entries_pulled
-    );
-    for r in &res.reports {
-        let t = &r.timeline.traffic;
-        println!(
-            "  node {:>2}    : pushed {:.3} MB, pulled {:.3} MB",
-            r.node_id,
-            t.mb_pushed(),
-            t.mb_pulled()
-        );
+    // digest / traffic / idle / per-node table come from the same
+    // RunSummary the trace exporter writes and `inspect` reads back, so
+    // the live summary and the post-hoc one can never disagree
+    print!("{}", res.run_summary(&cfg.run_name()).render());
+    if let Some(dir) = &res.trace_dir {
+        println!("trace        : {}", dir.display());
     }
-    println!("mean idle    : {:.1}%", 100.0 * res.mean_idle_fraction);
-    println!("all completed: {}", res.all_completed);
     println!("{}", res.render_timelines(72));
+    Ok(())
+}
+
+/// `fedbench run --synthetic`: a traced protocol-level federation with
+/// synthetic weights — no datasets, no PJRT artifacts — under either
+/// scheduler. Prints the same [`fedless::trace::RunSummary`] rendering
+/// as a real run and exports the same trace files.
+fn run_synthetic_cmd(cfg: &ExperimentConfig) -> Result<(), String> {
+    use fedless::trace::{export_run, run_synthetic, SyntheticSpec};
+    let spec = SyntheticSpec::from_config(cfg);
+    eprintln!(
+        "running synthetic {} ({} nodes, {} epochs, scheduler={})...",
+        cfg.run_name(),
+        cfg.n_nodes,
+        cfg.epochs,
+        cfg.scheduler.name()
+    );
+    let run = run_synthetic(&spec).map_err(|e| format!("{e:#}"))?;
+    let pool = fedless::par::ChunkPool::from_config(cfg.threads);
+    let summary = run
+        .summary(&cfg.run_name(), cfg.epochs as u64, pool)
+        .map_err(|e| format!("{e:#}"))?;
+    let timelines: Vec<&fedless::metrics::Timeline> = run.timelines.iter().collect();
+    if cfg.trace {
+        let dir = cfg
+            .log_dir
+            .clone()
+            .unwrap_or_else(|| "runs".into())
+            .join(cfg.run_name());
+        let path = export_run(&dir, &run.tracer, &timelines, &summary)
+            .map_err(|e| format!("{e:#}"))?;
+        println!("trace        : {}", path.display());
+    }
+    print!("{}", summary.render());
+    println!("{}", fedless::metrics::timeline::render_ascii(&timelines, 72));
+    Ok(())
+}
+
+/// `fedbench inspect <run-dir>`: load a traced run's `analysis.json`
+/// and print its per-round divergence tables and per-node span shares —
+/// the post-hoc twin of the `fedbench run` summary.
+fn cmd_inspect(args: &[String]) -> Result<(), String> {
+    let dir = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .ok_or("usage: fedbench inspect <run-dir>")?;
+    let summary = fedless::trace::load_summary(std::path::Path::new(dir))
+        .map_err(|e| format!("{e:#}"))?;
+    println!("run          : {}", summary.run_name);
+    println!("nodes        : {}", summary.n_nodes);
+    println!("wall clock   : {:.2}s", summary.wall_clock_s);
+    print!("{}", summary.render());
     Ok(())
 }
 
@@ -596,13 +667,21 @@ fn main() {
              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]] \
              [--scheduler threads|events] [--participation F] \
              [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>] \
-             [--virtual-clock]\n\
+             [--virtual-clock] [--trace|--no-trace] [--synthetic]\n\
+             \x20      fedbench inspect <run-dir>\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"
         );
         std::process::exit(2);
     };
     if cmd == "run" {
         if let Err(e) = cmd_run(&args[1..]) {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
+    if cmd == "inspect" {
+        if let Err(e) = cmd_inspect(&args[1..]) {
             eprintln!("error: {e}");
             std::process::exit(1);
         }

@@ -151,6 +151,7 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                 cfg.availability = super::AvailabilitySpec::parse(value)
                     .ok_or_else(|| err(line_no, format!("unknown availability {value:?}")))?
             }
+            "trace" => cfg.trace = value == "true" || value == "1",
             "log_dir" => cfg.log_dir = Some(value.into()),
             "verbose" => cfg.verbose = value == "true" || value == "1",
             _ => return Err(err(line_no, format!("unknown key {key:?}"))),

@@ -261,6 +261,15 @@ pub struct ExperimentConfig {
     /// device fraction. Composes with `participation` — cohorts are
     /// sampled from the currently *online* nodes.
     pub availability: AvailabilitySpec,
+    /// Structured tracing (`trace = true | false`): record typed
+    /// per-node train/push/pull/aggregate events stamped on the
+    /// experiment clock and export `trace.jsonl`,
+    /// `trace_chrome.json` (Perfetto-loadable), and `analysis.json`
+    /// (per-round divergence + per-node span shares, the input to
+    /// `fedbench inspect`) into the run's log directory. On by default
+    /// for `fedbench run` (opt out with `--no-trace`); off by default
+    /// here so library embedders pay nothing unasked.
+    pub trace: bool,
     /// Write metrics.csv / events.jsonl here.
     pub log_dir: Option<PathBuf>,
     /// Print per-epoch progress.
@@ -293,6 +302,7 @@ impl Default for ExperimentConfig {
             scheduler: SchedulerKind::Threads,
             participation: 1.0,
             availability: AvailabilitySpec::None,
+            trace: false,
             log_dir: None,
             verbose: false,
         }

@@ -57,6 +57,7 @@ pub mod strategy;
 pub mod sweep;
 pub mod tensor;
 pub mod time;
+pub mod trace;
 pub mod util;
 
 /// Convenient re-exports for examples and binaries.
@@ -76,4 +77,5 @@ pub mod prelude {
     pub use crate::sweep::{run_sweep, SweepReport, SweepSpec};
     pub use crate::tensor::FlatParams;
     pub use crate::time::{Clock, ClockKind, RealClock, VirtualClock};
+    pub use crate::trace::{DivergenceReport, RunSummary, Tracer};
 }

@@ -10,6 +10,31 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+/// One typed value in a structured event — controls how the field is
+/// rendered in `events.jsonl`, so numeric fields land as JSON numbers
+/// (not quoted strings) and downstream tooling can aggregate without
+/// re-parsing.
+pub enum EventField {
+    /// A string field (escaped).
+    Str(String),
+    /// A float field, emitted with Rust's shortest-round-trip `{}`
+    /// formatting; non-finite values degrade to `0` (JSON has no NaN).
+    Num(f64),
+    /// An integer field, emitted exactly (no f64 precision loss).
+    Int(u64),
+}
+
+impl EventField {
+    fn render(&self) -> String {
+        match self {
+            EventField::Str(s) => format!("\"{}\"", escape(s)),
+            EventField::Num(v) if v.is_finite() => format!("{v}"),
+            EventField::Num(_) => "0".to_string(),
+            EventField::Int(v) => format!("{v}"),
+        }
+    }
+}
+
 /// Thread-safe append-only logger for one run.
 pub struct RunLogger {
     dir: PathBuf,
@@ -65,12 +90,22 @@ impl RunLogger {
         Ok(())
     }
 
-    /// Log a structured event as one JSON line.
+    /// Log a structured event as one JSON line, every field a string.
+    /// Prefer [`RunLogger::log_event_typed`] for numeric fields.
     pub fn log_event(&self, kind: &str, fields: &[(&str, String)]) -> Result<()> {
+        let typed: Vec<(&str, EventField)> = fields
+            .iter()
+            .map(|(k, v)| (*k, EventField::Str(v.clone())))
+            .collect();
+        self.log_event_typed(kind, &typed)
+    }
+
+    /// Log a structured event as one JSON line with typed field values.
+    pub fn log_event_typed(&self, kind: &str, fields: &[(&str, EventField)]) -> Result<()> {
         let mut ev = self.events.lock().unwrap();
         let mut line = format!("{{\"event\":\"{}\"", escape(kind));
         for (k, v) in fields {
-            line.push_str(&format!(",\"{}\":\"{}\"", escape(k), escape(v)));
+            line.push_str(&format!(",\"{}\":{}", escape(k), v.render()));
         }
         line.push('}');
         writeln!(ev, "{line}")?;
@@ -79,8 +114,24 @@ impl RunLogger {
     }
 }
 
+/// JSON string-escape: quotes, backslashes, and *every* control
+/// character (`\n`, `\r`, `\t`, and the rest as `\u00XX`) — a field
+/// value can never break the one-line-per-event invariant or produce an
+/// invalid JSON line.
 fn escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -128,6 +179,33 @@ mod tests {
         let parsed = crate::util::json::Json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(parsed.get("event").unwrap().as_str(), Some("node_crash"));
         assert_eq!(parsed.get("msg").unwrap().as_str(), Some("a\"b"));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn typed_events_emit_json_numbers_and_escape_controls() {
+        let dir = tmpdir("typed");
+        let lg = RunLogger::create(&dir).unwrap();
+        lg.log_event_typed(
+            "experiment_done",
+            &[
+                ("node", EventField::Int(u64::MAX)),
+                ("idle", EventField::Num(0.25)),
+                ("bad", EventField::Num(f64::NAN)),
+                ("msg", EventField::Str("a\r\nb\tc\u{1}".into())),
+            ],
+        )
+        .unwrap();
+        let text = fs::read_to_string(dir.join("events.jsonl")).unwrap();
+        let line = text.lines().next().unwrap();
+        // raw JSON text: numbers unquoted, controls escaped in place
+        assert!(line.contains("\"node\":18446744073709551615"), "{line}");
+        assert!(line.contains("\"idle\":0.25"), "{line}");
+        assert!(line.contains("\"bad\":0"), "{line}");
+        assert!(line.contains("a\\r\\nb\\tc\\u0001"), "{line}");
+        let parsed = crate::util::json::Json::parse(line).unwrap();
+        assert_eq!(parsed.get("idle").unwrap().as_f64(), Some(0.25));
+        assert_eq!(parsed.get("msg").unwrap().as_str(), Some("a\r\nb\tc\u{1}"));
         fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -8,7 +8,7 @@ pub mod stats;
 pub mod timeline;
 pub mod traffic;
 
-pub use logger::RunLogger;
+pub use logger::{EventField, RunLogger};
 pub use stats::Summary;
 pub use timeline::{SpanKind, Timeline};
 pub use traffic::TrafficMeter;

@@ -163,6 +163,18 @@ mod tests {
     }
 
     #[test]
+    fn idle_fraction_of_empty_or_zero_span_timeline_is_zero_not_nan() {
+        // empty timeline (a node that never recorded a span — e.g. a
+        // crash at epoch 0 or a fully off-cohort client)
+        let t = Timeline::new(0);
+        assert_eq!(t.idle_fraction(), 0.0);
+        // all spans end at offset zero (instant crash marker)
+        let mut t = Timeline::new(1);
+        t.record(SpanKind::Crashed, ms(0), ms(0));
+        assert_eq!(t.idle_fraction(), 0.0);
+    }
+
+    #[test]
     fn idle_fraction_counts_wait_spans() {
         let mut t = Timeline::new(0);
         t.record(SpanKind::Train, ms(0), ms(6));

@@ -18,7 +18,7 @@ use crate::compress::CodecState;
 use crate::config::ExperimentConfig;
 use crate::data::BatchLoader;
 use crate::metrics::timeline::{SpanKind, Timeline};
-use crate::metrics::RunLogger;
+use crate::metrics::{EventField, RunLogger};
 use crate::protocol::{EpochCtx, EpochStep, FederationProtocol, ProtocolKind};
 use crate::runtime::{ModelBundle, TrainState};
 use crate::sched::{ParticipationPlan, StepOutcome, Task};
@@ -54,6 +54,7 @@ pub struct NodeRunner<'a> {
     codec: CodecState,
     pool: crate::par::ChunkPool,
     step_delay: Duration,
+    tracer: Option<Arc<crate::trace::Tracer>>,
     epoch: usize,
     phase: Phase,
     report: NodeReport,
@@ -76,6 +77,7 @@ impl<'a> NodeRunner<'a> {
         strategy: Box<dyn Strategy>,
         loader: BatchLoader,
         bundle: &'a ModelBundle,
+        tracer: Option<Arc<crate::trace::Tracer>>,
     ) -> Result<NodeRunner<'a>> {
         let params = bundle.init_params(cfg.seed)?;
         let protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
@@ -122,6 +124,7 @@ impl<'a> NodeRunner<'a> {
             protocol,
             pool,
             step_delay,
+            tracer,
             epoch: 0,
             phase: Phase::Train,
             report,
@@ -167,11 +170,11 @@ impl<'a> NodeRunner<'a> {
                             self.report.status =
                                 NodeStatus::Crashed { at_epoch: self.epoch };
                             if let Some(lg) = &self.logger {
-                                let _ = lg.log_event(
+                                let _ = lg.log_event_typed(
                                     "node_crash",
                                     &[
-                                        ("node", self.node_id.to_string()),
-                                        ("epoch", self.epoch.to_string()),
+                                        ("node", EventField::Int(self.node_id as u64)),
+                                        ("epoch", EventField::Int(self.epoch as u64)),
                                     ],
                                 );
                             }
@@ -207,6 +210,7 @@ impl<'a> NodeRunner<'a> {
                     clock: self.clock.as_ref(),
                     codec: &mut self.codec,
                     pool: self.pool,
+                    tracer: self.tracer.as_deref(),
                 };
                 match self.protocol.poll_epoch(&mut pctx, &mut self.state.params)? {
                     EpochStep::Wait { since, timeout } => {
@@ -223,11 +227,11 @@ impl<'a> NodeRunner<'a> {
                             // stall.
                             self.report.status = NodeStatus::Stalled { at_round: round };
                             if let Some(lg) = &self.logger {
-                                let _ = lg.log_event(
+                                let _ = lg.log_event_typed(
                                     "sync_stall",
                                     &[
-                                        ("node", self.node_id.to_string()),
-                                        ("round", round.to_string()),
+                                        ("node", EventField::Int(self.node_id as u64)),
+                                        ("round", EventField::Int(round as u64)),
                                     ],
                                 );
                             }
@@ -271,6 +275,15 @@ impl<'a> NodeRunner<'a> {
             },
         )?;
         self.timeline.record(SpanKind::Train, t_train, clock.now());
+        if let Some(tracer) = &self.tracer {
+            tracer.span(
+                self.node_id,
+                self.epoch as u64,
+                t_train,
+                clock.now(),
+                crate::trace::TraceEventKind::Train,
+            );
+        }
         // divide by the steps actually run, not the configured count: a
         // short epoch (exhausted loader) must not deflate the mean
         let mean_loss = loss_sum / steps_run.max(1) as f64;

@@ -57,6 +57,9 @@ pub struct NodeCtx {
     pub start: Arc<std::sync::Barrier>,
     /// Optional shared run logger (CSV metrics + JSONL events).
     pub logger: Option<Arc<RunLogger>>,
+    /// Optional shared structured tracer ([`crate::trace`]): typed
+    /// train/push/pull/aggregate events stamped on the experiment clock.
+    pub tracer: Option<Arc<crate::trace::Tracer>>,
 }
 
 /// Spawn the node thread.
@@ -116,8 +119,19 @@ fn run_node(ctx: NodeCtx) -> NodeReport {
     // deregisters on every exit path (completion, crash, error, panic),
     // so a dead node never freezes a virtual clock.
     let _participant = ParticipantGuard::adopt(Arc::clone(&ctx.clock));
-    let NodeCtx { node_id, cfg, manifest, store, strategy, loader, clock, plan, start, logger } =
-        ctx;
+    let NodeCtx {
+        node_id,
+        cfg,
+        manifest,
+        store,
+        strategy,
+        loader,
+        clock,
+        plan,
+        start,
+        logger,
+        tracer,
+    } = ctx;
 
     // Engine + bundle are per-thread (the PJRT client is not Send); an
     // unknown model is a hard error here, never a silently wrong default.
@@ -140,6 +154,7 @@ fn run_node(ctx: NodeCtx) -> NodeReport {
         strategy,
         loader,
         &bundle,
+        tracer,
     ) {
         Ok(r) => r,
         Err(e) => return failed_report(node_id, &e),
@@ -212,6 +227,7 @@ mod tests {
             clock,
             start: Arc::new(std::sync::Barrier::new(1)),
             logger: None,
+            tracer: None,
         }
     }
 

@@ -236,6 +236,7 @@ mod tests {
                 clock: clock.as_ref(),
                 codec: &mut codec,
                 pool: crate::par::ChunkPool::sequential(),
+                tracer: None,
             };
             proto.after_epoch(&mut ctx, params).unwrap()
         };

@@ -108,6 +108,12 @@ pub struct EpochCtx<'a> {
     /// bit-identical for any thread count, so `threads` is a pure
     /// wall-clock knob.
     pub pool: ChunkPool,
+    /// Optional structured tracer ([`crate::trace`]). When set, the ctx
+    /// helpers emit typed push/pull/aggregate events (stamped on
+    /// [`EpochCtx::clock`]) as a side effect, so every protocol is traced
+    /// uniformly under both the threaded and the event scheduler. `None`
+    /// costs nothing.
+    pub tracer: Option<&'a crate::trace::Tracer>,
 }
 
 impl EpochCtx<'_> {
@@ -127,6 +133,9 @@ impl EpochCtx<'_> {
             n_examples: self.n_examples,
         };
         let (wire_bytes, stored) = self.codec.encode_for_push(&meta, params, self.pool)?;
+        // Digest what actually lands in the store (the decoded
+        // reconstruction), before the push consumes it.
+        let digest = self.tracer.map(|_| stored.content_hash_pooled(self.pool));
         let seq = self.store.push(PushRequest {
             node_id: self.node_id,
             round,
@@ -136,6 +145,14 @@ impl EpochCtx<'_> {
             params: Arc::new(stored),
         })?;
         self.timeline.traffic.record_push(wire_bytes);
+        if let (Some(tracer), Some(digest)) = (self.tracer, digest) {
+            tracer.instant(
+                self.node_id,
+                round,
+                self.clock.now(),
+                crate::trace::TraceEventKind::Push { wire_bytes, digest },
+            );
+        }
         Ok(seq)
     }
 
@@ -147,6 +164,20 @@ impl EpochCtx<'_> {
         for e in entries {
             self.timeline.traffic.record_pull(e.wire_bytes);
         }
+        if let Some(tracer) = self.tracer {
+            if !entries.is_empty() {
+                let wire_bytes: u64 = entries.iter().map(|e| e.wire_bytes).sum();
+                tracer.instant(
+                    self.node_id,
+                    self.epoch as u64,
+                    self.clock.now(),
+                    crate::trace::TraceEventKind::Pull {
+                        entries: entries.len() as u64,
+                        wire_bytes,
+                    },
+                );
+            }
+        }
     }
 
     /// Feed an adopted aggregate back into the codec as the delta base,
@@ -155,6 +186,16 @@ impl EpochCtx<'_> {
     pub fn adopt_aggregate(&mut self, params: &FlatParams, entries: &[WeightEntry]) {
         let version = entries.iter().map(|e| e.seq).max().unwrap_or(0);
         self.codec.set_base(version, params);
+        if let Some(tracer) = self.tracer {
+            tracer.instant(
+                self.node_id,
+                self.epoch as u64,
+                self.clock.now(),
+                crate::trace::TraceEventKind::Aggregate {
+                    digest: params.content_hash_pooled(self.pool),
+                },
+            );
+        }
     }
 }
 
@@ -372,6 +413,7 @@ pub(crate) mod protocol_tests {
                 clock: self.clock.as_ref(),
                 codec: &mut self.codec,
                 pool: ChunkPool::sequential(),
+                tracer: None,
             };
             self.protocol.after_epoch(&mut ctx, &mut self.params).unwrap()
         }

@@ -50,9 +50,16 @@ pub struct TrialSpec {
     pub seed: u64,
     /// Wire codec for pushes.
     pub compress: CodecKind,
+    /// Kernel pool width (the config `threads` knob): a pure wall-clock
+    /// knob — results are bit-identical for any value.
+    pub threads: usize,
     /// Initial weights per node (the threaded harness uses
     /// `FlatParams(vec![node_id as f32; 4])` so averaging is visible).
     pub init: fn(usize) -> FlatParams,
+    /// Optional structured tracer ([`crate::trace`]): when set, each
+    /// node emits train spans and push/pull/aggregate instants stamped
+    /// on the trial's [`TaskClock`]. `None` (the default) costs nothing.
+    pub tracer: Option<Arc<crate::trace::Tracer>>,
 }
 
 impl TrialSpec {
@@ -70,7 +77,9 @@ impl TrialSpec {
             availability: AvailabilitySpec::None,
             seed: ExperimentConfig::default().seed,
             compress: CodecKind::default(),
+            threads: ExperimentConfig::default().threads,
             init: |node_id| FlatParams(vec![node_id as f32; 4]),
+            tracer: None,
         }
     }
 }
@@ -88,6 +97,8 @@ pub struct SimNodeResult {
     pub params: FlatParams,
     /// Whether the node stalled at a sync barrier.
     pub stalled: bool,
+    /// The node's wire-traffic accounting.
+    pub traffic: crate::metrics::TrafficMeter,
 }
 
 enum Phase {
@@ -111,6 +122,7 @@ struct SimNode {
     phase: Phase,
     stalled: bool,
     finish: Duration,
+    tracer: Option<Arc<crate::trace::Tracer>>,
 }
 
 impl SimNode {
@@ -147,6 +159,15 @@ impl Task for SimNode {
                 self.clock
                     .sleep(self.delay.mul_f64(self.plan.delay_multiplier(self.node_id)));
                 self.timeline.record(SpanKind::Train, t, self.clock.now());
+                if let Some(tracer) = &self.tracer {
+                    tracer.span(
+                        self.node_id,
+                        self.epoch as u64,
+                        t,
+                        self.clock.now(),
+                        crate::trace::TraceEventKind::Train,
+                    );
+                }
                 self.phase = Phase::Federate;
                 StepOutcome::Yield
             }
@@ -164,6 +185,7 @@ impl Task for SimNode {
                     clock: self.clock.as_ref() as &dyn Clock,
                     codec: &mut self.codec,
                     pool: crate::par::ChunkPool::from_config(self.cfg.threads),
+                    tracer: self.tracer.as_deref(),
                 };
                 match self
                     .protocol
@@ -189,6 +211,15 @@ impl Task for SimNode {
 /// Run one trial on the event executor and return per-node results in
 /// node-id order.
 pub fn run_events_trial(spec: &TrialSpec) -> Result<Vec<SimNodeResult>> {
+    run_events_trial_captured(spec).map(|(nodes, _)| nodes)
+}
+
+/// [`run_events_trial`] that also hands back the trial's store, so
+/// callers can replay its round archive through the
+/// [`crate::trace::analyze`] divergence analytics.
+pub fn run_events_trial_captured(
+    spec: &TrialSpec,
+) -> Result<(Vec<SimNodeResult>, Arc<dyn WeightStore>)> {
     let n = spec.delays.len();
     let clock = Arc::new(TaskClock::new());
     let cfg = Arc::new(ExperimentConfig {
@@ -198,6 +229,7 @@ pub fn run_events_trial(spec: &TrialSpec) -> Result<Vec<SimNodeResult>> {
         sync_timeout: spec.sync_timeout,
         seed: spec.seed,
         compress: spec.compress,
+        threads: spec.threads,
         crash: spec.crash.map(|(node, at_epoch)| crate::config::CrashSpec { node, at_epoch }),
         ..Default::default()
     });
@@ -226,6 +258,7 @@ pub fn run_events_trial(spec: &TrialSpec) -> Result<Vec<SimNodeResult>> {
             phase: Phase::Train,
             stalled: false,
             finish: Duration::ZERO,
+            tracer: spec.tracer.clone(),
         })
         .collect();
 
@@ -234,16 +267,18 @@ pub fn run_events_trial(spec: &TrialSpec) -> Result<Vec<SimNodeResult>> {
         nodes.iter_mut().map(|t| t as &mut dyn Task).collect();
     executor.run(&mut tasks)?;
 
-    Ok(nodes
+    let results = nodes
         .into_iter()
         .map(|node| SimNodeResult {
             node_id: node.node_id,
             finish: node.finish,
+            traffic: node.timeline.traffic,
             spans: node.timeline.spans,
             params: node.params,
             stalled: node.stalled,
         })
-        .collect())
+        .collect();
+    Ok((results, store))
 }
 
 #[cfg(test)]

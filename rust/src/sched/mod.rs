@@ -44,7 +44,7 @@ mod participation;
 
 pub use clock::TaskClock;
 pub use executor::{EventExecutor, StepOutcome, Task};
-pub use harness::{run_events_trial, SimNodeResult, TrialSpec};
+pub use harness::{run_events_trial, run_events_trial_captured, SimNodeResult, TrialSpec};
 pub use participation::{AvailabilitySpec, ParticipationPlan};
 
 /// Which node scheduler drives an experiment — the config-level selector

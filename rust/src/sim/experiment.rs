@@ -1,5 +1,6 @@
 //! One end-to-end federated experiment (a single trial).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
@@ -9,7 +10,7 @@ use crate::data::{
     BatchLoader, DataSource, DatasetKind, Partitioner, Split, SynthDataset, TextCorpus,
 };
 use crate::metrics::timeline::{render_ascii, Timeline};
-use crate::metrics::RunLogger;
+use crate::metrics::{EventField, RunLogger};
 use crate::node::{spawn_node, NodeCtx, NodeReport, NodeRunner, NodeStatus};
 use crate::runtime::{Engine, Manifest, ModelBundle, ModelInfo};
 use crate::par::ChunkPool;
@@ -20,6 +21,7 @@ use crate::store::{
 use crate::tensor::flat::weighted_average_pooled;
 use crate::tensor::FlatParams;
 use crate::time::Clock;
+use crate::trace::{compute_divergence, DivergenceReport, NodeSpanSummary, RunSummary, Tracer};
 
 /// Outcome of one experiment run.
 #[derive(Debug)]
@@ -51,6 +53,15 @@ pub struct ExperimentResult {
     pub mean_idle_fraction: f64,
     /// True iff every node ran all its epochs.
     pub all_completed: bool,
+    /// Round-history divergence analytics computed from the store's
+    /// round archive (`None` when tracing was off or no round had
+    /// archived client updates). Feeds the sweep report's divergence
+    /// column and the `fedbench inspect` tables.
+    pub divergence: Option<DivergenceReport>,
+    /// Directory the structured trace was exported into
+    /// (`trace.jsonl` + `trace_chrome.json` + `analysis.json`); `None`
+    /// when tracing was off or no `log_dir` was configured.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl ExperimentResult {
@@ -69,6 +80,33 @@ impl ExperimentResult {
             total.merge(&r.timeline.traffic);
         }
         total
+    }
+
+    /// Distill this result into the [`RunSummary`] the trace subsystem
+    /// renders and exports — the *same* numbers `fedbench inspect`
+    /// reads back from `analysis.json`, so the live `fedbench run`
+    /// summary and the post-hoc one can never disagree.
+    pub fn run_summary(&self, run_name: &str) -> RunSummary {
+        RunSummary {
+            run_name: run_name.to_string(),
+            n_nodes: self.reports.len(),
+            wall_clock_s: self.wall_clock_s,
+            global_digest: self.global_hash,
+            store_pushes: self.store_pushes,
+            mean_idle_fraction: self.mean_idle_fraction,
+            all_completed: self.all_completed,
+            nodes: self
+                .reports
+                .iter()
+                .map(|r| {
+                    NodeSpanSummary::from_timeline(
+                        &r.timeline,
+                        r.status == NodeStatus::Completed,
+                    )
+                })
+                .collect(),
+            divergence: self.divergence.clone(),
+        }
     }
 }
 
@@ -200,6 +238,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         cfg.seed,
         cfg.n_nodes,
     ));
+    let tracer = cfg.trace.then(|| Arc::new(Tracer::new(cfg.n_nodes)));
 
     let t0 = clock.now();
     let start = Arc::new(std::sync::Barrier::new(cfg.n_nodes));
@@ -216,6 +255,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
             plan: Arc::clone(&plan),
             start: Arc::clone(&start),
             logger: logger.clone(),
+            tracer: tracer.clone(),
         };
         handles.push(spawn_node(ctx));
     }
@@ -226,7 +266,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
     // on their own threads)
     let engine = Engine::new()?;
     let bundle = ModelBundle::load(&engine, &info)?;
-    assemble_result(cfg, &bundle, &test_loader, &store, &logger, reports, wall_clock_s)
+    assemble_result(cfg, &bundle, &test_loader, &store, &logger, &tracer, reports, wall_clock_s)
 }
 
 /// The `scheduler = events` path: every node is a [`NodeRunner`] task on
@@ -262,6 +302,7 @@ fn run_experiment_events(cfg: &ExperimentConfig, info: &ModelInfo) -> Result<Exp
         cfg.seed,
         cfg.n_nodes,
     ));
+    let tracer = cfg.trace.then(|| Arc::new(Tracer::new(cfg.n_nodes)));
     let t0 = clock.now();
     let mut runners: Vec<NodeRunner> = loaders
         .into_iter()
@@ -277,6 +318,7 @@ fn run_experiment_events(cfg: &ExperimentConfig, info: &ModelInfo) -> Result<Exp
                 cfg.strategy.build(),
                 loader,
                 &bundle,
+                tracer.clone(),
             )
         })
         .collect::<Result<_>>()?;
@@ -289,18 +331,20 @@ fn run_experiment_events(cfg: &ExperimentConfig, info: &ModelInfo) -> Result<Exp
 
     let reports: Vec<NodeReport> = runners.into_iter().map(NodeRunner::into_report).collect();
     let wall_clock_s = clock.now().saturating_sub(t0).as_secs_f64();
-    assemble_result(cfg, &bundle, &test_loader, &store, &logger, reports, wall_clock_s)
+    assemble_result(cfg, &bundle, &test_loader, &store, &logger, &tracer, reports, wall_clock_s)
 }
 
 /// Shared result assembly: aggregate the global model, evaluate it, fold
 /// the per-node reports into the experiment-level metrics. Identical for
 /// both schedulers, so the two paths cannot drift apart.
+#[allow(clippy::too_many_arguments)] // one internal seam shared by both scheduler paths
 fn assemble_result(
     cfg: &ExperimentConfig,
     bundle: &ModelBundle,
     test_loader: &BatchLoader,
     store: &Arc<dyn WeightStore>,
     logger: &Option<Arc<RunLogger>>,
+    tracer: &Option<Arc<Tracer>>,
     reports: Vec<NodeReport>,
     wall_clock_s: f64,
 ) -> Result<ExperimentResult> {
@@ -332,26 +376,43 @@ fn assemble_result(
     let batches = test_loader.full_batches();
     let (final_loss, final_accuracy) = bundle.evaluate(&global, &batches)?;
 
+    // .max(1) so a (hypothetical) zero-report result yields 0.0, not NaN
     let mean_idle_fraction = reports
         .iter()
         .map(|r| r.timeline.idle_fraction())
         .sum::<f64>()
-        / reports.len() as f64;
+        / reports.len().max(1) as f64;
     let all_completed = reports.iter().all(|r| r.status == NodeStatus::Completed);
 
+    // ---- round-history analytics: replay the store's round archive
+    // into per-round divergence (client update vs round aggregate),
+    // with the same deterministic pooled kernels as aggregation
+    let divergence = if cfg.trace {
+        compute_divergence(store.as_ref(), cfg.epochs as u64, pool)?
+    } else {
+        None
+    };
+
     if let Some(lg) = &logger {
-        let _ = lg.log_event(
+        let _ = lg.log_event_typed(
             "experiment_done",
             &[
-                ("accuracy", format!("{final_accuracy:.4}")),
-                ("loss", format!("{final_loss:.4}")),
-                ("wall_clock_s", format!("{wall_clock_s:.2}")),
-                ("global_hash", format!("{global_hash:016x}")),
+                ("accuracy", EventField::Num(final_accuracy)),
+                ("loss", EventField::Num(final_loss)),
+                ("wall_clock_s", EventField::Num(wall_clock_s)),
+                ("global_hash", EventField::Str(format!("{global_hash:016x}"))),
+                (
+                    "mean_divergence",
+                    match divergence.as_ref().and_then(|d| d.mean_l2()) {
+                        Some(l2) => EventField::Num(l2),
+                        None => EventField::Str("none".into()),
+                    },
+                ),
             ],
         );
     }
 
-    Ok(ExperimentResult {
+    let mut result = ExperimentResult {
         final_accuracy,
         final_loss,
         wall_clock_s,
@@ -360,7 +421,21 @@ fn assemble_result(
         mean_idle_fraction,
         all_completed,
         reports,
-    })
+        divergence,
+        trace_dir: None,
+    };
+
+    // ---- trace export (trace.jsonl + trace_chrome.json + analysis.json)
+    // into the run directory; `fedbench inspect` reads these back, and
+    // `fedbench run` prints the very same RunSummary
+    if let (Some(lg), Some(tr)) = (&logger, &tracer) {
+        let timelines: Vec<&Timeline> =
+            result.reports.iter().map(|r| &r.timeline).collect();
+        let summary = result.run_summary(&cfg.run_name());
+        result.trace_dir =
+            Some(crate::trace::export_run(lg.dir(), tr, &timelines, &summary)?);
+    }
+    Ok(result)
 }
 
 trait NodeHandleExt {

@@ -99,6 +99,12 @@ pub trait WeightStore: Send + Sync {
     fn latest_per_node(&self) -> Result<Vec<WeightEntry>>;
 
     /// All entries deposited for a specific sync round.
+    ///
+    /// Retention contract: the in-process backends keep *every*
+    /// deposited entry until [`WeightStore::clear`], so this doubles as
+    /// the post-hoc round archive behind the divergence analytics
+    /// ([`crate::trace::compute_divergence`]) — re-pushed rounds return
+    /// every revision and the analyzer keeps each node's latest.
     fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>>;
 
     /// Cheap change-detection hash over (node, seq) pairs. A client skips

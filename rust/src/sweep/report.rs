@@ -27,6 +27,10 @@ pub struct TrialMetrics {
     pub mb_pulled: f64,
     /// Whether every node ran all its epochs.
     pub all_completed: bool,
+    /// Mean per-round L2 divergence of client updates from the round
+    /// aggregate ([`crate::trace::DivergenceReport::mean_l2`]); `None`
+    /// when the trial ran untraced (`divergence` spec key off).
+    pub mean_divergence: Option<f64>,
 }
 
 /// Outcome of one scheduled trial (success metrics or the error text).
@@ -70,6 +74,11 @@ pub struct CellSummary {
     pub mb_pushed: Option<Summary>,
     /// Pulled-megabytes summary over successful trials.
     pub mb_pulled: Option<Summary>,
+    /// Mean-divergence summary over successful *traced* trials (`None`
+    /// when the cell ran untraced — the column renders only when some
+    /// cell has data, so untraced sweep tables are byte-identical to
+    /// before the column existed).
+    pub divergence: Option<Summary>,
     /// First error message, when any trial failed.
     pub first_error: Option<String>,
 }
@@ -113,6 +122,7 @@ impl SweepReport {
                 wall_clock: None,
                 mb_pushed: None,
                 mb_pulled: None,
+                divergence: None,
                 first_error: None,
             })
             .collect();
@@ -122,6 +132,7 @@ impl SweepReport {
         let mut walls: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut pushed: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut pulled: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        let mut divs: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut n_failures = 0;
         for o in outcomes {
             let c = &mut cells[o.cell_index];
@@ -133,6 +144,9 @@ impl SweepReport {
                     walls[o.cell_index].push(m.wall_clock_s);
                     pushed[o.cell_index].push(m.mb_pushed);
                     pulled[o.cell_index].push(m.mb_pulled);
+                    if let Some(d) = m.mean_divergence {
+                        divs[o.cell_index].push(d);
+                    }
                 }
                 Err(e) => {
                     c.failures += 1;
@@ -150,6 +164,9 @@ impl SweepReport {
                 c.wall_clock = Some(Summary::of(&walls[i]));
                 c.mb_pushed = Some(Summary::of(&pushed[i]));
                 c.mb_pulled = Some(Summary::of(&pulled[i]));
+                if !divs[i].is_empty() {
+                    c.divergence = Some(Summary::of(&divs[i]));
+                }
             }
         }
 
@@ -202,12 +219,24 @@ impl SweepReport {
                 String::new()
             }
         );
+        // The divergence column renders only when some cell has data, so
+        // untraced sweep tables stay byte-identical to the pre-column
+        // format (the timing/determinism/robust goldens pin it).
+        let has_div = self.cells.iter().any(|c| c.divergence.is_some());
         out.push_str(
-            "| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |\n",
+            "| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |",
         );
+        if has_div {
+            out.push_str(" mean div L2 |");
+        }
+        out.push('\n');
         out.push_str(
-            "|------|----------|------|-------|----------|---------|------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|\n",
+            "|------|----------|------|-------|----------|---------|------|-----------|--------|-----------------------|-----------|--------------|-------------------|--------------|-----------|-----------|",
         );
+        if has_div {
+            out.push_str("-------------|");
+        }
+        out.push('\n');
         for c in &self.cells {
             let trials = if c.failures > 0 {
                 format!("{}/{}", c.n_trials - c.failures, c.n_trials)
@@ -229,7 +258,7 @@ impl SweepReport {
                     (format!("ERR({e})"), "-".into(), "-".into())
                 }
             };
-            let _ = writeln!(
+            let _ = write!(
                 out,
                 "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
                 c.cell.mode.label(),
@@ -249,6 +278,15 @@ impl SweepReport {
                 mb(&c.mb_pushed),
                 mb(&c.mb_pulled)
             );
+            if has_div {
+                let div = c
+                    .divergence
+                    .as_ref()
+                    .map(|s| format!("{:.4}", s.mean))
+                    .unwrap_or_else(|| "-".into());
+                let _ = write!(out, " {div} |");
+            }
+            out.push('\n');
         }
         out
     }
@@ -259,7 +297,7 @@ impl SweepReport {
             "model,mode,strategy,skew,n_nodes,compress,threads,participation,adversary,\
              trials,failures,\
              acc_mean,acc_std,acc_clean,acc_attacked,loss_mean,loss_std,wall_mean,wall_std,\
-             mb_pushed_mean,mb_pulled_mean\n",
+             mb_pushed_mean,mb_pulled_mean,divergence_mean\n",
         );
         let num = |s: &Option<Summary>, f: fn(&Summary) -> f64| -> String {
             s.as_ref().map(|x| format!("{}", f(x))).unwrap_or_default()
@@ -270,7 +308,7 @@ impl SweepReport {
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
                 c.cell.strategy.label(),
@@ -292,6 +330,7 @@ impl SweepReport {
                 num(&c.wall_clock, |s| s.std),
                 num(&c.mb_pushed, |s| s.mean),
                 num(&c.mb_pulled, |s| s.mean),
+                num(&c.divergence, |s| s.mean),
             );
         }
         out
@@ -329,8 +368,17 @@ mod tests {
                 mb_pushed: 1.5,
                 mb_pulled: 3.0,
                 all_completed: true,
+                mean_divergence: None,
             }),
         }
+    }
+
+    fn outcome_with_divergence(cell: usize, i: usize, acc: f64, div: f64) -> TrialOutcome {
+        let mut o = outcome(cell, i, acc);
+        if let Ok(m) = &mut o.result {
+            m.mean_divergence = Some(div);
+        }
+        o
     }
 
     fn failure(cell: usize, i: usize, msg: &str) -> TrialOutcome {
@@ -455,6 +503,43 @@ mod tests {
         assert_eq!(r.cells[0].acc_clean, None, "no clean sibling in the grid");
         assert_eq!(r.cells[0].acc_attacked, Some(0.4));
         assert!(r.to_markdown().contains("| - | 0.400 |"));
+    }
+
+    #[test]
+    fn divergence_column_renders_only_when_some_cell_has_data() {
+        let spec = two_cell_spec();
+        // untraced: no divergence column anywhere (goldens pin this shape)
+        let md = SweepReport::build(
+            &spec,
+            &[outcome(0, 0, 0.9), outcome(1, 1, 0.5)],
+            1,
+            1.0,
+        )
+        .to_markdown();
+        assert!(!md.contains("mean div L2"), "{md}");
+        assert!(md.lines().nth(2).unwrap().ends_with("| MB pulled |"), "{md}");
+        // traced: column appears, untraced cells render '-'
+        let r = SweepReport::build(
+            &spec,
+            &[
+                outcome_with_divergence(0, 0, 0.9, 0.125),
+                outcome_with_divergence(0, 1, 0.9, 0.375),
+                outcome(1, 2, 0.5),
+            ],
+            1,
+            1.0,
+        );
+        assert!((r.cells[0].divergence.unwrap().mean - 0.25).abs() < 1e-12);
+        assert!(r.cells[1].divergence.is_none());
+        let md = r.to_markdown();
+        assert!(md.contains("| MB pushed | MB pulled | mean div L2 |"), "{md}");
+        assert!(md.contains("| 0.2500 |"), "{md}");
+        assert!(md.lines().last().unwrap().ends_with("| - |"), "{md}");
+        let csv = r.to_csv();
+        assert!(csv.contains("mb_pulled_mean,divergence_mean"), "{csv}");
+        let cols = csv.lines().nth(1).unwrap().split(',').count();
+        assert_eq!(cols, csv.lines().next().unwrap().split(',').count());
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0.25"), "{csv}");
     }
 
     #[test]

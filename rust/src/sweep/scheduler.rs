@@ -102,6 +102,10 @@ where
                             mb_pushed: traffic.mb_pushed(),
                             mb_pulled: traffic.mb_pulled(),
                             all_completed: res.all_completed,
+                            mean_divergence: res
+                                .divergence
+                                .as_ref()
+                                .and_then(|d| d.mean_l2()),
                         })
                     }
                     Ok(Err(e)) => Err(format!("{e:#}")),
@@ -167,6 +171,8 @@ mod tests {
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: true,
+            divergence: None,
+            trace_dir: None,
         }
     }
 

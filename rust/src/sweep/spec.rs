@@ -167,8 +167,10 @@ impl SweepSpec {
     /// `seed`, `store`, `latency`, `sync_timeout_s`, `clock` (`"virtual"`
     /// runs every trial on its own simulated clock — straggler/latency
     /// grids at CPU speed, deterministic per-cell `wall_clock_s`),
-    /// `log_dir`, `verbose`. Scheduler width: `jobs`. Unknown keys are
-    /// errors (typo protection).
+    /// `log_dir`, `verbose`, `divergence` (bool: trace every trial and
+    /// add the `mean div L2` report column — see [`crate::trace`]).
+    /// Scheduler width: `jobs`. Unknown keys are errors (typo
+    /// protection).
     pub fn parse_json(text: &str) -> Result<SweepSpec> {
         let j = Json::parse(text).map_err(|e| anyhow!("sweep spec: {e}"))?;
         let obj = j
@@ -180,7 +182,7 @@ impl SweepSpec {
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
             "modes", "strategies", "skews", "n_nodes", "compress", "threads", "seeds",
             "adversary", "robust", "trials", "jobs", "participation", "availability",
-            "scheduler",
+            "scheduler", "divergence",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -243,6 +245,11 @@ impl SweepSpec {
             base.verbose = v
                 .as_bool()
                 .ok_or_else(|| anyhow!("sweep spec: verbose must be a bool"))?;
+        }
+        if let Some(v) = obj.get("divergence") {
+            base.trace = v
+                .as_bool()
+                .ok_or_else(|| anyhow!("sweep spec: divergence must be a bool"))?;
         }
 
         let modes = match obj.get("modes") {
@@ -800,6 +807,16 @@ mod tests {
         assert_eq!(spec.base.clock, ClockKind::Real);
         assert!(SweepSpec::parse_json(r#"{"clock": "sundial"}"#).is_err());
         assert!(SweepSpec::parse_json(r#"{"clock": 3}"#).is_err());
+    }
+
+    #[test]
+    fn divergence_key_enables_tracing_on_the_base_config() {
+        let spec = SweepSpec::parse_json(r#"{"divergence": true}"#).unwrap();
+        assert!(spec.base.trace);
+        spec.expand().unwrap().iter().for_each(|t| assert!(t.cfg.trace));
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert!(!spec.base.trace, "tracing stays opt-in for sweeps");
+        assert!(SweepSpec::parse_json(r#"{"divergence": "yes"}"#).is_err());
     }
 
     #[test]

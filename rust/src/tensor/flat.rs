@@ -184,6 +184,61 @@ pub fn weighted_average_pooled(
     out
 }
 
+/// Deterministic chunked dot product `Σ a_i · b_i` in `f64`: per-chunk
+/// partial sums are computed on `pool` over fixed [`PAR_CHUNK`]-wide
+/// chunks (order-preserving [`ChunkPool::map`]) and combined
+/// sequentially in chunk order, so the result is bit-identical for any
+/// thread count. This is the kernel behind the round-divergence
+/// analytics in [`crate::trace`].
+pub fn dot_pooled(a: &FlatParams, b: &FlatParams, pool: ChunkPool) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let items: Vec<(&[f32], &[f32])> =
+        a.0.chunks(PAR_CHUNK).zip(b.0.chunks(PAR_CHUNK)).collect();
+    let partials = pool.map(items, |_, (xa, xb)| {
+        let mut acc = 0.0f64;
+        for (x, y) in xa.iter().zip(xb) {
+            acc += (*x as f64) * (*y as f64);
+        }
+        acc
+    });
+    partials.into_iter().sum()
+}
+
+/// Sequential form of [`dot_pooled`] (bit-identical).
+pub fn dot(a: &FlatParams, b: &FlatParams) -> f64 {
+    dot_pooled(a, b, ChunkPool::sequential())
+}
+
+/// Deterministic chunked squared L2 distance `Σ (a_i - b_i)²` in `f64`,
+/// with the same fixed-chunk partial-sum scheme as [`dot_pooled`] —
+/// bit-identical for any thread count.
+pub fn sq_l2_diff_pooled(a: &FlatParams, b: &FlatParams, pool: ChunkPool) -> f64 {
+    assert_eq!(a.len(), b.len(), "l2 length mismatch");
+    let items: Vec<(&[f32], &[f32])> =
+        a.0.chunks(PAR_CHUNK).zip(b.0.chunks(PAR_CHUNK)).collect();
+    let partials = pool.map(items, |_, (xa, xb)| {
+        let mut acc = 0.0f64;
+        for (x, y) in xa.iter().zip(xb) {
+            let d = (*x as f64) - (*y as f64);
+            acc += d * d;
+        }
+        acc
+    });
+    partials.into_iter().sum()
+}
+
+/// Cosine similarity of `a` and `b` computed with the deterministic
+/// chunked kernels; defined as `0.0` when either vector has zero norm
+/// (no NaN ever escapes into reports or exported JSON).
+pub fn cosine_pooled(a: &FlatParams, b: &FlatParams, pool: ChunkPool) -> f64 {
+    let na = dot_pooled(a, a, pool).sqrt();
+    let nb = dot_pooled(b, b, pool).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot_pooled(a, b, pool) / (na * nb)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +355,51 @@ mod tests {
         assert_eq!(a.content_hash(), a.content_hash_pooled(ChunkPool::new(4)));
         b.0[0] = 1.0001;
         assert_ne!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn dot_and_l2_hand_values() {
+        let a = fp(&[1.0, 2.0, 3.0]);
+        let b = fp(&[4.0, 5.0, 6.0]);
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(sq_l2_diff_pooled(&a, &b, ChunkPool::sequential()), 27.0);
+        assert_eq!(cosine_pooled(&a, &a, ChunkPool::sequential()), 1.0);
+        // zero-norm guard: never NaN
+        let z = fp(&[0.0, 0.0, 0.0]);
+        assert_eq!(cosine_pooled(&z, &b, ChunkPool::sequential()), 0.0);
+        assert_eq!(cosine_pooled(&a, &z, ChunkPool::sequential()), 0.0);
+    }
+
+    /// The divergence kernels share the determinism contract: f64 bit
+    /// identity between sequential and pooled forms at any thread count,
+    /// across chunk-straddling sizes.
+    #[test]
+    fn pooled_dot_and_l2_match_sequential_bitwise() {
+        for n in [1usize, 1000, PAR_CHUNK, PAR_CHUNK + 1, 3 * PAR_CHUNK + 17] {
+            let a = FlatParams((0..n).map(|i| (i as f32 * 0.0137).sin() * 0.8).collect());
+            let b = FlatParams((0..n).map(|i| (i as f32 * 0.0093).cos() * 0.6).collect());
+            let dot_ref = dot(&a, &b);
+            let l2_ref = sq_l2_diff_pooled(&a, &b, ChunkPool::sequential());
+            let cos_ref = cosine_pooled(&a, &b, ChunkPool::sequential());
+            for threads in [2usize, 8] {
+                let pool = ChunkPool::new(threads);
+                assert_eq!(
+                    dot_pooled(&a, &b, pool).to_bits(),
+                    dot_ref.to_bits(),
+                    "dot n={n} threads={threads}"
+                );
+                assert_eq!(
+                    sq_l2_diff_pooled(&a, &b, pool).to_bits(),
+                    l2_ref.to_bits(),
+                    "l2 n={n} threads={threads}"
+                );
+                assert_eq!(
+                    cosine_pooled(&a, &b, pool).to_bits(),
+                    cos_ref.to_bits(),
+                    "cosine n={n} threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

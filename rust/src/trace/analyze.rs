@@ -1,0 +1,339 @@
+//! Round-history analytics over the store's round archive.
+//!
+//! The in-process stores' `EntryLog` retains **every** deposited entry
+//! (nothing is evicted), and
+//! [`crate::store::WeightStore::entries_for_round`] serves them back per
+//! round — a post-hoc round archive with no extra retention machinery.
+//! [`compute_divergence`] replays that archive: for each round it
+//! re-derives the round aggregate (the same examples-weighted average
+//! the clients computed) and measures every client update against it
+//! (L2 distance and cosine similarity), then builds a pairwise cosine
+//! matrix over the final round's clients and clusters them greedily at a
+//! similarity threshold. Every kernel is the deterministic chunked
+//! [`crate::tensor::flat`] arithmetic, so all numbers — and therefore
+//! the rendered tables and exported JSON — are bit-identical across
+//! schedulers and thread counts.
+
+use anyhow::Result;
+
+use crate::par::ChunkPool;
+use crate::store::{WeightEntry, WeightStore};
+use crate::tensor::flat::{
+    cosine_pooled, sq_l2_diff_pooled, weighted_average_pooled, FlatParams,
+};
+
+/// Greedy clustering joins a client to a cluster when its cosine to the
+/// cluster representative is at least this.
+pub const DEFAULT_CLUSTER_THRESHOLD: f64 = 0.9;
+
+/// Pairwise matrix + clustering are gated to fleets of at most this many
+/// distinct final-round clients (the matrix is quadratic).
+pub const PAIRWISE_MAX_NODES: usize = 64;
+
+/// One client's distance to its round's aggregate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientDivergence {
+    /// The client.
+    pub node_id: usize,
+    /// L2 distance of the client's deposited update to the round
+    /// aggregate.
+    pub l2: f64,
+    /// Cosine similarity of the client's update to the round aggregate
+    /// (0.0 for a zero-norm vector — never NaN).
+    pub cosine: f64,
+}
+
+/// Divergence of every client against one round's aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundDivergence {
+    /// The archived round.
+    pub round: u64,
+    /// Per-client rows, sorted by node id.
+    pub clients: Vec<ClientDivergence>,
+    /// Mean of the client L2 distances.
+    pub mean_l2: f64,
+    /// Mean of the client cosines.
+    pub mean_cosine: f64,
+}
+
+/// The full round-history analytics record of one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DivergenceReport {
+    /// Non-empty archived rounds, in round order.
+    pub rounds: Vec<RoundDivergence>,
+    /// Node ids indexing [`DivergenceReport::pairwise_cosine`] (the final
+    /// archived round's clients), empty when the pairwise pass was
+    /// skipped.
+    pub pairwise_nodes: Vec<usize>,
+    /// Pairwise cosine-similarity matrix over the final round's client
+    /// updates; `None` when that round had more than
+    /// [`PAIRWISE_MAX_NODES`] clients.
+    pub pairwise_cosine: Option<Vec<Vec<f64>>>,
+    /// Greedy threshold clusters over the final round (each inner vec is
+    /// one cluster's node ids, in id order).
+    pub clusters: Vec<Vec<usize>>,
+    /// The similarity threshold the clustering used.
+    pub cluster_threshold: f64,
+}
+
+impl DivergenceReport {
+    /// Mean over all archived rounds of the per-round mean client L2 —
+    /// the sweep report's `divergence` column.
+    pub fn mean_l2(&self) -> Option<f64> {
+        if self.rounds.is_empty() {
+            return None;
+        }
+        Some(self.rounds.iter().map(|r| r.mean_l2).sum::<f64>() / self.rounds.len() as f64)
+    }
+
+    /// Render the per-round divergence table, each client's drift
+    /// trajectory, and the final-round cosine clusters.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "per-round divergence (client update vs round aggregate):\nround | clients | mean L2 | mean cos\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{:>5} | {:>7} | {:>10.6} | {:>8.6}\n",
+                r.round,
+                r.clients.len(),
+                r.mean_l2,
+                r.mean_cosine
+            ));
+        }
+        // drift trajectories: one row per client that appears anywhere
+        let mut ids: Vec<usize> = Vec::new();
+        for r in &self.rounds {
+            for c in &r.clients {
+                if !ids.contains(&c.node_id) {
+                    ids.push(c.node_id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        if !ids.is_empty() {
+            out.push_str("\nclient drift (L2 per round, `-` = not archived):\n");
+            for id in ids {
+                let cells: Vec<String> = self
+                    .rounds
+                    .iter()
+                    .map(|r| {
+                        r.clients
+                            .iter()
+                            .find(|c| c.node_id == id)
+                            .map(|c| format!("{:.6}", c.l2))
+                            .unwrap_or_else(|| "-".to_string())
+                    })
+                    .collect();
+                out.push_str(&format!("node {:>3}: {}\n", id, cells.join(" ")));
+            }
+        }
+        if let Some(m) = &self.pairwise_cosine {
+            out.push_str(&format!(
+                "\npairwise cosine, final round (nodes {:?}):\n",
+                self.pairwise_nodes
+            ));
+            for row in m {
+                let cells: Vec<String> = row.iter().map(|v| format!("{v:>7.4}")).collect();
+                out.push_str(&format!("  {}\n", cells.join(" ")));
+            }
+        }
+        if !self.clusters.is_empty() {
+            out.push_str(&format!(
+                "cosine clusters (threshold {}): {:?}\n",
+                self.cluster_threshold, self.clusters
+            ));
+        }
+        out
+    }
+}
+
+/// Latest entry per node in a round's archive, sorted by node id.
+fn round_roster(mut entries: Vec<WeightEntry>) -> Vec<WeightEntry> {
+    entries.sort_by_key(|e| (e.node_id, e.seq));
+    let mut roster: Vec<WeightEntry> = Vec::new();
+    for e in entries {
+        match roster.last_mut() {
+            Some(last) if last.node_id == e.node_id => *last = e,
+            _ => roster.push(e),
+        }
+    }
+    roster
+}
+
+/// Greedy threshold clustering: walk clients in node-id order; join the
+/// first cluster whose *representative* (first member) is at least
+/// `threshold`-cosine-similar, else open a new cluster. Deterministic by
+/// construction.
+fn greedy_clusters(
+    nodes: &[usize],
+    params: &[&FlatParams],
+    threshold: f64,
+    pool: ChunkPool,
+) -> Vec<Vec<usize>> {
+    let mut clusters: Vec<Vec<usize>> = Vec::new();
+    let mut reps: Vec<usize> = Vec::new(); // index into `params` per cluster
+    for (i, &id) in nodes.iter().enumerate() {
+        let mut joined = false;
+        for (c, &rep) in reps.iter().enumerate() {
+            if cosine_pooled(params[i], params[rep], pool) >= threshold {
+                clusters[c].push(id);
+                joined = true;
+                break;
+            }
+        }
+        if !joined {
+            clusters.push(vec![id]);
+            reps.push(i);
+        }
+    }
+    clusters
+}
+
+/// Replay the store's round archive into a [`DivergenceReport`],
+/// scanning rounds `0..rounds`. Returns `None` when no round deposited
+/// anything (e.g. `mode = local`). All arithmetic runs on `pool`'s
+/// deterministic chunked kernels.
+pub fn compute_divergence(
+    store: &dyn WeightStore,
+    rounds: u64,
+    pool: ChunkPool,
+) -> Result<Option<DivergenceReport>> {
+    let mut report_rounds = Vec::new();
+    let mut final_roster: Vec<WeightEntry> = Vec::new();
+    for round in 0..rounds {
+        let roster = round_roster(store.entries_for_round(round)?);
+        if roster.is_empty() {
+            continue;
+        }
+        let dim = roster[0].params.len();
+        if roster.iter().any(|e| e.params.len() != dim) {
+            continue; // heterogeneous archive (shouldn't happen) — skip
+        }
+        let total: u64 = roster.iter().map(|e| e.n_examples).sum();
+        let weights: Vec<f32> = roster
+            .iter()
+            .map(|e| {
+                if total == 0 {
+                    1.0 / roster.len() as f32
+                } else {
+                    e.n_examples as f32 / total as f32
+                }
+            })
+            .collect();
+        let refs: Vec<&FlatParams> = roster.iter().map(|e| e.params.as_ref()).collect();
+        let aggregate = weighted_average_pooled(&refs, &weights, pool);
+        let clients: Vec<ClientDivergence> = roster
+            .iter()
+            .map(|e| ClientDivergence {
+                node_id: e.node_id,
+                l2: sq_l2_diff_pooled(e.params.as_ref(), &aggregate, pool).sqrt(),
+                cosine: cosine_pooled(e.params.as_ref(), &aggregate, pool),
+            })
+            .collect();
+        let n = clients.len() as f64;
+        report_rounds.push(RoundDivergence {
+            round,
+            mean_l2: clients.iter().map(|c| c.l2).sum::<f64>() / n,
+            mean_cosine: clients.iter().map(|c| c.cosine).sum::<f64>() / n,
+            clients,
+        });
+        final_roster = roster;
+    }
+    if report_rounds.is_empty() {
+        return Ok(None);
+    }
+    let (pairwise_nodes, pairwise_cosine, clusters) =
+        if final_roster.len() <= PAIRWISE_MAX_NODES {
+            let nodes: Vec<usize> = final_roster.iter().map(|e| e.node_id).collect();
+            let refs: Vec<&FlatParams> =
+                final_roster.iter().map(|e| e.params.as_ref()).collect();
+            let matrix: Vec<Vec<f64>> = refs
+                .iter()
+                .map(|a| refs.iter().map(|b| cosine_pooled(a, b, pool)).collect())
+                .collect();
+            let clusters = greedy_clusters(&nodes, &refs, DEFAULT_CLUSTER_THRESHOLD, pool);
+            (nodes, Some(matrix), clusters)
+        } else {
+            (Vec::new(), None, Vec::new())
+        };
+    Ok(Some(DivergenceReport {
+        rounds: report_rounds,
+        pairwise_nodes,
+        pairwise_cosine,
+        clusters,
+        cluster_threshold: DEFAULT_CLUSTER_THRESHOLD,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{MemoryStore, PushRequest};
+    use std::sync::Arc;
+
+    fn push(store: &MemoryStore, node_id: usize, round: u64, xs: Vec<f32>, n_examples: u64) {
+        store
+            .push(PushRequest {
+                node_id,
+                round,
+                epoch: round,
+                n_examples,
+                wire_bytes: (xs.len() * 4) as u64,
+                params: Arc::new(FlatParams(xs)),
+            })
+            .unwrap();
+    }
+
+    /// Hand-checkable archive: clients at [0;4] and [2;4] with equal
+    /// weights average to [1;4]; each client is L2 = 2 away; the zero
+    /// vector's cosine is defined 0, the other's is exactly 1.
+    #[test]
+    fn divergence_hand_values() {
+        let store = MemoryStore::new();
+        push(&store, 0, 0, vec![0.0; 4], 100);
+        push(&store, 1, 0, vec![2.0; 4], 100);
+        let rep = compute_divergence(&store, 1, ChunkPool::sequential())
+            .unwrap()
+            .expect("archive is non-empty");
+        assert_eq!(rep.rounds.len(), 1);
+        let r = &rep.rounds[0];
+        assert_eq!(r.round, 0);
+        assert_eq!(r.clients.len(), 2);
+        assert_eq!(r.clients[0].l2, 2.0);
+        assert_eq!(r.clients[1].l2, 2.0);
+        assert_eq!(r.clients[0].cosine, 0.0, "zero vector cosine is defined 0");
+        assert_eq!(r.clients[1].cosine, 1.0);
+        assert_eq!(r.mean_l2, 2.0);
+        // pairwise: 2 clients, identical-direction diagonal
+        let m = rep.pairwise_cosine.as_ref().unwrap();
+        assert_eq!(m[1][1], 1.0);
+        assert_eq!(m[0][1], 0.0);
+        // zero vector opens its own cluster
+        assert_eq!(rep.clusters, vec![vec![0], vec![1]]);
+        assert!(rep.render().contains("round | clients"));
+        assert!(!rep.render().contains("NaN"));
+    }
+
+    #[test]
+    fn empty_archive_yields_none() {
+        let store = MemoryStore::new();
+        assert!(compute_divergence(&store, 4, ChunkPool::sequential()).unwrap().is_none());
+    }
+
+    /// A re-pushed round keeps only the node's latest entry, and the
+    /// numbers are bit-identical across thread counts.
+    #[test]
+    fn roster_dedups_and_pool_is_bit_identical() {
+        let store = MemoryStore::new();
+        push(&store, 0, 0, vec![1.0, 0.0, 3.0, -1.0], 50);
+        push(&store, 1, 0, vec![0.5, 2.0, -1.0, 4.0], 150);
+        push(&store, 0, 0, vec![2.0, 1.0, 0.0, 1.0], 50); // supersedes
+        let seq = compute_divergence(&store, 1, ChunkPool::sequential()).unwrap().unwrap();
+        assert_eq!(seq.rounds[0].clients.len(), 2);
+        for threads in [2usize, 8] {
+            let par = compute_divergence(&store, 1, ChunkPool::new(threads)).unwrap().unwrap();
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,517 @@
+//! Trace and analytics exporters — and the `inspect`-side loader.
+//!
+//! Three files land in a traced run's directory:
+//!
+//! * `trace.jsonl` — one JSON object per [`TraceEvent`], in the
+//!   canonical (node id, program order) merge order. Timestamps are
+//!   integer microseconds on the experiment clock; digests are 16-hex
+//!   strings (a `u64` exceeds exact `f64` range, so they are never
+//!   emitted as JSON numbers).
+//! * `trace_chrome.json` — the Chrome trace-event array format
+//!   (load in Perfetto / `chrome://tracing`): every timeline span is a
+//!   `ph: "X"` complete event and every push/pull/aggregate a `ph: "i"`
+//!   instant, with `pid` 0 and `tid` = node id, sorted by
+//!   `(tid, ts)` so each node track is monotone.
+//! * `analysis.json` — the figure-ready [`RunSummary`] (per-node span
+//!   shares, traffic, divergence tables). [`load_summary`] parses it
+//!   back with [`crate::util::json`]; `fedbench inspect` renders the
+//!   loaded summary through the same [`RunSummary::render`] that
+//!   `fedbench run` printed.
+//!
+//! All floats are written with Rust's shortest-round-trip `{}` display
+//! (re-parses to the same bits) and every value is guarded finite, so
+//! exported files are always valid JSON.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::timeline::Timeline;
+use crate::trace::{
+    ClientDivergence, DivergenceReport, NodeSpanSummary, RoundDivergence, RunSummary,
+    TraceEvent, TraceEventKind, Tracer,
+};
+use crate::util::json::Json;
+
+/// JSON-string-escape `s` (quotes, backslashes, and all control
+/// characters).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number (shortest round-trip); non-finite
+/// values (which the analytics layer never produces) degrade to 0.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn micros(d: Duration) -> u64 {
+    d.as_micros() as u64
+}
+
+/// One `trace.jsonl` line (no trailing newline).
+pub fn event_jsonl_line(ev: &TraceEvent) -> String {
+    let mut line = format!(
+        "{{\"node\":{},\"round\":{},\"kind\":\"{}\",\"start_us\":{},\"end_us\":{}",
+        ev.node_id,
+        ev.round,
+        ev.kind.name(),
+        micros(ev.start),
+        micros(ev.end),
+    );
+    match ev.kind {
+        TraceEventKind::Train => {}
+        TraceEventKind::Push { wire_bytes, digest } => {
+            line.push_str(&format!(",\"wire_bytes\":{wire_bytes},\"digest\":\"{digest:016x}\""));
+        }
+        TraceEventKind::Pull { entries, wire_bytes } => {
+            line.push_str(&format!(",\"entries\":{entries},\"wire_bytes\":{wire_bytes}"));
+        }
+        TraceEventKind::Aggregate { digest } => {
+            line.push_str(&format!(",\"digest\":\"{digest:016x}\""));
+        }
+    }
+    line.push('}');
+    line
+}
+
+/// Render the Chrome trace-event array for a run: timeline spans as
+/// complete (`"X"`) events, tracer push/pull/aggregate instants as
+/// (`"i"`) events, sorted by `(tid, ts)` so every per-node track is
+/// monotone non-decreasing.
+pub fn chrome_trace_json(events: &[TraceEvent], timelines: &[&Timeline]) -> String {
+    // (tid, ts_us, seq, rendered) — seq keeps the sort stable
+    let mut rows: Vec<(usize, u64, usize, String)> = Vec::new();
+    for t in timelines {
+        for s in &t.spans {
+            let name = match s.kind {
+                crate::metrics::timeline::SpanKind::Train => "train",
+                crate::metrics::timeline::SpanKind::Wait => "wait",
+                crate::metrics::timeline::SpanKind::Aggregate => "aggregate",
+                crate::metrics::timeline::SpanKind::Crashed => "crashed",
+            };
+            let ts = micros(s.start);
+            rows.push((
+                t.node_id,
+                ts,
+                rows.len(),
+                format!(
+                    "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{}}}",
+                    name,
+                    ts,
+                    micros(s.end).saturating_sub(ts),
+                    t.node_id,
+                ),
+            ));
+        }
+    }
+    for ev in events {
+        let args = match ev.kind {
+            TraceEventKind::Train => continue, // already a timeline span
+            TraceEventKind::Push { wire_bytes, digest } => {
+                format!("{{\"round\":{},\"wire_bytes\":{},\"digest\":\"{:016x}\"}}", ev.round, wire_bytes, digest)
+            }
+            TraceEventKind::Pull { entries, wire_bytes } => {
+                format!("{{\"round\":{},\"entries\":{},\"wire_bytes\":{}}}", ev.round, entries, wire_bytes)
+            }
+            TraceEventKind::Aggregate { digest } => {
+                format!("{{\"round\":{},\"digest\":\"{:016x}\"}}", ev.round, digest)
+            }
+        };
+        let ts = micros(ev.start);
+        rows.push((
+            ev.node_id,
+            ts,
+            rows.len(),
+            format!(
+                "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\"pid\":0,\"tid\":{},\"args\":{}}}",
+                ev.kind.name(),
+                ts,
+                ev.node_id,
+                args,
+            ),
+        ));
+    }
+    rows.sort_by_key(|(tid, ts, seq, _)| (*tid, *ts, *seq));
+    let body: Vec<String> = rows.into_iter().map(|(_, _, _, r)| r).collect();
+    format!("[\n{}\n]\n", body.join(",\n"))
+}
+
+fn node_json(n: &NodeSpanSummary) -> String {
+    format!(
+        "{{\"node_id\":{},\"train_s\":{},\"wait_s\":{},\"aggregate_s\":{},\"total_s\":{},\"rounds_trained\":{},\"bytes_pushed\":{},\"bytes_pulled\":{},\"pushes\":{},\"entries_pulled\":{},\"completed\":{}}}",
+        n.node_id,
+        jnum(n.train_s),
+        jnum(n.wait_s),
+        jnum(n.aggregate_s),
+        jnum(n.total_s),
+        n.rounds_trained,
+        n.bytes_pushed,
+        n.bytes_pulled,
+        n.pushes,
+        n.entries_pulled,
+        n.completed,
+    )
+}
+
+fn divergence_json(d: &DivergenceReport) -> String {
+    let rounds: Vec<String> = d
+        .rounds
+        .iter()
+        .map(|r| {
+            let clients: Vec<String> = r
+                .clients
+                .iter()
+                .map(|c| {
+                    format!(
+                        "{{\"node_id\":{},\"l2\":{},\"cosine\":{}}}",
+                        c.node_id,
+                        jnum(c.l2),
+                        jnum(c.cosine)
+                    )
+                })
+                .collect();
+            format!(
+                "{{\"round\":{},\"mean_l2\":{},\"mean_cosine\":{},\"clients\":[{}]}}",
+                r.round,
+                jnum(r.mean_l2),
+                jnum(r.mean_cosine),
+                clients.join(",")
+            )
+        })
+        .collect();
+    let pairwise = match &d.pairwise_cosine {
+        None => "null".to_string(),
+        Some(m) => {
+            let rows: Vec<String> = m
+                .iter()
+                .map(|row| {
+                    let cells: Vec<String> = row.iter().map(|v| jnum(*v)).collect();
+                    format!("[{}]", cells.join(","))
+                })
+                .collect();
+            format!("[{}]", rows.join(","))
+        }
+    };
+    let nodes: Vec<String> = d.pairwise_nodes.iter().map(|n| n.to_string()).collect();
+    let clusters: Vec<String> = d
+        .clusters
+        .iter()
+        .map(|c| {
+            let ids: Vec<String> = c.iter().map(|n| n.to_string()).collect();
+            format!("[{}]", ids.join(","))
+        })
+        .collect();
+    format!(
+        "{{\"cluster_threshold\":{},\"rounds\":[{}],\"pairwise_nodes\":[{}],\"pairwise_cosine\":{},\"clusters\":[{}]}}",
+        jnum(d.cluster_threshold),
+        rounds.join(","),
+        nodes.join(","),
+        pairwise,
+        clusters.join(",")
+    )
+}
+
+/// Serialize a [`RunSummary`] as the `analysis.json` document.
+pub fn summary_json(s: &RunSummary) -> String {
+    let nodes: Vec<String> = s.nodes.iter().map(node_json).collect();
+    let divergence = match &s.divergence {
+        None => "null".to_string(),
+        Some(d) => divergence_json(d),
+    };
+    format!(
+        "{{\n\"run_name\":\"{}\",\n\"n_nodes\":{},\n\"wall_clock_s\":{},\n\"global_digest\":\"{:016x}\",\n\"store_pushes\":{},\n\"mean_idle_fraction\":{},\n\"all_completed\":{},\n\"nodes\":[{}],\n\"divergence\":{}\n}}\n",
+        esc(&s.run_name),
+        s.n_nodes,
+        jnum(s.wall_clock_s),
+        s.global_digest,
+        s.store_pushes,
+        jnum(s.mean_idle_fraction),
+        s.all_completed,
+        nodes.join(","),
+        divergence,
+    )
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("analysis.json: missing key `{key}`"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().ok_or_else(|| anyhow!("analysis.json: `{key}` is not a number"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(req_f64(j, key)? as u64)
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    req(j, key)?.as_bool().ok_or_else(|| anyhow!("analysis.json: `{key}` is not a bool"))
+}
+
+fn parse_divergence(j: &Json) -> Result<DivergenceReport> {
+    let rounds = req(j, "rounds")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("analysis.json: `rounds` is not an array"))?
+        .iter()
+        .map(|r| {
+            let clients = req(r, "clients")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("analysis.json: `clients` is not an array"))?
+                .iter()
+                .map(|c| {
+                    Ok(ClientDivergence {
+                        node_id: req_u64(c, "node_id")? as usize,
+                        l2: req_f64(c, "l2")?,
+                        cosine: req_f64(c, "cosine")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(RoundDivergence {
+                round: req_u64(r, "round")?,
+                mean_l2: req_f64(r, "mean_l2")?,
+                mean_cosine: req_f64(r, "mean_cosine")?,
+                clients,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let pairwise_nodes = req(j, "pairwise_nodes")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("analysis.json: `pairwise_nodes` is not an array"))?
+        .iter()
+        .map(|n| n.as_usize().ok_or_else(|| anyhow!("bad pairwise node id")))
+        .collect::<Result<Vec<_>>>()?;
+    let pairwise_cosine = match req(j, "pairwise_cosine")? {
+        Json::Null => None,
+        m => Some(
+            m.as_arr()
+                .ok_or_else(|| anyhow!("analysis.json: `pairwise_cosine` is not an array"))?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| anyhow!("bad pairwise row"))?
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad pairwise cell")))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+    };
+    let clusters = req(j, "clusters")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("analysis.json: `clusters` is not an array"))?
+        .iter()
+        .map(|c| {
+            c.as_arr()
+                .ok_or_else(|| anyhow!("bad cluster"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad cluster member")))
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DivergenceReport {
+        rounds,
+        pairwise_nodes,
+        pairwise_cosine,
+        clusters,
+        cluster_threshold: req_f64(j, "cluster_threshold")?,
+    })
+}
+
+/// Parse an `analysis.json` document back into a [`RunSummary`].
+pub fn parse_summary(src: &str) -> Result<RunSummary> {
+    let j = Json::parse(src).map_err(|e| anyhow!("analysis.json: {e}"))?;
+    let digest_hex = req(&j, "global_digest")?
+        .as_str()
+        .ok_or_else(|| anyhow!("analysis.json: `global_digest` is not a string"))?;
+    let global_digest = u64::from_str_radix(digest_hex, 16)
+        .with_context(|| format!("bad digest `{digest_hex}`"))?;
+    let nodes = req(&j, "nodes")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("analysis.json: `nodes` is not an array"))?
+        .iter()
+        .map(|n| {
+            Ok(NodeSpanSummary {
+                node_id: req_u64(n, "node_id")? as usize,
+                train_s: req_f64(n, "train_s")?,
+                wait_s: req_f64(n, "wait_s")?,
+                aggregate_s: req_f64(n, "aggregate_s")?,
+                total_s: req_f64(n, "total_s")?,
+                rounds_trained: req_u64(n, "rounds_trained")?,
+                bytes_pushed: req_u64(n, "bytes_pushed")?,
+                bytes_pulled: req_u64(n, "bytes_pulled")?,
+                pushes: req_u64(n, "pushes")?,
+                entries_pulled: req_u64(n, "entries_pulled")?,
+                completed: req_bool(n, "completed")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let divergence = match req(&j, "divergence")? {
+        Json::Null => None,
+        d => Some(parse_divergence(d)?),
+    };
+    Ok(RunSummary {
+        run_name: req(&j, "run_name")?
+            .as_str()
+            .ok_or_else(|| anyhow!("analysis.json: `run_name` is not a string"))?
+            .to_string(),
+        n_nodes: req_u64(&j, "n_nodes")? as usize,
+        wall_clock_s: req_f64(&j, "wall_clock_s")?,
+        global_digest,
+        store_pushes: req_u64(&j, "store_pushes")?,
+        mean_idle_fraction: req_f64(&j, "mean_idle_fraction")?,
+        all_completed: req_bool(&j, "all_completed")?,
+        nodes,
+        divergence,
+    })
+}
+
+/// Load the [`RunSummary`] exported into `run_dir` (`analysis.json`) —
+/// the `fedbench inspect` entry point.
+pub fn load_summary(run_dir: &Path) -> Result<RunSummary> {
+    let path = run_dir.join("analysis.json");
+    let src = std::fs::read_to_string(&path)
+        .with_context(|| format!("no analysis.json in {} (was the run traced?)", run_dir.display()))?;
+    parse_summary(&src)
+}
+
+/// Write the full trace export set (`trace.jsonl`, `trace_chrome.json`,
+/// `analysis.json`) into `dir`, creating it if needed. Returns the
+/// directory back for `ExperimentResult::trace_dir` bookkeeping.
+pub fn export_run(
+    dir: &Path,
+    tracer: &Tracer,
+    timelines: &[&Timeline],
+    summary: &RunSummary,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating trace dir {}", dir.display()))?;
+    let events = tracer.events();
+    let mut jsonl = String::new();
+    for ev in &events {
+        jsonl.push_str(&event_jsonl_line(ev));
+        jsonl.push('\n');
+    }
+    std::fs::write(dir.join("trace.jsonl"), jsonl)?;
+    std::fs::write(dir.join("trace_chrome.json"), chrome_trace_json(&events, timelines))?;
+    std::fs::write(dir.join("analysis.json"), summary_json(summary))?;
+    Ok(dir.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::timeline::SpanKind;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_json() {
+        let evs = [
+            TraceEvent { node_id: 0, round: 1, start: ms(5), end: ms(5), kind: TraceEventKind::Push { wire_bytes: 52, digest: u64::MAX } },
+            TraceEvent { node_id: 1, round: 2, start: ms(9), end: ms(9), kind: TraceEventKind::Pull { entries: 3, wire_bytes: 156 } },
+            TraceEvent { node_id: 1, round: 2, start: ms(9), end: ms(9), kind: TraceEventKind::Aggregate { digest: 7 } },
+            TraceEvent { node_id: 2, round: 0, start: ms(0), end: ms(4), kind: TraceEventKind::Train },
+        ];
+        for ev in &evs {
+            let line = event_jsonl_line(ev);
+            let j = Json::parse(&line).expect("line must parse");
+            assert_eq!(j.get("node").unwrap().as_usize().unwrap(), ev.node_id);
+            assert_eq!(j.get("kind").unwrap().as_str().unwrap(), ev.kind.name());
+        }
+        // u64::MAX survives as a hex string, not a lossy f64
+        let line = event_jsonl_line(&evs[0]);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("digest").unwrap().as_str().unwrap(), "ffffffffffffffff");
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_monotone_per_track() {
+        let tracer = Tracer::new(2);
+        tracer.instant(1, 0, ms(7), TraceEventKind::Push { wire_bytes: 9, digest: 1 });
+        tracer.instant(0, 0, ms(3), TraceEventKind::Pull { entries: 1, wire_bytes: 9 });
+        let mut t0 = Timeline::new(0);
+        t0.record(SpanKind::Train, ms(0), ms(3));
+        t0.record(SpanKind::Wait, ms(3), ms(7));
+        let mut t1 = Timeline::new(1);
+        t1.record(SpanKind::Train, ms(0), ms(7));
+        let src = chrome_trace_json(&tracer.events(), &[&t0, &t1]);
+        let j = Json::parse(&src).expect("chrome trace must be valid JSON");
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 5);
+        let mut last: Option<(usize, u64)> = None;
+        for e in arr {
+            let tid = e.get("tid").unwrap().as_usize().unwrap();
+            let ts = e.get("ts").unwrap().as_f64().unwrap() as u64;
+            if let Some((ltid, lts)) = last {
+                if ltid == tid {
+                    assert!(ts >= lts, "track {tid} must be monotone");
+                }
+            }
+            last = Some((tid, ts));
+        }
+    }
+
+    #[test]
+    fn summary_round_trips_through_analysis_json() {
+        let summary = RunSummary {
+            run_name: "demo \"run\"\t1".into(),
+            n_nodes: 2,
+            wall_clock_s: 1.25,
+            global_digest: 0xdead_beef_0000_0001,
+            store_pushes: 8,
+            mean_idle_fraction: 0.125,
+            all_completed: true,
+            nodes: vec![NodeSpanSummary {
+                node_id: 0,
+                train_s: 1.0,
+                wait_s: 0.25,
+                aggregate_s: 0.0,
+                total_s: 1.25,
+                rounds_trained: 4,
+                bytes_pushed: 100,
+                bytes_pulled: 300,
+                pushes: 4,
+                entries_pulled: 12,
+                completed: true,
+            }],
+            divergence: Some(DivergenceReport {
+                rounds: vec![RoundDivergence {
+                    round: 0,
+                    mean_l2: 2.0,
+                    mean_cosine: 0.5,
+                    clients: vec![
+                        ClientDivergence { node_id: 0, l2: 2.0, cosine: 0.0 },
+                        ClientDivergence { node_id: 1, l2: 2.0, cosine: 1.0 },
+                    ],
+                }],
+                pairwise_nodes: vec![0, 1],
+                pairwise_cosine: Some(vec![vec![1.0, 0.0], vec![0.0, 1.0]]),
+                clusters: vec![vec![0], vec![1]],
+                cluster_threshold: 0.9,
+            }),
+        };
+        let parsed = parse_summary(&summary_json(&summary)).unwrap();
+        assert_eq!(parsed, summary);
+        assert_eq!(parsed.render(), summary.render());
+    }
+}

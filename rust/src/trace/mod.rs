@@ -1,0 +1,380 @@
+//! Structured tracing + round-history analytics — the observability
+//! layer that turns every run into a queryable, exportable,
+//! bit-reproducible record.
+//!
+//! Three pieces:
+//!
+//! * **[`Tracer`]** — per-node (mutex-per-node) event buffers recording
+//!   typed [`TraceEvent`]s (train spans, push/pull/aggregate instants
+//!   with wire bytes and weight digests). Every timestamp comes from the
+//!   active [`crate::time::Clock`], so under a
+//!   [`crate::time::VirtualClock`] the whole trace is *simulated* time
+//!   and replays bit-identically across schedulers (`threads` vs
+//!   `events`) and kernel thread counts. Events are emitted from the
+//!   protocol layer's [`crate::protocol::EpochCtx`] helpers and the node
+//!   drivers, so all four protocols are traced uniformly with no
+//!   per-protocol code.
+//! * **Round-history analytics** ([`analyze`]) — the store-side
+//!   `EntryLog` retains every deposited entry, and
+//!   [`crate::store::WeightStore::entries_for_round`] exposes it as a
+//!   round archive; [`compute_divergence`] replays that archive into
+//!   per-round model divergence (L2 / cosine of each client update vs.
+//!   the round aggregate), client-drift trajectories, and a pairwise
+//!   cosine matrix with greedy threshold clustering — all on the
+//!   deterministic chunked kernels of [`crate::tensor::flat`], so the
+//!   numbers are bit-identical for any thread count.
+//! * **Exporters** ([`export`]) — `trace.jsonl` (one JSON object per
+//!   event), `trace_chrome.json` (Chrome trace-event format,
+//!   Perfetto-loadable), and `analysis.json` (the figure-ready
+//!   [`RunSummary`]) written under the run directory. `fedbench inspect
+//!   <run-dir>` parses `analysis.json` back and renders it through the
+//!   *same* [`RunSummary::render`] path `fedbench run` prints, so the
+//!   two can never disagree.
+//!
+//! [`synthetic`] drives an artifact-free 4-node federation (threaded or
+//! event-scheduled) with tracing on — the backbone of the trace
+//! determinism tests and of CI's sample Perfetto artifact.
+
+pub mod analyze;
+pub mod export;
+pub mod synthetic;
+
+pub use analyze::{
+    compute_divergence, ClientDivergence, DivergenceReport, RoundDivergence,
+    DEFAULT_CLUSTER_THRESHOLD, PAIRWISE_MAX_NODES,
+};
+pub use export::{chrome_trace_json, export_run, load_summary};
+pub use synthetic::{run_synthetic, SyntheticRun, SyntheticSpec};
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::timeline::{SpanKind, Timeline};
+
+/// What a [`TraceEvent`] records. Spans carry a start *and* end instant;
+/// instants have `start == end`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// One local training epoch (a span).
+    Train,
+    /// A weight deposit into the store (an instant).
+    Push {
+        /// Encoded wire size of the deposited blob, header included.
+        wire_bytes: u64,
+        /// Content digest of what landed in the store (the codec's
+        /// decoded reconstruction — bit-exact under `compress = none`).
+        digest: u64,
+    },
+    /// A pull of peer entries from the store (an instant).
+    Pull {
+        /// Entries downloaded in this pull.
+        entries: u64,
+        /// Summed encoded wire size of the pulled entries.
+        wire_bytes: u64,
+    },
+    /// A client-side aggregation adoption (an instant).
+    Aggregate {
+        /// Content digest of the adopted aggregate.
+        digest: u64,
+    },
+}
+
+impl TraceEventKind {
+    /// Canonical lowercase event name (the `kind` field in exports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::Train => "train",
+            TraceEventKind::Push { .. } => "push",
+            TraceEventKind::Pull { .. } => "pull",
+            TraceEventKind::Aggregate { .. } => "aggregate",
+        }
+    }
+}
+
+/// One typed, clock-stamped observation of a node's federation life.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// The observed node.
+    pub node_id: usize,
+    /// Federation round (sync) / the node's local epoch count (async).
+    pub round: u64,
+    /// Event start on the experiment clock (simulated under a virtual
+    /// clock; equal to [`TraceEvent::end`] for instants).
+    pub start: Duration,
+    /// Event end on the experiment clock.
+    pub end: Duration,
+    /// What happened.
+    pub kind: TraceEventKind,
+}
+
+/// Per-node trace event buffers. One mutex per node, so concurrently
+/// federating node threads never contend with each other; within a
+/// node's buffer, events sit in program order (deterministic under the
+/// virtual clock), and [`Tracer::events`] merges buffers in node order —
+/// a total order that is a pure function of the run.
+pub struct Tracer {
+    buffers: Vec<Mutex<Vec<TraceEvent>>>,
+}
+
+impl Tracer {
+    /// A tracer with one event buffer per node.
+    pub fn new(n_nodes: usize) -> Tracer {
+        Tracer { buffers: (0..n_nodes).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    /// Number of node buffers.
+    pub fn n_nodes(&self) -> usize {
+        self.buffers.len()
+    }
+
+    /// Append `ev` to its node's buffer. Events for node ids beyond the
+    /// buffer count are dropped (never panics inside a node thread).
+    pub fn record(&self, ev: TraceEvent) {
+        if let Some(buf) = self.buffers.get(ev.node_id) {
+            buf.lock().unwrap().push(ev);
+        }
+    }
+
+    /// Record an instantaneous event at clock instant `at`.
+    pub fn instant(&self, node_id: usize, round: u64, at: Duration, kind: TraceEventKind) {
+        self.record(TraceEvent { node_id, round, start: at, end: at, kind });
+    }
+
+    /// Record a spanning event from `start` to `end`.
+    pub fn span(
+        &self,
+        node_id: usize,
+        round: u64,
+        start: Duration,
+        end: Duration,
+        kind: TraceEventKind,
+    ) {
+        self.record(TraceEvent { node_id, round, start, end, kind });
+    }
+
+    /// All events, merged in (node id, program order) — the canonical
+    /// deterministic export order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for buf in &self.buffers {
+            out.extend(buf.lock().unwrap().iter().copied());
+        }
+        out
+    }
+}
+
+/// One node's share-of-time accounting, distilled from its
+/// [`Timeline`] and traffic meter — the per-node row of a
+/// [`RunSummary`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpanSummary {
+    /// The node.
+    pub node_id: usize,
+    /// Simulated seconds spent training.
+    pub train_s: f64,
+    /// Simulated seconds parked on store waits.
+    pub wait_s: f64,
+    /// Simulated seconds aggregating.
+    pub aggregate_s: f64,
+    /// The node's finish instant (max span end), simulated seconds.
+    pub total_s: f64,
+    /// Rounds this node actually trained (its Train span count) — the
+    /// cohort-participation accounting under partial participation.
+    pub rounds_trained: u64,
+    /// Wire bytes this node uploaded.
+    pub bytes_pushed: u64,
+    /// Wire bytes this node downloaded.
+    pub bytes_pulled: u64,
+    /// Push count.
+    pub pushes: u64,
+    /// Entries pulled.
+    pub entries_pulled: u64,
+    /// False when the node crashed or stalled before its last epoch.
+    pub completed: bool,
+}
+
+impl NodeSpanSummary {
+    /// Distill a node's timeline (+ completion flag) into its summary
+    /// row.
+    pub fn from_timeline(timeline: &Timeline, completed: bool) -> NodeSpanSummary {
+        NodeSpanSummary {
+            node_id: timeline.node_id,
+            train_s: timeline.total(SpanKind::Train).as_secs_f64(),
+            wait_s: timeline.total(SpanKind::Wait).as_secs_f64(),
+            aggregate_s: timeline.total(SpanKind::Aggregate).as_secs_f64(),
+            total_s: timeline
+                .spans
+                .iter()
+                .map(|s| s.end)
+                .max()
+                .unwrap_or(Duration::ZERO)
+                .as_secs_f64(),
+            rounds_trained: timeline
+                .spans
+                .iter()
+                .filter(|s| s.kind == SpanKind::Train)
+                .count() as u64,
+            bytes_pushed: timeline.traffic.bytes_pushed,
+            bytes_pulled: timeline.traffic.bytes_pulled,
+            pushes: timeline.traffic.pushes,
+            entries_pulled: timeline.traffic.entries_pulled,
+            completed,
+        }
+    }
+
+    /// This node's share of `kind`-time in its own busy+idle total;
+    /// 0.0 for an empty timeline (never NaN).
+    fn share(&self, part_s: f64) -> f64 {
+        if self.total_s == 0.0 {
+            0.0
+        } else {
+            part_s / self.total_s
+        }
+    }
+}
+
+/// The analytics record of one run — everything `fedbench run` prints
+/// about wire traffic, idle shares, digests, and divergence, and
+/// everything `fedbench inspect` re-renders from `analysis.json`.
+/// Both commands go through [`RunSummary::render`], so they can never
+/// disagree.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSummary {
+    /// The run's directory-name label.
+    pub run_name: String,
+    /// Fleet size.
+    pub n_nodes: usize,
+    /// Run wall-clock in seconds (simulated under `clock = virtual`).
+    pub wall_clock_s: f64,
+    /// Content digest of the final weighted-average global model.
+    pub global_digest: u64,
+    /// Total entries deposited in the store.
+    pub store_pushes: u64,
+    /// Mean of the nodes' idle (wait) fractions; 0.0 for an empty fleet.
+    pub mean_idle_fraction: f64,
+    /// True when no node crashed or stalled.
+    pub all_completed: bool,
+    /// Per-node span/traffic rows, in node order.
+    pub nodes: Vec<NodeSpanSummary>,
+    /// Round-history divergence analytics, when the round archive was
+    /// analyzed.
+    pub divergence: Option<DivergenceReport>,
+}
+
+impl RunSummary {
+    /// Summed traffic across all node rows.
+    pub fn total_traffic(&self) -> crate::metrics::TrafficMeter {
+        let mut t = crate::metrics::TrafficMeter::default();
+        for n in &self.nodes {
+            t.bytes_pushed += n.bytes_pushed;
+            t.bytes_pulled += n.bytes_pulled;
+            t.pushes += n.pushes;
+            t.entries_pulled += n.entries_pulled;
+        }
+        t
+    }
+
+    /// Render the human-facing analytics block: run totals, the
+    /// per-node span-share table, straggler accounting, and (when
+    /// present) the per-round divergence tables. Deterministic: the
+    /// output is a pure function of the summary's numbers.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let t = self.total_traffic();
+        out.push_str(&format!(
+            "model digest : {:016x}\nstore pushes : {}\nwire pushed  : {:.2} MB in {} pushes\nwire pulled  : {:.2} MB in {} entries\nmean idle    : {:.1}%\nall completed: {}\n",
+            self.global_digest,
+            self.store_pushes,
+            t.mb_pushed(),
+            t.pushes,
+            t.mb_pulled(),
+            t.entries_pulled,
+            100.0 * self.mean_idle_fraction,
+            self.all_completed,
+        ));
+        if !self.nodes.is_empty() {
+            out.push_str(
+                "\nnode | train s | wait s | agg s | train% | wait% | agg% | rounds | MB push | MB pull | done\n",
+            );
+            for n in &self.nodes {
+                out.push_str(&format!(
+                    "{:>4} | {:>7.3} | {:>6.3} | {:>5.3} | {:>5.1}% | {:>4.1}% | {:>3.1}% | {:>6} | {:>7.3} | {:>7.3} | {}\n",
+                    n.node_id,
+                    n.train_s,
+                    n.wait_s,
+                    n.aggregate_s,
+                    100.0 * n.share(n.train_s),
+                    100.0 * n.share(n.wait_s),
+                    100.0 * n.share(n.aggregate_s),
+                    n.rounds_trained,
+                    n.bytes_pushed as f64 / 1e6,
+                    n.bytes_pulled as f64 / 1e6,
+                    if n.completed { "yes" } else { "NO" },
+                ));
+            }
+            if let Some(slow) = self
+                .nodes
+                .iter()
+                .max_by(|a, b| a.total_s.partial_cmp(&b.total_s).unwrap_or(std::cmp::Ordering::Equal))
+            {
+                let trained = self.nodes.iter().filter(|n| n.rounds_trained > 0).count();
+                out.push_str(&format!(
+                    "straggler    : node {} finished last at {:.3} s; {} of {} nodes trained ≥1 round\n",
+                    slow.node_id, slow.total_s, trained, self.nodes.len(),
+                ));
+            }
+        }
+        if let Some(div) = &self.divergence {
+            out.push('\n');
+            out.push_str(&div.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracer_buffers_merge_in_node_order() {
+        let tracer = Tracer::new(2);
+        tracer.instant(1, 0, Duration::from_millis(5), TraceEventKind::Train);
+        tracer.instant(0, 0, Duration::from_millis(9), TraceEventKind::Train);
+        tracer.instant(
+            0,
+            1,
+            Duration::from_millis(10),
+            TraceEventKind::Push { wire_bytes: 4, digest: 7 },
+        );
+        let evs = tracer.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].node_id, 0);
+        assert_eq!(evs[1].node_id, 0);
+        assert_eq!(evs[2].node_id, 1);
+        assert_eq!(evs[1].kind.name(), "push");
+        // out-of-range node ids are dropped, not panicked on
+        tracer.instant(9, 0, Duration::ZERO, TraceEventKind::Train);
+        assert_eq!(tracer.events().len(), 3);
+    }
+
+    #[test]
+    fn node_summary_shares_never_nan() {
+        let t = Timeline::new(3);
+        let s = NodeSpanSummary::from_timeline(&t, true);
+        assert_eq!(s.total_s, 0.0);
+        assert_eq!(s.share(s.train_s), 0.0);
+        let summary = RunSummary {
+            run_name: "r".into(),
+            n_nodes: 1,
+            wall_clock_s: 0.0,
+            global_digest: 0,
+            store_pushes: 0,
+            mean_idle_fraction: 0.0,
+            all_completed: true,
+            nodes: vec![s],
+            divergence: None,
+        };
+        assert!(!summary.render().contains("NaN"));
+    }
+}

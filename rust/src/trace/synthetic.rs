@@ -1,0 +1,351 @@
+//! Artifact-free traced federation runs — no datasets, no PJRT runtime.
+//!
+//! [`run_synthetic`] drives a real protocol + store + virtual-clock
+//! federation with synthetic weights and tracing on, under either node
+//! scheduler: `threads` runs one OS thread per node (the
+//! `rust/tests/timing.rs` harness shape, plus participation and
+//! tracing), `events` delegates to the discrete-event executor harness
+//! ([`crate::sched::run_events_trial_captured`]) with the same
+//! participation plan, initial weights, and tracer wiring. Both paths
+//! produce bit-identical traces, timelines, weights, and divergence
+//! analytics — the claim `rust/tests/trace.rs` pins.
+//!
+//! This is also what `fedbench run --synthetic` executes, so CI can
+//! produce a real Perfetto-loadable trace artifact without model
+//! artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::compress::{CodecKind, CodecState};
+use crate::config::{ExperimentConfig, FederationMode, SchedulerKind};
+use crate::metrics::timeline::{SpanKind, Timeline};
+use crate::par::ChunkPool;
+use crate::protocol::{EpochCtx, FederationProtocol, ProtocolKind};
+use crate::sched::{
+    run_events_trial_captured, AvailabilitySpec, ParticipationPlan, TrialSpec,
+};
+use crate::store::{MemoryStore, WeightStore};
+use crate::strategy::StrategyKind;
+use crate::tensor::flat::weighted_average_pooled;
+use crate::tensor::FlatParams;
+use crate::time::{Clock, ParticipantGuard, VirtualClock};
+use crate::trace::{
+    compute_divergence, NodeSpanSummary, RunSummary, TraceEventKind, Tracer,
+};
+
+/// Parameter-vector width of the synthetic model (a few codec chunks'
+/// worth — big enough that compression and divergence are non-trivial,
+/// small enough that a traced run is instant).
+pub const SYNTH_DIM: usize = 1024;
+
+/// Distinct, training-like initial weights per node (a `fn` pointer so
+/// the event harness's [`TrialSpec::init`] can carry it).
+fn synth_init(node_id: usize) -> FlatParams {
+    FlatParams(
+        (0..SYNTH_DIM)
+            .map(|i| ((i as f32) * 0.0137 + node_id as f32 * 0.11).sin() * 0.8)
+            .collect(),
+    )
+}
+
+/// One synthetic traced trial.
+pub struct SyntheticSpec {
+    /// Federation mode.
+    pub mode: FederationMode,
+    /// Per-node per-epoch training delay; its length is the fleet size.
+    pub delays: Vec<Duration>,
+    /// Epochs per node.
+    pub epochs: usize,
+    /// Node scheduler to drive the trial with.
+    pub scheduler: SchedulerKind,
+    /// Kernel pool width (bit-identical results for any value).
+    pub threads: usize,
+    /// Wire codec for pushes.
+    pub compress: CodecKind,
+    /// Per-round cohort fraction in `(0, 1]`.
+    pub participation: f64,
+    /// Trial seed (cohorts, gossip schedules).
+    pub seed: u64,
+    /// Sync-barrier stall timeout.
+    pub sync_timeout: Duration,
+}
+
+impl SyntheticSpec {
+    /// A 4-node default: distinct per-node delays (so no two events
+    /// share a simulated instant), full participation, no compression.
+    pub fn new(mode: FederationMode, n_nodes: usize, epochs: usize) -> SyntheticSpec {
+        SyntheticSpec {
+            mode,
+            delays: (0..n_nodes)
+                .map(|i| Duration::from_millis(40 + 9 * i as u64))
+                .collect(),
+            epochs,
+            scheduler: SchedulerKind::Threads,
+            threads: 1,
+            compress: CodecKind::None,
+            participation: 1.0,
+            seed: ExperimentConfig::default().seed,
+            sync_timeout: Duration::from_secs(3600),
+        }
+    }
+
+    /// Derive the spec from an experiment config (the `fedbench run
+    /// --synthetic` path): mode, fleet size, epochs, scheduler, threads,
+    /// codec, participation, and seed carry over; `node_delays_ms` is
+    /// honored when set.
+    pub fn from_config(cfg: &ExperimentConfig) -> SyntheticSpec {
+        let mut spec = SyntheticSpec::new(cfg.mode, cfg.n_nodes, cfg.epochs);
+        if !cfg.node_delays_ms.is_empty() {
+            spec.delays = (0..cfg.n_nodes)
+                .map(|i| {
+                    Duration::from_secs_f64(
+                        cfg.node_delays_ms[i % cfg.node_delays_ms.len()] / 1000.0,
+                    )
+                })
+                .collect();
+        }
+        spec.scheduler = cfg.scheduler;
+        spec.threads = cfg.threads;
+        spec.compress = cfg.compress;
+        spec.participation = cfg.participation;
+        spec.seed = cfg.seed;
+        spec.sync_timeout = cfg.sync_timeout;
+        spec
+    }
+}
+
+/// Everything a synthetic traced trial observed.
+pub struct SyntheticRun {
+    /// The trial's tracer (all typed events).
+    pub tracer: Arc<Tracer>,
+    /// Per-node timelines (spans + traffic), in node order.
+    pub timelines: Vec<Timeline>,
+    /// Per-node finish instants.
+    pub finishes: Vec<Duration>,
+    /// Per-node stall flags.
+    pub stalled: Vec<bool>,
+    /// Per-node final weights.
+    pub params: Vec<FlatParams>,
+    /// The trial's store (round archive included).
+    pub store: Arc<dyn WeightStore>,
+}
+
+impl SyntheticRun {
+    /// Distill the run into a [`RunSummary`] (divergence analytics
+    /// included), computing everything on `pool`'s deterministic
+    /// kernels.
+    pub fn summary(&self, run_name: &str, epochs: u64, pool: ChunkPool) -> Result<RunSummary> {
+        let refs: Vec<&FlatParams> = self.params.iter().collect();
+        let w = vec![1.0 / refs.len() as f32; refs.len()];
+        let global = weighted_average_pooled(&refs, &w, pool);
+        let nodes: Vec<NodeSpanSummary> = self
+            .timelines
+            .iter()
+            .zip(&self.stalled)
+            .map(|(t, stalled)| NodeSpanSummary::from_timeline(t, !stalled))
+            .collect();
+        let n = self.timelines.len();
+        let mean_idle_fraction = if n == 0 {
+            0.0
+        } else {
+            self.timelines.iter().map(|t| t.idle_fraction()).sum::<f64>() / n as f64
+        };
+        Ok(RunSummary {
+            run_name: run_name.to_string(),
+            n_nodes: n,
+            wall_clock_s: self
+                .finishes
+                .iter()
+                .max()
+                .copied()
+                .unwrap_or(Duration::ZERO)
+                .as_secs_f64(),
+            global_digest: global.content_hash_pooled(pool),
+            store_pushes: nodes.iter().map(|s| s.pushes).sum(),
+            mean_idle_fraction,
+            all_completed: !self.stalled.iter().any(|s| *s),
+            nodes,
+            divergence: compute_divergence(self.store.as_ref(), epochs, pool)?,
+        })
+    }
+}
+
+/// Run one synthetic traced trial under `spec.scheduler`.
+pub fn run_synthetic(spec: &SyntheticSpec) -> Result<SyntheticRun> {
+    match spec.scheduler {
+        SchedulerKind::Threads => run_threads(spec),
+        SchedulerKind::Events => run_events(spec),
+    }
+}
+
+fn run_events(spec: &SyntheticSpec) -> Result<SyntheticRun> {
+    let tracer = Arc::new(Tracer::new(spec.delays.len()));
+    let mut trial = TrialSpec::new(spec.mode, spec.delays.clone(), spec.epochs);
+    trial.sync_timeout = spec.sync_timeout;
+    trial.participation = spec.participation;
+    trial.seed = spec.seed;
+    trial.compress = spec.compress;
+    trial.threads = spec.threads;
+    trial.init = synth_init;
+    trial.tracer = Some(Arc::clone(&tracer));
+    let (nodes, store) = run_events_trial_captured(&trial)?;
+    let mut timelines = Vec::new();
+    let mut finishes = Vec::new();
+    let mut stalled = Vec::new();
+    let mut params = Vec::new();
+    for node in nodes {
+        let mut t = Timeline::new(node.node_id);
+        t.spans = node.spans;
+        t.traffic = node.traffic;
+        timelines.push(t);
+        finishes.push(node.finish);
+        stalled.push(node.stalled);
+        params.push(node.params);
+    }
+    Ok(SyntheticRun { tracer, timelines, finishes, stalled, params, store })
+}
+
+fn run_threads(spec: &SyntheticSpec) -> Result<SyntheticRun> {
+    let n = spec.delays.len();
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig {
+        mode: spec.mode,
+        n_nodes: n,
+        epochs: spec.epochs,
+        sync_timeout: spec.sync_timeout,
+        seed: spec.seed,
+        compress: spec.compress,
+        threads: spec.threads,
+        participation: spec.participation,
+        ..Default::default()
+    };
+    let store: Arc<dyn WeightStore> =
+        Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    let plan = Arc::new(ParticipationPlan::new(
+        spec.participation,
+        AvailabilitySpec::None,
+        spec.seed,
+        n,
+    ));
+    let tracer = Arc::new(Tracer::new(n));
+    // Register every node before any thread runs, so the clock never
+    // advances while some nodes are still spawning.
+    for _ in 0..n {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(n));
+    struct NodeOut {
+        timeline: Timeline,
+        finish: Duration,
+        stalled: bool,
+        params: FlatParams,
+    }
+    let outs: Vec<NodeOut> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let store = Arc::clone(&store);
+                let plan = Arc::clone(&plan);
+                let tracer = Arc::clone(&tracer);
+                let cfg = cfg.clone();
+                let start = Arc::clone(&start);
+                let delay = spec.delays[node_id];
+                scope.spawn(move || -> Result<NodeOut> {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = StrategyKind::FedAvg.build();
+                    let mut codec = CodecState::new(cfg.compress);
+                    let mut timeline = Timeline::new(node_id);
+                    let mut params = synth_init(node_id);
+                    let mut stalled = false;
+                    start.wait();
+                    for epoch in 0..cfg.epochs {
+                        if !plan.participates(node_id, epoch) {
+                            continue; // off-cohort: zero simulated time
+                        }
+                        let t = clock.now();
+                        clock.sleep(delay.mul_f64(plan.delay_multiplier(node_id)));
+                        timeline.record(SpanKind::Train, t, clock.now());
+                        tracer.span(
+                            node_id,
+                            epoch as u64,
+                            t,
+                            clock.now(),
+                            TraceEventKind::Train,
+                        );
+                        let mut ctx = EpochCtx {
+                            node_id,
+                            n_nodes: n,
+                            round_k: plan.round_k(epoch),
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout: cfg.sync_timeout,
+                            clock: clock.as_ref(),
+                            codec: &mut codec,
+                            pool: ChunkPool::from_config(cfg.threads),
+                            tracer: Some(tracer.as_ref()),
+                        };
+                        let out = protocol.after_epoch(&mut ctx, &mut params)?;
+                        if out.stalled_at.is_some() {
+                            stalled = true;
+                            break;
+                        }
+                    }
+                    Ok(NodeOut { timeline, finish: clock.now(), stalled, params })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("synthetic node thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+    let mut timelines = Vec::new();
+    let mut finishes = Vec::new();
+    let mut stalled = Vec::new();
+    let mut params = Vec::new();
+    for out in outs {
+        timelines.push(out.timeline);
+        finishes.push(out.finish);
+        stalled.push(out.stalled);
+        params.push(out.params);
+    }
+    Ok(SyntheticRun { tracer, timelines, finishes, stalled, params, store })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The two schedulers observe the same synthetic federation: same
+    /// trace events, spans, finishes, weights, and the same divergence
+    /// analytics — rendered bytes included.
+    #[test]
+    fn schedulers_agree_on_the_traced_run() {
+        for mode in [FederationMode::Sync, FederationMode::Async] {
+            let mut spec = SyntheticSpec::new(mode, 3, 3);
+            let threaded = run_synthetic(&spec).unwrap();
+            spec.scheduler = SchedulerKind::Events;
+            let events = run_synthetic(&spec).unwrap();
+            assert_eq!(threaded.tracer.events(), events.tracer.events(), "{mode:?}");
+            assert_eq!(threaded.finishes, events.finishes, "{mode:?}");
+            for (a, b) in threaded.timelines.iter().zip(&events.timelines) {
+                assert_eq!(a.spans, b.spans, "{mode:?} node {}", a.node_id);
+                assert_eq!(a.traffic, b.traffic, "{mode:?} node {}", a.node_id);
+            }
+            for (a, b) in threaded.params.iter().zip(&events.params) {
+                assert_eq!(a.0, b.0, "{mode:?}");
+            }
+            let sa = threaded.summary("t", 3, ChunkPool::sequential()).unwrap();
+            let sb = events.summary("t", 3, ChunkPool::sequential()).unwrap();
+            assert_eq!(sa, sb, "{mode:?}");
+            assert_eq!(sa.render(), sb.render(), "{mode:?}");
+        }
+    }
+}

@@ -101,6 +101,7 @@ fn run_sim(compress: CodecKind, bytes_per_sec: u64) -> (Duration, Vec<SimNode>) 
                             clock: clock.as_ref(),
                             codec: &mut codec,
                             pool: fedless::par::ChunkPool::from_config(cfg.threads),
+                            tracer: None,
                         };
                         protocol.after_epoch(&mut ctx, &mut params).unwrap();
                     }
@@ -215,6 +216,7 @@ fn compress_none_is_bit_identical_to_the_uncompressed_path() {
         clock: clock.as_ref(),
         codec: &mut codec,
         pool: fedless::par::ChunkPool::sequential(),
+        tracer: None,
     };
     let expected = params.clone();
     protocol.after_epoch(&mut ctx, &mut params).unwrap();

@@ -207,6 +207,7 @@ fn run_sim(mode: FederationMode, threads: usize, epochs: usize) -> Vec<SimNode> 
                             clock: clock.as_ref(),
                             codec: &mut codec,
                             pool,
+                            tracer: None,
                         };
                         protocol.after_epoch(&mut ctx, &mut params).unwrap();
                     }
@@ -319,6 +320,8 @@ fn golden_sweep_report_with_threads_axis_under_virtual_clock() {
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: true,
+            divergence: None,
+            trace_dir: None,
         })
     };
 

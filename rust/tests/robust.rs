@@ -159,6 +159,7 @@ fn run_attack_sim(
                             clock: clock.as_ref(),
                             codec: &mut codec,
                             pool: ChunkPool::from_config(cfg.threads),
+                            tracer: None,
                         };
                         let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
                         assert!(out.stalled_at.is_none(), "node {node_id} stalled");
@@ -444,6 +445,8 @@ fn golden_robust_adversary_sweep_report() {
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: true,
+            divergence: None,
+            trace_dir: None,
         })
     };
 

@@ -107,6 +107,7 @@ fn run_sim(
                             clock: clock.as_ref(),
                             codec: &mut codec,
                             pool: fedless::par::ChunkPool::from_config(cfg.threads),
+                            tracer: None,
                         };
                         let out = protocol.after_epoch(&mut ctx, &mut params).unwrap();
                         if out.stalled_at.is_some() {
@@ -440,6 +441,8 @@ fn golden_sweep_report_under_virtual_clock() {
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: !nodes.iter().any(|n| n.stalled),
+            divergence: None,
+            trace_dir: None,
         })
     };
 

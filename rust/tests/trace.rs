@@ -1,0 +1,184 @@
+//! Trace determinism suite (PR 9 acceptance).
+//!
+//! Pins the observability contract end to end on synthetic traced runs
+//! under the virtual clock:
+//!
+//! * a 4-node async run's divergence tables and per-node span shares
+//!   are **bit-identical** across node schedulers (`threads` vs
+//!   `events`) and kernel thread counts (1 vs 8) — down to the exported
+//!   `analysis.json` bytes and the rendered `inspect` text;
+//! * the golden `inspect` divergence table for a hand-checkable
+//!   archive matches character for character;
+//! * the exported Chrome trace is valid JSON whose per-node tracks are
+//!   monotone non-decreasing in time;
+//! * `export_run` → `load_summary` round-trips, so `fedbench run` and
+//!   `fedbench inspect` render the same bytes.
+
+use std::sync::Arc;
+
+use fedless::config::{FederationMode, SchedulerKind};
+use fedless::par::ChunkPool;
+use fedless::store::{MemoryStore, PushRequest};
+use fedless::tensor::FlatParams;
+use fedless::trace::export::{chrome_trace_json, export_run, load_summary, summary_json};
+use fedless::trace::{compute_divergence, run_synthetic, SyntheticRun, SyntheticSpec};
+use fedless::util::json::Json;
+
+const N_NODES: usize = 4;
+const EPOCHS: usize = 3;
+
+fn traced_run(scheduler: SchedulerKind, threads: usize) -> (SyntheticRun, String, String) {
+    let mut spec = SyntheticSpec::new(FederationMode::Async, N_NODES, EPOCHS);
+    spec.scheduler = scheduler;
+    spec.threads = threads;
+    let run = run_synthetic(&spec).expect("synthetic run");
+    let summary = run
+        .summary("trace_accept", EPOCHS as u64, ChunkPool::from_config(threads))
+        .expect("summary");
+    let rendered = summary.render();
+    let json = summary_json(&summary);
+    (run, rendered, json)
+}
+
+/// The acceptance scenario: a traced 4-node async virtual-clock run's
+/// per-round divergence and per-node span shares are bit-identical
+/// across schedulers and thread counts.
+#[test]
+fn divergence_and_spans_bit_identical_across_schedulers_and_threads() {
+    let (base_run, base_render, base_json) = traced_run(SchedulerKind::Threads, 1);
+    assert!(
+        base_render.contains("per-round divergence"),
+        "async traced run must archive rounds:\n{base_render}"
+    );
+    assert!(base_render.contains("node | train s"), "{base_render}");
+    for (scheduler, threads) in [
+        (SchedulerKind::Events, 1),
+        (SchedulerKind::Threads, 8),
+        (SchedulerKind::Events, 8),
+    ] {
+        let (run, render, json) = traced_run(scheduler, threads);
+        assert_eq!(
+            json, base_json,
+            "analysis.json must be byte-identical ({scheduler:?}, threads={threads})"
+        );
+        assert_eq!(
+            render, base_render,
+            "rendered inspect text must be byte-identical ({scheduler:?}, threads={threads})"
+        );
+        assert_eq!(
+            run.tracer.events(),
+            base_run.tracer.events(),
+            "trace events must agree ({scheduler:?}, threads={threads})"
+        );
+    }
+}
+
+/// Golden `inspect` divergence table: clients at `[0; 4]` and `[2; 4]`
+/// with equal example counts average to `[1; 4]`; both sit L2 = 2 from
+/// the aggregate, the zero vector's cosine is defined 0, the other's is
+/// exactly 1 — so every rendered digit is hand-checkable.
+#[test]
+fn golden_inspect_divergence_table() {
+    let store = MemoryStore::new();
+    for (node_id, value) in [(0usize, 0.0f32), (1, 2.0)] {
+        store
+            .push(PushRequest {
+                node_id,
+                round: 0,
+                epoch: 0,
+                n_examples: 100,
+                wire_bytes: 16,
+                params: Arc::new(FlatParams(vec![value; 4])),
+            })
+            .unwrap();
+    }
+    let report = compute_divergence(&store, 1, ChunkPool::sequential())
+        .unwrap()
+        .expect("non-empty archive");
+    let golden = "\
+per-round divergence (client update vs round aggregate):
+round | clients | mean L2 | mean cos
+    0 |       2 |   2.000000 | 0.500000
+
+client drift (L2 per round, `-` = not archived):
+node   0: 2.000000
+node   1: 2.000000
+
+pairwise cosine, final round (nodes [0, 1]):
+   0.0000  0.0000
+   0.0000  1.0000
+cosine clusters (threshold 0.9): [[0], [1]]
+";
+    assert_eq!(report.render(), golden);
+}
+
+/// The exported Chrome trace of a real synthetic run is valid JSON and
+/// every per-node (`tid`) track is monotone non-decreasing in `ts` — the
+/// Perfetto-loadability contract.
+#[test]
+fn chrome_trace_export_is_valid_json_with_monotone_node_tracks() {
+    let (run, _, _) = traced_run(SchedulerKind::Threads, 1);
+    let timelines: Vec<&fedless::metrics::timeline::Timeline> = run.timelines.iter().collect();
+    let src = chrome_trace_json(&run.tracer.events(), &timelines);
+    let j = Json::parse(&src).expect("chrome trace must parse as JSON");
+    let rows = j.as_arr().expect("chrome trace is a JSON array");
+    assert!(
+        rows.len() >= N_NODES * EPOCHS,
+        "expected at least one event per node-epoch, got {}",
+        rows.len()
+    );
+    let mut last_ts = vec![0u64; N_NODES];
+    let mut seen = vec![false; N_NODES];
+    for row in rows {
+        let tid = row.get("tid").unwrap().as_usize().expect("tid");
+        let ts = row.get("ts").unwrap().as_f64().expect("ts") as u64;
+        let ph = row.get("ph").unwrap().as_str().expect("ph");
+        assert!(ph == "X" || ph == "i", "unknown phase {ph:?}");
+        if ph == "X" {
+            assert!(row.get("dur").unwrap().as_f64().is_some(), "complete events carry dur");
+        }
+        assert!(tid < N_NODES, "tid {tid} out of range");
+        if seen[tid] {
+            assert!(ts >= last_ts[tid], "track {tid} went backwards: {ts} < {}", last_ts[tid]);
+        }
+        last_ts[tid] = ts;
+        seen[tid] = true;
+    }
+    assert!(seen.iter().all(|s| *s), "every node contributes a track");
+}
+
+/// Full disk round-trip: `export_run` writes the three artifacts and
+/// `load_summary` (the `fedbench inspect` loader) re-renders the same
+/// bytes `fedbench run` printed — the two commands can never disagree.
+#[test]
+fn export_then_inspect_round_trips_the_summary() {
+    let (run, rendered, _) = traced_run(SchedulerKind::Events, 1);
+    let summary = run
+        .summary("trace_accept", EPOCHS as u64, ChunkPool::sequential())
+        .unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "fedless_trace_export_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let timelines: Vec<&fedless::metrics::timeline::Timeline> = run.timelines.iter().collect();
+    let out = export_run(&dir, &run.tracer, &timelines, &summary).unwrap();
+    assert_eq!(out, dir);
+    for f in ["trace.jsonl", "trace_chrome.json", "analysis.json"] {
+        assert!(dir.join(f).is_file(), "missing export {f}");
+    }
+    // every trace.jsonl line parses, in canonical node order
+    let jsonl = std::fs::read_to_string(dir.join("trace.jsonl")).unwrap();
+    let mut last_node = 0usize;
+    for line in jsonl.lines() {
+        let j = Json::parse(line).expect("jsonl line parses");
+        let node = j.get("node").unwrap().as_usize().unwrap();
+        assert!(node >= last_node, "jsonl must be in node-merge order");
+        last_node = node;
+    }
+    let loaded = load_summary(&dir).expect("inspect loads the archive");
+    assert_eq!(loaded, summary);
+    assert_eq!(loaded.render(), rendered);
+    let _ = std::fs::remove_dir_all(&dir);
+}
