@@ -14,6 +14,7 @@
 //!              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]]
 //!              [--scheduler threads|events] [--participation F]
 //!              [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>]
+//!              [--fault P] [--outage <start_s>:<dur_s>[,...]] [--sync-quorum F]
 //!              [--virtual-clock] [--trace|--no-trace] [--synthetic]
 //!                        run one experiment at a preset scale (the
 //!                        quickest way to try a protocol, e.g.
@@ -298,7 +299,7 @@ fn robustness(o: &Opts) -> TableOut {
         cfg.mode = mode;
         cfg.n_nodes = 3;
         cfg.seed = o.seed;
-        cfg.crash = Some(CrashSpec { node: 1, at_epoch: 1 });
+        cfg.crash = Some(CrashSpec::at(1, 1));
         cfg.sync_timeout = Duration::from_secs(5);
         match run_experiment(&cfg) {
             Ok(res) => {
@@ -472,6 +473,26 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                         )
                     })?;
             }
+            "--fault" => {
+                cfg.fault.p_fail = value
+                    .parse()
+                    .map_err(|_| format!("bad --fault {value:?} (probability in [0, 1])"))?;
+            }
+            "--outage" => {
+                cfg.fault.outages = value
+                    .split(',')
+                    .map(|w| {
+                        fedless::store::OutageWindow::parse(w.trim()).ok_or_else(|| {
+                            format!("bad --outage window {w:?} (<start_s>:<dur_s>)")
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            "--sync-quorum" => {
+                cfg.sync_quorum = value
+                    .parse()
+                    .map_err(|_| format!("bad --sync-quorum {value:?} (fraction in (0, 1])"))?;
+            }
             "--scale" => {
                 scale = Scale::parse(value).ok_or_else(|| format!("bad --scale {value:?}"))?;
             }
@@ -529,6 +550,16 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         "adversary    : {}",
         cfg.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into())
     );
+    if cfg.fault.is_active() {
+        println!(
+            "fault        : p={} ({} outage window(s))",
+            cfg.fault.p_fail,
+            cfg.fault.outages.len()
+        );
+    }
+    if cfg.sync_quorum < 1.0 {
+        println!("sync quorum  : {}", cfg.sync_quorum);
+    }
     println!("accuracy     : {:.4}", res.final_accuracy);
     println!("test loss    : {:.4}", res.final_loss);
     println!("wall clock   : {:.2}s", res.wall_clock_s);
@@ -667,6 +698,7 @@ fn main() {
              [--adversary none|byzantine[:k]|scale[:f]|signflip[:k]|stale[:r]] \
              [--scheduler threads|events] [--participation F] \
              [--availability none|churn:<p>|diurnal:<period>|stragglers:<frac>:<mult>] \
+             [--fault P] [--outage <start_s>:<dur_s>[,...]] [--sync-quorum F] \
              [--virtual-clock] [--trace|--no-trace] [--synthetic]\n\
              \x20      fedbench inspect <run-dir>\n\
              \x20      fedbench sweep SPEC.json [--jobs N] [--out FILE] [--csv FILE]"

@@ -12,8 +12,12 @@
 //! steps_per_epoch = 120
 //! store = memory          # memory | sharded[:N] | fs:/path/to/dir
 //! node_delays_ms = 0,40   # per-node straggler delays
-//! crash = 1@2             # crash node 1 at epoch 2
+//! crash = 1@2             # crash node 1 at epoch 2 (permanent)
+//! crash = 1@2:restart:5   # ...or restart it 5s later from its checkpoint
 //! adversary = byzantine:1 # none | byzantine:k | scale:<f> | signflip:k | stale:<r>
+//! fault = 0.05            # per-op transient store-failure probability
+//! outage = 2:1, 10:0.5    # store outage windows `<start_s>:<dur_s>`
+//! sync_quorum = 0.75      # sync rounds may close degraded at 75% of the cohort
 //! clock = virtual         # real (default) | virtual simulated time
 //! compress = q8           # none | q8 | topk:<frac> | delta-q8
 //! threads = auto          # kernel-pool workers: auto | N (default 1)
@@ -110,12 +114,27 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
                     .collect::<Result<_, _>>()?;
             }
             "crash" => {
-                let (node, at) = value
-                    .split_once('@')
-                    .ok_or_else(|| err(line_no, "crash must be `node@epoch`"))?;
+                let (node, rest) = value.split_once('@').ok_or_else(|| {
+                    err(line_no, "crash must be `node@epoch[:restart:<secs>]`")
+                })?;
+                let (at, restart) = match rest.split_once(':') {
+                    None => (rest, None),
+                    Some((at, tail)) => {
+                        let secs = tail
+                            .trim()
+                            .strip_prefix("restart:")
+                            .and_then(|d| d.trim().parse::<f64>().ok())
+                            .filter(|d| d.is_finite() && *d > 0.0)
+                            .ok_or_else(|| {
+                                err(line_no, "crash restart must be `restart:<secs>` with secs > 0")
+                            })?;
+                        (at, Some(Duration::from_secs_f64(secs)))
+                    }
+                };
                 cfg.crash = Some(CrashSpec {
                     node: parse_usize(node.trim())?,
                     at_epoch: parse_usize(at.trim())?,
+                    restart,
                 });
             }
             "adversary" => {
@@ -128,6 +147,18 @@ pub fn parse_config_text(text: &str) -> Result<ExperimentConfig, ConfigError> {
             }
             "sync_timeout_s" => {
                 cfg.sync_timeout = Duration::from_secs_f64(parse_f64(value)?)
+            }
+            "sync_quorum" => cfg.sync_quorum = parse_f64(value)?,
+            "fault" => cfg.fault.p_fail = parse_f64(value)?,
+            "outage" => {
+                cfg.fault.outages = value
+                    .split(',')
+                    .map(|w| {
+                        crate::store::OutageWindow::parse(w.trim()).ok_or_else(|| {
+                            err(line_no, format!("outage must be `<start_s>:<dur_s>`, got {w:?}"))
+                        })
+                    })
+                    .collect::<Result<_, _>>()?;
             }
             "clock" => {
                 cfg.clock = crate::time::ClockKind::parse(value)
@@ -187,7 +218,7 @@ mod tests {
         assert_eq!(cfg.skew, 0.99);
         assert_eq!(cfg.store, StoreKind::Fs("/tmp/ws".into()));
         assert_eq!(cfg.node_delays_ms, vec![0.0, 40.0, 80.0]);
-        assert_eq!(cfg.crash, Some(CrashSpec { node: 1, at_epoch: 2 }));
+        assert_eq!(cfg.crash, Some(CrashSpec::at(1, 2)));
     }
 
     #[test]
@@ -299,6 +330,48 @@ mod tests {
         assert!(parse_config_text("scheduler = fibers\n").is_err());
         assert!(parse_config_text("participation = lots\n").is_err());
         assert!(parse_config_text("availability = weekly:3\n").is_err());
+    }
+
+    #[test]
+    fn crash_restart_values() {
+        let cfg = parse_config_text("crash = 1@2:restart:5\n").unwrap();
+        assert_eq!(
+            cfg.crash,
+            Some(CrashSpec { node: 1, at_epoch: 2, restart: Some(Duration::from_secs(5)) })
+        );
+        let cfg = parse_config_text("crash = 0@1:restart:0.5\n").unwrap();
+        assert_eq!(cfg.crash.unwrap().restart, Some(Duration::from_millis(500)));
+        assert!(parse_config_text("crash = 1@2:restart:0\n").is_err());
+        assert!(parse_config_text("crash = 1@2:reboot:5\n").is_err());
+        assert!(parse_config_text("crash = 1\n").is_err());
+    }
+
+    #[test]
+    fn fault_outage_and_quorum_values() {
+        use crate::store::OutageWindow;
+        let cfg = parse_config_text("fault = 0.05\noutage = 2:1, 10:0.5\nsync_quorum = 0.75\n")
+            .unwrap();
+        assert_eq!(cfg.fault.p_fail, 0.05);
+        assert_eq!(
+            cfg.fault.outages,
+            vec![
+                OutageWindow { start: Duration::from_secs(2), duration: Duration::from_secs(1) },
+                OutageWindow {
+                    start: Duration::from_secs(10),
+                    duration: Duration::from_millis(500)
+                },
+            ]
+        );
+        assert_eq!(cfg.sync_quorum, 0.75);
+        cfg.validate().unwrap();
+
+        let cfg = parse_config_text("").unwrap();
+        assert!(!cfg.fault.is_active(), "faultless by default");
+        assert_eq!(cfg.sync_quorum, 1.0, "full quorum by default");
+
+        assert!(parse_config_text("outage = 5\n").is_err());
+        assert!(parse_config_text("outage = 5:0\n").is_err());
+        assert!(parse_config_text("fault = lots\n").is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub use file::{parse_config_text, ConfigError};
 use std::path::PathBuf;
 use std::time::Duration;
 
-use crate::store::{AdversarySpec, LatencyConfig};
+use crate::store::{AdversarySpec, FaultModel, LatencyConfig};
 use crate::strategy::StrategyKind;
 
 pub use crate::compress::CodecKind;
@@ -164,13 +164,25 @@ impl StoreKind {
 }
 
 /// Failure injection: crash a node partway through training (§4.2.1
-/// robustness experiments).
+/// robustness experiments), optionally restarting it after a delay.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CrashSpec {
     /// Which node to crash.
     pub node: usize,
     /// Crash at the start of this 0-based epoch.
     pub at_epoch: usize,
+    /// `Some(delay)`: the node restarts `delay` after crashing, restores
+    /// its state from its own latest store entry (checkpoint-resume) and
+    /// continues training. `None`: the crash is permanent (the original
+    /// behaviour).
+    pub restart: Option<Duration>,
+}
+
+impl CrashSpec {
+    /// A permanent crash of `node` at `at_epoch` (no restart).
+    pub fn at(node: usize, at_epoch: usize) -> Self {
+        CrashSpec { node, at_epoch, restart: None }
+    }
 }
 
 /// Full description of one federated training experiment.
@@ -216,8 +228,26 @@ pub struct ExperimentConfig {
     /// `strategy` (median / trimmed-mean / krum / trust-weighted) to
     /// measure attack resilience; `None` = all clients honest.
     pub adversary: Option<AdversarySpec>,
+    /// Transient store-fault injection (`fault = <p>` sets the per-op
+    /// Bernoulli rate; `outage = <start_s>:<dur_s>[, ...]` adds
+    /// scheduled outage windows on the experiment clock). When the model
+    /// is active each node's store stack gets a per-node
+    /// [`crate::store::FaultStore`] under a retrying
+    /// [`crate::store::RetryStore`] client, so injected failures are
+    /// absorbed by backoff instead of killing the node. The per-node
+    /// fault streams and retry jitter are seeded, so fault runs replay
+    /// bit-identically under both schedulers.
+    pub fault: FaultModel,
     /// Sync-barrier poll timeout before a node gives up on the round.
     pub sync_timeout: Duration,
+    /// Sync-barrier quorum fraction in (0, 1] (`sync_quorum = <frac>`).
+    /// At 1.0 (the default) a round needs the full cohort: a node whose
+    /// peers never arrive stalls at `sync_timeout` (today's behaviour).
+    /// Below 1.0 the barrier degrades gracefully: once half the timeout
+    /// has passed (the soft deadline) a round closes as soon as
+    /// `ceil(quorum * k)` cohort members have pushed, counting a
+    /// `degraded_round` instead of stalling the node.
+    pub sync_quorum: f64,
     /// Time domain of the experiment (`clock = real | virtual`): under
     /// [`ClockKind::Virtual`] straggler/latency sleeps and barrier
     /// timeouts consume simulated time — a discrete-event scheduler
@@ -295,7 +325,9 @@ impl Default for ExperimentConfig {
             node_delays_ms: Vec::new(),
             crash: None,
             adversary: None,
+            fault: FaultModel::default(),
             sync_timeout: Duration::from_secs(120),
+            sync_quorum: 1.0,
             clock: ClockKind::Real,
             compress: CodecKind::None,
             threads: 1,
@@ -326,7 +358,18 @@ impl ExperimentConfig {
         );
         if let Some(c) = &self.crash {
             anyhow::ensure!(c.node < self.n_nodes, "crash.node out of range");
+            if let Some(delay) = c.restart {
+                anyhow::ensure!(delay > Duration::ZERO, "crash restart delay must be > 0");
+            }
         }
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.fault.p_fail),
+            "fault probability in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.sync_quorum > 0.0 && self.sync_quorum <= 1.0,
+            "sync_quorum in (0, 1]"
+        );
         if let Some(a) = &self.adversary {
             anyhow::ensure!(
                 a.n_adversaries() < self.n_nodes,
@@ -392,8 +435,18 @@ impl ExperimentConfig {
             l if l.is_empty() => String::new(),
             l => format!("_{l}"),
         };
+        let fault = if self.fault.p_fail > 0.0 {
+            format!("_f{}", self.fault.p_fail)
+        } else {
+            String::new()
+        };
+        let quorum = if self.sync_quorum < 1.0 {
+            format!("_sq{}", self.sync_quorum)
+        } else {
+            String::new()
+        };
         format!(
-            "{}_{}_{}_n{}_s{}_seed{}{compress}{adversary}{participation}{availability}",
+            "{}_{}_{}_n{}_s{}_seed{}{compress}{adversary}{participation}{availability}{fault}{quorum}",
             self.model,
             self.mode.label(),
             self.strategy.label(),
@@ -422,9 +475,26 @@ mod tests {
         assert!(c.validate().is_err());
 
         let c = ExperimentConfig {
-            crash: Some(CrashSpec { node: 5, at_epoch: 0 }),
+            crash: Some(CrashSpec::at(5, 0)),
             ..Default::default()
         };
+        assert!(c.validate().is_err());
+
+        let c = ExperimentConfig {
+            crash: Some(CrashSpec { node: 0, at_epoch: 1, restart: Some(Duration::ZERO) }),
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "zero restart delay is rejected");
+
+        let c = ExperimentConfig {
+            fault: FaultModel { p_fail: 1.5, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+
+        let c = ExperimentConfig { sync_quorum: 0.0, ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig { sync_quorum: 1.5, ..Default::default() };
         assert!(c.validate().is_err());
 
         let c = ExperimentConfig {
@@ -606,6 +676,50 @@ mod tests {
         c.validate().unwrap();
         // same run identity as the threaded scheduler: bit-identical replay
         assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
+    }
+
+    #[test]
+    fn fault_and_quorum_validate_and_suffix_run_name() {
+        let d = ExperimentConfig::default();
+        assert!(!d.fault.is_active(), "no faults by default");
+        assert_eq!(d.sync_quorum, 1.0, "full quorum by default");
+
+        let c = ExperimentConfig {
+            fault: FaultModel { p_fail: 0.05, ..Default::default() },
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42_f0.05");
+
+        let c = ExperimentConfig {
+            mode: FederationMode::Sync,
+            sync_quorum: 0.5,
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert_eq!(c.run_name(), "mnist_sync_fedavg_n2_s0_seed42_sq0.5");
+
+        // outage-only fault models are active but carry no p suffix
+        let c = ExperimentConfig {
+            fault: FaultModel {
+                p_fail: 0.0,
+                outages: vec![crate::store::OutageWindow {
+                    start: Duration::from_secs(1),
+                    duration: Duration::from_secs(1),
+                }],
+            },
+            ..Default::default()
+        };
+        c.validate().unwrap();
+        assert!(c.fault.is_active());
+        assert_eq!(c.run_name(), "mnist_async_fedavg_n2_s0_seed42");
+
+        // restartable crash validates
+        let c = ExperimentConfig {
+            crash: Some(CrashSpec { node: 1, at_epoch: 1, restart: Some(Duration::from_secs(5)) }),
+            ..Default::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

@@ -101,6 +101,20 @@ pub struct NodeReport {
     pub train_time: Duration,
     /// Total time spent blocked on the sync barrier.
     pub wait_time: Duration,
+    /// Transient store failures injected against this node (per-node
+    /// [`crate::store::FaultStore`] under `fault` / `outage` config).
+    pub injected_faults: u64,
+    /// Store operations that failed transiently and were retried by the
+    /// node's [`crate::store::RetryStore`] client.
+    pub store_retries: u64,
+    /// Store operations the retry client gave up on (attempts or
+    /// deadline exhausted).
+    pub store_give_ups: u64,
+    /// Sync rounds this node closed degraded (quorum reached, full
+    /// cohort not — `sync_quorum < 1`).
+    pub degraded_rounds: u64,
+    /// Crash–restart recoveries performed (`crash = n@e:restart:<s>`).
+    pub restarts: u64,
 }
 
 /// Join handle + node id for a spawned node.
@@ -129,6 +143,11 @@ impl NodeHandle {
                 timeline: Timeline::new(self.node_id),
                 train_time: Duration::ZERO,
                 wait_time: Duration::ZERO,
+                injected_faults: 0,
+                store_retries: 0,
+                store_give_ups: 0,
+                degraded_rounds: 0,
+                restarts: 0,
             },
         }
     }

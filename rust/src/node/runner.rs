@@ -22,7 +22,7 @@ use crate::metrics::{EventField, RunLogger};
 use crate::protocol::{EpochCtx, EpochStep, FederationProtocol, ProtocolKind};
 use crate::runtime::{ModelBundle, TrainState};
 use crate::sched::{ParticipationPlan, StepOutcome, Task};
-use crate::store::WeightStore;
+use crate::store::{FaultStore, RetryPolicy, RetryStore, WeightStore};
 use crate::strategy::Strategy;
 use crate::time::Clock;
 
@@ -57,6 +57,12 @@ pub struct NodeRunner<'a> {
     tracer: Option<Arc<crate::trace::Tracer>>,
     epoch: usize,
     phase: Phase,
+    /// A restartable crash fires at most once (the epoch counter does
+    /// not advance across the recovery, so the trigger would re-fire).
+    crash_consumed: bool,
+    /// Handle on this node's fault/retry store stack (when the config's
+    /// fault model is active) for counter harvesting at report time.
+    chaos: Option<Arc<RetryStore<FaultStore<Arc<dyn WeightStore>>>>>,
     report: NodeReport,
     timeline: Timeline,
 }
@@ -81,6 +87,32 @@ impl<'a> NodeRunner<'a> {
     ) -> Result<NodeRunner<'a>> {
         let params = bundle.init_params(cfg.seed)?;
         let protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+        // Fault-tolerance stack: when the config injects store faults,
+        // this node talks to the shared store through its own
+        // FaultStore (per-node Bernoulli stream — a node's op order is
+        // deterministic under both schedulers, so per-node instances
+        // replay bit-identically where one shared RNG would be
+        // call-order-dependent; outage windows are pure in simulated
+        // time and therefore global) under a RetryStore client that
+        // absorbs the transients with seeded backoff.
+        let (store, chaos) = if cfg.fault.is_active() {
+            let seed = cfg.seed ^ (node_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let faulty = FaultStore::with_model(
+                Arc::clone(&store),
+                &cfg.fault,
+                Arc::clone(&clock),
+                seed,
+            );
+            let retry = Arc::new(RetryStore::new(
+                faulty,
+                RetryPolicy::default(),
+                Arc::clone(&clock),
+                seed ^ 0xD1B5_4A32_D192_ED03,
+            ));
+            (Arc::clone(&retry) as Arc<dyn WeightStore>, Some(retry))
+        } else {
+            (store, None)
+        };
         // the node's kernel pool (threads = auto | N): codec encode/decode
         // and strategy aggregation run chunk-parallel on it, with results
         // bit-identical to threads = 1
@@ -108,6 +140,11 @@ impl<'a> NodeRunner<'a> {
             timeline: Timeline::new(node_id),
             train_time: Duration::ZERO,
             wait_time: Duration::ZERO,
+            injected_faults: 0,
+            store_retries: 0,
+            store_give_ups: 0,
+            degraded_rounds: 0,
+            restarts: 0,
         };
         Ok(NodeRunner {
             node_id,
@@ -127,16 +164,41 @@ impl<'a> NodeRunner<'a> {
             tracer,
             epoch: 0,
             phase: Phase::Train,
+            crash_consumed: false,
+            chaos,
             report,
             timeline: Timeline::new(node_id),
         })
     }
 
     /// Record a driver-side error (e.g. a failed store wait) the same
-    /// way an internal one is recorded: `Failed` status, task over.
+    /// way an internal one is recorded: `Failed` status, task over. The
+    /// failure leaves forensic marks — a zero-width `Crashed` timeline
+    /// span and a typed `node_failed` trace instant — so a failed node
+    /// is visible in the ASCII timeline and the trace exports instead of
+    /// silently truncating.
     pub fn fail(&mut self, err: &anyhow::Error) {
         if self.report.status == NodeStatus::Completed {
             self.report.status = NodeStatus::Failed(format!("{err:#}"));
+            let t = self.clock.now();
+            self.timeline.record(SpanKind::Crashed, t, t);
+            if let Some(tracer) = &self.tracer {
+                tracer.instant(
+                    self.node_id,
+                    self.epoch as u64,
+                    t,
+                    crate::trace::TraceEventKind::NodeFailed,
+                );
+            }
+            if let Some(lg) = &self.logger {
+                let _ = lg.log_event_typed(
+                    "node_failed",
+                    &[
+                        ("node", EventField::Int(self.node_id as u64)),
+                        ("epoch", EventField::Int(self.epoch as u64)),
+                    ],
+                );
+            }
         }
         self.phase = Phase::Done;
     }
@@ -146,6 +208,12 @@ impl<'a> NodeRunner<'a> {
         self.report.train_time = self.timeline.total(SpanKind::Train);
         self.report.wait_time = self.timeline.total(SpanKind::Wait);
         self.report.timeline = self.timeline;
+        if let Some(chaos) = &self.chaos {
+            self.report.injected_faults = chaos.inner().injected();
+            let stats = chaos.stats();
+            self.report.store_retries = stats.retries;
+            self.report.store_give_ups = stats.give_ups;
+        }
         self.report
     }
 
@@ -162,13 +230,15 @@ impl<'a> NodeRunner<'a> {
                         self.phase = Phase::Done;
                         return Ok(StepOutcome::Done);
                     }
-                    if let Some(crash) = &self.cfg.crash {
+                    if let Some(crash) = self.cfg.crash {
                         // crash fires by epoch index whether or not the
                         // node is in that round's cohort — a device dies
                         // on its own schedule
-                        if crash.node == self.node_id && crash.at_epoch == self.epoch {
-                            self.report.status =
-                                NodeStatus::Crashed { at_epoch: self.epoch };
+                        if !self.crash_consumed
+                            && crash.node == self.node_id
+                            && crash.at_epoch == self.epoch
+                        {
+                            self.crash_consumed = true;
                             if let Some(lg) = &self.logger {
                                 let _ = lg.log_event_typed(
                                     "node_crash",
@@ -179,9 +249,23 @@ impl<'a> NodeRunner<'a> {
                                 );
                             }
                             let t = self.clock.now();
-                            self.timeline.record(SpanKind::Crashed, t, t);
-                            self.phase = Phase::Done;
-                            return Ok(StepOutcome::Done);
+                            match crash.restart {
+                                None => {
+                                    // permanent crash: the original §4.2.1
+                                    // failure experiment
+                                    self.report.status =
+                                        NodeStatus::Crashed { at_epoch: self.epoch };
+                                    self.timeline.record(SpanKind::Crashed, t, t);
+                                    self.phase = Phase::Done;
+                                    return Ok(StepOutcome::Done);
+                                }
+                                Some(delay) => {
+                                    // crash–restart: down for `delay` of
+                                    // experiment-clock time, then recover
+                                    self.recover_after(delay, t)?;
+                                    continue;
+                                }
+                            }
                         }
                     }
                     if !self.plan.participates(self.node_id, self.epoch) {
@@ -219,6 +303,7 @@ impl<'a> NodeRunner<'a> {
                     EpochStep::Done(out) => {
                         self.report.pushes += out.pushes;
                         self.report.aggregations += out.aggregations;
+                        self.report.degraded_rounds += out.degraded_rounds;
                         if let Some(round) = out.stalled_at {
                             // The node is stuck at the barrier, not dead:
                             // its current weights still exist (and were
@@ -246,6 +331,51 @@ impl<'a> NodeRunner<'a> {
                 }
             }
         }
+    }
+
+    /// Crash–restart recovery: the node is down for `delay` of
+    /// experiment-clock time (recorded as a `Crashed` timeline span from
+    /// `t_down`), then comes back as a fresh process — weights restored
+    /// from its own latest store entry (the checkpoint it pushed at its
+    /// last federated epoch; a node that never pushed restarts from the
+    /// seeded initial weights), optimizer moments, codec delta base and
+    /// protocol state rebuilt from scratch. The epoch counter does not
+    /// rewind: recovery resumes the epoch the crash interrupted.
+    fn recover_after(&mut self, delay: Duration, t_down: Duration) -> Result<()> {
+        self.clock.sleep(delay);
+        let t_up = self.clock.now();
+        self.timeline.record(SpanKind::Crashed, t_down, t_up);
+        if let Some(tracer) = &self.tracer {
+            tracer.span(
+                self.node_id,
+                self.epoch as u64,
+                t_down,
+                t_up,
+                crate::trace::TraceEventKind::Restart,
+            );
+        }
+        // The checkpoint read goes through the node's own fault/retry
+        // stack: a restart landing inside an outage window retries like
+        // any other pull instead of failing the recovery.
+        if let Some(entry) = self.store.latest_for_node(self.node_id)? {
+            self.state = TrainState::new((*entry.params).clone());
+        } else {
+            self.state = TrainState::new(self.bundle.init_params(self.cfg.seed)?);
+        }
+        self.codec = CodecState::new(self.cfg.compress);
+        self.protocol = ProtocolKind::from(self.cfg.mode).build(self.node_id, &self.cfg);
+        self.report.restarts += 1;
+        if let Some(lg) = &self.logger {
+            let _ = lg.log_event_typed(
+                "node_restart",
+                &[
+                    ("node", EventField::Int(self.node_id as u64)),
+                    ("epoch", EventField::Int(self.epoch as u64)),
+                    ("down_s", EventField::Num(delay.as_secs_f64())),
+                ],
+            );
+        }
+        Ok(())
     }
 
     fn train_epoch(&mut self) -> Result<()> {

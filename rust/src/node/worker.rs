@@ -111,6 +111,11 @@ fn failed_report(node_id: usize, err: &anyhow::Error) -> NodeReport {
         timeline: Timeline::new(node_id),
         train_time: Duration::ZERO,
         wait_time: Duration::ZERO,
+        injected_faults: 0,
+        store_retries: 0,
+        store_give_ups: 0,
+        degraded_rounds: 0,
+        restarts: 0,
     }
 }
 

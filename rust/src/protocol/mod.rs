@@ -209,6 +209,10 @@ pub struct ProtocolOutcome {
     /// Set when the sync barrier gave up waiting at this round; the node
     /// stops with [`crate::node::NodeStatus::Stalled`].
     pub stalled_at: Option<u64>,
+    /// Rounds this step closed *degraded*: the sync barrier's quorum
+    /// rule (`sync_quorum < 1`) aggregated a partial cohort after the
+    /// soft deadline instead of stalling the node. 0 or 1 per step.
+    pub degraded_rounds: u64,
 }
 
 /// One resumable federation step: either the epoch finished, or the
@@ -337,7 +341,7 @@ impl ProtocolKind {
     pub fn build(self, node_id: usize, cfg: &ExperimentConfig) -> Box<dyn FederationProtocol> {
         match self {
             ProtocolKind::Local => Box::new(LocalOnly),
-            ProtocolKind::Sync => Box::new(SyncBarrier::new()),
+            ProtocolKind::Sync => Box::new(SyncBarrier::with_quorum(cfg.sync_quorum)),
             ProtocolKind::Async => Box::new(AsyncHash::new(cfg.sample_prob, cfg.seed, node_id)),
             ProtocolKind::Gossip { fanout } => Box::new(Gossip::new(fanout, cfg.seed)),
         }
@@ -508,5 +512,77 @@ mod tests {
         assert_eq!(out.stalled_at, Some(0));
         assert_eq!(out.pushes, 1);
         assert_eq!(out.aggregations, 0);
+        assert_eq!(out.degraded_rounds, 0, "a full-quorum barrier never degrades");
+    }
+
+    #[test]
+    fn sync_quorum_closes_round_degraded_instead_of_stalling() {
+        // 1 of 2 nodes present, quorum 0.5 -> quorum_k = 1: the round
+        // must close on the partial set at the soft deadline (timeout/2)
+        // rather than stalling at the hard timeout.
+        let cfg = ExperimentConfig {
+            mode: FederationMode::Sync,
+            n_nodes: 2,
+            sync_quorum: 0.5,
+            ..Default::default()
+        };
+        let store = MemoryStore::new();
+        let mut node = TestNode::new(1, &cfg);
+        let t = std::time::Instant::now();
+        let out = node.epoch(&store, 2, 0, Duration::from_millis(100));
+        let dt = t.elapsed();
+        assert!(dt >= Duration::from_millis(45), "must wait to the soft deadline, got {dt:?}");
+        assert!(dt < Duration::from_millis(95), "must not ride out the hard timeout, got {dt:?}");
+        assert_eq!(out.stalled_at, None, "quorum demotes the stall");
+        assert_eq!(out.degraded_rounds, 1);
+        assert_eq!(out.pushes, 1);
+        assert_eq!(out.aggregations, 1, "the partial set is aggregated");
+        // aggregating own entry alone keeps own weights
+        assert_eq!(node.params.0, vec![10.0; 4]);
+    }
+
+    #[test]
+    fn sync_quorum_still_stalls_below_quorum() {
+        // quorum 0.9 of k = 3 -> quorum_k = 3: one node alone never
+        // reaches it, so the hard timeout still stalls.
+        let cfg = ExperimentConfig {
+            mode: FederationMode::Sync,
+            n_nodes: 3,
+            sync_quorum: 0.9,
+            ..Default::default()
+        };
+        let store = MemoryStore::new();
+        let mut node = TestNode::new(0, &cfg);
+        let out = node.epoch(&store, 3, 0, Duration::from_millis(60));
+        assert_eq!(out.stalled_at, Some(0));
+        assert_eq!(out.degraded_rounds, 0);
+    }
+
+    #[test]
+    fn sync_quorum_full_round_is_not_degraded() {
+        // both nodes arrive promptly: a quorum barrier behaves exactly
+        // like the full barrier, no degraded count
+        let cfg = ExperimentConfig {
+            mode: FederationMode::Sync,
+            n_nodes: 2,
+            sync_quorum: 0.5,
+            ..Default::default()
+        };
+        let store: Arc<dyn WeightStore> = Arc::new(MemoryStore::new());
+        let run = |node_id: usize| {
+            let store = Arc::clone(&store);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let mut node = TestNode::new(node_id, &cfg);
+                let out = node.epoch(&*store, 2, 0, Duration::from_secs(30));
+                assert_eq!(out.degraded_rounds, 0, "complete rounds are never degraded");
+                assert_eq!(out.stalled_at, None);
+                node.params
+            })
+        };
+        let (a, b) = (run(0), run(1));
+        let (pa, pb) = (a.join().unwrap(), b.join().unwrap());
+        assert_eq!(pa.0, pb.0);
+        assert_eq!(pa.0, vec![5.0; 4]);
     }
 }

@@ -34,14 +34,39 @@ struct PendingRound {
 /// version moves or the timeout deadline fires. A `sync_timeout` still
 /// bounds the wait so a crashed peer turns the node's status into
 /// `Stalled` instead of hanging (§4.2.1).
+///
+/// With a `quorum < 1` (`sync_quorum` config key) the barrier degrades
+/// gracefully instead of stalling: once half the timeout has passed (the
+/// *soft* deadline) a round closes as soon as `ceil(quorum * round_k)`
+/// entries exist, aggregating the partial set and counting a
+/// [`ProtocolOutcome::degraded_rounds`]. Only a round still *below*
+/// quorum at the hard timeout stalls the node. Every quorum decision is
+/// a pure function of (store contents, clock) that each cohort member
+/// evaluates identically, so no coordinator is needed — though members
+/// may close a round on different partial sets if pushes race the soft
+/// deadline, which is the accepted consistency cost of availability
+/// here (the async protocol lives with the same drift every epoch).
 pub struct SyncBarrier {
     pending: Option<PendingRound>,
+    quorum: f64,
 }
 
 impl SyncBarrier {
-    /// A barrier with no round in flight.
+    /// A barrier with no round in flight, requiring the full cohort.
     pub fn new() -> SyncBarrier {
-        SyncBarrier { pending: None }
+        SyncBarrier::with_quorum(1.0)
+    }
+
+    /// A barrier that may close rounds degraded at `ceil(quorum * k)`
+    /// members after the soft deadline. `quorum` must be in (0, 1];
+    /// 1.0 behaves exactly like [`SyncBarrier::new`].
+    pub fn with_quorum(quorum: f64) -> SyncBarrier {
+        assert!(quorum > 0.0 && quorum <= 1.0, "quorum in (0, 1]");
+        SyncBarrier { pending: None, quorum }
+    }
+
+    fn quorum_k(&self, round_k: usize) -> usize {
+        ((self.quorum * round_k as f64).ceil() as usize).clamp(1, round_k)
     }
 }
 
@@ -81,22 +106,35 @@ impl FederationProtocol for SyncBarrier {
         let entries = ctx.store.entries_for_round(round)?;
         // every re-pull downloaded these bytes, complete or not
         ctx.record_pull(&entries);
-        if entries.len() < ctx.round_k {
+        let complete = entries.len() >= ctx.round_k;
+        if !complete {
             // barrier still open: elapsed time and the stall timeout are
             // measured on the experiment clock, so a crashed peer
             // releases survivors within *simulated* timeout under a
             // virtual clock — no real-time wait.
             let elapsed = ctx.clock.now().saturating_sub(wait_start);
-            if elapsed < ctx.sync_timeout {
-                return Ok(EpochStep::Wait { since: seen, timeout: ctx.sync_timeout - elapsed });
+            // the soft deadline after which a quorum may close degraded
+            let soft = ctx.sync_timeout / 2;
+            let quorum_met =
+                self.quorum < 1.0 && entries.len() >= self.quorum_k(ctx.round_k);
+            if elapsed < ctx.sync_timeout && !(quorum_met && elapsed >= soft) {
+                // Keep waiting — for the full cohort until the hard
+                // timeout, or (quorum already met) for late peers until
+                // the soft deadline, whichever re-poll comes first.
+                let deadline = if quorum_met { soft } else { ctx.sync_timeout };
+                return Ok(EpochStep::Wait { since: seen, timeout: deadline - elapsed });
             }
-            ctx.timeline.record(SpanKind::Wait, wait_start, ctx.clock.now());
-            self.pending = None;
-            return Ok(EpochStep::Done(ProtocolOutcome {
-                pushes: 1,
-                stalled_at: Some(round),
-                ..Default::default()
-            }));
+            if !quorum_met {
+                // hard timeout below quorum: the legacy stall
+                ctx.timeline.record(SpanKind::Wait, wait_start, ctx.clock.now());
+                self.pending = None;
+                return Ok(EpochStep::Done(ProtocolOutcome {
+                    pushes: 1,
+                    stalled_at: Some(round),
+                    ..Default::default()
+                }));
+            }
+            // fall through: close the round degraded on the partial set
         }
         self.pending = None;
         ctx.timeline.record(SpanKind::Wait, wait_start, ctx.clock.now());
@@ -112,7 +150,11 @@ impl FederationProtocol for SyncBarrier {
                 params: Arc::clone(&e.params),
             })
             .collect();
-        let mut out = ProtocolOutcome { pushes: 1, ..Default::default() };
+        let mut out = ProtocolOutcome {
+            pushes: 1,
+            degraded_rounds: if complete { 0 } else { 1 },
+            ..Default::default()
+        };
         if let Some(new_params) = ctx.strategy.aggregate_pooled(&contribs, ctx.pool) {
             *params = new_params;
             out.aggregations = 1;

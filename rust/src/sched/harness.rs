@@ -19,7 +19,7 @@ use crate::compress::{CodecKind, CodecState};
 use crate::config::{ExperimentConfig, FederationMode};
 use crate::metrics::timeline::{Span, SpanKind, Timeline};
 use crate::protocol::{EpochCtx, EpochStep, FederationProtocol, ProtocolKind};
-use crate::store::{MemoryStore, WeightStore};
+use crate::store::{FaultModel, FaultStore, MemoryStore, RetryPolicy, RetryStore, WeightStore};
 use crate::strategy::{Strategy, StrategyKind};
 use crate::tensor::FlatParams;
 use crate::time::Clock;
@@ -42,6 +42,18 @@ pub struct TrialSpec {
     /// `(node, epoch)`: that node exits at the start of that epoch
     /// without pushing (the §4.2.1 crash scenario).
     pub crash: Option<(usize, usize)>,
+    /// When set with `crash`, the crashed node restarts after this much
+    /// simulated downtime, restoring weights from its own latest store
+    /// entry (mirrors `crash = node@epoch:restart:<secs>` in configs).
+    pub crash_restart: Option<Duration>,
+    /// Store fault model: each node's store traffic goes through its own
+    /// [`FaultStore`] + [`RetryStore`] stack when the model is active,
+    /// exactly as [`crate::node::NodeRunner`] builds it.
+    pub fault: FaultModel,
+    /// Sync-barrier quorum fraction in `(0, 1]`; below 1.0 a round may
+    /// close degraded after the soft deadline (see
+    /// [`crate::protocol::sync`]).
+    pub sync_quorum: f64,
     /// Per-round cohort fraction in `(0, 1]`.
     pub participation: f64,
     /// Availability trace.
@@ -73,6 +85,9 @@ impl TrialSpec {
             epochs,
             sync_timeout: Duration::from_secs(3600),
             crash: None,
+            crash_restart: None,
+            fault: FaultModel::default(),
+            sync_quorum: 1.0,
             participation: 1.0,
             availability: AvailabilitySpec::None,
             seed: ExperimentConfig::default().seed,
@@ -97,6 +112,20 @@ pub struct SimNodeResult {
     pub params: FlatParams,
     /// Whether the node stalled at a sync barrier.
     pub stalled: bool,
+    /// Whether the node died on a store error (retry layer gave up, or
+    /// no retry layer was configured to absorb the fault).
+    pub failed: bool,
+    /// Crash–restart recoveries this node performed.
+    pub restarts: u64,
+    /// Sync rounds this node closed degraded (quorum reached, full
+    /// cohort not).
+    pub degraded_rounds: u64,
+    /// Faults its store stack injected (0 without a fault model).
+    pub injected_faults: u64,
+    /// Transient store failures absorbed by retry.
+    pub store_retries: u64,
+    /// Store operations that exhausted the retry budget.
+    pub store_give_ups: u64,
     /// The node's wire-traffic accounting.
     pub traffic: crate::metrics::TrafficMeter,
 }
@@ -121,6 +150,16 @@ struct SimNode {
     epoch: usize,
     phase: Phase,
     stalled: bool,
+    failed: bool,
+    /// A restartable crash fires at most once (the epoch counter does
+    /// not advance across the recovery, so the trigger would re-fire).
+    crash_consumed: bool,
+    restarts: u64,
+    degraded_rounds: u64,
+    /// Handle on this node's fault/retry stack for counter harvesting
+    /// (present iff the spec's fault model is active).
+    chaos: Option<Arc<RetryStore<FaultStore<Arc<dyn WeightStore>>>>>,
+    init: fn(usize) -> FlatParams,
     finish: Duration,
     tracer: Option<Arc<crate::trace::Tracer>>,
 }
@@ -129,6 +168,54 @@ impl SimNode {
     fn finish_now(&mut self) -> StepOutcome {
         self.finish = self.clock.now();
         StepOutcome::Done
+    }
+
+    /// Store-layer death, mirroring [`crate::node::NodeRunner::fail`]:
+    /// a zero-width `Crashed` timeline marker plus a `node_failed` trace
+    /// instant at the failure point.
+    fn fail_now(&mut self) -> StepOutcome {
+        self.failed = true;
+        let t = self.clock.now();
+        self.timeline.record(SpanKind::Crashed, t, t);
+        if let Some(tracer) = &self.tracer {
+            tracer.instant(
+                self.node_id,
+                self.epoch as u64,
+                t,
+                crate::trace::TraceEventKind::NodeFailed,
+            );
+        }
+        self.finish_now()
+    }
+
+    /// Crash–restart recovery, mirroring
+    /// `NodeRunner::recover_after`: down for `delay` of simulated time
+    /// (a `Crashed` span from `t_down`), then weights restored from the
+    /// node's own latest store entry — through the fault/retry stack, so
+    /// a restart landing inside an outage retries like any pull — and
+    /// codec/protocol state rebuilt from scratch. The epoch counter does
+    /// not rewind.
+    fn recover_after(&mut self, delay: Duration, t_down: Duration) -> Result<()> {
+        self.clock.sleep(delay);
+        let t_up = self.clock.now();
+        self.timeline.record(SpanKind::Crashed, t_down, t_up);
+        if let Some(tracer) = &self.tracer {
+            tracer.span(
+                self.node_id,
+                self.epoch as u64,
+                t_down,
+                t_up,
+                crate::trace::TraceEventKind::Restart,
+            );
+        }
+        self.params = match self.store.latest_for_node(self.node_id)? {
+            Some(entry) => (*entry.params).clone(),
+            None => (self.init)(self.node_id),
+        };
+        self.codec = CodecState::new(self.cfg.compress);
+        self.protocol = ProtocolKind::from(self.cfg.mode).build(self.node_id, &self.cfg);
+        self.restarts += 1;
+        Ok(())
     }
 }
 
@@ -144,10 +231,29 @@ impl Task for SimNode {
                     if self.epoch >= self.cfg.epochs {
                         return self.finish_now();
                     }
-                    if self.cfg.crash.as_ref().is_some_and(|c| {
-                        c.node == self.node_id && c.at_epoch == self.epoch
-                    }) {
-                        return self.finish_now(); // dies without pushing
+                    if let Some(crash) = self.cfg.crash {
+                        if !self.crash_consumed
+                            && crash.node == self.node_id
+                            && crash.at_epoch == self.epoch
+                        {
+                            self.crash_consumed = true;
+                            let t = self.clock.now();
+                            match crash.restart {
+                                None => {
+                                    self.timeline.record(SpanKind::Crashed, t, t);
+                                    return self.finish_now(); // dies without pushing
+                                }
+                                Some(delay) => {
+                                    // crash–restart: down for `delay` of
+                                    // simulated time, then back with the
+                                    // checkpointed weights
+                                    if self.recover_after(delay, t).is_err() {
+                                        return self.fail_now();
+                                    }
+                                    return StepOutcome::Yield;
+                                }
+                            }
+                        }
                     }
                     if !self.plan.participates(self.node_id, self.epoch) {
                         self.epoch += 1; // off-cohort: zero simulated time
@@ -187,13 +293,16 @@ impl Task for SimNode {
                     pool: crate::par::ChunkPool::from_config(self.cfg.threads),
                     tracer: self.tracer.as_deref(),
                 };
-                match self
-                    .protocol
-                    .poll_epoch(&mut ctx, &mut self.params)
-                    .expect("in-memory harness protocols cannot fail")
-                {
-                    EpochStep::Wait { since, timeout } => StepOutcome::Wait { since, timeout },
-                    EpochStep::Done(out) => {
+                // Without a fault model the in-memory store cannot fail;
+                // with one, an error here means the retry layer gave up
+                // and the node dies like a threaded worker would.
+                match self.protocol.poll_epoch(&mut ctx, &mut self.params) {
+                    Err(_) => self.fail_now(),
+                    Ok(EpochStep::Wait { since, timeout }) => {
+                        StepOutcome::Wait { since, timeout }
+                    }
+                    Ok(EpochStep::Done(out)) => {
+                        self.degraded_rounds += out.degraded_rounds;
                         if out.stalled_at.is_some() {
                             self.stalled = true;
                             return self.finish_now();
@@ -230,7 +339,13 @@ pub fn run_events_trial_captured(
         seed: spec.seed,
         compress: spec.compress,
         threads: spec.threads,
-        crash: spec.crash.map(|(node, at_epoch)| crate::config::CrashSpec { node, at_epoch }),
+        crash: spec.crash.map(|(node, at_epoch)| {
+            let mut c = crate::config::CrashSpec::at(node, at_epoch);
+            c.restart = spec.crash_restart;
+            c
+        }),
+        fault: spec.fault.clone(),
+        sync_quorum: spec.sync_quorum,
         ..Default::default()
     });
     let store: Arc<dyn WeightStore> =
@@ -242,23 +357,53 @@ pub fn run_events_trial_captured(
         n,
     ));
     let mut nodes: Vec<SimNode> = (0..n)
-        .map(|node_id| SimNode {
-            node_id,
-            cfg: Arc::clone(&cfg),
-            store: Arc::clone(&store),
-            clock: Arc::clone(&clock),
-            plan: Arc::clone(&plan),
-            delay: spec.delays[node_id],
-            protocol: ProtocolKind::from(cfg.mode).build(node_id, &cfg),
-            strategy: StrategyKind::FedAvg.build(),
-            codec: CodecState::new(cfg.compress),
-            timeline: Timeline::new(node_id),
-            params: (spec.init)(node_id),
-            epoch: 0,
-            phase: Phase::Train,
-            stalled: false,
-            finish: Duration::ZERO,
-            tracer: spec.tracer.clone(),
+        .map(|node_id| {
+            // Per-node fault/retry stack when the model is active, built
+            // exactly like NodeRunner's: a per-node FaultStore (its own
+            // deterministic Bernoulli stream) under a RetryStore client
+            // with seeded backoff on the trial clock.
+            let (node_store, chaos) = if cfg.fault.is_active() {
+                let seed = cfg.seed ^ (node_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let faulty = FaultStore::with_model(
+                    Arc::clone(&store),
+                    &cfg.fault,
+                    Arc::clone(&clock) as Arc<dyn Clock>,
+                    seed,
+                );
+                let retry = Arc::new(RetryStore::new(
+                    faulty,
+                    RetryPolicy::default(),
+                    Arc::clone(&clock) as Arc<dyn Clock>,
+                    seed ^ 0xD1B5_4A32_D192_ED03,
+                ));
+                (Arc::clone(&retry) as Arc<dyn WeightStore>, Some(retry))
+            } else {
+                (Arc::clone(&store), None)
+            };
+            SimNode {
+                node_id,
+                cfg: Arc::clone(&cfg),
+                store: node_store,
+                clock: Arc::clone(&clock),
+                plan: Arc::clone(&plan),
+                delay: spec.delays[node_id],
+                protocol: ProtocolKind::from(cfg.mode).build(node_id, &cfg),
+                strategy: StrategyKind::FedAvg.build(),
+                codec: CodecState::new(cfg.compress),
+                timeline: Timeline::new(node_id),
+                params: (spec.init)(node_id),
+                epoch: 0,
+                phase: Phase::Train,
+                stalled: false,
+                failed: false,
+                crash_consumed: false,
+                restarts: 0,
+                degraded_rounds: 0,
+                chaos,
+                init: spec.init,
+                finish: Duration::ZERO,
+                tracer: spec.tracer.clone(),
+            }
         })
         .collect();
 
@@ -269,13 +414,25 @@ pub fn run_events_trial_captured(
 
     let results = nodes
         .into_iter()
-        .map(|node| SimNodeResult {
-            node_id: node.node_id,
-            finish: node.finish,
-            traffic: node.timeline.traffic,
-            spans: node.timeline.spans,
-            params: node.params,
-            stalled: node.stalled,
+        .map(|node| {
+            let (injected, retry_stats) = match &node.chaos {
+                Some(chaos) => (chaos.inner().injected(), chaos.stats()),
+                None => (0, Default::default()),
+            };
+            SimNodeResult {
+                node_id: node.node_id,
+                finish: node.finish,
+                traffic: node.timeline.traffic,
+                spans: node.timeline.spans,
+                params: node.params,
+                stalled: node.stalled,
+                failed: node.failed,
+                restarts: node.restarts,
+                degraded_rounds: node.degraded_rounds,
+                injected_faults: injected,
+                store_retries: retry_stats.retries,
+                store_give_ups: retry_stats.give_ups,
+            }
         })
         .collect();
     Ok((results, store))
@@ -351,6 +508,57 @@ mod tests {
             .map(|n| n.spans.iter().filter(|s| s.kind == SpanKind::Train).count())
             .sum();
         assert_eq!(total, 4 * 5, "4 rounds × cohort of 5");
+    }
+
+    #[test]
+    fn crash_restart_rejoins_and_completes() {
+        let mut spec = TrialSpec::new(FederationMode::Async, vec![ms(50), ms(70)], 4);
+        spec.crash = Some((1, 2));
+        spec.crash_restart = Some(ms(300));
+        let nodes = run_events_trial(&spec).unwrap();
+        assert!(!nodes[1].failed && !nodes[1].stalled);
+        assert_eq!(nodes[1].restarts, 1);
+        // downtime costs exactly its delay: 4 epochs × 70ms + 300ms down
+        assert_eq!(nodes[1].finish, ms(4 * 70 + 300));
+        assert!(
+            nodes[1]
+                .spans
+                .iter()
+                .any(|s| s.kind == SpanKind::Crashed && s.end - s.start == ms(300)),
+            "the outage must be a 300ms Crashed span"
+        );
+        assert_eq!(nodes[0].restarts, 0);
+    }
+
+    #[test]
+    fn fault_model_is_absorbed_and_replays_bit_identically() {
+        let mk = || {
+            let mut spec = TrialSpec::new(FederationMode::Async, vec![ms(10); 4], 5);
+            spec.fault = FaultModel {
+                p_fail: 0.2,
+                outages: vec![crate::store::OutageWindow {
+                    start: ms(25),
+                    duration: ms(40),
+                }],
+            };
+            spec.seed = 42;
+            run_events_trial(&spec).unwrap()
+        };
+        let a = mk();
+        assert!(a.iter().all(|n| !n.failed), "retry must absorb every fault");
+        assert!(a.iter().all(|n| !n.stalled));
+        let injected: u64 = a.iter().map(|n| n.injected_faults).sum();
+        let retried: u64 = a.iter().map(|n| n.store_retries).sum();
+        assert!(injected >= 1, "p=0.2 plus an outage must inject something");
+        assert_eq!(retried, injected, "every transient is retried, none gave up");
+        assert_eq!(a.iter().map(|n| n.store_give_ups).sum::<u64>(), 0);
+        let b = mk();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.finish, y.finish, "node {}", x.node_id);
+            assert_eq!(x.params.0, y.params.0);
+            assert_eq!(x.injected_faults, y.injected_faults);
+            assert_eq!(x.store_retries, y.store_retries);
+        }
     }
 
     #[test]

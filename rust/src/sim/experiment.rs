@@ -21,7 +21,9 @@ use crate::store::{
 use crate::tensor::flat::weighted_average_pooled;
 use crate::tensor::FlatParams;
 use crate::time::Clock;
-use crate::trace::{compute_divergence, DivergenceReport, NodeSpanSummary, RunSummary, Tracer};
+use crate::trace::{
+    compute_divergence, DivergenceReport, FaultTotals, NodeSpanSummary, RunSummary, Tracer,
+};
 
 /// Outcome of one experiment run.
 #[derive(Debug)]
@@ -71,6 +73,20 @@ impl ExperimentResult {
         render_ascii(&tls, width)
     }
 
+    /// Fleet-wide fault-layer totals folded from the per-node reports
+    /// (all zero on a clean run).
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut f = FaultTotals::default();
+        for r in &self.reports {
+            f.injected_faults += r.injected_faults;
+            f.store_retries += r.store_retries;
+            f.store_give_ups += r.store_give_ups;
+            f.degraded_rounds += r.degraded_rounds;
+            f.restarts += r.restarts;
+        }
+        f
+    }
+
     /// Experiment-wide weight-store traffic: every node's
     /// [`crate::metrics::TrafficMeter`] merged (encoded wire bytes,
     /// blob headers included).
@@ -95,6 +111,7 @@ impl ExperimentResult {
             store_pushes: self.store_pushes,
             mean_idle_fraction: self.mean_idle_fraction,
             all_completed: self.all_completed,
+            faults: self.fault_totals(),
             nodes: self
                 .reports
                 .iter()

@@ -261,6 +261,21 @@ impl<S: WeightStore> WeightStore for AdversaryStore<S> {
         self.history.lock().unwrap().clear();
         self.inner.clear()
     }
+
+    fn push_if_version(&self, mut req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // Same content rewrite as a plain push, then forward to the
+        // inner store's atomic CAS. A refused CAS still "spent" the
+        // corruption (stale history advanced) — matching a real replay
+        // adversary, who cannot observe the conditional-put verdict
+        // before choosing its payload.
+        if self.spec.is_adversary(req.node_id, self.n_nodes) {
+            if let Some(rewritten) = self.corrupt(&req) {
+                self.corrupted.fetch_add(1, Ordering::Relaxed);
+                req.params = rewritten;
+            }
+        }
+        self.inner.push_if_version(req, expected)
+    }
 }
 
 #[cfg(test)]

@@ -100,6 +100,16 @@ impl<S: WeightStore> WeightStore for CachedStore<S> {
         *self.cache.lock().unwrap() = None;
         self.inner.clear()
     }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // forward the CAS to the inner store's atomic implementation; a
+        // landed put invalidates our view just like a plain push
+        let out = self.inner.push_if_version(req, expected)?;
+        if out.is_some() {
+            *self.cache.lock().unwrap() = None;
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

@@ -1,46 +1,153 @@
 //! Fault-injecting store wrapper: seeded transient errors on push/pull,
 //! used by the robustness experiments (§4.2.1: "real world model training
 //! jobs can be fragile") and by failure-handling tests.
+//!
+//! Two fault mechanisms compose:
+//!
+//! * **per-op Bernoulli** — each data operation fails with probability
+//!   `p_fail`, deterministically in the wrapper's seed (and, for a
+//!   per-node wrapper, in that node's own operation order);
+//! * **scheduled outage windows** — every data operation inside a
+//!   configured `[start, start+duration)` interval of the experiment
+//!   clock fails. The schedule is pure in `(config, simulated-time)`, so
+//!   a retrying client that straddles an outage replays bit-identically
+//!   under any scheduler or thread count — which is exactly what the
+//!   chaos conformance tests exercise.
+//!
+//! Injected failures carry a [`StoreError`] of kind
+//! [`crate::store::StoreErrorKind::Transient`], so the retry layer
+//! ([`crate::store::RetryStore`]) knows they are worth retrying.
+//!
+//! The subscription path (`version`/`wait_for_change`) is never injected
+//! — see the comments on those methods.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use super::{PushRequest, WeightEntry, WeightStore};
+use super::{PushRequest, StoreError, WeightEntry, WeightStore};
+use crate::time::Clock;
 use crate::util::Rng;
 
-/// Wraps an inner store; each operation fails with probability `p_fail`.
+/// One scheduled store outage: every data-plane operation with a clock
+/// reading in `[start, start + duration)` fails (a fault *burst* in the
+/// taxonomy of ISSUE terms — total unavailability for the window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OutageWindow {
+    /// Offset of the outage start from the experiment clock's origin.
+    pub start: Duration,
+    /// How long the outage lasts.
+    pub duration: Duration,
+}
+
+impl OutageWindow {
+    /// Whether clock offset `t` falls inside the outage.
+    pub fn contains(&self, t: Duration) -> bool {
+        t >= self.start && t < self.start + self.duration
+    }
+
+    /// Parse `"<start_s>:<dur_s>"` (seconds, fractional allowed); `None`
+    /// on malformed input or a non-positive duration.
+    pub fn parse(s: &str) -> Option<OutageWindow> {
+        let (start, dur) = s.split_once(':')?;
+        let start = start.trim().parse::<f64>().ok().filter(|v| v.is_finite() && *v >= 0.0)?;
+        let dur = dur.trim().parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0)?;
+        Some(OutageWindow {
+            start: Duration::from_secs_f64(start),
+            duration: Duration::from_secs_f64(dur),
+        })
+    }
+}
+
+/// The runtime fault configuration: Bernoulli rate plus any scheduled
+/// outage windows. Carried on
+/// [`crate::config::ExperimentConfig`] and handed to
+/// [`FaultStore::with_model`] when building a node's store stack.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultModel {
+    /// Per-operation failure probability in `[0, 1]`.
+    pub p_fail: f64,
+    /// Scheduled outages on the experiment clock.
+    pub outages: Vec<OutageWindow>,
+}
+
+impl FaultModel {
+    /// Whether this model can ever inject a failure.
+    pub fn is_active(&self) -> bool {
+        self.p_fail > 0.0 || !self.outages.is_empty()
+    }
+}
+
+/// Wraps an inner store; each operation fails with probability `p_fail`,
+/// and unconditionally inside any scheduled [`OutageWindow`].
 pub struct FaultStore<S> {
     inner: S,
     p_fail: f64,
+    outages: Vec<OutageWindow>,
+    /// Clock the outage schedule is evaluated on; `None` disables
+    /// outages (the legacy Bernoulli-only construction).
+    clock: Option<Arc<dyn Clock>>,
     rng: Mutex<Rng>,
     injected: std::sync::atomic::AtomicU64,
 }
 
 impl<S: WeightStore> FaultStore<S> {
     /// Wrap `inner`; each operation fails with probability `p_fail`,
-    /// deterministically in `seed`.
+    /// deterministically in `seed`. No outage schedule.
     pub fn new(inner: S, p_fail: f64, seed: u64) -> Self {
+        FaultStore::build(inner, p_fail, Vec::new(), None, seed)
+    }
+
+    /// Wrap `inner` with a full [`FaultModel`]: Bernoulli failures plus
+    /// outage windows evaluated on `clock` (pass the experiment clock so
+    /// the schedule lives in simulated time).
+    pub fn with_model(inner: S, model: &FaultModel, clock: Arc<dyn Clock>, seed: u64) -> Self {
+        FaultStore::build(inner, model.p_fail, model.outages.clone(), Some(clock), seed)
+    }
+
+    fn build(
+        inner: S,
+        p_fail: f64,
+        outages: Vec<OutageWindow>,
+        clock: Option<Arc<dyn Clock>>,
+        seed: u64,
+    ) -> Self {
         assert!((0.0..=1.0).contains(&p_fail));
         FaultStore {
             inner,
             p_fail,
+            outages,
+            clock,
             rng: Mutex::new(Rng::new(seed ^ 0xFA_17)),
             injected: Default::default(),
         }
     }
 
-    /// Number of injected failures so far.
+    /// Number of injected failures so far (outages included).
     pub fn injected(&self) -> u64 {
         self.injected.load(std::sync::atomic::Ordering::Relaxed)
     }
 
-    fn maybe_fail(&self, op: &str) -> Result<()> {
-        let roll = self.rng.lock().unwrap().chance(self.p_fail);
-        if roll {
+    fn maybe_fail(&self, op: &'static str) -> Result<()> {
+        if let Some(clock) = &self.clock {
+            let t = clock.now();
+            if let Some(w) = self.outages.iter().find(|w| w.contains(t)) {
+                self.injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(StoreError::transient(
+                    op,
+                    format!(
+                        "store outage window {:.3}s+{:.3}s (t={:.3}s)",
+                        w.start.as_secs_f64(),
+                        w.duration.as_secs_f64(),
+                        t.as_secs_f64()
+                    ),
+                ));
+            }
+        }
+        if self.p_fail > 0.0 && self.rng.lock().unwrap().chance(self.p_fail) {
             self.injected.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            bail!("injected store failure during {op}");
+            return Err(StoreError::transient(op, "injected store failure"));
         }
         Ok(())
     }
@@ -97,13 +204,20 @@ impl<S: WeightStore> WeightStore for FaultStore<S> {
     fn clear(&self) -> Result<()> {
         self.inner.clear()
     }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // a conditional put is a data write like any other: injectable,
+        // then forwarded to the inner store's atomic CAS
+        self.maybe_fail("push_if_version")?;
+        self.inner.push_if_version(req, expected)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::store::store_tests;
-    use crate::store::MemoryStore;
+    use crate::store::{MemoryStore, StoreErrorKind};
 
     #[test]
     fn p_zero_is_transparent() {
@@ -119,6 +233,16 @@ mod tests {
         assert!(s.latest_per_node().is_err());
         assert!(s.state_hash().is_err());
         assert_eq!(s.injected(), 3);
+    }
+
+    #[test]
+    fn injected_errors_classify_as_transient() {
+        let s = FaultStore::new(MemoryStore::new(), 1.0, 1);
+        let err = s.push(store_tests::push_req(0, 0, 1.0)).unwrap_err();
+        assert_eq!(StoreError::classify(&err), StoreErrorKind::Transient);
+        // a context wrapper around it must still classify through the chain
+        let wrapped = err.context("pushing epoch 0 weights");
+        assert_eq!(StoreError::classify(&wrapped), StoreErrorKind::Transient);
     }
 
     /// Regression: the subscription path (`version`/`wait_for_change`)
@@ -169,5 +293,53 @@ mod tests {
             .filter(|_| s.push(store_tests::push_req(0, 0, 1.0)).is_err())
             .count();
         assert!((200..400).contains(&fails), "fails={fails}");
+    }
+
+    #[test]
+    fn outage_window_fails_inside_and_heals_outside() {
+        use crate::time::{ParticipantGuard, VirtualClock};
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        clock.enter();
+        let _guard = ParticipantGuard::adopt(Arc::clone(&clock));
+        let model = FaultModel {
+            p_fail: 0.0,
+            outages: vec![OutageWindow {
+                start: Duration::from_secs(2),
+                duration: Duration::from_secs(3),
+            }],
+        };
+        let s = FaultStore::with_model(
+            MemoryStore::with_clock(Arc::clone(&clock)),
+            &model,
+            Arc::clone(&clock),
+            1,
+        );
+        // before the outage: healthy
+        s.push(store_tests::push_req(0, 0, 1.0)).unwrap();
+        // inside the window: every data op fails, typed transient
+        clock.sleep(Duration::from_secs(2));
+        let err = s.push(store_tests::push_req(0, 1, 2.0)).unwrap_err();
+        assert_eq!(StoreError::classify(&err), StoreErrorKind::Transient);
+        assert!(s.latest_per_node().is_err());
+        // the subscription path still works mid-outage
+        s.version().expect("version must survive an outage");
+        // past the window: healed
+        clock.sleep(Duration::from_secs(3));
+        s.push(store_tests::push_req(0, 2, 3.0)).unwrap();
+        assert_eq!(s.injected(), 2);
+    }
+
+    #[test]
+    fn outage_parse_roundtrip() {
+        let w = OutageWindow::parse("2.5:1").unwrap();
+        assert_eq!(w.start, Duration::from_millis(2500));
+        assert_eq!(w.duration, Duration::from_secs(1));
+        assert!(w.contains(Duration::from_secs(3)));
+        assert!(!w.contains(Duration::from_millis(2499)));
+        assert!(!w.contains(Duration::from_millis(3500)));
+        assert!(OutageWindow::parse("5").is_none());
+        assert!(OutageWindow::parse("5:0").is_none());
+        assert!(OutageWindow::parse("-1:2").is_none());
+        assert!(OutageWindow::parse("a:b").is_none());
     }
 }

@@ -159,6 +159,54 @@ impl FsStore {
         Some(FileBytes::Mapped(map))
     }
 
+    /// [`WeightStore::state_hash`] body; caller holds `scan_lock`.
+    fn state_hash_locked(&self) -> Result<u64> {
+        let mut names = self.list()?;
+        names.sort_by_key(|&(node, seq, _)| (node, seq));
+        let mut h = 0xfeed_f00d_u64;
+        for (node, seq, path) in names {
+            h = combine(h, (node as u64) << 48 | seq);
+            // A vanished file (racing rename) simply contributes no
+            // header bytes this poll; the next poll converges.
+            if let Ok(prefix) = self.read_prefix(&path, PEEK_LEN) {
+                h = combine(h, fnv1a64(&prefix));
+            }
+        }
+        Ok(h)
+    }
+
+    /// [`WeightStore::version`] body; caller holds `scan_lock`. Observes
+    /// the current listing hash and advances the handle-local counter if
+    /// it changed.
+    fn observe_version_locked(&self) -> Result<u64> {
+        let h = self.state_hash_locked()?;
+        let mut g = self.change.lock().unwrap();
+        if g.0 != h {
+            g.0 = h;
+            g.1 += 1;
+        }
+        Ok(g.1)
+    }
+
+    /// Encode and atomically place one blob file (the shared write path
+    /// of `push` and `push_if_version`).
+    fn write_blob(&self, req: &PushRequest, seq: u64) -> Result<()> {
+        let meta = BlobMeta {
+            node_id: req.node_id as u32,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+        };
+        let blob = encode_blob(&meta, &req.params);
+        let final_path = self.root.join(format!("n{}_s{}.flwr", req.node_id, seq));
+        let tmp_path = self.root.join(format!(".tmp_n{}_s{}", req.node_id, seq));
+        fs::write(&tmp_path, &blob).with_context(|| format!("write {tmp_path:?}"))?;
+        fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("rename to {final_path:?}"))?;
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Fully read and decode one blob file into an entry. `None` for a
     /// racing rename or a torn/corrupt blob — eventual consistency, like
     /// listing a bucket mid-upload.
@@ -282,19 +330,7 @@ mod mapped {
 impl WeightStore for FsStore {
     fn push(&self, req: PushRequest) -> Result<u64> {
         let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
-        let meta = BlobMeta {
-            node_id: req.node_id as u32,
-            round: req.round,
-            epoch: req.epoch,
-            n_examples: req.n_examples,
-        };
-        let blob = encode_blob(&meta, &req.params);
-        let final_path = self.root.join(format!("n{}_s{}.flwr", req.node_id, seq));
-        let tmp_path = self.root.join(format!(".tmp_n{}_s{}", req.node_id, seq));
-        fs::write(&tmp_path, &blob).with_context(|| format!("write {tmp_path:?}"))?;
-        fs::rename(&tmp_path, &final_path)
-            .with_context(|| format!("rename to {final_path:?}"))?;
-        self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.write_blob(&req, seq)?;
         Ok(seq)
     }
 
@@ -347,18 +383,7 @@ impl WeightStore for FsStore {
         // full scan it never reads a payload — polling I/O stays
         // O(header) per file (pinned by a regression test below).
         let _g = self.scan_lock.lock().unwrap();
-        let mut names = self.list()?;
-        names.sort_by_key(|&(node, seq, _)| (node, seq));
-        let mut h = 0xfeed_f00d_u64;
-        for (node, seq, path) in names {
-            h = combine(h, (node as u64) << 48 | seq);
-            // A vanished file (racing rename) simply contributes no
-            // header bytes this poll; the next poll converges.
-            if let Ok(prefix) = self.read_prefix(&path, PEEK_LEN) {
-                h = combine(h, fnv1a64(&prefix));
-            }
-        }
-        Ok(h)
+        self.state_hash_locked()
     }
 
     fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
@@ -384,13 +409,8 @@ impl WeightStore for FsStore {
         // Derive a handle-local monotone counter from the listing hash:
         // any observed change (our own pushes included, and foreign
         // processes') advances it exactly once.
-        let h = self.state_hash()?;
-        let mut g = self.change.lock().unwrap();
-        if g.0 != h {
-            g.0 = h;
-            g.1 += 1;
-        }
-        Ok(g.1)
+        let _g = self.scan_lock.lock().unwrap();
+        self.observe_version_locked()
     }
 
     fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
@@ -427,6 +447,24 @@ impl WeightStore for FsStore {
             }
         }
         Ok(())
+    }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // Hold the scan lock across observe + write + re-observe: racing
+        // CAS writers (and version observers) on *this handle* serialize
+        // here, and the re-observation advances the handle-local counter
+        // past our own write so a stale token is refused afterwards.
+        // Like `version` itself the guarantee is handle-local — a
+        // foreign process writing between the check and the rename is
+        // the bucket's eventual consistency, not a torn entry.
+        let _g = self.scan_lock.lock().unwrap();
+        if self.observe_version_locked()? != expected {
+            return Ok(None);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        self.write_blob(&req, seq)?;
+        let _ = self.observe_version_locked()?;
+        Ok(Some(seq))
     }
 }
 
@@ -465,6 +503,20 @@ mod tests {
     fn subscription() {
         let (s, dir) = tmp_store("subs");
         store_tests::subscription(Arc::new(s));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn cas_conformance() {
+        let (s, dir) = tmp_store("cas");
+        store_tests::cas_conformance(&s);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn cas_lost_update() {
+        let (s, dir) = tmp_store("cas_race");
+        store_tests::cas_lost_update(Arc::new(s));
         fs::remove_dir_all(dir).unwrap();
     }
 

@@ -161,6 +161,13 @@ impl<S: WeightStore> WeightStore for LatencyStore<S> {
     fn clear(&self) -> Result<()> {
         self.inner.clear()
     }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // a conditional put costs the same upload round-trip whether the
+        // store accepts it or not (the server rejects after receiving)
+        self.delay(req.wire_bytes);
+        self.inner.push_if_version(req, expected)
+    }
 }
 
 #[cfg(test)]

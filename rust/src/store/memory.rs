@@ -118,6 +118,31 @@ impl WeightStore for MemoryStore {
         self.notify.bump();
         Ok(())
     }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // Check, insert, and bump all under the write lock: two racing
+        // CAS writers serialize here, and the loser observes the
+        // winner's bump. (A plain `push` racing this window keeps its
+        // pre-assigned lower seq, so a successful CAS still never
+        // shadows anything newer than its token.)
+        let mut inner = self.inner.write().unwrap();
+        if self.notify.version() != expected {
+            return Ok(None);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        inner.push(WeightEntry {
+            node_id: req.node_id,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+            seq,
+            wire_bytes: req.wire_bytes,
+            params: req.params,
+        });
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.notify.bump();
+        Ok(Some(seq))
+    }
 }
 
 #[cfg(test)]
@@ -156,5 +181,15 @@ mod tests {
     #[test]
     fn latest_index_matches_full_log_scan() {
         store_tests::latest_index_matches_scan(&MemoryStore::new());
+    }
+
+    #[test]
+    fn cas_conformance() {
+        store_tests::cas_conformance(&MemoryStore::new());
+    }
+
+    #[test]
+    fn cas_lost_update() {
+        store_tests::cas_lost_update(Arc::new(MemoryStore::new()));
     }
 }

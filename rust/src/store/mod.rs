@@ -30,7 +30,11 @@
 //! * [`LatencyStore`] — wraps any store with configurable latency/jitter
 //!   (simulated S3 RTT).
 //! * [`CachedStore`]  — read-through cache keyed by the state hash.
-//! * [`FaultStore`]   — wraps any store with seeded error injection.
+//! * [`FaultStore`]   — wraps any store with seeded error injection and
+//!   scheduled outage windows (pure in `(seed, simulated-time)`).
+//! * [`RetryStore`]   — retrying client wrapper: exponential backoff with
+//!   seeded deterministic jitter on the experiment clock, per-op deadline
+//!   budgets, and a transient-vs-permanent [`StoreError`] taxonomy.
 //! * [`AdversaryStore`] — wraps any store and rewrites the *content* of
 //!   selected pushes per an [`AdversarySpec`] (Byzantine noise, scaling,
 //!   sign-flips, stale replays) — the attack layer the robust
@@ -45,14 +49,16 @@ mod fault;
 mod fs;
 mod latency;
 mod memory;
+mod retry;
 mod sharded;
 
 pub use adversary::{AdversaryKind, AdversarySpec, AdversaryStore, BYZANTINE_SIGMA};
 pub use cached::CachedStore;
-pub use fault::FaultStore;
+pub use fault::{FaultModel, FaultStore, OutageWindow};
 pub use fs::FsStore;
 pub use latency::{LatencyConfig, LatencyStore};
 pub use memory::MemoryStore;
+pub use retry::{RetryPolicy, RetryStats, RetryStore};
 pub use sharded::{ShardedStore, DEFAULT_SHARDS};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -63,6 +69,74 @@ use anyhow::Result;
 
 use crate::tensor::FlatParams;
 use crate::time::{Clock, Condition, RealClock};
+
+/// Whether a failed store operation is worth retrying.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreErrorKind {
+    /// The operation may succeed if repeated (injected fault, outage
+    /// window, flaky I/O) — [`RetryStore`] retries these with backoff.
+    Transient,
+    /// Retrying cannot help (bad arguments, programming error) — the
+    /// error propagates immediately.
+    Permanent,
+}
+
+/// Typed store failure threaded through `anyhow` context chains so the
+/// retry layer can tell a flaky operation from a doomed one. Producers
+/// attach one via [`StoreError::transient`] / [`StoreError::permanent`];
+/// consumers classify any `anyhow::Error` with [`StoreError::classify`].
+/// Errors carrying no `StoreError` anywhere in their chain classify as
+/// [`StoreErrorKind::Permanent`] — unknown failures are not retried.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreError {
+    /// Retryability of the failed operation.
+    pub kind: StoreErrorKind,
+    /// The store operation that failed (`"push"`, `"state_hash"`, …).
+    pub op: &'static str,
+    /// Human-readable failure detail.
+    pub detail: String,
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            StoreErrorKind::Transient => "transient",
+            StoreErrorKind::Permanent => "permanent",
+        };
+        write!(f, "{} store error during {}: {}", kind, self.op, self.detail)
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl StoreError {
+    /// A retryable failure of `op` as an `anyhow::Error`.
+    pub fn transient(op: &'static str, detail: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(StoreError {
+            kind: StoreErrorKind::Transient,
+            op,
+            detail: detail.into(),
+        })
+    }
+
+    /// A non-retryable failure of `op` as an `anyhow::Error`.
+    pub fn permanent(op: &'static str, detail: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(StoreError {
+            kind: StoreErrorKind::Permanent,
+            op,
+            detail: detail.into(),
+        })
+    }
+
+    /// Classify an error by the first [`StoreError`] in its source chain;
+    /// errors with no typed store failure anywhere are `Permanent`.
+    pub fn classify(err: &anyhow::Error) -> StoreErrorKind {
+        err.chain()
+            .find_map(|e| e.downcast_ref::<StoreError>())
+            .map(|s| s.kind)
+            .unwrap_or(StoreErrorKind::Permanent)
+    }
+}
 
 /// One deposited weight entry.
 #[derive(Clone, Debug)]
@@ -136,6 +210,26 @@ pub trait WeightStore: Send + Sync {
 
     /// Remove all entries (between trials).
     fn clear(&self) -> Result<()>;
+
+    /// Conditional put (compare-and-swap): deposit `req` only if the
+    /// store's [`WeightStore::version`] still equals `expected`. Returns
+    /// `Ok(Some(seq))` when the put landed, `Ok(None)` when the store
+    /// moved past `expected` (the caller's read is stale — re-pull and
+    /// decide again), and `Err` only for operation failures. This is how
+    /// a recovering node (and any future multi-process writer) deposits
+    /// state without clobbering anything newer than what it last read.
+    ///
+    /// Backends make the check-then-put atomic with respect to their own
+    /// mutation path; wrappers forward to the inner store so the
+    /// linearization point is always the base store's. This default
+    /// implementation is a *non-atomic* check-then-push for simple test
+    /// doubles only — every real backend and wrapper overrides it.
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        if self.version()? != expected {
+            return Ok(None);
+        }
+        self.push(req).map(Some)
+    }
 }
 
 /// Clock-aware monotone change counter shared by the in-process stores:
@@ -303,6 +397,11 @@ impl WeightStore for std::sync::Arc<dyn WeightStore> {
     fn clear(&self) -> Result<()> {
         (**self).clear()
     }
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // must forward explicitly: the trait default would re-derive a
+        // non-atomic check-then-push instead of the inner store's CAS
+        (**self).push_if_version(req, expected)
+    }
 }
 
 #[cfg(test)]
@@ -407,10 +506,10 @@ pub(crate) mod store_tests {
         assert!(store.version().unwrap() > vc, "clear must advance the version");
     }
 
-    /// Conformance plus the 8-thread stress test and the subscription
-    /// suite for a wrapper stack built by `make_store` (fresh store per
-    /// phase, since `conformance` ends with a `clear` and
-    /// `concurrent_pushes` counts pushes).
+    /// Conformance plus the 8-thread stress test, the subscription
+    /// suite, and the conditional-put suite for a wrapper stack built by
+    /// `make_store` (fresh store per phase, since `conformance` ends
+    /// with a `clear` and `concurrent_pushes` counts pushes).
     pub fn stack_conformance<S, F>(make_store: F)
     where
         S: WeightStore + 'static,
@@ -419,6 +518,58 @@ pub(crate) mod store_tests {
         conformance(&make_store());
         concurrent_pushes(Arc::new(make_store()));
         subscription(Arc::new(make_store()));
+        cas_conformance(&make_store());
+        cas_lost_update(Arc::new(make_store()));
+    }
+
+    /// Conformance for [`WeightStore::push_if_version`]: a put with the
+    /// current version lands; a put with a stale version is refused
+    /// without writing anything; a refreshed token works again.
+    pub fn cas_conformance(store: &dyn WeightStore) {
+        let v0 = store.version().unwrap();
+        let seq = store.push_if_version(push_req(0, 0, 1.0), v0).unwrap();
+        assert!(seq.is_some(), "CAS with the current version must land");
+        let v1 = store.version().unwrap();
+        assert!(v1 > v0, "a successful CAS is a mutation and must advance the version");
+
+        // stale token: refused, and nothing is written
+        let pushes = store.push_count();
+        let refused = store.push_if_version(push_req(1, 0, 9.0), v0).unwrap();
+        assert!(refused.is_none(), "CAS with a stale version must be refused");
+        assert_eq!(store.push_count(), pushes, "a refused CAS must not push");
+        assert!(
+            store.latest_for_node(1).unwrap().is_none(),
+            "a refused CAS must leave no entry behind"
+        );
+        assert_eq!(store.version().unwrap(), v1, "a refused CAS is not a mutation");
+
+        // a re-read token works again
+        let seq = store.push_if_version(push_req(1, 0, 2.0), v1).unwrap();
+        assert!(seq.is_some(), "CAS with a refreshed version must land");
+        assert_eq!(store.latest_for_node(1).unwrap().unwrap().params.0[0], 2.0);
+    }
+
+    /// Lost-update regression: N writers race `push_if_version` against
+    /// the same version token — exactly one may win, so concurrent
+    /// recovery pushes can never silently clobber each other.
+    pub fn cas_lost_update(store: Arc<dyn WeightStore>) {
+        store.push(push_req(0, 0, 0.0)).unwrap();
+        let token = store.version().unwrap();
+        let start = Arc::new(std::sync::Barrier::new(6));
+        let threads: Vec<_> = (1..=6)
+            .map(|node| {
+                let s = Arc::clone(&store);
+                let go = Arc::clone(&start);
+                std::thread::spawn(move || {
+                    go.wait();
+                    s.push_if_version(push_req(node, 1, node as f32), token)
+                        .unwrap()
+                        .is_some()
+                })
+            })
+            .collect();
+        let wins = threads.into_iter().filter(|t| t.join().unwrap()).count();
+        assert_eq!(wins, 1, "exactly one racing CAS writer may win");
     }
 
     /// Regression for the maintained per-node latest index: after a

@@ -1,0 +1,485 @@
+//! Retrying store client — the fault-tolerance layer between a node and a
+//! flaky weight store.
+//!
+//! The paper's store is an S3 bucket; real object stores throw transient
+//! errors (throttling, 5xx, network blips) that a production client
+//! absorbs with retries rather than surfacing to the training loop. This
+//! wrapper reproduces that client behaviour:
+//!
+//! * **exponential backoff with seeded jitter** — attempt n sleeps
+//!   `base · 2^(n-1)` capped at `max_delay`, plus up to 50% deterministic
+//!   jitter. Sleeps go through the experiment [`Clock`], so under a
+//!   [`crate::time::VirtualClock`] a retry storm costs simulated time
+//!   only, and the whole schedule replays bit-identically.
+//! * **deterministic jitter** — the jitter draw is pure in
+//!   `(seed, clock.now(), attempt)`, not in a shared mutable RNG, so it
+//!   does not depend on how other nodes' operations interleave. Two
+//!   replays (or the threads vs. events schedulers) that reach the same
+//!   simulated instant draw the same jitter.
+//! * **error taxonomy** — only failures classified
+//!   [`StoreErrorKind::Transient`] (via [`StoreError::classify`]) are
+//!   retried; permanent errors and unknown error types propagate
+//!   immediately.
+//! * **per-op deadline budget** — each operation gets at most
+//!   `op_deadline` of clock time across all attempts; the budget also
+//!   clips the final backoff sleep so a retrying op never overshoots it.
+//!
+//! The subscription path (`version`/`wait_for_change`) is forwarded
+//! without retry: those are never fault-injected (see
+//! [`super::FaultStore`]) and `wait_for_change` has its own timeout
+//! discipline. A CAS conflict (`push_if_version` returning `Ok(None)`)
+//! is a *successful* operation, not a failure — it is never retried.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::{PushRequest, StoreError, StoreErrorKind, WeightEntry, WeightStore};
+use crate::time::Clock;
+use crate::util::Rng;
+
+/// Backoff/budget knobs for [`RetryStore`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum attempts per operation (first try included).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per retry.
+    pub base_delay: Duration,
+    /// Cap on any single backoff sleep (pre-jitter).
+    pub max_delay: Duration,
+    /// Total clock-time budget per operation across all attempts.
+    pub op_deadline: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_secs(2),
+            op_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Counters a [`RetryStore`] accumulates, for run reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Transient failures absorbed by a later successful attempt.
+    pub retries: u64,
+    /// Operations that exhausted attempts or deadline and failed.
+    pub give_ups: u64,
+}
+
+/// Wraps an inner store with transparent retry of transient failures.
+pub struct RetryStore<S> {
+    inner: S,
+    policy: RetryPolicy,
+    clock: Arc<dyn Clock>,
+    seed: u64,
+    retries: AtomicU64,
+    give_ups: AtomicU64,
+}
+
+impl<S: WeightStore> RetryStore<S> {
+    /// Wrap `inner`; backoff sleeps run on `clock` and jitter is
+    /// deterministic in `seed` and the clock reading.
+    pub fn new(inner: S, policy: RetryPolicy, clock: Arc<dyn Clock>, seed: u64) -> Self {
+        assert!(policy.max_attempts >= 1, "need at least one attempt");
+        RetryStore {
+            inner,
+            policy,
+            clock,
+            seed,
+            retries: Default::default(),
+            give_ups: Default::default(),
+        }
+    }
+
+    /// The wrapped store.
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> RetryStats {
+        RetryStats {
+            retries: self.retries.load(Ordering::Relaxed),
+            give_ups: self.give_ups.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Jitter fraction in `[0, 0.5)`, pure in `(seed, now, attempt)` —
+    /// no shared RNG state, so the draw is independent of how other
+    /// nodes' store traffic interleaves with ours.
+    fn jitter_frac(&self, now: Duration, attempt: u32) -> f64 {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (now.as_nanos() as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        rng.f64() * 0.5
+    }
+
+    fn with_retry<T>(&self, op: &'static str, f: impl Fn(&S) -> Result<T>) -> Result<T> {
+        let start = self.clock.now();
+        let mut attempt = 1u32;
+        loop {
+            let err = match f(&self.inner) {
+                Ok(out) => return Ok(out),
+                Err(err) => err,
+            };
+            if StoreError::classify(&err) == StoreErrorKind::Permanent {
+                return Err(err);
+            }
+            let elapsed = self.clock.now() - start;
+            if attempt >= self.policy.max_attempts || elapsed >= self.policy.op_deadline {
+                self.give_ups.fetch_add(1, Ordering::Relaxed);
+                return Err(err.context(format!(
+                    "gave up on {op} after {attempt} attempts ({:.3}s of {:.3}s budget)",
+                    elapsed.as_secs_f64(),
+                    self.policy.op_deadline.as_secs_f64()
+                )));
+            }
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            let backoff = self
+                .policy
+                .base_delay
+                .saturating_mul(1u32 << (attempt - 1).min(20))
+                .min(self.policy.max_delay);
+            let jittered = backoff.mul_f64(1.0 + self.jitter_frac(self.clock.now(), attempt));
+            // never sleep past the deadline budget
+            let budget = self.policy.op_deadline - elapsed;
+            self.clock.sleep(jittered.min(budget));
+            attempt += 1;
+        }
+    }
+}
+
+impl<S: WeightStore> WeightStore for RetryStore<S> {
+    fn push(&self, req: PushRequest) -> Result<u64> {
+        self.with_retry("push", |s| s.push(req.clone()))
+    }
+
+    fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+        self.with_retry("latest_per_node", |s| s.latest_per_node())
+    }
+
+    fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+        self.with_retry("entries_for_round", |s| s.entries_for_round(round))
+    }
+
+    fn state_hash(&self) -> Result<u64> {
+        self.with_retry("state_hash", |s| s.state_hash())
+    }
+
+    fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+        self.with_retry("latest_for_node", |s| s.latest_for_node(node_id))
+    }
+
+    fn version(&self) -> Result<u64> {
+        // subscription path: never injected, never retried (see module doc)
+        self.inner.version()
+    }
+
+    fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+        self.inner.wait_for_change(since, timeout)
+    }
+
+    fn push_count(&self) -> u64 {
+        self.inner.push_count()
+    }
+
+    fn clear(&self) -> Result<()> {
+        self.with_retry("clear", |s| s.clear())
+    }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // Ok(None) is a version conflict — a *successful* round-trip the
+        // caller must react to (re-read, re-base), not a failure to retry.
+        self.with_retry("push_if_version", |s| s.push_if_version(req.clone(), expected))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+
+    use super::*;
+    use crate::store::store_tests::{self, push_req};
+    use crate::store::{FaultModel, FaultStore, MemoryStore, OutageWindow};
+    use crate::time::{ParticipantGuard, RealClock, VirtualClock};
+
+    /// Scripted flaky store: fails the first `fail_first` calls of every
+    /// retried op with the given error kind, then heals.
+    struct Flaky {
+        inner: MemoryStore,
+        fail_first: u64,
+        kind: StoreErrorKind,
+        calls: AtomicU64,
+    }
+
+    impl Flaky {
+        fn new(fail_first: u64, kind: StoreErrorKind) -> Self {
+            Flaky { inner: MemoryStore::new(), fail_first, kind, calls: AtomicU64::new(0) }
+        }
+
+        fn trip(&self, op: &'static str) -> Result<()> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) < self.fail_first {
+                return Err(match self.kind {
+                    StoreErrorKind::Transient => StoreError::transient(op, "scripted blip"),
+                    StoreErrorKind::Permanent => StoreError::permanent(op, "scripted hard fail"),
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl WeightStore for Flaky {
+        fn push(&self, req: PushRequest) -> Result<u64> {
+            self.trip("push")?;
+            self.inner.push(req)
+        }
+        fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+            self.trip("latest_per_node")?;
+            self.inner.latest_per_node()
+        }
+        fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+            self.trip("entries_for_round")?;
+            self.inner.entries_for_round(round)
+        }
+        fn state_hash(&self) -> Result<u64> {
+            self.trip("state_hash")?;
+            self.inner.state_hash()
+        }
+        fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+            self.trip("latest_for_node")?;
+            self.inner.latest_for_node(node_id)
+        }
+        fn version(&self) -> Result<u64> {
+            self.inner.version()
+        }
+        fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+            self.inner.wait_for_change(since, timeout)
+        }
+        fn push_count(&self) -> u64 {
+            self.inner.push_count()
+        }
+        fn clear(&self) -> Result<()> {
+            self.inner.clear()
+        }
+    }
+
+    fn quick_policy() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(8),
+            op_deadline: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn conformance_over_healthy_store() {
+        let s = RetryStore::new(MemoryStore::new(), quick_policy(), RealClock::shared(), 1);
+        store_tests::conformance(&s);
+        assert_eq!(s.stats(), RetryStats::default());
+    }
+
+    #[test]
+    fn transient_blips_are_absorbed() {
+        let s = RetryStore::new(
+            Flaky::new(2, StoreErrorKind::Transient),
+            quick_policy(),
+            RealClock::shared(),
+            1,
+        );
+        s.push(push_req(0, 0, 1.0)).expect("two blips then success");
+        let stats = s.stats();
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.give_ups, 0);
+        assert_eq!(s.inner().inner.push_count(), 1);
+    }
+
+    #[test]
+    fn permanent_errors_propagate_immediately() {
+        let s = RetryStore::new(
+            Flaky::new(1, StoreErrorKind::Permanent),
+            quick_policy(),
+            RealClock::shared(),
+            1,
+        );
+        assert!(s.push(push_req(0, 0, 1.0)).is_err());
+        assert_eq!(s.stats(), RetryStats::default(), "no retry, no give-up counter");
+        // the store healed after one failure, but we must not have retried
+        s.push(push_req(0, 0, 1.0)).unwrap();
+    }
+
+    #[test]
+    fn unknown_errors_are_not_retried() {
+        struct Hostile(MemoryStore);
+        impl WeightStore for Hostile {
+            fn push(&self, _: PushRequest) -> Result<u64> {
+                anyhow::bail!("some error with no StoreError in its chain")
+            }
+            fn latest_per_node(&self) -> Result<Vec<WeightEntry>> {
+                self.0.latest_per_node()
+            }
+            fn entries_for_round(&self, round: u64) -> Result<Vec<WeightEntry>> {
+                self.0.entries_for_round(round)
+            }
+            fn state_hash(&self) -> Result<u64> {
+                self.0.state_hash()
+            }
+            fn latest_for_node(&self, node_id: usize) -> Result<Option<WeightEntry>> {
+                self.0.latest_for_node(node_id)
+            }
+            fn version(&self) -> Result<u64> {
+                self.0.version()
+            }
+            fn wait_for_change(&self, since: u64, timeout: Duration) -> Result<u64> {
+                self.0.wait_for_change(since, timeout)
+            }
+            fn push_count(&self) -> u64 {
+                self.0.push_count()
+            }
+            fn clear(&self) -> Result<()> {
+                self.0.clear()
+            }
+        }
+        let s =
+            RetryStore::new(Hostile(MemoryStore::new()), quick_policy(), RealClock::shared(), 1);
+        assert!(s.push(push_req(0, 0, 1.0)).is_err());
+        assert_eq!(s.stats().retries, 0, "unclassified errors default to permanent");
+    }
+
+    #[test]
+    fn gives_up_after_max_attempts() {
+        let s = RetryStore::new(
+            Flaky::new(u64::MAX, StoreErrorKind::Transient),
+            quick_policy(),
+            RealClock::shared(),
+            1,
+        );
+        let err = s.push(push_req(0, 0, 1.0)).unwrap_err();
+        assert!(err.to_string().contains("gave up on push after 5 attempts"), "{err:#}");
+        let stats = s.stats();
+        assert_eq!(stats.retries, 4, "5 attempts = 4 retries");
+        assert_eq!(stats.give_ups, 1);
+        // the give-up error still classifies transient through the context chain
+        assert_eq!(StoreError::classify(&err), StoreErrorKind::Transient);
+    }
+
+    #[test]
+    fn deadline_budget_bounds_total_wall_time() {
+        // On a virtual clock: huge backoffs, tiny deadline — the op must
+        // stop at the deadline, not ride out max_attempts.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        clock.enter();
+        let _guard = ParticipantGuard::adopt(Arc::clone(&clock));
+        let policy = RetryPolicy {
+            max_attempts: 100,
+            base_delay: Duration::from_secs(1),
+            max_delay: Duration::from_secs(64),
+            op_deadline: Duration::from_secs(10),
+        };
+        let s = RetryStore::new(
+            Flaky::new(u64::MAX, StoreErrorKind::Transient),
+            policy,
+            Arc::clone(&clock),
+            1,
+        );
+        let t0 = clock.now();
+        assert!(s.push(push_req(0, 0, 1.0)).is_err());
+        let spent = clock.now() - t0;
+        assert!(spent <= Duration::from_secs(10), "budget overshot: {spent:?}");
+        assert_eq!(s.stats().give_ups, 1);
+        assert!(s.stats().retries < 99, "deadline must cut the attempt loop short");
+    }
+
+    #[test]
+    fn retry_rides_out_an_outage_window_in_simulated_time() {
+        // The acceptance-path integration: FaultStore outage under
+        // RetryStore on a virtual clock. The op starts mid-outage, backs
+        // off past the window's end, then lands.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        clock.enter();
+        let _guard = ParticipantGuard::adopt(Arc::clone(&clock));
+        let model = FaultModel {
+            p_fail: 0.0,
+            outages: vec![OutageWindow {
+                start: Duration::ZERO,
+                duration: Duration::from_millis(500),
+            }],
+        };
+        let faulty = FaultStore::with_model(
+            MemoryStore::with_clock(Arc::clone(&clock)),
+            &model,
+            Arc::clone(&clock),
+            7,
+        );
+        let s = RetryStore::new(
+            faulty,
+            RetryPolicy {
+                max_attempts: 20,
+                base_delay: Duration::from_millis(50),
+                max_delay: Duration::from_secs(1),
+                op_deadline: Duration::from_secs(30),
+            },
+            Arc::clone(&clock),
+            7,
+        );
+        s.push(push_req(0, 0, 1.0)).expect("retry must outlast the outage");
+        assert!(s.stats().retries >= 1);
+        assert_eq!(s.stats().give_ups, 0);
+        assert!(clock.now() >= Duration::from_millis(500), "must have slept past the window");
+        assert!(s.inner().injected() >= 1);
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_in_seed_and_clock() {
+        // Two identical replays must sleep identical schedules; a
+        // different seed must diverge (jitter is live, not constant).
+        let run = |seed: u64| -> Vec<Duration> {
+            let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+            clock.enter();
+            let _guard = ParticipantGuard::adopt(Arc::clone(&clock));
+            let s = RetryStore::new(
+                Flaky::new(4, StoreErrorKind::Transient),
+                quick_policy(),
+                Arc::clone(&clock),
+                seed,
+            );
+            let sleeps = Mutex::new(Vec::new());
+            let mut last = clock.now();
+            for _ in 0..4 {
+                // each push trips once less as the flaky store drains
+                let _ = s.push(push_req(0, 0, 1.0));
+                let now = clock.now();
+                sleeps.lock().unwrap().push(now - last);
+                last = now;
+            }
+            sleeps.into_inner().unwrap()
+        };
+        assert_eq!(run(1), run(1), "same seed, same simulated schedule");
+        assert_ne!(run(1), run(2), "different seed must draw different jitter");
+    }
+
+    #[test]
+    fn cas_conflict_is_not_retried() {
+        let s = RetryStore::new(MemoryStore::new(), quick_policy(), RealClock::shared(), 1);
+        s.push(push_req(0, 0, 1.0)).unwrap();
+        let stale = 0u64; // version before the push
+        let out = s.push_if_version(push_req(1, 0, 2.0), stale).unwrap();
+        assert!(out.is_none(), "conflict reported, not retried into success");
+        assert_eq!(s.stats().retries, 0);
+    }
+
+    #[test]
+    fn cas_conformance_through_retry() {
+        let s = RetryStore::new(MemoryStore::new(), quick_policy(), RealClock::shared(), 1);
+        store_tests::cas_conformance(&s);
+    }
+}

@@ -22,7 +22,7 @@
 //! is added, which is all Algorithm 1's change detection needs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -46,6 +46,11 @@ pub struct ShardedStore {
     /// subscription API is a LIST-level signal, not per-shard), bumped
     /// after the owning shard's lock is released.
     notify: ChangeNotifier,
+    /// Serializes conditional puts: `push_if_version` must check the
+    /// store-wide version and insert atomically, which the per-shard
+    /// locks alone cannot provide (two CAS writers may target different
+    /// shards). Plain pushes never take this lock.
+    cas_lock: Mutex<()>,
 }
 
 impl ShardedStore {
@@ -70,6 +75,7 @@ impl ShardedStore {
             seq: AtomicU64::new(0),
             pushes: AtomicU64::new(0),
             notify,
+            cas_lock: Mutex::new(()),
         }
     }
 
@@ -176,6 +182,32 @@ impl WeightStore for ShardedStore {
         self.notify.bump();
         Ok(())
     }
+
+    fn push_if_version(&self, req: PushRequest, expected: u64) -> Result<Option<u64>> {
+        // Hold the CAS lock across check + shard insert + bump: racing
+        // CAS writers serialize here whatever shard they target, and the
+        // loser observes the winner's bump. Plain pushes keep their
+        // lock-free fast path (their entries carry pre-assigned lower
+        // seqs, so a successful CAS never shadows newer state).
+        let _cas = self.cas_lock.lock().unwrap();
+        if self.notify.version() != expected {
+            return Ok(None);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let shard = self.shard_of(req.node_id);
+        self.shards[shard].write().unwrap().push(WeightEntry {
+            node_id: req.node_id,
+            round: req.round,
+            epoch: req.epoch,
+            n_examples: req.n_examples,
+            seq,
+            wire_bytes: req.wire_bytes,
+            params: req.params,
+        });
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.notify.bump();
+        Ok(Some(seq))
+    }
 }
 
 #[cfg(test)]
@@ -277,6 +309,19 @@ mod tests {
         // exact per-node indexes
         store_tests::latest_index_matches_scan(&ShardedStore::new(3));
         store_tests::latest_index_matches_scan(&ShardedStore::new(1));
+    }
+
+    #[test]
+    fn cas_conformance() {
+        store_tests::cas_conformance(&ShardedStore::default());
+        store_tests::cas_conformance(&ShardedStore::new(1));
+    }
+
+    #[test]
+    fn cas_lost_update_across_shards() {
+        // racing writers land in different shards; the store-wide
+        // version check must still admit exactly one
+        store_tests::cas_lost_update(Arc::new(ShardedStore::new(4)));
     }
 
     #[test]

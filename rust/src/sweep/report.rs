@@ -31,6 +31,11 @@ pub struct TrialMetrics {
     /// aggregate ([`crate::trace::DivergenceReport::mean_l2`]); `None`
     /// when the trial ran untraced (`divergence` spec key off).
     pub mean_divergence: Option<f64>,
+    /// Fault-tolerance-layer totals of the trial (injected faults,
+    /// retries, give-ups, degraded rounds, restarts). All zero on a
+    /// clean run; the chaos columns render only when some cell saw
+    /// nonzero totals, so clean sweep tables stay byte-identical.
+    pub faults: crate::trace::FaultTotals,
 }
 
 /// Outcome of one scheduled trial (success metrics or the error text).
@@ -79,6 +84,18 @@ pub struct CellSummary {
     /// cell has data, so untraced sweep tables are byte-identical to
     /// before the column existed).
     pub divergence: Option<Summary>,
+    /// Injected-store-fault summary over successful trials (`None` if
+    /// all failed). The Markdown chaos columns render only when some
+    /// cell's fault-layer mean is nonzero.
+    pub injected: Option<Summary>,
+    /// Retried-store-op summary over successful trials.
+    pub retries: Option<Summary>,
+    /// Retry-give-up summary over successful trials.
+    pub give_ups: Option<Summary>,
+    /// Quorum-degraded sync-round summary over successful trials.
+    pub degraded: Option<Summary>,
+    /// Crash–restart recovery summary over successful trials.
+    pub restarts: Option<Summary>,
     /// First error message, when any trial failed.
     pub first_error: Option<String>,
 }
@@ -123,6 +140,11 @@ impl SweepReport {
                 mb_pushed: None,
                 mb_pulled: None,
                 divergence: None,
+                injected: None,
+                retries: None,
+                give_ups: None,
+                degraded: None,
+                restarts: None,
                 first_error: None,
             })
             .collect();
@@ -133,6 +155,8 @@ impl SweepReport {
         let mut pushed: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut pulled: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
         let mut divs: Vec<Vec<f64>> = vec![Vec::new(); cells.len()];
+        // five per-trial fault-layer counters, in FaultTotals field order
+        let mut chaos: Vec<[Vec<f64>; 5]> = vec![Default::default(); cells.len()];
         let mut n_failures = 0;
         for o in outcomes {
             let c = &mut cells[o.cell_index];
@@ -146,6 +170,19 @@ impl SweepReport {
                     pulled[o.cell_index].push(m.mb_pulled);
                     if let Some(d) = m.mean_divergence {
                         divs[o.cell_index].push(d);
+                    }
+                    let f = &m.faults;
+                    for (k, v) in [
+                        f.injected_faults,
+                        f.store_retries,
+                        f.store_give_ups,
+                        f.degraded_rounds,
+                        f.restarts,
+                    ]
+                    .into_iter()
+                    .enumerate()
+                    {
+                        chaos[o.cell_index][k].push(v as f64);
                     }
                 }
                 Err(e) => {
@@ -167,6 +204,11 @@ impl SweepReport {
                 if !divs[i].is_empty() {
                     c.divergence = Some(Summary::of(&divs[i]));
                 }
+                c.injected = Some(Summary::of(&chaos[i][0]));
+                c.retries = Some(Summary::of(&chaos[i][1]));
+                c.give_ups = Some(Summary::of(&chaos[i][2]));
+                c.degraded = Some(Summary::of(&chaos[i][3]));
+                c.restarts = Some(Summary::of(&chaos[i][4]));
             }
         }
 
@@ -223,11 +265,25 @@ impl SweepReport {
         // untraced sweep tables stay byte-identical to the pre-column
         // format (the timing/determinism/robust goldens pin it).
         let has_div = self.cells.iter().any(|c| c.divergence.is_some());
+        // chaos columns likewise render only when some cell actually saw
+        // fault-layer activity, so clean sweeps keep the legacy shape
+        let nonzero = |s: &Option<Summary>| s.as_ref().is_some_and(|x| x.mean > 0.0);
+        let has_chaos = self.cells.iter().any(|c| {
+            c.cell.fault > 0.0
+                || nonzero(&c.injected)
+                || nonzero(&c.retries)
+                || nonzero(&c.give_ups)
+                || nonzero(&c.degraded)
+                || nonzero(&c.restarts)
+        });
         out.push_str(
             "| mode | strategy | skew | nodes | compress | threads | part | adversary | trials | accuracy (mean ± std) | acc clean | acc attacked | loss (mean ± std) | wall-clock s | MB pushed | MB pulled |",
         );
         if has_div {
             out.push_str(" mean div L2 |");
+        }
+        if has_chaos {
+            out.push_str(" fault | faults | retries | give-ups | degraded | restarts |");
         }
         out.push('\n');
         out.push_str(
@@ -235,6 +291,9 @@ impl SweepReport {
         );
         if has_div {
             out.push_str("-------------|");
+        }
+        if has_chaos {
+            out.push_str("-------|--------|---------|----------|----------|----------|");
         }
         out.push('\n');
         for c in &self.cells {
@@ -286,6 +345,21 @@ impl SweepReport {
                     .unwrap_or_else(|| "-".into());
                 let _ = write!(out, " {div} |");
             }
+            if has_chaos {
+                let mean1 = |s: &Option<Summary>| {
+                    s.as_ref().map(|x| format!("{:.1}", x.mean)).unwrap_or_else(|| "-".into())
+                };
+                let _ = write!(
+                    out,
+                    " {} | {} | {} | {} | {} | {} |",
+                    c.cell.fault,
+                    mean1(&c.injected),
+                    mean1(&c.retries),
+                    mean1(&c.give_ups),
+                    mean1(&c.degraded),
+                    mean1(&c.restarts),
+                );
+            }
             out.push('\n');
         }
         out
@@ -294,10 +368,11 @@ impl SweepReport {
     /// CSV with one row per grid cell (header included).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "model,mode,strategy,skew,n_nodes,compress,threads,participation,adversary,\
+            "model,mode,strategy,skew,n_nodes,compress,threads,participation,fault,adversary,\
              trials,failures,\
              acc_mean,acc_std,acc_clean,acc_attacked,loss_mean,loss_std,wall_mean,wall_std,\
-             mb_pushed_mean,mb_pulled_mean,divergence_mean\n",
+             mb_pushed_mean,mb_pulled_mean,divergence_mean,\
+             faults_mean,retries_mean,give_ups_mean,degraded_mean,restarts_mean\n",
         );
         let num = |s: &Option<Summary>, f: fn(&Summary) -> f64| -> String {
             s.as_ref().map(|x| format!("{}", f(x))).unwrap_or_default()
@@ -308,7 +383,7 @@ impl SweepReport {
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.model,
                 c.cell.mode.label(),
                 c.cell.strategy.label(),
@@ -317,6 +392,7 @@ impl SweepReport {
                 c.cell.compress.label(),
                 crate::config::threads_label(c.cell.threads),
                 c.cell.participation,
+                c.cell.fault,
                 c.cell.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
                 c.n_trials,
                 c.failures,
@@ -331,6 +407,11 @@ impl SweepReport {
                 num(&c.mb_pushed, |s| s.mean),
                 num(&c.mb_pulled, |s| s.mean),
                 num(&c.divergence, |s| s.mean),
+                num(&c.injected, |s| s.mean),
+                num(&c.retries, |s| s.mean),
+                num(&c.give_ups, |s| s.mean),
+                num(&c.degraded, |s| s.mean),
+                num(&c.restarts, |s| s.mean),
             );
         }
         out
@@ -369,6 +450,7 @@ mod tests {
                 mb_pulled: 3.0,
                 all_completed: true,
                 mean_divergence: None,
+                faults: crate::trace::FaultTotals::default(),
             }),
         }
     }
@@ -539,7 +621,47 @@ mod tests {
         assert!(csv.contains("mb_pulled_mean,divergence_mean"), "{csv}");
         let cols = csv.lines().nth(1).unwrap().split(',').count();
         assert_eq!(cols, csv.lines().next().unwrap().split(',').count());
-        assert!(csv.lines().nth(1).unwrap().ends_with(",0.25"), "{csv}");
+        assert!(csv.lines().nth(1).unwrap().contains(",0.25,"), "{csv}");
+    }
+
+    #[test]
+    fn chaos_columns_render_only_when_a_cell_saw_faults() {
+        let spec = two_cell_spec();
+        // clean outcomes: no chaos columns anywhere (goldens pin this)
+        let md = SweepReport::build(
+            &spec,
+            &[outcome(0, 0, 0.9), outcome(1, 1, 0.5)],
+            1,
+            1.0,
+        )
+        .to_markdown();
+        assert!(!md.contains("| faults |"), "{md}");
+        assert!(!md.contains("| restarts |"), "{md}");
+        // a trial with fault-layer activity turns the columns on
+        let mut chaotic = outcome(0, 0, 0.9);
+        if let Ok(m) = &mut chaotic.result {
+            m.faults.injected_faults = 6;
+            m.faults.store_retries = 6;
+            m.faults.degraded_rounds = 1;
+        }
+        let r = SweepReport::build(&spec, &[chaotic, outcome(1, 1, 0.5)], 1, 1.0);
+        assert_eq!(r.cells[0].injected.unwrap().mean, 6.0);
+        assert_eq!(r.cells[0].degraded.unwrap().mean, 1.0);
+        assert_eq!(r.cells[1].injected.unwrap().mean, 0.0);
+        let md = r.to_markdown();
+        assert!(
+            md.contains("| fault | faults | retries | give-ups | degraded | restarts |"),
+            "{md}"
+        );
+        assert!(md.contains("| 6.0 | 6.0 | 0.0 | 1.0 | 0.0 |"), "{md}");
+        let csv = r.to_csv();
+        assert!(csv.contains("faults_mean,retries_mean,give_ups_mean"), "{csv}");
+        assert!(csv.lines().nth(1).unwrap().ends_with(",6,6,0,1,0"), "{csv}");
+        // a nonzero fault axis alone also turns the columns on, so a
+        // lucky fault cell with zero injections still shows its p
+        let spec = SweepSpec::parse_json(r#"{"fault": 0.05}"#).unwrap();
+        let md = SweepReport::build(&spec, &[outcome(0, 0, 0.9)], 1, 1.0).to_markdown();
+        assert!(md.contains("| 0.05 | 0.0 |"), "{md}");
     }
 
     #[test]

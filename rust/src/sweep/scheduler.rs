@@ -106,6 +106,7 @@ where
                                 .divergence
                                 .as_ref()
                                 .and_then(|d| d.mean_l2()),
+                            faults: res.fault_totals(),
                         })
                     }
                     Ok(Err(e)) => Err(format!("{e:#}")),

@@ -43,6 +43,11 @@ pub struct CellKey {
     /// Per-round client sampling fraction of this cell (1.0 = full
     /// participation, the legacy behavior and label).
     pub participation: f64,
+    /// Per-operation transient store-failure probability of this cell
+    /// (`"fault"` axis; 0.0 = no injection, the legacy behavior and
+    /// label). Faulty cells run every node behind a retrying store
+    /// client, so the axis measures chaos overhead, not just failure.
+    pub fault: f64,
     /// Content adversary of this cell (`None` = all clients honest). The
     /// report pairs each attacked cell with its clean sibling — the cell
     /// with the same key and `adversary = None` — in the
@@ -72,12 +77,17 @@ impl CellKey {
         } else {
             String::new()
         };
+        let fault = if self.fault > 0.0 {
+            format!("_f{}", self.fault)
+        } else {
+            String::new()
+        };
         let adversary = match &self.adversary {
             None => String::new(),
             Some(a) => format!("_{}", a.label()),
         };
         format!(
-            "{}_{}_s{}_n{}{compress}{threads}{participation}{adversary}",
+            "{}_{}_s{}_n{}{compress}{threads}{participation}{fault}{adversary}",
             self.mode.label(),
             self.strategy.label(),
             self.skew,
@@ -122,6 +132,11 @@ pub struct SweepSpec {
     /// Per-round client-sampling axis (`"participation"` key: fractions
     /// in (0, 1]; 1.0 cells run the legacy full-participation path).
     pub participations: Vec<f64>,
+    /// Transient store-failure axis (`"fault"` key: probabilities in
+    /// [0, 1]; 0.0 cells run without fault injection). Scheduled
+    /// `"outage"` windows and `"sync_quorum"` are base scalars shared by
+    /// every cell.
+    pub faults: Vec<f64>,
     /// Content-adversary axis (`"adversary"` key: `"none"` or specs like
     /// `"byzantine:1"`). `None` cells run all-honest; the report pairs
     /// attacked cells with their clean siblings.
@@ -145,6 +160,7 @@ impl SweepSpec {
             compressions: vec![base.compress],
             threads: vec![base.threads],
             participations: vec![base.participation],
+            faults: vec![base.fault.p_fail],
             adversaries: vec![base.adversary],
             seeds: vec![base.seed],
             jobs: 0,
@@ -158,7 +174,8 @@ impl SweepSpec {
     /// `skews`, `n_nodes`, `compress` (wire codec: `"none"`, `"q8"`,
     /// `"topk:0.1"`, `"delta-q8"`), `adversary` (content attack:
     /// `"none"`, `"byzantine:k"`, `"scale:<f>"`, `"signflip:k"`,
-    /// `"stale:<r>"`), `robust` (robust strategies appended to the
+    /// `"stale:<r>"`), `fault` (transient store-failure probabilities in
+    /// [0, 1]), `robust` (robust strategies appended to the
     /// strategy axis: `"median"`, `"trimmed-mean:<frac>"`, `"krum:f"`,
     /// `"trust-weighted"`), `seeds`; `trials: T` is shorthand
     /// for `seeds = [seed, seed + 1000, ...]` (the
@@ -168,7 +185,10 @@ impl SweepSpec {
     /// runs every trial on its own simulated clock — straggler/latency
     /// grids at CPU speed, deterministic per-cell `wall_clock_s`),
     /// `log_dir`, `verbose`, `divergence` (bool: trace every trial and
-    /// add the `mean div L2` report column — see [`crate::trace`]).
+    /// add the `mean div L2` report column — see [`crate::trace`]),
+    /// `outage` (scheduled store-outage windows `"<start_s>:<dur_s>"`,
+    /// scalar or array, shared by every cell), `sync_quorum` (degraded
+    /// sync-round quorum fraction in (0, 1], shared by every cell).
     /// Scheduler width: `jobs`. Unknown keys are errors (typo
     /// protection).
     pub fn parse_json(text: &str) -> Result<SweepSpec> {
@@ -182,7 +202,7 @@ impl SweepSpec {
             "seed", "store", "latency", "sync_timeout_s", "clock", "log_dir", "verbose",
             "modes", "strategies", "skews", "n_nodes", "compress", "threads", "seeds",
             "adversary", "robust", "trials", "jobs", "participation", "availability",
-            "scheduler", "divergence",
+            "scheduler", "divergence", "fault", "outage", "sync_quorum",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -237,6 +257,15 @@ impl SweepSpec {
             let s = req_str(v, "availability")?;
             base.availability = crate::sched::AvailabilitySpec::parse(s)
                 .ok_or_else(|| anyhow!("sweep spec: unknown availability {s:?}"))?;
+        }
+        if let Some(v) = obj.get("outage") {
+            // one window string or an array of them, shared by every cell
+            base.fault.outages = axis(v, "outage", |x| {
+                x.as_str().and_then(crate::store::OutageWindow::parse)
+            })?;
+        }
+        if let Some(v) = obj.get("sync_quorum") {
+            base.sync_quorum = req_f64(v, "sync_quorum")?;
         }
         if let Some(v) = obj.get("log_dir") {
             base.log_dir = Some(req_str(v, "log_dir")?.into());
@@ -300,6 +329,12 @@ impl SweepSpec {
             None => vec![base.participation],
             Some(v) => axis(v, "participation", Json::as_f64)?,
         };
+        let faults = match obj.get("fault") {
+            None => vec![base.fault.p_fail],
+            Some(v) => axis(v, "fault", |x| {
+                x.as_f64().filter(|p| (0.0..=1.0).contains(p))
+            })?,
+        };
         let adversaries = match obj.get("adversary") {
             None => vec![base.adversary],
             Some(v) => axis(v, "adversary", |x| match x.as_str() {
@@ -337,6 +372,7 @@ impl SweepSpec {
             compressions,
             threads,
             participations,
+            faults,
             adversaries,
             seeds,
             jobs,
@@ -344,9 +380,9 @@ impl SweepSpec {
     }
 
     /// The grid cells in deterministic (mode, strategy, skew, n_nodes,
-    /// compress, threads, participation, adversary) nested order — the
-    /// row order of the report. The adversary axis is innermost, so each
-    /// attacked cell sits right after its clean sibling when
+    /// compress, threads, participation, fault, adversary) nested order
+    /// — the row order of the report. The adversary axis is innermost,
+    /// so each attacked cell sits right after its clean sibling when
     /// `"adversary"` starts with `"none"`.
     pub fn cells(&self) -> Vec<CellKey> {
         let mut out =
@@ -358,17 +394,20 @@ impl SweepSpec {
                         for &compress in &self.compressions {
                             for &threads in &self.threads {
                                 for &participation in &self.participations {
-                                    for &adversary in &self.adversaries {
-                                        out.push(CellKey {
-                                            mode,
-                                            strategy,
-                                            skew,
-                                            n_nodes,
-                                            compress,
-                                            threads,
-                                            participation,
-                                            adversary,
-                                        });
+                                    for &fault in &self.faults {
+                                        for &adversary in &self.adversaries {
+                                            out.push(CellKey {
+                                                mode,
+                                                strategy,
+                                                skew,
+                                                n_nodes,
+                                                compress,
+                                                threads,
+                                                participation,
+                                                fault,
+                                                adversary,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -416,6 +455,7 @@ impl SweepSpec {
                 cfg.compress = cell.compress;
                 cfg.threads = cell.threads;
                 cfg.participation = cell.participation;
+                cfg.fault.p_fail = cell.fault; // base outage windows are shared
                 cfg.adversary = cell.adversary;
                 cfg.seed = seed;
                 if let StoreKind::Fs(root) = &self.base.store {
@@ -760,6 +800,38 @@ mod tests {
         assert_eq!(spec.participations, vec![0.25]);
         let spec = SweepSpec::parse_json("{}").unwrap();
         assert_eq!(spec.participations, vec![1.0]);
+    }
+
+    #[test]
+    fn fault_axis_expands_with_distinct_cells() {
+        let spec = SweepSpec::parse_json(
+            r#"{"modes": "async", "fault": [0.0, 0.05], "outage": "2:1", "sync_quorum": 0.75}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.faults, vec![0.0, 0.05]);
+        assert_eq!(spec.base.sync_quorum, 0.75);
+        assert_eq!(spec.base.fault.outages.len(), 1);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        // the clean cell keeps the legacy label; faulty cells are
+        // suffixed so no two cells share a store namespace
+        assert_eq!(cells[0].label(), "async_fedavg_s0_n2");
+        assert_eq!(cells[1].label(), "async_fedavg_s0_n2_f0.05");
+        let trials = spec.expand().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert_eq!(trials[1].cfg.fault.p_fail, 0.05);
+        // the shared outage windows and quorum reach every trial
+        assert_eq!(trials[0].cfg.fault.outages, spec.base.fault.outages);
+        assert_eq!(trials[1].cfg.sync_quorum, 0.75);
+        // scalar value and default also work
+        let spec = SweepSpec::parse_json(r#"{"fault": 0.1}"#).unwrap();
+        assert_eq!(spec.faults, vec![0.1]);
+        let spec = SweepSpec::parse_json("{}").unwrap();
+        assert_eq!(spec.faults, vec![0.0]);
+        // bad values are rejected
+        assert!(SweepSpec::parse_json(r#"{"fault": 1.5}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"fault": "often"}"#).is_err());
+        assert!(SweepSpec::parse_json(r#"{"outage": "backwards"}"#).is_err());
     }
 
     #[test]

@@ -29,8 +29,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::metrics::timeline::Timeline;
 use crate::trace::{
-    ClientDivergence, DivergenceReport, NodeSpanSummary, RoundDivergence, RunSummary,
-    TraceEvent, TraceEventKind, Tracer,
+    ClientDivergence, DivergenceReport, FaultTotals, NodeSpanSummary, RoundDivergence,
+    RunSummary, TraceEvent, TraceEventKind, Tracer,
 };
 use crate::util::json::Json;
 
@@ -77,7 +77,7 @@ pub fn event_jsonl_line(ev: &TraceEvent) -> String {
         micros(ev.end),
     );
     match ev.kind {
-        TraceEventKind::Train => {}
+        TraceEventKind::Train | TraceEventKind::NodeFailed | TraceEventKind::Restart => {}
         TraceEventKind::Push { wire_bytes, digest } => {
             line.push_str(&format!(",\"wire_bytes\":{wire_bytes},\"digest\":\"{digest:016x}\""));
         }
@@ -125,6 +125,12 @@ pub fn chrome_trace_json(events: &[TraceEvent], timelines: &[&Timeline]) -> Stri
     for ev in events {
         let args = match ev.kind {
             TraceEventKind::Train => continue, // already a timeline span
+            // restart covers the crash→recovery window as a Crashed
+            // timeline span; the failure mark carries no payload — both
+            // export as bare instants at their event timestamp
+            TraceEventKind::NodeFailed | TraceEventKind::Restart => {
+                format!("{{\"round\":{}}}", ev.round)
+            }
             TraceEventKind::Push { wire_bytes, digest } => {
                 format!("{{\"round\":{},\"wire_bytes\":{},\"digest\":\"{:016x}\"}}", ev.round, wire_bytes, digest)
             }
@@ -236,8 +242,9 @@ pub fn summary_json(s: &RunSummary) -> String {
         None => "null".to_string(),
         Some(d) => divergence_json(d),
     };
+    let f = &s.faults;
     format!(
-        "{{\n\"run_name\":\"{}\",\n\"n_nodes\":{},\n\"wall_clock_s\":{},\n\"global_digest\":\"{:016x}\",\n\"store_pushes\":{},\n\"mean_idle_fraction\":{},\n\"all_completed\":{},\n\"nodes\":[{}],\n\"divergence\":{}\n}}\n",
+        "{{\n\"run_name\":\"{}\",\n\"n_nodes\":{},\n\"wall_clock_s\":{},\n\"global_digest\":\"{:016x}\",\n\"store_pushes\":{},\n\"mean_idle_fraction\":{},\n\"all_completed\":{},\n\"faults\":{{\"injected_faults\":{},\"store_retries\":{},\"store_give_ups\":{},\"degraded_rounds\":{},\"restarts\":{}}},\n\"nodes\":[{}],\n\"divergence\":{}\n}}\n",
         esc(&s.run_name),
         s.n_nodes,
         jnum(s.wall_clock_s),
@@ -245,6 +252,11 @@ pub fn summary_json(s: &RunSummary) -> String {
         s.store_pushes,
         jnum(s.mean_idle_fraction),
         s.all_completed,
+        f.injected_faults,
+        f.store_retries,
+        f.store_give_ups,
+        f.degraded_rounds,
+        f.restarts,
         nodes.join(","),
         divergence,
     )
@@ -367,6 +379,18 @@ pub fn parse_summary(src: &str) -> Result<RunSummary> {
         Json::Null => None,
         d => Some(parse_divergence(d)?),
     };
+    // absent in analysis.json files written before the fault layer
+    // existed — default to all-zero so old exports still load
+    let faults = match j.get("faults") {
+        None => FaultTotals::default(),
+        Some(f) => FaultTotals {
+            injected_faults: req_u64(f, "injected_faults")?,
+            store_retries: req_u64(f, "store_retries")?,
+            store_give_ups: req_u64(f, "store_give_ups")?,
+            degraded_rounds: req_u64(f, "degraded_rounds")?,
+            restarts: req_u64(f, "restarts")?,
+        },
+    };
     Ok(RunSummary {
         run_name: req(&j, "run_name")?
             .as_str()
@@ -378,6 +402,7 @@ pub fn parse_summary(src: &str) -> Result<RunSummary> {
         store_pushes: req_u64(&j, "store_pushes")?,
         mean_idle_fraction: req_f64(&j, "mean_idle_fraction")?,
         all_completed: req_bool(&j, "all_completed")?,
+        faults,
         nodes,
         divergence,
     })
@@ -481,6 +506,13 @@ mod tests {
             store_pushes: 8,
             mean_idle_fraction: 0.125,
             all_completed: true,
+            faults: FaultTotals {
+                injected_faults: 5,
+                store_retries: 4,
+                store_give_ups: 1,
+                degraded_rounds: 2,
+                restarts: 1,
+            },
             nodes: vec![NodeSpanSummary {
                 node_id: 0,
                 train_s: 1.0,
@@ -513,5 +545,15 @@ mod tests {
         let parsed = parse_summary(&summary_json(&summary)).unwrap();
         assert_eq!(parsed, summary);
         assert_eq!(parsed.render(), summary.render());
+
+        // pre-fault-layer analysis.json files have no "faults" key and
+        // must still load, defaulting every counter to zero
+        let legacy: String = summary_json(&summary)
+            .lines()
+            .filter(|l| !l.starts_with("\"faults\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let parsed = parse_summary(&legacy).unwrap();
+        assert_eq!(parsed.faults, FaultTotals::default());
     }
 }

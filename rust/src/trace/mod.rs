@@ -77,6 +77,15 @@ pub enum TraceEventKind {
         /// Content digest of the adopted aggregate.
         digest: u64,
     },
+    /// The node died on an unrecoverable runtime error (an instant) —
+    /// e.g. a store operation whose retries were exhausted. Emitted by
+    /// [`crate::node::NodeRunner`]'s failure path so a failed node
+    /// leaves a typed mark in the exports instead of silently
+    /// truncating its event stream.
+    NodeFailed,
+    /// A crash–restart recovery (a span): from the crash instant to the
+    /// moment the node came back and restored its checkpoint.
+    Restart,
 }
 
 impl TraceEventKind {
@@ -87,6 +96,8 @@ impl TraceEventKind {
             TraceEventKind::Push { .. } => "push",
             TraceEventKind::Pull { .. } => "pull",
             TraceEventKind::Aggregate { .. } => "aggregate",
+            TraceEventKind::NodeFailed => "node_failed",
+            TraceEventKind::Restart => "restart",
         }
     }
 }
@@ -233,6 +244,39 @@ impl NodeSpanSummary {
     }
 }
 
+/// Fleet-wide totals from the fault-tolerance layer: injected store
+/// failures, retry-client activity, quorum-degraded sync rounds, and
+/// crash–restart recoveries. All five are zero on a clean run, in
+/// which case [`RunSummary::render`] omits the chaos block entirely
+/// (clean-run output stays byte-identical to the pre-fault-layer
+/// format).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    /// Transient failures injected by per-node
+    /// [`crate::store::FaultStore`] instances (`fault` / `outage`).
+    pub injected_faults: u64,
+    /// Store operations retried by the nodes'
+    /// [`crate::store::RetryStore`] clients.
+    pub store_retries: u64,
+    /// Store operations the retry clients gave up on.
+    pub store_give_ups: u64,
+    /// Sync rounds closed degraded (quorum reached, full cohort not).
+    pub degraded_rounds: u64,
+    /// Crash–restart recoveries performed across the fleet.
+    pub restarts: u64,
+}
+
+impl FaultTotals {
+    /// True when any counter is nonzero — gates the render block.
+    pub fn any(&self) -> bool {
+        self.injected_faults != 0
+            || self.store_retries != 0
+            || self.store_give_ups != 0
+            || self.degraded_rounds != 0
+            || self.restarts != 0
+    }
+}
+
 /// The analytics record of one run — everything `fedbench run` prints
 /// about wire traffic, idle shares, digests, and divergence, and
 /// everything `fedbench inspect` re-renders from `analysis.json`.
@@ -254,6 +298,8 @@ pub struct RunSummary {
     pub mean_idle_fraction: f64,
     /// True when no node crashed or stalled.
     pub all_completed: bool,
+    /// Fault-tolerance-layer totals (all zero on a clean run).
+    pub faults: FaultTotals,
     /// Per-node span/traffic rows, in node order.
     pub nodes: Vec<NodeSpanSummary>,
     /// Round-history divergence analytics, when the round archive was
@@ -292,6 +338,13 @@ impl RunSummary {
             100.0 * self.mean_idle_fraction,
             self.all_completed,
         ));
+        if self.faults.any() {
+            let f = &self.faults;
+            out.push_str(&format!(
+                "fault layer  : {} injected, {} retried, {} gave up\nrecovery     : {} restarts, {} degraded rounds\n",
+                f.injected_faults, f.store_retries, f.store_give_ups, f.restarts, f.degraded_rounds,
+            ));
+        }
         if !self.nodes.is_empty() {
             out.push_str(
                 "\nnode | train s | wait s | agg s | train% | wait% | agg% | rounds | MB push | MB pull | done\n",
@@ -372,9 +425,18 @@ mod tests {
             store_pushes: 0,
             mean_idle_fraction: 0.0,
             all_completed: true,
+            faults: FaultTotals::default(),
             nodes: vec![s],
             divergence: None,
         };
         assert!(!summary.render().contains("NaN"));
+        // a clean run must not even mention the fault layer
+        assert!(!summary.render().contains("fault layer"));
+        let mut chaotic = summary.clone();
+        chaotic.faults.store_retries = 3;
+        chaotic.faults.restarts = 1;
+        let rendered = chaotic.render();
+        assert!(rendered.contains("fault layer  : 0 injected, 3 retried, 0 gave up"));
+        assert!(rendered.contains("recovery     : 1 restarts, 0 degraded rounds"));
     }
 }

@@ -167,6 +167,8 @@ impl SyntheticRun {
             store_pushes: nodes.iter().map(|s| s.pushes).sum(),
             mean_idle_fraction,
             all_completed: !self.stalled.iter().any(|s| *s),
+            // the synthetic harness carries no fault layer
+            faults: crate::trace::FaultTotals::default(),
             nodes,
             divergence: compute_divergence(self.store.as_ref(), epochs, pool)?,
         })

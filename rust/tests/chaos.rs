@@ -1,0 +1,541 @@
+//! Chaos suite — the fault-tolerance layer end to end, at protocol
+//! level (no artifacts, no PJRT), in simulated time.
+//!
+//! What lives here:
+//!
+//! * the **acceptance scenario**: a 4-node async virtual-clock run with
+//!   Bernoulli store faults *and* a scheduled outage window completes
+//!   with zero failed nodes under the retry client, bit-identically
+//!   across replays and across kernel-pool widths;
+//! * **crash–restart recovery**: a crashed node re-enters after its
+//!   downtime and demonstrably resumes from its own last *pushed*
+//!   checkpoint (digest-checked against the store entry), not from its
+//!   in-memory weights;
+//! * **quorum degradation**: a sync round with a dead peer closes
+//!   degraded at `ceil(quorum·k)` members after the soft deadline
+//!   instead of stalling;
+//! * **scheduler conformance**: fault outcomes — retries, restarts,
+//!   degraded rounds, final weights, every timeline span — agree
+//!   bit-for-bit between the thread-per-node harness and the event
+//!   executor.
+//!
+//! CI runs this file under the same hard real-time budget as
+//! `rust/tests/timing.rs`: every second of backoff, downtime, and
+//! barrier wait below is simulated, so a regression into real sleeping
+//! times the job out.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fedless::compress::CodecState;
+use fedless::config::{ExperimentConfig, FederationMode};
+use fedless::metrics::timeline::{Span, SpanKind, Timeline};
+use fedless::protocol::ProtocolKind;
+use fedless::sched::{run_events_trial, run_events_trial_captured, SimNodeResult, TrialSpec};
+use fedless::store::{
+    FaultModel, FaultStore, MemoryStore, OutageWindow, RetryPolicy, RetryStore, WeightStore,
+};
+use fedless::strategy::StrategyKind;
+use fedless::tensor::FlatParams;
+use fedless::time::{Clock, ParticipantGuard, VirtualClock};
+use fedless::util::hash::chunked_hash_f32s;
+
+fn ms(n: u64) -> Duration {
+    Duration::from_millis(n)
+}
+
+fn digest(params: &[f32]) -> u64 {
+    chunked_hash_f32s(params)
+}
+
+// ---------------------------------------------------------------------------
+// a chaos-capable thread-per-node harness (the fault twin of
+// `rust/tests/timing.rs::run_sim`, against which the event executor's
+// harness is checked below)
+
+/// One chaos trial, runnable on either scheduler.
+#[derive(Clone)]
+struct ChaosSpec {
+    mode: FederationMode,
+    delays: Vec<Duration>,
+    epochs: usize,
+    sync_timeout: Duration,
+    crash: Option<(usize, usize)>,
+    crash_restart: Option<Duration>,
+    fault: FaultModel,
+    sync_quorum: f64,
+    seed: u64,
+}
+
+impl ChaosSpec {
+    fn new(mode: FederationMode, delays: Vec<Duration>, epochs: usize) -> ChaosSpec {
+        ChaosSpec {
+            mode,
+            delays,
+            epochs,
+            sync_timeout: Duration::from_secs(3600),
+            crash: None,
+            crash_restart: None,
+            fault: FaultModel::default(),
+            sync_quorum: 1.0,
+            seed: ExperimentConfig::default().seed,
+        }
+    }
+
+    fn to_trial(&self) -> TrialSpec {
+        let mut spec = TrialSpec::new(self.mode, self.delays.clone(), self.epochs);
+        spec.sync_timeout = self.sync_timeout;
+        spec.crash = self.crash;
+        spec.crash_restart = self.crash_restart;
+        spec.fault = self.fault.clone();
+        spec.sync_quorum = self.sync_quorum;
+        spec.seed = self.seed;
+        spec
+    }
+}
+
+/// What one threaded chaos node reports back (the fault superset of
+/// `timing.rs::SimNode`).
+struct ChaosNode {
+    finish: Duration,
+    spans: Vec<Span>,
+    params: FlatParams,
+    stalled: bool,
+    failed: bool,
+    restarts: u64,
+    degraded_rounds: u64,
+    injected_faults: u64,
+    store_retries: u64,
+    store_give_ups: u64,
+}
+
+/// Drive `spec.delays.len()` real threads through the chaos scenario on
+/// one shared virtual clock: per-node fault/retry store stacks (built
+/// exactly like `NodeRunner`'s), crash–restart recovery from the node's
+/// own checkpoint, and quorum-degraded sync rounds.
+fn run_threads_chaos(spec: &ChaosSpec) -> Vec<ChaosNode> {
+    let n = spec.delays.len();
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let cfg = ExperimentConfig {
+        mode: spec.mode,
+        n_nodes: n,
+        seed: spec.seed,
+        fault: spec.fault.clone(),
+        sync_quorum: spec.sync_quorum,
+        ..Default::default()
+    };
+    let shared: Arc<dyn WeightStore> =
+        Arc::new(MemoryStore::with_clock(Arc::clone(&clock)));
+    for _ in 0..n {
+        clock.enter();
+    }
+    let start = Arc::new(std::sync::Barrier::new(n));
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|node_id| {
+                let clock = Arc::clone(&clock);
+                let shared = Arc::clone(&shared);
+                let cfg = cfg.clone();
+                let spec = spec.clone();
+                let start = Arc::clone(&start);
+                let delay = spec.delays[node_id];
+                scope.spawn(move || {
+                    let _p = ParticipantGuard::adopt(Arc::clone(&clock));
+                    // per-node fault/retry stack, same seed mixing as
+                    // NodeRunner and the event harness
+                    let (store, chaos) = if cfg.fault.is_active() {
+                        let seed =
+                            cfg.seed ^ (node_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        let faulty = FaultStore::with_model(
+                            Arc::clone(&shared),
+                            &cfg.fault,
+                            Arc::clone(&clock),
+                            seed,
+                        );
+                        let retry = Arc::new(RetryStore::new(
+                            faulty,
+                            RetryPolicy::default(),
+                            Arc::clone(&clock),
+                            seed ^ 0xD1B5_4A32_D192_ED03,
+                        ));
+                        (Arc::clone(&retry) as Arc<dyn WeightStore>, Some(retry))
+                    } else {
+                        (Arc::clone(&shared), None)
+                    };
+                    let mut protocol = ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                    let mut strategy = StrategyKind::FedAvg.build();
+                    let mut codec = CodecState::new(cfg.compress);
+                    let mut timeline = Timeline::new(node_id);
+                    let mut params = FlatParams(vec![node_id as f32; 4]);
+                    let mut stalled = false;
+                    let mut failed = false;
+                    let mut crash_consumed = false;
+                    let mut restarts = 0u64;
+                    let mut degraded_rounds = 0u64;
+                    start.wait();
+                    let mut epoch = 0;
+                    while epoch < spec.epochs {
+                        if let Some((c_node, c_epoch)) = spec.crash {
+                            if !crash_consumed && c_node == node_id && c_epoch == epoch {
+                                crash_consumed = true;
+                                let t_down = clock.now();
+                                match spec.crash_restart {
+                                    None => {
+                                        timeline.record(SpanKind::Crashed, t_down, t_down);
+                                        break; // dies without pushing
+                                    }
+                                    Some(down) => {
+                                        // down for `down` of simulated
+                                        // time, then restore the node's
+                                        // own checkpoint via its stack
+                                        clock.sleep(down);
+                                        let t_up = clock.now();
+                                        timeline.record(SpanKind::Crashed, t_down, t_up);
+                                        match store.latest_for_node(node_id) {
+                                            Ok(Some(entry)) => {
+                                                params = (*entry.params).clone();
+                                            }
+                                            Ok(None) => {
+                                                params =
+                                                    FlatParams(vec![node_id as f32; 4]);
+                                            }
+                                            Err(_) => {
+                                                failed = true;
+                                                break;
+                                            }
+                                        }
+                                        codec = CodecState::new(cfg.compress);
+                                        protocol =
+                                            ProtocolKind::from(cfg.mode).build(node_id, &cfg);
+                                        restarts += 1;
+                                        continue; // resume the same epoch
+                                    }
+                                }
+                            }
+                        }
+                        let t = clock.now();
+                        clock.sleep(delay);
+                        timeline.record(SpanKind::Train, t, clock.now());
+                        let mut ctx = fedless::protocol::EpochCtx {
+                            node_id,
+                            n_nodes: n,
+                            round_k: n,
+                            epoch,
+                            n_examples: 100,
+                            store: store.as_ref(),
+                            strategy: strategy.as_mut(),
+                            timeline: &mut timeline,
+                            sync_timeout: spec.sync_timeout,
+                            clock: clock.as_ref(),
+                            codec: &mut codec,
+                            pool: fedless::par::ChunkPool::from_config(cfg.threads),
+                            tracer: None,
+                        };
+                        match protocol.after_epoch(&mut ctx, &mut params) {
+                            Err(_) => {
+                                // the retry layer gave up: the node dies
+                                // at the failure instant, like a worker
+                                let t = clock.now();
+                                timeline.record(SpanKind::Crashed, t, t);
+                                failed = true;
+                                break;
+                            }
+                            Ok(out) => {
+                                degraded_rounds += out.degraded_rounds;
+                                if out.stalled_at.is_some() {
+                                    stalled = true;
+                                    break;
+                                }
+                            }
+                        }
+                        epoch += 1;
+                    }
+                    let (injected, stats) = match &chaos {
+                        Some(c) => (c.inner().injected(), c.stats()),
+                        None => (0, Default::default()),
+                    };
+                    ChaosNode {
+                        finish: clock.now(),
+                        spans: timeline.spans,
+                        params,
+                        stalled,
+                        failed,
+                        restarts,
+                        degraded_rounds,
+                        injected_faults: injected,
+                        store_retries: stats.retries,
+                        store_give_ups: stats.give_ups,
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// The full observable chaos surface must agree between schedulers.
+fn assert_chaos_agree(threaded: &[ChaosNode], events: &[SimNodeResult]) {
+    assert_eq!(threaded.len(), events.len());
+    for (t, e) in threaded.iter().zip(events) {
+        assert_eq!(t.finish, e.finish, "node {}: finish instant", e.node_id);
+        assert_eq!(t.spans, e.spans, "node {}: timeline spans", e.node_id);
+        assert_eq!(t.params.0, e.params.0, "node {}: weights", e.node_id);
+        assert_eq!(t.stalled, e.stalled, "node {}: stall flag", e.node_id);
+        assert_eq!(t.failed, e.failed, "node {}: failure flag", e.node_id);
+        assert_eq!(t.restarts, e.restarts, "node {}: restarts", e.node_id);
+        assert_eq!(
+            t.degraded_rounds, e.degraded_rounds,
+            "node {}: degraded rounds",
+            e.node_id
+        );
+        assert_eq!(
+            t.injected_faults, e.injected_faults,
+            "node {}: injected faults",
+            e.node_id
+        );
+        assert_eq!(
+            t.store_retries, e.store_retries,
+            "node {}: store retries",
+            e.node_id
+        );
+        assert_eq!(
+            t.store_give_ups, e.store_give_ups,
+            "node {}: store give-ups",
+            e.node_id
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the acceptance scenario
+
+/// 4 async nodes on a virtual clock, p = 0.05 Bernoulli store faults plus
+/// one 50 ms outage window: every node completes (zero failures — the
+/// retry client absorbs everything), faults were actually injected, and
+/// the run replays bit-identically — including across kernel-pool widths
+/// 1 vs 8 (`threads` is a pure wall-clock knob).
+#[test]
+fn chaos_acceptance_async_run_survives_faults_and_an_outage() {
+    let t_real = Instant::now();
+    let mk = |threads: usize| {
+        let mut spec = TrialSpec::new(
+            FederationMode::Async,
+            (0..4).map(|i| ms(40 + 3 * i)).collect(),
+            6,
+        );
+        spec.fault = FaultModel {
+            p_fail: 0.05,
+            outages: vec![OutageWindow { start: ms(60), duration: ms(50) }],
+        };
+        spec.seed = 2026;
+        spec.threads = threads;
+        run_events_trial(&spec).unwrap()
+    };
+    let a = mk(1);
+    for node in &a {
+        assert!(
+            !node.failed && !node.stalled,
+            "node {} must survive the chaos",
+            node.node_id
+        );
+    }
+    let injected: u64 = a.iter().map(|n| n.injected_faults).sum();
+    assert!(injected >= 1, "the fault model must actually fire");
+    assert_eq!(
+        a.iter().map(|n| n.store_give_ups).sum::<u64>(),
+        0,
+        "no operation may exhaust its retry budget"
+    );
+    assert_eq!(
+        a.iter().map(|n| n.store_retries).sum::<u64>(),
+        injected,
+        "every injected transient is absorbed by a retry"
+    );
+
+    // bit-identical replay, and kernel-pool width is a non-factor
+    let b = mk(1);
+    let c = mk(8);
+    for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+        assert_eq!(x.finish, y.finish, "node {}: replay finish", x.node_id);
+        assert_eq!(x.spans, y.spans, "node {}: replay spans", x.node_id);
+        assert_eq!(
+            digest(&x.params.0),
+            digest(&y.params.0),
+            "node {}: replay weight digest",
+            x.node_id
+        );
+        assert_eq!(x.injected_faults, y.injected_faults);
+        assert_eq!(x.store_retries, y.store_retries);
+        assert_eq!(x.finish, z.finish, "node {}: threads 1 vs 8 finish", x.node_id);
+        assert_eq!(
+            digest(&x.params.0),
+            digest(&z.params.0),
+            "node {}: threads 1 vs 8 weight digest",
+            x.node_id
+        );
+    }
+    assert!(
+        t_real.elapsed() < Duration::from_secs(10),
+        "all backoff must be simulated, took {:?}",
+        t_real.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// crash–restart recovery
+
+/// A restarted node resumes from its last *pushed* checkpoint, not from
+/// its in-memory weights. 2-node sync, node 1 crashes at epoch 1 and
+/// restarts: its round-0 store entry is its initial weights `[1;4]`
+/// (pushes happen before aggregation), so after the restore it pushes
+/// `[1;4]` again and round 1 averages to `(0.5 + 1.0)/2 = 0.75` — had it
+/// kept its post-aggregate `[0.5;4]` the round would average to 0.5.
+#[test]
+fn restart_node_resumes_from_its_last_pushed_checkpoint() {
+    let mut spec = TrialSpec::new(FederationMode::Sync, vec![ms(50), ms(70)], 2);
+    spec.crash = Some((1, 1));
+    spec.crash_restart = Some(ms(100));
+    let (nodes, store) = run_events_trial_captured(&spec).unwrap();
+    for node in &nodes {
+        assert!(!node.failed && !node.stalled, "node {}", node.node_id);
+    }
+    assert_eq!(nodes[1].restarts, 1);
+    assert_eq!(nodes[0].restarts, 0);
+
+    // the checkpoint the restore used, digest-checked in the store
+    let round0 = store.entries_for_round(0).unwrap();
+    let ckpt = round0.iter().find(|e| e.node_id == 1).expect("node 1 pushed round 0");
+    assert_eq!(
+        digest(&ckpt.params.0),
+        digest(&[1.0f32; 4]),
+        "node 1's round-0 checkpoint is its initial weights"
+    );
+    // ...and both nodes' final weights carry the checkpoint's signature
+    for node in &nodes {
+        assert_eq!(node.params.0, vec![0.75; 4], "node {}", node.node_id);
+        assert_eq!(digest(&node.params.0), digest(&[0.75f32; 4]));
+    }
+    // downtime is a Crashed span of exactly the restart delay
+    assert!(nodes[1]
+        .spans
+        .iter()
+        .any(|s| s.kind == SpanKind::Crashed && s.end - s.start == ms(100)));
+}
+
+// ---------------------------------------------------------------------------
+// quorum-degraded sync rounds
+
+/// With a dead peer, a full barrier stalls the survivors at the hard
+/// timeout; `sync_quorum = 0.5` instead closes every post-crash round
+/// degraded at the soft deadline (timeout/2) on the partial set, with
+/// survivors in exact agreement — analytically-timed, zero real waiting.
+#[test]
+fn quorum_closes_rounds_degraded_where_full_barrier_stalls() {
+    let delays = vec![ms(50), ms(70), ms(230)];
+    let timeout = Duration::from_secs(300);
+    let t_real = Instant::now();
+
+    let strict = {
+        let mut s = TrialSpec::new(FederationMode::Sync, delays.clone(), 3);
+        s.sync_timeout = timeout;
+        s.crash = Some((2, 1));
+        run_events_trial(&s).unwrap()
+    };
+    assert!(strict[0].stalled && strict[1].stalled, "full barrier stalls");
+    assert_eq!(strict[0].degraded_rounds, 0);
+
+    let relaxed = {
+        let mut s = TrialSpec::new(FederationMode::Sync, delays, 3);
+        s.sync_timeout = timeout;
+        s.crash = Some((2, 1));
+        s.sync_quorum = 0.5; // ceil(0.5 * 3) = 2: the two survivors
+        run_events_trial(&s).unwrap()
+    };
+    for survivor in &relaxed[0..2] {
+        assert!(!survivor.stalled && !survivor.failed, "node {}", survivor.node_id);
+        assert_eq!(
+            survivor.degraded_rounds, 2,
+            "node {}: rounds 1 and 2 close degraded",
+            survivor.node_id
+        );
+    }
+    // analytic finish: round 0 closes at the straggler's 230 ms; each
+    // degraded round then costs one train delay plus the 150 s soft
+    // deadline from the survivor's own push
+    let soft = timeout / 2;
+    assert_eq!(relaxed[0].finish, ms(230) + (ms(50) + soft) * 2);
+    assert_eq!(relaxed[1].finish, ms(230) + (ms(70) + soft) * 2);
+    // both survivors aggregated the same partial sets
+    assert_eq!(relaxed[0].params.0, relaxed[1].params.0);
+    assert!(
+        t_real.elapsed() < Duration::from_secs(10),
+        "stalls and soft deadlines must be simulated, took {:?}",
+        t_real.elapsed()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// threads-vs-events conformance on fault outcomes
+
+/// The retry path under Bernoulli faults plus an outage window: both
+/// schedulers observe the identical chaos — same injected-fault and
+/// retry counts, same backoff-stretched timeline, same weights.
+///
+/// Single-node on purpose: a node's backoff sleeps run *inside* one
+/// executor step, so a peer's store op whose simulated instant falls
+/// inside the retry window executes on a different side of it under the
+/// two schedulers — cross-node store visibility mid-retry is the one
+/// place the schedulers legitimately differ (akin to the sync quorum's
+/// partial-set drift). The node's *own* chaos — every injection, every
+/// jitter draw, every give-up decision — is scheduler-independent, and
+/// that is what this test pins. The multi-node conformance cases below
+/// (crash–restart, quorum) have fault-free retry windows and agree on
+/// the full fleet.
+#[test]
+fn schedulers_agree_on_retry_and_backoff_outcomes() {
+    let mut spec = ChaosSpec::new(FederationMode::Async, vec![ms(10)], 6);
+    spec.fault = FaultModel {
+        p_fail: 0.3,
+        outages: vec![OutageWindow { start: ms(25), duration: ms(40) }],
+    };
+    spec.seed = 7;
+    let threaded = run_threads_chaos(&spec);
+    let events = run_events_trial(&spec.to_trial()).unwrap();
+    assert!(
+        threaded[0].injected_faults >= 1,
+        "scenario must actually inject faults"
+    );
+    assert!(threaded[0].store_retries >= 1, "retries must actually fire");
+    assert_chaos_agree(&threaded, &events);
+}
+
+/// Sync crash–restart: the crashed node re-enters after the same
+/// simulated downtime, restores the same checkpoint, and the round
+/// closes complete at the same instant under both schedulers.
+#[test]
+fn schedulers_agree_on_crash_restart_recovery() {
+    let mut spec =
+        ChaosSpec::new(FederationMode::Sync, vec![ms(50), ms(70), ms(230)], 3);
+    spec.crash = Some((2, 1));
+    spec.crash_restart = Some(ms(200));
+    let threaded = run_threads_chaos(&spec);
+    let events = run_events_trial(&spec.to_trial()).unwrap();
+    assert_eq!(threaded[2].restarts, 1);
+    assert!(threaded.iter().all(|n| !n.stalled && !n.failed));
+    assert_chaos_agree(&threaded, &events);
+}
+
+/// Quorum-degraded rounds: survivors close the same rounds degraded at
+/// the same soft-deadline instants under both schedulers.
+#[test]
+fn schedulers_agree_on_quorum_degraded_rounds() {
+    let mut spec =
+        ChaosSpec::new(FederationMode::Sync, vec![ms(50), ms(70), ms(230)], 3);
+    spec.sync_timeout = Duration::from_secs(300);
+    spec.crash = Some((2, 1));
+    spec.sync_quorum = 0.5;
+    let threaded = run_threads_chaos(&spec);
+    let events = run_events_trial(&spec.to_trial()).unwrap();
+    assert_eq!(threaded[0].degraded_rounds, 2);
+    assert_chaos_agree(&threaded, &events);
+}

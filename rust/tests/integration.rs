@@ -117,7 +117,7 @@ fn fs_store_full_run() {
 fn crash_async_survives_sync_stalls() {
     let mut cfg = smoke_cfg();
     cfg.n_nodes = 3;
-    cfg.crash = Some(CrashSpec { node: 1, at_epoch: 1 });
+    cfg.crash = Some(CrashSpec::at(1, 1));
     cfg.sync_timeout = Duration::from_secs(2);
 
     // async: healthy nodes complete

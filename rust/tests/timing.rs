@@ -89,7 +89,12 @@ fn run_sim(
                     start.wait();
                     for epoch in 0..epochs {
                         if crash == Some((node_id, epoch)) {
-                            break; // dies without pushing this round
+                            // dies without pushing this round; the
+                            // zero-width Crashed marker mirrors
+                            // NodeRunner (and the event harness)
+                            let t = clock.now();
+                            timeline.record(SpanKind::Crashed, t, t);
+                            break;
                         }
                         let t = clock.now();
                         clock.sleep(delay);
@@ -500,7 +505,7 @@ fn e2e_crash_recovery_releases_survivors_in_simulated_time() {
         train_size: 900,
         test_size: 96,
         seed: 7,
-        crash: Some(CrashSpec { node: 1, at_epoch: 1 }),
+        crash: Some(CrashSpec::at(1, 1)),
         sync_timeout: Duration::from_secs(300),
         clock: ClockKind::Virtual,
         ..Default::default()
